@@ -1,0 +1,63 @@
+//! Pruning-ratio sweep over all criteria (the paper's core comparison,
+//! condensed): HEAPr vs CAMERA-P vs magnitude vs random vs expert-drop at
+//! several ratios, reporting held-out perplexity and FLOPs reduction.
+//!
+//!   cargo run --release --offline --example prune_eval -- [--preset tiny]
+//!     [--steps 120] [--calib 64]
+
+use anyhow::Result;
+use heapr::baselines;
+use heapr::config::RunConfig;
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::eval::{ones_mask, perplexity};
+use heapr::heapr::{heapr_scores, PrunePlan, Scope};
+use heapr::model::flops::flops_reduction;
+use heapr::model::store::ParamStore;
+use heapr::runtime::Engine;
+use heapr::train::Trainer;
+use heapr::util::args::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let preset = args.str("preset", "tiny");
+    let steps = args.usize("steps", 120)?;
+    let n_calib = args.usize("calib", 64)?;
+    args.finish()?;
+
+    let engine = Engine::open(format!("artifacts/{preset}"))?;
+    let cfg = engine.config().clone();
+    let grammar = Grammar::standard();
+    let docs = grammar.corpus("wiki", 0, 600_000);
+    let (train_split, eval_split) = Split::from_docs(&docs, cfg.seq_len).train_eval(0.1);
+
+    let mut params = ParamStore::init(&engine.manifest, 0);
+    let run = RunConfig { train_steps: steps, lr: 4e-3, ..Default::default() };
+    Trainer::new(&engine).train(&mut params, &train_split, &run)?;
+
+    let calib = train_split.sample(n_calib.min(train_split.n_chunks()), 0);
+    let (scores, stats) = heapr_scores(&engine, &params, &calib)?;
+    let camera = baselines::camera_scores(&params, &stats, 0.5)?;
+    let magnitude =
+        baselines::magnitude_scores(&params, cfg.n_layers, cfg.n_experts, cfg.d_inter)?;
+    let random = baselines::random_scores(cfg.n_layers, cfg.n_experts, cfg.d_inter, 7);
+
+    let base = perplexity(&engine, &params, &ones_mask(&engine), &eval_split, 4)?;
+    println!("baseline ppl {base:.3}\n");
+    println!("{:<12} {:>6} {:>10} {:>10}", "method", "ratio", "ppl", "flops-rr");
+    for ratio in [0.125, 0.25, 0.5, 0.75] {
+        for (name, scores_t, scope) in [
+            ("HEAPr", &scores, Scope::Global),
+            ("CAMERA-P", &camera, Scope::Layerwise),
+            ("Magnitude", &magnitude, Scope::Layerwise),
+            ("Random", &random, Scope::Global),
+        ] {
+            let plan = PrunePlan::from_scores(scores_t, ratio, scope);
+            let ppl = perplexity(&engine, &params, &plan.mask(), &eval_split, 4)?;
+            let rr = flops_reduction(&cfg, &plan.widths());
+            println!("{name:<12} {ratio:>6.3} {ppl:>10.3} {:>9.1}%", rr * 100.0);
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the whole HEAPr pipeline on the tiny preset in ~a minute.
+//!
+//!   make artifacts && cargo run --release --offline --example quickstart
+//!
+//! Steps: open artifacts → build synthetic corpus → train a tiny MoE LM →
+//! calibrate (2 fwd + 1 bwd) → score atomic experts → prune 25% globally →
+//! compare perplexity → serve one pruned request.
+
+use anyhow::Result;
+use heapr::config::RunConfig;
+use heapr::coordinator::{Request, Server};
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::data::tokenizer::ByteTokenizer;
+use heapr::eval::{ones_mask, perplexity};
+use heapr::heapr::{heapr_scores, PrunePlan, Scope};
+use heapr::model::flops::flops_reduction;
+use heapr::model::store::ParamStore;
+use heapr::runtime::Engine;
+use heapr::train::Trainer;
+
+fn main() -> Result<()> {
+    // 1. open the AOT artifacts (HLO text compiled once by `make artifacts`)
+    let engine = Engine::open("artifacts/tiny")?;
+    let cfg = engine.config().clone();
+    println!("model: {} (d={}, L={}, E={}, d_inter={})",
+             cfg.name, cfg.d_model, cfg.n_layers, cfg.n_experts, cfg.d_inter);
+
+    // 2. synthetic topic-grammar corpus (stands in for WikiText-2)
+    let grammar = Grammar::standard();
+    let docs = grammar.corpus("wiki", 0, 400_000);
+    let (train_split, eval_split) = Split::from_docs(&docs, cfg.seq_len).train_eval(0.1);
+
+    // 3. train a small MoE LM entirely from rust via the train_step artifact
+    let mut params = ParamStore::init(&engine.manifest, 0);
+    let run = RunConfig { train_steps: 100, lr: 4e-3, ..Default::default() };
+    let report = Trainer::new(&engine).train(&mut params, &train_split, &run)?;
+    println!("trained {} steps, final loss {:.3}", run.train_steps, report.final_loss);
+
+    // 4. HEAPr: two forward passes + one backward pass on 32 calib samples
+    let calib = train_split.sample(32, 0);
+    let (scores, stats) = heapr_scores(&engine, &params, &calib)?;
+    println!("calibrated on {} sequences (CE {:.3})", stats.n_sequences, stats.calib_ce);
+
+    // 5. prune the 25% least-important atomic experts, globally ranked
+    let plan = PrunePlan::from_scores(&scores, 0.25, Scope::Global);
+    println!("pruned {:.1}% of atomic experts; activated-FLOPs reduction {:.1}%",
+             plan.pruned_ratio() * 100.0,
+             flops_reduction(&cfg, &plan.widths()) * 100.0);
+
+    // 6. quality: held-out perplexity before/after
+    let ppl0 = perplexity(&engine, &params, &ones_mask(&engine), &eval_split, 4)?;
+    let ppl1 = perplexity(&engine, &params, &plan.mask(), &eval_split, 4)?;
+    println!("perplexity: {ppl0:.3} -> {ppl1:.3} (ratio {:.3})", ppl1 / ppl0);
+
+    // 7. serve one request through the width-bucketed coordinator
+    let aligned = plan.bucket_aligned(&scores, cfg.blk_i);
+    let mut server = Server::new(&engine, &params, Some(&aligned))?;
+    let prompt = ByteTokenizer.encode("the ");
+    let resp = server.serve_batch(&[Request::new(0, prompt, 24)])?;
+    println!("generated: {:?} ({:.0}ms)",
+             ByteTokenizer.decode(&resp[0].tokens), resp[0].latency_ms);
+    Ok(())
+}

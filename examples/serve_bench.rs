@@ -1,0 +1,79 @@
+//! Serving demo + throughput comparison (paper Appendix C shape): the same
+//! request stream served by the dense model and by HEAPr-pruned models at
+//! increasing ratios — atomic pruning must translate into real end-to-end
+//! latency/throughput wins through the width-bucketed dispatch.
+//!
+//!   cargo run --release --offline --example serve_bench -- [--preset tiny]
+//!     [--requests 12] [--new-tokens 12]
+
+use anyhow::Result;
+use heapr::config::RunConfig;
+use heapr::coordinator::{Request, Server};
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::data::tokenizer::ByteTokenizer;
+use heapr::heapr::{heapr_scores, PrunePlan, Scope};
+use heapr::model::store::ParamStore;
+use heapr::runtime::Engine;
+use heapr::train::Trainer;
+use heapr::util::args::Args;
+use heapr::util::rng::Pcg64;
+use heapr::util::stats::percentile;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let preset = args.str("preset", "tiny");
+    let n_req = args.usize("requests", 12)?;
+    let new_tokens = args.usize("new-tokens", 12)?;
+    let steps = args.usize("steps", 60)?;
+    args.finish()?;
+
+    let engine = Engine::open(format!("artifacts/{preset}"))?;
+    let cfg = engine.config().clone();
+    let grammar = Grammar::standard();
+    let docs = grammar.corpus("wiki", 0, 400_000);
+    let (train_split, _) = Split::from_docs(&docs, cfg.seq_len).train_eval(0.1);
+    let mut params = ParamStore::init(&engine.manifest, 0);
+    let run = RunConfig { train_steps: steps, lr: 4e-3, ..Default::default() };
+    Trainer::new(&engine).train(&mut params, &train_split, &run)?;
+
+    let calib = train_split.sample(32, 0);
+    let (scores, _) = heapr_scores(&engine, &params, &calib)?;
+
+    // fixed request stream
+    let tok = ByteTokenizer;
+    let mut rng = Pcg64::new(3);
+    let requests: Vec<Request> = (0..n_req)
+        .map(|i| {
+            let doc = grammar.document(&mut rng, &[1.0; 6]);
+            Request::new(i as u64, tok.encode(&doc[..doc.len().min(40)]), new_tokens)
+        })
+        .collect();
+
+    println!("{:<14} {:>10} {:>12} {:>12} {:>10}",
+             "config", "tok/s", "p50 ms", "p99 ms", "widths");
+    for ratio in [0.0, 0.25, 0.5, 0.75] {
+        let plan = if ratio == 0.0 {
+            None
+        } else {
+            Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
+                .bucket_aligned(&scores, cfg.blk_i))
+        };
+        let mut server = Server::new(&engine, &params, plan.as_ref())?;
+        let bucket = *cfg.serve_batches.last().unwrap();
+        for chunk in requests.chunks(bucket) {
+            server.serve_batch(chunk)?;
+        }
+        let m = &server.metrics;
+        let mean_width: f64 = server.widths.widths.iter().flatten()
+            .map(|&w| w as f64).sum::<f64>()
+            / (cfg.n_layers * cfg.n_experts) as f64;
+        println!("{:<14} {:>10.1} {:>12.1} {:>12.1} {:>10.1}",
+                 format!("ratio {ratio:.2}"),
+                 m.throughput_tps(),
+                 percentile(&m.latencies_ms, 50.0),
+                 percentile(&m.latencies_ms, 99.0),
+                 mean_width);
+    }
+    Ok(())
+}

@@ -1,0 +1,299 @@
+"""AOT exporter: lower every L2 graph to HLO text + write manifest.json.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 rust crate links) rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Every graph is lowered with return_tuple=True; the rust runtime unwraps the
+tuple. manifest.json records the preset, the flat parameter registry (the
+layout contract with the rust ParamStore) and, for every artifact, the
+ordered input/output names, shapes and dtypes.
+
+Usage:  cd python && python -m compile.aot --preset small --out-dir ../artifacts/small
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import calib as C
+from . import model as M
+from . import serving as S
+from . import trainstep as T
+from .configs import get as get_preset
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(d):
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(d).name]
+
+
+class Exporter:
+    def __init__(self, cfg, out_dir):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.manifest = {
+            "preset": cfg.to_dict(),
+            "params": [{"name": n, "shape": list(s)}
+                       for n, s in M.param_specs(cfg)],
+            "artifacts": {},
+        }
+
+    def export(self, name, fn, args):
+        """args: list of (name, ShapeDtypeStruct). fn takes them positionally
+        and returns a tuple of (name, array) pairs."""
+        t0 = time.time()
+
+        def positional(*xs):
+            outs = fn(*xs)
+            return tuple(v for _n, v in outs)
+
+        arg_specs = [s for _n, s in args]
+        lowered = jax.jit(positional).lower(*arg_specs)
+        out_shapes = jax.eval_shape(positional, *arg_specs)
+        out_names = fn.out_names  # set by the @named decorator
+        assert len(out_names) == len(out_shapes), (name, out_names, out_shapes)
+
+        text = to_hlo_text(lowered)
+        # Guard against parameter DCE: the StableHLO->XlaComputation
+        # conversion silently drops parameters that don't reach any output,
+        # which would desynchronise the HLO from the manifest the rust
+        # runtime marshals against. Fail the build loudly instead.
+        import re
+        entry = text[text.index("ENTRY "):]
+        n_params = len(re.findall(r"= [a-z0-9\[\],{} ]+ parameter\(", entry))
+        if n_params != len(args):
+            raise SystemExit(
+                f"{name}: HLO entry has {n_params} parameters but {len(args)} "
+                f"inputs were declared — an input is unused (DCE'd). Make "
+                f"every input reach an output (see calib_pass2's probe)."
+            )
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"name": n, "shape": list(s.shape), "dtype": _dt(s.dtype)}
+                       for n, s in args],
+            "outputs": [{"name": n, "shape": list(s.shape), "dtype": _dt(s.dtype)}
+                        for n, s in zip(out_names, out_shapes)],
+        }
+        print(f"  {name:<24s} {len(text):>9d} chars  {time.time()-t0:5.1f}s")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"manifest.json: {len(self.manifest['artifacts'])} artifacts")
+
+
+def named(out_names):
+    def deco(fn):
+        fn.out_names = out_names
+        return fn
+    return deco
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small")
+    ap.add_argument("--out-dir", default="../artifacts/small")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="skip serving artifacts (faster CI builds)")
+    a = ap.parse_args()
+    cfg = get_preset(a.preset)
+    os.makedirs(a.out_dir, exist_ok=True)
+    ex = Exporter(cfg, a.out_dir)
+
+    P = M.param_specs(cfg)
+    names = [n for n, _ in P]
+    B, Tn, V = cfg.batch, cfg.seq_len, cfg.vocab
+    L, E, d, di = cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_inter
+
+    pspecs = [(n, spec(s)) for n, s in P]
+
+    def pdict(flat):
+        return dict(zip(names, flat))
+
+    nP = len(P)
+
+    # ---- train_step -------------------------------------------------------
+    @named(["loss", "ce"] + names + [f"m.{n}" for n in names]
+           + [f"v.{n}" for n in names])
+    def f_train(*xs):
+        p = pdict(xs[:nP])
+        m = pdict(xs[nP:2 * nP])
+        v = pdict(xs[2 * nP:3 * nP])
+        step, lr, tokens, targets = xs[3 * nP:]
+        loss, ce, p2, m2, v2 = T.train_step(p, m, v, step, lr, tokens,
+                                            targets, cfg)
+        return ([("loss", loss), ("ce", ce)]
+                + [(n, p2[n]) for n in names]
+                + [(f"m.{n}", m2[n]) for n in names]
+                + [(f"v.{n}", v2[n]) for n in names])
+
+    train_args = (pspecs
+                  + [(f"m.{n}", spec(s)) for n, s in P]
+                  + [(f"v.{n}", spec(s)) for n, s in P]
+                  + [("step", spec((), I32)), ("lr", spec(())),
+                     ("tokens", spec((B, Tn), I32)),
+                     ("targets", spec((B, Tn), I32))])
+    ex.export("train_step", f_train, train_args)
+
+    # ---- masked forward / loss (inference; pallas expert kernel) ----------
+    @named(["logits"])
+    def f_fwd(*xs):
+        p = pdict(xs[:nP])
+        mask, tokens = xs[nP:]
+        logits, _g, _a = M.forward(p, tokens, mask, cfg, use_pallas=True)
+        return [("logits", logits)]
+
+    mask_spec = ("mask", spec((L, E, di)))
+    ex.export("forward_masked", f_fwd,
+              pspecs + [mask_spec, ("tokens", spec((B, Tn), I32))])
+
+    @named(["nll_sum", "tok_cnt"])
+    def f_loss(*xs):
+        p = pdict(xs[:nP])
+        mask, tokens, targets = xs[nP:]
+        logits, _g, _a = M.forward(p, tokens, mask, cfg, use_pallas=True)
+        mean, cnt = M.ce_loss(logits, targets)
+        return [("nll_sum", mean * cnt), ("tok_cnt", cnt)]
+
+    ex.export("loss_masked", f_loss,
+              pspecs + [mask_spec, ("tokens", spec((B, Tn), I32)),
+                        ("targets", spec((B, Tn), I32))])
+
+    # Per-sequence NLL: one row per (task item, choice) — the zero-shot
+    # evaluator packs B independent scored continuations per call.
+    @named(["nll_rows", "cnt_rows"])
+    def f_seqnll(*xs):
+        p = pdict(xs[:nP])
+        mask, tokens, targets = xs[nP:]
+        logits, _g, _a = M.forward(p, tokens, mask, cfg, use_pallas=True)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = jax.nn.one_hot(targets, cfg.vocab, dtype=jnp.float32)
+        nll = -(logp * tgt).sum(axis=-1)                      # [B, T]
+        w = (targets != M.PAD).astype(jnp.float32)
+        return [("nll_rows", (nll * w).sum(axis=1)),
+                ("cnt_rows", w.sum(axis=1))]
+
+    ex.export("seq_nll", f_seqnll,
+              pspecs + [mask_spec, ("tokens", spec((B, Tn), I32)),
+                        ("targets", spec((B, Tn), I32))])
+
+    # ---- HEAPr calibration (the paper's two passes) ------------------------
+    @named(["ce", "gsum", "counts"])
+    def f_c1(*xs):
+        p = pdict(xs[:nP])
+        tokens, targets = xs[nP:]
+        ce, gsum, counts = C.calib_pass1(p, tokens, targets, cfg)
+        return [("ce", ce), ("gsum", gsum), ("counts", counts)]
+
+    ex.export("calib_pass1", f_c1,
+              pspecs + [("tokens", spec((B, Tn), I32)),
+                        ("targets", spec((B, Tn), I32))])
+
+    @named(["hsq", "hmax", "counts", "probe"])
+    def f_c2(*xs):
+        p = pdict(xs[:nP])
+        tokens = xs[nP]
+        hsq, hmax, counts, probe = C.calib_pass2(p, tokens, cfg)
+        return [("hsq", hsq), ("hmax", hmax), ("counts", counts),
+                ("probe", probe)]
+
+    ex.export("calib_pass2", f_c2, pspecs + [("tokens", spec((B, Tn), I32))])
+
+    # ---- importance quadform (pallas) --------------------------------------
+    @named(["q"])
+    def f_quad(wd, G):
+        from .kernels.quadform import quadform
+        return [("q", quadform(wd, G, blk_i=cfg.blk_i))]
+
+    ex.export("quadform", f_quad,
+              [("wd", spec((d, di))), ("G", spec((d, d)))])
+
+    if a.no_serving:
+        ex.finish()
+        return
+
+    # ---- serving sub-graphs -------------------------------------------------
+    H, hd, Smax = cfg.n_heads, cfg.d_head, cfg.max_decode_len
+    attn_w = [("ln1", spec((d,))), ("wq", spec((d, d))), ("wk", spec((d, d))),
+              ("wv", spec((d, d))), ("wo", spec((d, d)))]
+
+    for b in cfg.serve_batches:
+        @named(["y", "k", "v"])
+        def f_prefill(x, ln1, wq, wk, wv, wo, lmask, _b=b):
+            y, k, v = S.attn_prefill(x, ln1, wq, wk, wv, wo, lmask, cfg)
+            return [("y", y), ("k", k), ("v", v)]
+
+        ex.export(f"attn_prefill_b{b}", f_prefill,
+                  [("x", spec((b, Tn, d)))] + attn_w
+                  + [("len_mask", spec((b, Tn)))])
+
+        @named(["y", "kcache", "vcache"])
+        def f_decode(x, ln1, wq, wk, wv, wo, kc, vc, pos, _b=b):
+            y, kc2, vc2 = S.attn_decode(x, ln1, wq, wk, wv, wo, kc, vc, pos, cfg)
+            return [("y", y), ("kcache", kc2), ("vcache", vc2)]
+
+        ex.export(f"attn_decode_b{b}", f_decode,
+                  [("x", spec((b, 1, d)))] + attn_w
+                  + [("kcache", spec((b, H, Smax, hd))),
+                     ("vcache", spec((b, H, Smax, hd))),
+                     ("pos", spec((b,), I32))])
+
+    for n in cfg.token_buckets:
+        @named(["xn", "gates"])
+        def f_gate(x, ln2, router, _n=n):
+            xn, gates = S.moe_gate(x, ln2, router, cfg)
+            return [("xn", xn), ("gates", gates)]
+
+        ex.export(f"moe_gate_n{n}", f_gate,
+                  [("x", spec((n, d))), ("ln2", spec((d,))),
+                   ("router", spec((E, d)))])
+
+        @named(["logits"])
+        def f_head(x, lnf, emb, _n=n):
+            return [("logits", S.lm_head(x, lnf, emb))]
+
+        ex.export(f"lm_head_n{n}", f_head,
+                  [("x", spec((n, d))), ("lnf", spec((d,))),
+                   ("embed", spec((V, d)))])
+
+        for w in cfg.width_buckets:
+            from .kernels.expert import expert_ffn_sliced
+
+            @named(["ys"])
+            def f_exp(xs, wg, wu, wd, _n=n, _w=w):
+                return [("ys", expert_ffn_sliced(
+                    xs, wg, wu, wd, blk_n=min(cfg.blk_n, _n), blk_i=cfg.blk_i))]
+
+            ex.export(f"expert_n{n}_w{w}", f_exp,
+                      [("xs", spec((n, d))), ("wg", spec((w, d))),
+                       ("wu", spec((w, d))), ("wd", spec((d, w)))])
+
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""L2: HEAPr calibration graphs — pass 1 (fwd+bwd) and pass 2 (fwd).
+
+Pass 1 (eq. 15): per (layer, expert), the gradient covariance over routed
+tokens,  Ḡ_{l,e} = Σ_t (g_{l,e,t})(g_{l,e,t})^T,  with
+g_{l,e,t} = gate_{l,e}(x_t) · ∂ℓ/∂y_moe_l(x_t)  — the gate factor is the
+chain rule through y = Σ_e gate_e·E_e(x); unrouted tokens have gate 0 and
+drop out exactly. The per-layer ∂ℓ/∂y_moe is obtained by differentiating
+w.r.t. zero-valued taps added to each MoE layer output (one backward pass
+for all layers/experts at once, as the paper advertises).
+
+Pass 2 (eq. 16 via the rank-1 factorisation, DESIGN.md §1): accumulate
+hsq_{l,e,k} = Σ_{t routed} h_k(x_t)² and the CAMERA-P statistics. Rust
+combines the passes: s̄_{l,e,k} = ½ · quadform(W_down, Ḡ/|T|)_k · hsq_k/|T|.
+
+Everything returns *sums* plus counts so rust can stream batches and
+normalise once at the end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import model as M
+from .kernels.gradcov import gradcov
+from .kernels.hstats import hstats
+
+
+def calib_pass1(params, tokens, targets, cfg: ModelConfig):
+    """-> (loss, Gsum [L,E,d,d], counts [L,E])."""
+    B, T = tokens.shape
+    L, E, d = cfg.n_layers, cfg.n_experts, cfg.d_model
+    mask = jnp.ones((L, E, cfg.d_inter), jnp.float32)
+    taps = jnp.zeros((L, B, T, d), jnp.float32)
+
+    def loss_fn(taps_):
+        loss, (ce, gates) = M.total_loss(params, tokens, targets, mask, cfg,
+                                         moe_taps=taps_, use_pallas=False)
+        return loss, (ce, gates)
+
+    grads, (ce, gates) = jax.grad(loss_fn, has_aux=True)(taps)
+    g_flat = grads.reshape(L, B * T, d)                    # ∂ℓ/∂y_moe per layer
+
+    gsum = []
+    counts = []
+    for l in range(L):
+        row = []
+        for e in range(E):
+            w = gates[l][:, e]                             # gate value (0 if unrouted)
+            row.append(gradcov(g_flat[l], w, blk_n=cfg.blk_n))
+        gsum.append(jnp.stack(row))
+        counts.append((gates[l] > 0).astype(jnp.float32).sum(axis=0))
+    return ce, jnp.stack(gsum), jnp.stack(counts)
+
+
+def calib_pass2(params, tokens, cfg: ModelConfig):
+    """-> (hsq [L,E,di], hmax [L,E,di], counts [L,E], probe scalar).
+
+    Forward-only; replays the trunk, taps each MoE layer's input and routing
+    to accumulate routed atomic-activation statistics.
+
+    `probe` is a throwaway scalar depending on the final normed stream: the
+    StableHLO->XlaComputation conversion DCEs *parameters* whose value never
+    reaches an output (here lnf and the last layer's W_down), which would
+    desynchronise the HLO's parameter list from the manifest; the probe
+    keeps every parameter live at zero extra cost.
+    """
+    B, T = tokens.shape
+    L, E = cfg.n_layers, cfg.n_experts
+    mask = jnp.ones((L, E, cfg.d_inter), jnp.float32)
+
+    x = params["embed"][tokens] + params["pos"][None, :T, :]
+    hsq_all, hmax_all, cnt_all = [], [], []
+    for l in range(L):
+        prefix = f"l{l}."
+        x = x + M.attention(M.rmsnorm(x, params[prefix + "ln1"]), params, prefix, cfg)
+        xn = M.rmsnorm(x, params[prefix + "ln2"])
+        xf = xn.reshape(B * T, -1)
+        gates, _ = M.router_gates(xf, params[prefix + "router"], cfg)
+
+        y = jnp.zeros_like(xf)
+        hsq_l, hmax_l = [], []
+        for e in range(E):
+            h = M.atomic_activations(xf, params[prefix + "wg"][e],
+                                     params[prefix + "wu"][e])
+            routed = (gates[:, e] > 0).astype(jnp.float32)
+            sq, mx = hstats(h, routed, blk_n=cfg.blk_n)
+            hsq_l.append(sq)
+            hmax_l.append(mx)
+            y = y + gates[:, e:e + 1] * (h @ params[prefix + "wd"][e].T)
+        x = x + y.reshape(B, T, -1)
+        hsq_all.append(jnp.stack(hsq_l))
+        hmax_all.append(jnp.stack(hmax_l))
+        cnt_all.append((gates > 0).astype(jnp.float32).sum(axis=0))
+    probe = jnp.mean(M.rmsnorm(x, params["lnf"]))
+    return jnp.stack(hsq_all), jnp.stack(hmax_all), jnp.stack(cnt_all), probe

@@ -1,0 +1,74 @@
+"""Model presets shared by the L2 model, the AOT exporter, and (via
+manifest.json) the rust coordinator.
+
+Every field here is baked into the exported HLO artifacts — changing a
+preset requires re-running `make artifacts`.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 260          # 256 bytes + PAD + BOS + EOS + SEP
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_experts: int = 8
+    top_k: int = 2
+    d_inter: int = 64         # atomic experts per expert
+    seq_len: int = 128        # training / calibration sequence length
+    batch: int = 8            # training / calibration / eval batch size
+    blk_n: int = 32           # pallas token-tile
+    blk_i: int = 16           # pallas atomic-block tile (width bucket unit)
+    aux_coef: float = 0.01    # load-balancing loss coefficient
+    # serving buckets
+    serve_batches: tuple = (1, 8)
+    token_buckets: tuple = (8, 32, 128)
+    max_decode_len: int = 160
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def width_buckets(self) -> tuple:
+        """Retained-width buckets for pruned expert executables."""
+        return tuple(range(self.blk_i, self.d_inter + 1, self.blk_i))
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        d["width_buckets"] = list(self.width_buckets)
+        d["serve_batches"] = list(self.serve_batches)
+        d["token_buckets"] = list(self.token_buckets)
+        return d
+
+
+PRESETS = {
+    # CI / rust integration tests: compiles in seconds.
+    "tiny": ModelConfig(
+        name="tiny", d_model=64, n_layers=2, n_heads=2, n_experts=4,
+        top_k=2, d_inter=32, seq_len=64, batch=4, blk_n=16, blk_i=8,
+        serve_batches=(1, 4), token_buckets=(8, 32), max_decode_len=96,
+    ),
+    # Default for experiments.
+    "small": ModelConfig(
+        name="small", d_model=128, n_layers=4, n_heads=4, n_experts=8,
+        top_k=2, d_inter=64, seq_len=128, blk_n=32, blk_i=16,
+    ),
+    # Headline end-to-end run.
+    "base": ModelConfig(
+        name="base", d_model=192, n_layers=6, n_heads=6, n_experts=16,
+        top_k=2, d_inter=96, seq_len=128, blk_n=32, blk_i=16,
+    ),
+}
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise SystemExit(f"unknown preset {name!r}; choose from {sorted(PRESETS)}")

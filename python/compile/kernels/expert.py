@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: fused gated-FFN expert, tiled over atomic-expert blocks.
+
+This is the paper's compute hot-spot restructured for TPU (DESIGN.md
+§Hardware-Adaptation): the `d_inter` axis — the axis HEAPr prunes — is tiled
+into `blk_i`-wide blocks of atomic experts. One grid step loads the
+(2·blk_i·d + d·blk_i) weights of a block into VMEM, forms the atomic
+activations h = SiLU(x Wg^T) ⊙ (x Wu^T) on the VPU, and accumulates the
+rank-blk_i update h @ Wd^T on the MXU. Pruning atomic experts shrinks the
+retained width W, which shrinks the grid: the TPU speedup mechanism is
+literally "fewer grid steps", mirroring the paper's FLOPs-reduction claim.
+
+interpret=True is mandatory on this image: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expert_kernel(x_ref, wg_ref, wu_ref, wd_ref, mask_ref, o_ref):
+    j = pl.program_id(1)
+    x = x_ref[...]                       # [blk_n, d]
+    wg = wg_ref[...]                     # [blk_i, d]
+    wu = wu_ref[...]                     # [blk_i, d]
+    wd = wd_ref[...]                     # [d, blk_i]
+    m = mask_ref[...]                    # [blk_i]
+
+    # Atomic activations for this block of atomic experts (VPU work).
+    pre = jnp.dot(x, wg.T, preferred_element_type=jnp.float32)
+    h = pre * jax.nn.sigmoid(pre) * jnp.dot(x, wu.T, preferred_element_type=jnp.float32)
+    h = h * m[None, :]
+    # Rank-blk_i update into the output tile (MXU work).
+    y = jnp.dot(h, wd.T, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = y
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += y
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n", "blk_i"))
+def expert_ffn(x, wg, wu, wd, mask, *, blk_n=32, blk_i=16):
+    """y = [SiLU(x Wg^T) ⊙ (x Wu^T) ⊙ mask] Wd^T via Pallas.
+
+    x: [N, d], wg/wu: [W, d], wd: [d, W], mask: [W] -> [N, d].
+    N must divide by blk_n and W by blk_i (the AOT exporter guarantees both;
+    the serving coordinator pads token batches to bucket sizes).
+    """
+    n, d = x.shape
+    w = wg.shape[0]
+    assert n % blk_n == 0 and w % blk_i == 0, (n, w, blk_n, blk_i)
+    grid = (n // blk_n, w // blk_i)
+    return pl.pallas_call(
+        _expert_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_i, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((blk_i, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d, blk_i), lambda i, j: (0, j)),
+            pl.BlockSpec((blk_i,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((blk_n, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(x, wg, wu, wd, mask)
+
+
+def _expert_nomask_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    j = pl.program_id(1)
+    x = x_ref[...]
+    pre = jnp.dot(x, wg_ref[...].T, preferred_element_type=jnp.float32)
+    h = pre * jax.nn.sigmoid(pre) * jnp.dot(x, wu_ref[...].T, preferred_element_type=jnp.float32)
+    y = jnp.dot(h, wd_ref[...].T, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = y
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += y
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n", "blk_i"))
+def expert_ffn_sliced(x, wg, wu, wd, *, blk_n=32, blk_i=16):
+    """Mask-free variant for *physically pruned* experts (serving path).
+
+    The retained width W = wg.shape[0] is already a width bucket; the grid
+    over atomic blocks is W/blk_i steps — this is where pruning buys real
+    latency at serve time.
+    """
+    n, d = x.shape
+    w = wg.shape[0]
+    assert n % blk_n == 0 and w % blk_i == 0, (n, w, blk_n, blk_i)
+    grid = (n // blk_n, w // blk_i)
+    return pl.pallas_call(
+        _expert_nomask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_i, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((blk_i, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d, blk_i), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((blk_n, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(x, wg, wu, wd)

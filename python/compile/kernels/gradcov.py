@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: weighted gradient covariance Ḡ accumulation.
+
+HEAPr pass 1 needs, per expert i,  Ḡ_i = Σ_{t routed to i} g_t g_t^T with
+g_t = gate_i(x_t) · ∂ℓ/∂y_moe(x_t)  (eq. 15 of the paper; the gate factor is
+the chain rule through y = Σ gate_i·E_i).
+
+Rather than per-token d×d outer products (bandwidth-bound on any hardware),
+we tile tokens and compute Ḡ += A_t^T A_t with A_t = diag(w) g — an
+MXU-friendly GEMM reduction (DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gradcov_kernel(g_ref, w_ref, o_ref):
+    t = pl.program_id(0)
+    a = g_ref[...] * w_ref[...][:, None]        # [blk_n, d]
+    cov = jnp.dot(a.T, a, preferred_element_type=jnp.float32)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = cov
+
+    @pl.when(t > 0)
+    def _acc():
+        o_ref[...] += cov
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n",))
+def gradcov(g, w, *, blk_n=32):
+    """G = Σ_t (w_t g_t)(w_t g_t)^T.   g: [N, d], w: [N] -> [d, d]."""
+    n, d = g.shape
+    assert n % blk_n == 0, (n, blk_n)
+    return pl.pallas_call(
+        _gradcov_kernel,
+        grid=(n // blk_n,),
+        in_specs=[
+            pl.BlockSpec((blk_n, d), lambda t: (t, 0)),
+            pl.BlockSpec((blk_n,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((d, d), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(g, w)

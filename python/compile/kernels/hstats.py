@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: routed atomic-activation statistics (HEAPr pass 2).
+
+Per atomic expert k of a given expert, over the tokens routed to that expert:
+  hsq_k  = Σ_t m_t · h_k(x_t)²       (HEAPr: mean_routed(h²) numerator)
+  hmax_k = max_t m_t · |h_k(x_t)|    (CAMERA-P baseline: ‖Φ‖_∞ term)
+
+One pass produces the sufficient statistics for both the paper's method and
+its closest concurrent baseline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hstats_kernel(h_ref, m_ref, sq_ref, mx_ref):
+    t = pl.program_id(0)
+    hm = h_ref[...] * m_ref[...][:, None]          # [blk_n, di]
+    sq = jnp.sum(hm * hm, axis=0)
+    mx = jnp.max(jnp.abs(hm), axis=0)
+
+    @pl.when(t == 0)
+    def _init():
+        sq_ref[...] = sq
+        mx_ref[...] = mx
+
+    @pl.when(t > 0)
+    def _acc():
+        sq_ref[...] += sq
+        mx_ref[...] = jnp.maximum(mx_ref[...], mx)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n",))
+def hstats(h, m, *, blk_n=32):
+    """h: [N, di] atomic activations, m: [N] 0/1 routed mask -> (hsq, hmax)."""
+    n, di = h.shape
+    assert n % blk_n == 0, (n, blk_n)
+    return pl.pallas_call(
+        _hstats_kernel,
+        grid=(n // blk_n,),
+        in_specs=[
+            pl.BlockSpec((blk_n, di), lambda t: (t, 0)),
+            pl.BlockSpec((blk_n,), lambda t: (t,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((di,), lambda t: (0,)),
+            pl.BlockSpec((di,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((di,), jnp.float32),
+            jax.ShapeDtypeStruct((di,), jnp.float32),
+        ],
+        interpret=True,
+    )(h, m)

@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: q = diag(W_down^T Ḡ W_down) — the HEAPr scoring hot-spot.
+
+The paper's importance  s̄_k = ½·mean_routed(e_k^T Ḡ e_k)  factorises for
+gated-FFN atomic experts as  s̄_k = ½·q_k·mean_routed(h_k²)  with
+q_k = w_down_k^T Ḡ w_down_k (DESIGN.md §1). Computing q naively as
+W_down^T (Ḡ W_down) materialises a d×di intermediate per expert; the kernel
+tiles the di axis so only (d × blk_i) lives in VMEM besides Ḡ itself, and
+never forms the di×di product.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quadform_kernel(wd_ref, g_ref, q_ref):
+    wd = wd_ref[...]                               # [d, blk_i]
+    gw = jnp.dot(g_ref[...], wd, preferred_element_type=jnp.float32)
+    q_ref[...] = jnp.sum(wd * gw, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_i",))
+def quadform(wd, G, *, blk_i=16):
+    """q_k = w_down_k^T G w_down_k.   wd: [d, di], G: [d, d] -> [di]."""
+    d, di = wd.shape
+    assert di % blk_i == 0, (di, blk_i)
+    return pl.pallas_call(
+        _quadform_kernel,
+        grid=(di // blk_i,),
+        in_specs=[
+            pl.BlockSpec((d, blk_i), lambda j: (0, j)),
+            pl.BlockSpec((d, d), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_i,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((di,), jnp.float32),
+        interpret=True,
+    )(wd, G)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: python/tests/test_kernels.py sweeps
+shapes/dtypes with hypothesis and asserts each Pallas kernel (interpret=True)
+matches its oracle to float32 tolerance. The oracles are also what the L2
+model *means*; the kernels are only allowed to be faster, never different.
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn_ref(x, wg, wu, wd, mask=None):
+    """Gated-FFN expert: y = [SiLU(x Wg^T) * (x Wu^T) * mask] Wd^T.
+
+    x: [N, d], wg/wu: [di, d], wd: [d, di], mask: [di] or None -> y [N, d].
+    `mask` zeroes pruned atomic experts; equivalent to slicing them out.
+    """
+    h = silu(x @ wg.T) * (x @ wu.T)          # [N, di] atomic activations
+    if mask is not None:
+        h = h * mask[None, :]
+    return h @ wd.T
+
+
+def atomic_activations_ref(x, wg, wu):
+    """h_k(x) = SiLU(w_gate_k x) * (w_up_k x) for all atomic experts k."""
+    return silu(x @ wg.T) * (x @ wu.T)       # [N, di]
+
+
+def gradcov_ref(g, w):
+    """Weighted gradient covariance: G = sum_t (w_t g_t)(w_t g_t)^T.
+
+    g: [N, d] per-token gradients, w: [N] weights (e.g. gate values for one
+    expert; zero for unrouted tokens) -> [d, d].
+    """
+    a = g * w[:, None]
+    return a.T @ a
+
+
+def quadform_ref(wd, G):
+    """q_k = w_down_k^T G w_down_k  (diag of Wd^T G Wd without forming it).
+
+    wd: [d, di], G: [d, d] -> q [di].
+    """
+    return jnp.einsum("dk,de,ek->k", wd, G, wd)
+
+
+def hstats_ref(h, m):
+    """Routed activation statistics per atomic expert.
+
+    h: [N, di] atomic activations, m: [N] 0/1 routed mask ->
+      (sum_t m_t h_{t,k}^2, max_t m_t |h_{t,k}|)   both [di].
+    """
+    hm = h * m[:, None]
+    return (hm * hm).sum(axis=0), jnp.abs(hm).max(axis=0)
+
+
+def attention_ref(x, wq, wk, wv, wo, n_heads, len_mask=None):
+    """Causal multi-head attention block (pre-LN residual handled by caller).
+
+    x: [B, T, d]; wq/wk/wv/wo: [d, d]; len_mask: [B, T] 1=valid.
+    Returns (y [B,T,d], K [B,H,T,hd], V [B,H,T,hd]).
+    """
+    B, T, d = x.shape
+    hd = d // n_heads
+
+    def split(w):
+        return (x @ w.T).reshape(B, T, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(wq), split(wk), split(wv)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    if len_mask is not None:
+        scores = jnp.where(len_mask[:, None, None, :] > 0, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, d)
+    return out @ wo.T, k, v

@@ -1,0 +1,209 @@
+"""L2: MiniMoE — the MoE transformer LM the paper's pipeline operates on.
+
+Decoder-only transformer, RMSNorm pre-LN, causal attention, MoE FFN in every
+layer (SiLU-gated experts — exactly the structure HEAPr decomposes), softmax
+-after-top-k router, Switch-style load-balancing aux loss, tied LM head.
+
+All functions are pure over an ordered param dict; `param_specs` fixes the
+order that the AOT exporter and the rust checkpoint format share. The MoE
+expert computation routes through the L1 Pallas kernel so it lowers into the
+same HLO the rust runtime executes.
+
+Training computes every expert densely and masks by the top-k gate values —
+numerically identical to sparse dispatch (the masked gates are exact zeros),
+while keeping all shapes static for AOT. The serving coordinator exploits
+the sparsity for real (see aot.py serving artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.expert import expert_ffn
+
+EPS = 1e-6
+PAD = 256
+BOS = 257
+EOS = 258
+SEP = 259
+
+
+# --------------------------------------------------------------------------
+# parameter registry
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the single source of truth for the
+    flat parameter layout shared with rust via manifest.json."""
+    d, di, e = cfg.d_model, cfg.d_inter, cfg.n_experts
+    specs = [("embed", (cfg.vocab, d)), ("pos", (cfg.seq_len, d))]
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        specs += [
+            (p + "ln1", (d,)),
+            (p + "wq", (d, d)), (p + "wk", (d, d)),
+            (p + "wv", (d, d)), (p + "wo", (d, d)),
+            (p + "ln2", (d,)),
+            (p + "router", (e, d)),
+            (p + "wg", (e, di, d)), (p + "wu", (e, di, d)),
+            (p + "wd", (e, d, di)),
+        ]
+    specs.append(("lnf", (d,)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """He-style init; rust re-implements the same scheme for its own runs
+    (exact values need not match — training happens through train_step)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "lnf")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            scale = 0.02 if name in ("embed", "pos") else fan_in ** -0.5
+            params[name] = (jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, w):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def attention(x, p, prefix, cfg: ModelConfig):
+    """Causal MHA on [B, T, d] (returns the projected output, no residual)."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.d_head
+
+    def split(w):
+        return (x @ w.T).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(p[prefix + "wq"]), split(p[prefix + "wk"]), split(p[prefix + "wv"])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, d)
+    return out @ p[prefix + "wo"].T
+
+
+def topk_iterative(logits, k):
+    """Iterative-argmax top-k. Deliberately avoids jax.lax.top_k: its
+    StableHLO->HLO conversion emits a TopK op with a `largest` attribute the
+    xla_extension 0.5.1 text parser (what the rust runtime links) rejects.
+    k is tiny (top-2 routing), so k argmax sweeps are cheap and lower to
+    plain reduces. Ties resolve to the lowest index, deterministically."""
+    vals, idxs = [], []
+    x = logits
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)
+        v = jnp.max(x, axis=-1)
+        vals.append(v)
+        idxs.append(i)
+        x = x - jax.nn.one_hot(i, x.shape[-1], dtype=x.dtype) * 1e30
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def router_gates(xf, router, cfg: ModelConfig):
+    """Dense top-k gates: [N, E] with softmax-over-top-k weights at the
+    selected experts and exact zeros elsewhere; plus the full router
+    softmax (for the aux loss)."""
+    logits = xf @ router.T                                   # [N, E]
+    vals, idx = topk_iterative(logits, cfg.top_k)
+    weights = jax.nn.softmax(vals, axis=-1)                  # [N, k]
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32)
+    gates = jnp.einsum("nk,nke->ne", weights, onehot)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return gates, probs
+
+
+def moe_layer(x, p, prefix, mask_l, cfg: ModelConfig, use_pallas=True):
+    """x: [B, T, d]; mask_l: [E, di] atomic-expert keep mask.
+    Returns (y [B,T,d], gates [N,E], aux_loss scalar).
+
+    use_pallas=False selects the jnp expert path: Pallas interpret kernels
+    have no autodiff rule, so graphs that are differentiated (train_step,
+    calib pass 1) use the numerically-identical reference computation.
+    """
+    B, T, d = x.shape
+    xf = x.reshape(B * T, d)
+    gates, probs = router_gates(xf, p[prefix + "router"], cfg)
+
+    y = jnp.zeros_like(xf)
+    for e in range(cfg.n_experts):
+        if use_pallas:
+            out_e = expert_ffn(
+                xf, p[prefix + "wg"][e], p[prefix + "wu"][e], p[prefix + "wd"][e],
+                mask_l[e], blk_n=cfg.blk_n, blk_i=cfg.blk_i,
+            )
+        else:
+            h = atomic_activations(xf, p[prefix + "wg"][e], p[prefix + "wu"][e])
+            out_e = (h * mask_l[e][None, :]) @ p[prefix + "wd"][e].T
+        y = y + gates[:, e:e + 1] * out_e
+
+    # Switch-style load balancing: E · Σ_e f_e P_e  (f = routed fraction).
+    f = (gates > 0).astype(jnp.float32).mean(axis=0)
+    pbar = probs.mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(f * pbar)
+    return y.reshape(B, T, d), gates, aux
+
+
+def forward(params, tokens, mask, cfg: ModelConfig, moe_taps=None,
+            use_pallas=True):
+    """tokens: [B, T] i32; mask: [L, E, di] atomic keep-mask (ones = full).
+
+    moe_taps: optional [L, B, T, d] zeros added to every MoE-layer output —
+    gradients w.r.t. the taps are exactly ∂ℓ/∂y_moe_l (HEAPr pass 1).
+
+    Returns (logits [B,T,V], gates [L,N,E], aux scalar).
+    """
+    B, T = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :T, :]
+    gates_all = []
+    aux_total = 0.0
+    for l in range(cfg.n_layers):
+        prefix = f"l{l}."
+        x = x + attention(rmsnorm(x, params[prefix + "ln1"]), params, prefix, cfg)
+        y, gates, aux = moe_layer(
+            rmsnorm(x, params[prefix + "ln2"]), params, prefix, mask[l], cfg,
+            use_pallas=use_pallas)
+        if moe_taps is not None:
+            y = y + moe_taps[l]
+        x = x + y
+        gates_all.append(gates)
+        aux_total = aux_total + aux
+    x = rmsnorm(x, params["lnf"])
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(gates_all), aux_total / cfg.n_layers
+
+
+def ce_loss(logits, targets):
+    """Mean cross-entropy over non-PAD targets; also returns token count."""
+    V = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jax.nn.one_hot(targets, V, dtype=jnp.float32)
+    nll = -(logp * tgt).sum(axis=-1)                          # [B, T]
+    w = (targets != PAD).astype(jnp.float32)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0), w.sum()
+
+
+def total_loss(params, tokens, targets, mask, cfg: ModelConfig, moe_taps=None,
+               use_pallas=True):
+    logits, gates, aux = forward(params, tokens, mask, cfg, moe_taps,
+                                 use_pallas=use_pallas)
+    ce, _ = ce_loss(logits, targets)
+    return ce + cfg.aux_coef * aux, (ce, gates)
+
+
+def atomic_activations(x, wg, wu):
+    """h_k(x) = SiLU(w_gate_k x)·(w_up_k x) — used by calib pass 2 (the
+    Pallas hstats kernel consumes these)."""
+    pre = x @ wg.T
+    return pre * jax.nn.sigmoid(pre) * (x @ wu.T)

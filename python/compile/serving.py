@@ -1,0 +1,87 @@
+"""L2: serving sub-graphs for the rust coordinator.
+
+The coordinator composes per-layer pieces so it can do *sparse, width-
+bucketed* expert dispatch — the mechanism that turns HEAPr's atomic pruning
+into real latency wins:
+
+  embed (rust lookup) → per layer: attn_prefill/attn_decode → moe_gate →
+  [rust groups tokens per expert, pads to a token bucket, runs
+   expert_n{N}_w{W} with that expert's sliced weights] → rust combines with
+  gate weights + residual → … → lm_head.
+
+Weights are runtime *inputs* everywhere, so one artifact serves every layer
+and every pruned width: artifact count scales with bucket grids, not model
+size.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import model as M
+
+
+def attn_prefill(x, ln1, wq, wk, wv, wo, len_mask, cfg: ModelConfig):
+    """x: [B,T,d] embedded tokens. Returns (x + attn(rms(x)), K, V) with
+    K/V: [B,H,T,hd] for the decode cache. len_mask: [B,T] 1=valid."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.d_head
+    xn = M.rmsnorm(x, ln1)
+
+    def split(w):
+        return (xn @ w.T).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(wq), split(wk), split(wv)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    scores = jnp.where(len_mask[:, None, None, :] > 0, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    y = out.transpose(0, 2, 1, 3).reshape(B, T, d) @ wo.T
+    return x + y, k, v
+
+
+def attn_decode(x, ln1, wq, wk, wv, wo, kcache, vcache, pos, cfg: ModelConfig):
+    """Single-token decode with KV cache.
+
+    x: [B,1,d]; kcache/vcache: [B,H,S,hd]; pos: [B] i32 — the index this
+    token writes to (= current length). Attends over cache[0..pos] inclusive
+    of the new token. Returns (y [B,1,d], kcache', vcache')."""
+    B, _, d = x.shape
+    H, hd = cfg.n_heads, cfg.d_head
+    S = kcache.shape[2]
+    xn = M.rmsnorm(x, ln1)
+
+    def split(w):
+        return (xn @ w.T).reshape(B, H, hd)                  # T=1 squeezed
+
+    q, k_new, v_new = split(wq), split(wk), split(wv)
+
+    def upd(cache, new, p):
+        # cache: [H,S,hd]; new: [H,hd]
+        return jax.lax.dynamic_update_slice(cache, new[:, None, :], (0, p, 0))
+
+    kcache = jax.vmap(upd)(kcache, k_new, pos)
+    vcache = jax.vmap(upd)(vcache, v_new, pos)
+
+    scores = jnp.einsum("bhd,bhsd->bhs", q, kcache) / jnp.sqrt(float(hd))
+    valid = jnp.arange(S)[None, :] <= pos[:, None]           # [B,S]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", attn, vcache).reshape(B, 1, d)
+    return x + out @ wo.T, kcache, vcache
+
+
+def moe_gate(x, ln2, router, cfg: ModelConfig):
+    """x: [N,d] residual stream. Returns (rmsnorm'd tokens, dense top-k
+    gates [N,E]) — the rust router consumes the gates to build per-expert
+    token groups."""
+    xn = M.rmsnorm(x, ln2)
+    gates, _probs = M.router_gates(xn, router, cfg)
+    return xn, gates
+
+
+def lm_head(x, lnf, embed):
+    """x: [N,d] -> logits [N,V] (tied head)."""
+    return M.rmsnorm(x, lnf) @ embed.T

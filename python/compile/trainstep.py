@@ -1,0 +1,45 @@
+"""L2: Adam train step, exported as one HLO artifact.
+
+Rust owns the training *loop* (data order, logging, checkpoints); this graph
+owns one optimisation step. Signature keeps params / Adam moments as flat
+tensor lists in `param_specs` order so the rust ParamStore can marshal them
+without pytree knowledge.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import model as M
+
+B1, B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def train_step(params, m, v, step, lr, tokens, targets, cfg: ModelConfig):
+    """One Adam step. step: i32 scalar (1-based after increment), lr: f32.
+
+    Returns (loss, ce, params', m', v'). All dicts keyed like `params`.
+    """
+    mask = jnp.ones((cfg.n_layers, cfg.n_experts, cfg.d_inter), jnp.float32)
+
+    def loss_fn(p):
+        loss, (ce, _gates) = M.total_loss(p, tokens, targets, mask, cfg,
+                                          use_pallas=False)
+        return loss, ce
+
+    (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - B1 ** t
+    bc2 = 1.0 - B2 ** t
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m_k = B1 * m[k] + (1.0 - B1) * g
+        v_k = B2 * v[k] + (1.0 - B2) * g * g
+        update = lr * (m_k / bc1) / (jnp.sqrt(v_k / bc2) + ADAM_EPS)
+        new_p[k] = params[k] - update
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return loss, ce, new_p, new_m, new_v

@@ -1,0 +1,12 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def randf(rng, *shape, scale=0.5):
+    import jax.numpy as jnp
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)

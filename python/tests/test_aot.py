@@ -1,0 +1,82 @@
+"""AOT exporter contract tests: manifest consistency, parameter-DCE guard,
+HLO text properties the rust runtime depends on."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(os.path.dirname(HERE), "artifacts", "tiny")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_has_core_artifacts(manifest):
+    arts = manifest["artifacts"]
+    for name in ["train_step", "forward_masked", "loss_masked", "seq_nll",
+                 "calib_pass1", "calib_pass2", "quadform"]:
+        assert name in arts, name
+
+
+def test_param_registry_matches_model(manifest):
+    from compile import model as M
+    from compile.configs import get
+    cfg = get("tiny")
+    specs = M.param_specs(cfg)
+    assert len(manifest["params"]) == len(specs)
+    for got, (name, shape) in zip(manifest["params"], specs):
+        assert got["name"] == name
+        assert tuple(got["shape"]) == tuple(shape)
+
+
+def test_hlo_parameter_counts_match_manifest(manifest):
+    """The invariant the DCE guard enforces: for every artifact, the HLO
+    ENTRY computation declares exactly the manifest's input count."""
+    import re
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(ART, art["file"])
+        with open(path) as f:
+            text = f.read()
+        entry = text[text.index("ENTRY "):]
+        n = len(re.findall(r"= [a-z0-9\[\],{} ]+ parameter\(", entry))
+        assert n == len(art["inputs"]), f"{name}: {n} vs {len(art['inputs'])}"
+
+
+def test_train_step_output_arity(manifest):
+    art = manifest["artifacts"]["train_step"]
+    n_params = len(manifest["params"])
+    # loss, ce, params', m', v'
+    assert len(art["outputs"]) == 2 + 3 * n_params
+    assert art["outputs"][0]["name"] == "loss"
+    assert art["outputs"][1]["name"] == "ce"
+
+
+def test_serving_buckets_covered(manifest):
+    preset = manifest["preset"]
+    arts = manifest["artifacts"]
+    for b in preset["serve_batches"]:
+        assert f"attn_prefill_b{b}" in arts
+        assert f"attn_decode_b{b}" in arts
+    for n in preset["token_buckets"]:
+        assert f"moe_gate_n{n}" in arts
+        assert f"lm_head_n{n}" in arts
+        for w in preset["width_buckets"]:
+            assert f"expert_n{n}_w{w}" in arts
+
+
+def test_no_topk_largest_attribute(manifest):
+    """xla_extension 0.5.1's HLO text parser rejects the `largest` attr
+    jax.lax.top_k lowers to — model.py must keep using iterative argmax."""
+    for name, art in manifest["artifacts"].items():
+        with open(os.path.join(ART, art["file"])) as f:
+            assert "largest=" not in f.read(), name

@@ -1,0 +1,137 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (token counts, model dims, tile sizes) and seeds;
+every kernel must match its oracle to f32 accumulation tolerance. This is
+the core L1 correctness signal the whole stack rests on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.expert import expert_ffn, expert_ffn_sliced
+from compile.kernels.gradcov import gradcov
+from compile.kernels.hstats import hstats
+from compile.kernels.quadform import quadform
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(rng, *shape, scale=0.5):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# hypothesis strategies: tile-aligned shape families
+tiles_n = st.sampled_from([8, 16, 32])
+tiles_i = st.sampled_from([8, 16])
+mult = st.integers(min_value=1, max_value=4)
+dims = st.sampled_from([16, 32, 64, 128])
+seeds = st.integers(min_value=0, max_value=2 ** 31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(blk_n=tiles_n, blk_i=tiles_i, mn=mult, mi=mult, d=dims, seed=seeds)
+def test_expert_ffn_matches_ref(blk_n, blk_i, mn, mi, d, seed):
+    rng = np.random.default_rng(seed)
+    n, di = blk_n * mn, blk_i * mi
+    x = _rand(rng, n, d)
+    wg, wu = _rand(rng, di, d), _rand(rng, di, d)
+    wd = _rand(rng, d, di)
+    mask = jnp.asarray(rng.integers(0, 2, size=di), jnp.float32)
+    got = expert_ffn(x, wg, wu, wd, mask, blk_n=blk_n, blk_i=blk_i)
+    want = ref.expert_ffn_ref(x, wg, wu, wd, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(blk_n=tiles_n, blk_i=tiles_i, mn=mult, mi=mult, d=dims, seed=seeds)
+def test_expert_ffn_sliced_matches_ref(blk_n, blk_i, mn, mi, d, seed):
+    rng = np.random.default_rng(seed)
+    n, w = blk_n * mn, blk_i * mi
+    x = _rand(rng, n, d)
+    wg, wu, wd = _rand(rng, w, d), _rand(rng, w, d), _rand(rng, d, w)
+    got = expert_ffn_sliced(x, wg, wu, wd, blk_n=blk_n, blk_i=blk_i)
+    want = ref.expert_ffn_ref(x, wg, wu, wd, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_mask_equals_slicing():
+    """Masking atomic experts == physically slicing them (the invariant the
+    whole eval-vs-serving split relies on)."""
+    rng = np.random.default_rng(7)
+    n, d, di = 32, 64, 32
+    x = _rand(rng, n, d)
+    wg, wu, wd = _rand(rng, di, d), _rand(rng, di, d), _rand(rng, d, di)
+    keep = np.sort(rng.choice(di, size=16, replace=False))
+    mask = np.zeros(di, np.float32)
+    mask[keep] = 1.0
+    masked = expert_ffn(x, wg, wu, wd, jnp.asarray(mask), blk_n=16, blk_i=8)
+    sliced = expert_ffn_sliced(x, wg[keep], wu[keep], wd[:, keep],
+                               blk_n=16, blk_i=8)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(sliced), **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(blk_n=tiles_n, mn=mult, d=dims, seed=seeds)
+def test_gradcov_matches_ref(blk_n, mn, d, seed):
+    rng = np.random.default_rng(seed)
+    n = blk_n * mn
+    g = _rand(rng, n, d)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    got = gradcov(g, w, blk_n=blk_n)
+    want = ref.gradcov_ref(g, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_gradcov_zero_weights_drop_tokens():
+    rng = np.random.default_rng(3)
+    g = _rand(rng, 32, 16)
+    w = np.zeros(32, np.float32)
+    w[:8] = rng.random(8)
+    got = gradcov(g, jnp.asarray(w), blk_n=8)
+    want = ref.gradcov_ref(g[:8], jnp.asarray(w[:8]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(blk_i=tiles_i, mi=mult, d=dims, seed=seeds)
+def test_quadform_matches_ref(blk_i, mi, d, seed):
+    rng = np.random.default_rng(seed)
+    di = blk_i * mi
+    wd = _rand(rng, d, di)
+    a = _rand(rng, d, d)
+    G = a @ a.T  # PSD like a real covariance
+    got = quadform(wd, G, blk_i=blk_i)
+    want = ref.quadform_ref(wd, G)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_quadform_nonnegative_on_psd():
+    rng = np.random.default_rng(11)
+    wd = _rand(rng, 32, 16)
+    a = _rand(rng, 32, 32)
+    q = np.asarray(quadform(wd, a @ a.T, blk_i=8))
+    assert (q >= -1e-5).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(blk_n=tiles_n, mn=mult, di=st.sampled_from([8, 16, 32, 64]), seed=seeds)
+def test_hstats_matches_ref(blk_n, mn, di, seed):
+    rng = np.random.default_rng(seed)
+    n = blk_n * mn
+    h = _rand(rng, n, di)
+    m = jnp.asarray(rng.integers(0, 2, size=n), jnp.float32)
+    sq, mx = hstats(h, m, blk_n=blk_n)
+    wsq, wmx = ref.hstats_ref(h, m)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(wsq), **TOL)
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(wmx), **TOL)
+
+
+def test_hstats_all_unrouted_is_zero():
+    rng = np.random.default_rng(5)
+    h = _rand(rng, 16, 8)
+    sq, mx = hstats(h, jnp.zeros(16, jnp.float32), blk_n=8)
+    assert np.asarray(sq).sum() == 0.0 and np.asarray(mx).sum() == 0.0

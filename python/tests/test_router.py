@@ -1,0 +1,55 @@
+"""Router math: the iterative-argmax top-k (the lax.top_k substitute the
+HLO-text parser forced on us) must match lax.top_k wherever ties don't
+intervene, and the gate construction must satisfy top-k semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.configs import get
+
+CFG = get("tiny")
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 32), e=st.integers(2, 12),
+       k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_topk_iterative_matches_lax(n, e, k, seed):
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    # distinct values => no tie ambiguity
+    base = rng.permutation(n * e).astype(np.float32).reshape(n, e)
+    logits = jnp.asarray(base)
+    v1, i1 = M.topk_iterative(logits, k)
+    v2, i2 = jax.lax.top_k(logits, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_topk_tie_breaks_low_index():
+    logits = jnp.asarray([[1.0, 1.0, 0.0]])
+    _v, i = M.topk_iterative(logits, 2)
+    assert list(np.asarray(i)[0]) == [0, 1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_router_gates_semantics(seed):
+    rng = np.random.default_rng(seed)
+    xf = jnp.asarray(rng.normal(size=(16, CFG.d_model)), jnp.float32)
+    router = jnp.asarray(rng.normal(size=(CFG.n_experts, CFG.d_model)),
+                         jnp.float32)
+    gates, probs = M.router_gates(xf, router, CFG)
+    g = np.asarray(gates)
+    # exactly top_k nonzero per row, summing to 1
+    assert ((g > 0).sum(axis=1) == CFG.top_k).all()
+    np.testing.assert_allclose(g.sum(axis=1), 1.0, rtol=1e-5)
+    # the nonzero experts are the argmax set of the logits
+    logits = np.asarray(xf @ router.T)
+    for t in range(16):
+        top = set(np.argsort(-logits[t])[:CFG.top_k])
+        assert set(np.nonzero(g[t])[0]) == top
+    # probs are a full softmax
+    np.testing.assert_allclose(np.asarray(probs).sum(axis=1), 1.0, rtol=1e-5)

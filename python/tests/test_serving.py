@@ -1,0 +1,93 @@
+"""Serving sub-graphs must reproduce the monolithic forward.
+
+The rust coordinator composes attn_prefill/attn_decode + moe_gate + sliced
+experts + lm_head; these tests verify the composition *in python* equals
+`model.forward`, so any rust-side mismatch is a rust bug, not a graph bug.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import serving as S
+from compile.configs import get
+from compile.kernels.expert import expert_ffn_sliced
+
+CFG = get("tiny")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=4)
+
+
+def compose_prefill(params, tokens):
+    """Python mirror of the rust coordinator's prefill composition."""
+    B, T = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :T, :]
+    lmask = jnp.ones((B, T), jnp.float32)
+    caches = []
+    for l in range(CFG.n_layers):
+        p = f"l{l}."
+        x, k, v = S.attn_prefill(x, params[p + "ln1"], params[p + "wq"],
+                                 params[p + "wk"], params[p + "wv"],
+                                 params[p + "wo"], lmask, CFG)
+        caches.append((k, v))
+        xf = x.reshape(B * T, -1)
+        xn, gates = S.moe_gate(xf, params[p + "ln2"], params[p + "router"], CFG)
+        y = jnp.zeros_like(xf)
+        for e in range(CFG.n_experts):
+            out = expert_ffn_sliced(xn, params[p + "wg"][e],
+                                    params[p + "wu"][e], params[p + "wd"][e],
+                                    blk_n=CFG.blk_n, blk_i=CFG.blk_i)
+            y = y + gates[:, e:e + 1] * out
+        x = (xf + y).reshape(B, T, -1)
+    logits = S.lm_head(x.reshape(B * T, -1), params["lnf"], params["embed"])
+    return logits.reshape(B, T, -1), caches
+
+
+def test_prefill_composition_matches_forward(params, rng):
+    tokens = jnp.asarray(rng.integers(0, 256, size=(2, CFG.seq_len)), jnp.int32)
+    mask = jnp.ones((CFG.n_layers, CFG.n_experts, CFG.d_inter), jnp.float32)
+    want, _, _ = M.forward(params, tokens, mask, CFG)
+    got, _ = compose_prefill(params, tokens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_prefill_next_token(params, rng):
+    """Decoding token T given a T-token prefill cache must equal a (T+1)-token
+    prefill — the KV-cache correctness invariant."""
+    B, T = 2, 16
+    tokens = np.asarray(rng.integers(0, 256, size=(B, T + 1)), np.int32)
+    Smax = CFG.max_decode_len
+    H, hd, d = CFG.n_heads, CFG.d_head, CFG.d_model
+
+    # Full prefill over T+1 tokens = reference.
+    full = jnp.asarray(tokens)
+    x_full = params["embed"][full] + params["pos"][None, :T + 1, :]
+    p = "l0."
+    lmask = jnp.ones((B, T + 1), jnp.float32)
+    y_ref, _, _ = S.attn_prefill(x_full, params[p + "ln1"], params[p + "wq"],
+                                 params[p + "wk"], params[p + "wv"],
+                                 params[p + "wo"], lmask, CFG)
+
+    # Prefill T tokens, then decode token T.
+    pre = jnp.asarray(tokens[:, :T])
+    x_pre = params["embed"][pre] + params["pos"][None, :T, :]
+    _, k, v = S.attn_prefill(x_pre, params[p + "ln1"], params[p + "wq"],
+                             params[p + "wk"], params[p + "wv"],
+                             params[p + "wo"], jnp.ones((B, T), jnp.float32),
+                             CFG)
+    kc = jnp.zeros((B, H, Smax, hd), jnp.float32).at[:, :, :T].set(k)
+    vc = jnp.zeros((B, H, Smax, hd), jnp.float32).at[:, :, :T].set(v)
+    x_new = (params["embed"][jnp.asarray(tokens[:, T:T + 1])]
+             + params["pos"][None, T:T + 1, :])
+    pos = jnp.full((B,), T, jnp.int32)
+    y_dec, _, _ = S.attn_decode(x_new, params[p + "ln1"], params[p + "wq"],
+                                params[p + "wk"], params[p + "wv"],
+                                params[p + "wo"], kc, vc, pos, CFG)
+    np.testing.assert_allclose(np.asarray(y_dec)[:, 0],
+                               np.asarray(y_ref)[:, T],
+                               rtol=2e-3, atol=2e-3)

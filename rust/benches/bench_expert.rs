@@ -1,0 +1,55 @@
+//! Expert-kernel latency vs retained width — the mechanism behind Figure 2's
+//! FLOPs-saving axis and Table 3's "real acceleration" claim: halving the
+//! atomic-expert width should roughly halve expert dispatch time.
+
+use heapr::bench::Bench;
+use heapr::runtime::{Engine, Value};
+use heapr::tensor::Tensor;
+use heapr::util::rng::Pcg64;
+
+fn main() {
+    let engine = Engine::open("artifacts/tiny").expect("run `make artifacts`");
+    let cfg = engine.config().clone();
+    let d = cfg.d_model;
+    let mut rng = Pcg64::new(2);
+    let mut bench = Bench::default();
+
+    let n = *cfg.token_buckets.last().unwrap();
+    let x = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.normal()).collect());
+    for &w in &cfg.width_buckets {
+        let name = format!("expert_n{n}_w{w}");
+        engine.warmup(&[name.as_str()]).unwrap();
+        let wg = Tensor::from_vec(&[w, d], (0..w * d).map(|_| rng.normal() * 0.2).collect());
+        let wu = Tensor::from_vec(&[w, d], (0..w * d).map(|_| rng.normal() * 0.2).collect());
+        let wdn = Tensor::from_vec(&[d, w], (0..w * d).map(|_| rng.normal() * 0.2).collect());
+        bench.run(&format!("expert n={n} width={w}"), || {
+            std::hint::black_box(engine.run(&name, &[
+                Value::F32(x.clone()),
+                Value::F32(wg.clone()),
+                Value::F32(wu.clone()),
+                Value::F32(wdn.clone()),
+            ]).unwrap());
+        }, Some((n as f64, "tok/s")));
+    }
+
+    // token-bucket scaling at full width
+    let w = *cfg.width_buckets.last().unwrap();
+    for &nb in &cfg.token_buckets {
+        let name = format!("expert_n{nb}_w{w}");
+        engine.warmup(&[name.as_str()]).unwrap();
+        let xs = Tensor::from_vec(&[nb, d], (0..nb * d).map(|_| rng.normal()).collect());
+        let wg = Tensor::from_vec(&[w, d], (0..w * d).map(|_| rng.normal() * 0.2).collect());
+        let wu = wg.clone();
+        let wdn = Tensor::from_vec(&[d, w], (0..w * d).map(|_| rng.normal() * 0.2).collect());
+        bench.run(&format!("expert n={nb} width={w}"), || {
+            std::hint::black_box(engine.run(&name, &[
+                Value::F32(xs.clone()),
+                Value::F32(wg.clone()),
+                Value::F32(wu.clone()),
+                Value::F32(wdn.clone()),
+            ]).unwrap());
+        }, Some((nb as f64, "tok/s")));
+    }
+
+    bench.save("runs/bench/expert.json").unwrap();
+}

@@ -1,0 +1,62 @@
+//! Pruning-pipeline cost (Table 5's measured column): calibration pass 1,
+//! pass 2, importance scoring and surgery, benchmarked separately so the
+//! §Perf log can attribute regressions.
+
+use heapr::bench::Bench;
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::{CalibSampler, Split};
+use heapr::heapr::{importance_scores, surgery, Calibrator, PrunePlan, Scope};
+use heapr::model::store::ParamStore;
+use heapr::runtime::Engine;
+
+fn main() {
+    let engine = Engine::open("artifacts/tiny").expect("run `make artifacts`");
+    let cfg = engine.config().clone();
+    let grammar = Grammar::standard();
+    let split = Split::from_docs(&grammar.corpus("wiki", 0, 200_000), cfg.seq_len);
+    let params = ParamStore::init(&engine.manifest, 0);
+    let calib = split.sample(cfg.batch * 2, 0);
+    let batches = CalibSampler::batches(&calib, cfg.batch, cfg.seq_len);
+    let mut bench = Bench::quick();
+
+    engine.warmup(&["calib_pass1", "calib_pass2", "quadform"]).unwrap();
+    let tokens_per_batch = (cfg.batch * cfg.seq_len) as f64;
+
+    bench.run("calib/pass1 (fwd+bwd batch)", || {
+        let mut cal = Calibrator::new(&cfg);
+        let (t, g) = &batches[0];
+        cal.accumulate_pass1(&engine, &params, t, g).unwrap();
+    }, Some((tokens_per_batch, "tok/s")));
+
+    bench.run("calib/pass2 (fwd batch)", || {
+        let mut cal = Calibrator::new(&cfg);
+        let (t, _) = &batches[0];
+        cal.accumulate_pass2(&engine, &params, t).unwrap();
+    }, Some((tokens_per_batch, "tok/s")));
+
+    // full stats once, then scoring + surgery timings
+    let mut cal = Calibrator::new(&cfg);
+    for (t, g) in &batches {
+        cal.accumulate_pass1(&engine, &params, t, g).unwrap();
+        cal.accumulate_pass2(&engine, &params, t).unwrap();
+    }
+    let stats = cal.finish();
+    let n_atomic = cfg.n_atomic() as f64;
+
+    bench.run("score/importance (all experts)", || {
+        std::hint::black_box(importance_scores(&engine, &params, &stats).unwrap());
+    }, Some((n_atomic, "atomic/s")));
+
+    let scores = importance_scores(&engine, &params, &stats).unwrap();
+    bench.run("plan/global ranking", || {
+        std::hint::black_box(PrunePlan::from_scores(&scores, 0.25, Scope::Global));
+    }, Some((n_atomic, "atomic/s")));
+
+    let plan = PrunePlan::from_scores(&scores, 0.25, Scope::Global)
+        .bucket_aligned(&scores, cfg.blk_i);
+    bench.run("surgery/slice weights", || {
+        std::hint::black_box(surgery(&params, &plan).unwrap());
+    }, None);
+
+    bench.save("runs/bench/pipeline.json").unwrap();
+}

@@ -1,0 +1,56 @@
+//! End-to-end serving throughput, dense vs HEAPr-pruned (Appendix C shape):
+//! the headline "pruning buys real latency" measurement.
+
+use heapr::bench::Bench;
+use heapr::coordinator::{Request, Server};
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::data::tokenizer::ByteTokenizer;
+use heapr::heapr::PrunePlan;
+use heapr::heapr::Scope;
+use heapr::model::store::ParamStore;
+use heapr::runtime::Engine;
+use heapr::tensor::Tensor;
+
+fn main() {
+    let engine = Engine::open("artifacts/tiny").expect("run `make artifacts`");
+    let cfg = engine.config().clone();
+    let grammar = Grammar::standard();
+    let split = Split::from_docs(&grammar.corpus("wiki", 0, 100_000), cfg.seq_len);
+    let params = ParamStore::init(&engine.manifest, 0);
+    let mut bench = Bench::quick();
+
+    // pseudo-scores: deterministic spread so plans are reproducible
+    let n = cfg.n_atomic();
+    let scores = Tensor::from_vec(
+        &[cfg.n_layers, cfg.n_experts, cfg.d_inter],
+        (0..n).map(|i| ((i * 2654435761) % 10_000) as f32).collect(),
+    );
+
+    let prompt = split.chunks[0][..32].to_vec();
+    let new_tokens = 8;
+    let bb = *cfg.serve_batches.last().unwrap();
+    let mk_requests = || -> Vec<Request> {
+        (0..bb).map(|i| Request::new(i as u64, prompt.clone(), new_tokens)).collect()
+    };
+    let tok_per_run = (bb * new_tokens) as f64;
+
+    for ratio in [0.0, 0.25, 0.5, 0.75] {
+        let plan = if ratio == 0.0 {
+            None
+        } else {
+            Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
+                .bucket_aligned(&scores, cfg.blk_i))
+        };
+        let mut server = Server::new(&engine, &params, plan.as_ref()).unwrap();
+        // warm the executables once
+        server.serve_batch(&mk_requests()).unwrap();
+        bench.run(&format!("serve b{bb} gen{new_tokens} ratio={ratio:.2}"), || {
+            let reqs = mk_requests();
+            std::hint::black_box(server.serve_batch(&reqs).unwrap());
+        }, Some((tok_per_run, "tok/s")));
+        let _ = ByteTokenizer; // keep import for doc symmetry
+    }
+
+    bench.save("runs/bench/serve.json").unwrap();
+}

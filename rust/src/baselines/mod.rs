@@ -1,0 +1,208 @@
+//! Baseline pruning criteria spanning the design space the paper compares
+//! against (DESIGN.md §2 maps each to its published counterpart):
+//!
+//! * [`random_scores`] — random atomic pruning (sanity floor).
+//! * [`magnitude_scores`] — calibration-free weight-norm criterion.
+//! * [`camera_scores`] — CAMERA-P (Xu et al. 2025), the paper's §4.2
+//!   comparison: ε_{i,j} = (‖Φ‖₂ + α‖Φ‖_∞)·‖w_down‖₂ with Φ the atomic
+//!   activations over the calibration set; layerwise by construction.
+//! * [`freq_drop_plan`] — frequency-based whole-expert dropping.
+//! * [`expert_drop_plan`] — NAEE-like whole-expert dropping by measured
+//!   calibration-loss damage.
+//! * expert-level HEAPr lives in `heapr::importance::expert_scores`
+//!   (Table 3 ablation).
+
+use anyhow::Result;
+
+use crate::data::sampler::CalibSampler;
+use crate::heapr::calibrate::CalibStats;
+use crate::heapr::plan::PrunePlan;
+use crate::model::store::ParamStore;
+use crate::runtime::{Engine, Value};
+use crate::tensor::{argsort, Tensor};
+use crate::util::rng::Pcg64;
+
+/// Uniform-random atomic scores.
+pub fn random_scores(l: usize, e: usize, di: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg64::with_stream(seed, 0xbad5e);
+    Tensor::from_vec(&[l, e, di], (0..l * e * di).map(|_| rng.f32()).collect())
+}
+
+/// ‖w_gate_k‖·‖w_up_k‖·‖w_down_k‖ — no calibration data at all.
+pub fn magnitude_scores(params: &ParamStore, l: usize, e: usize, di: usize) -> Result<Tensor> {
+    let mut s = Tensor::zeros(&[l, e, di]);
+    for li in 0..l {
+        let wg = params.get(&format!("l{li}.wg"))?; // [E, di, d]
+        let wu = params.get(&format!("l{li}.wu"))?;
+        let wd = params.get(&format!("l{li}.wd"))?; // [E, d, di]
+        let d = wd.shape()[1];
+        for ei in 0..e {
+            for k in 0..di {
+                let row_norm = |t: &Tensor| -> f32 {
+                    let dlen = t.shape()[2];
+                    let base = (ei * di + k) * dlen;
+                    t.data()[base..base + dlen]
+                        .iter()
+                        .map(|x| x * x)
+                        .sum::<f32>()
+                        .sqrt()
+                };
+                let g = row_norm(wg);
+                let u = row_norm(wu);
+                let mut dn = 0.0f32;
+                for r in 0..d {
+                    let v = wd.at(&[ei, r, k]);
+                    dn += v * v;
+                }
+                s.set(&[li, ei, k], g * u * dn.sqrt());
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// CAMERA-P decoding-time energy. `alpha` weighs the ∞-norm term (the
+/// paper does not publish α; 0.5 is our documented choice). Uses the same
+/// pass-2 statistics HEAPr collects, so the comparison is compute-matched.
+pub fn camera_scores(
+    params: &ParamStore,
+    stats: &CalibStats,
+    alpha: f32,
+) -> Result<Tensor> {
+    let (l, e, _d, di) = stats.cfg_dims;
+    let mut s = Tensor::zeros(&[l, e, di]);
+    for li in 0..l {
+        let wd = params.get(&format!("l{li}.wd"))?; // [E, d, di]
+        let d = wd.shape()[1];
+        for ei in 0..e {
+            let cnt = stats.counts.at(&[li, ei]).max(1.0);
+            for k in 0..di {
+                // ‖Φ‖₂ over routed tokens = sqrt(Σ h²) = sqrt(mean·cnt)
+                let l2 = (stats.hsq_mean.at(&[li, ei, k]) * cnt).sqrt();
+                let linf = stats.hmax.at(&[li, ei, k]);
+                let mut dn = 0.0f32;
+                for r in 0..d {
+                    let v = wd.at(&[ei, r, k]);
+                    dn += v * v;
+                }
+                s.set(&[li, ei, k], (l2 + alpha * linf) * dn.sqrt());
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// Drop whole experts with the lowest routed-token counts until `ratio` of
+/// atomic experts are gone.
+pub fn freq_drop_plan(stats: &CalibStats, ratio: f64) -> PrunePlan {
+    let (_l, _e, _d, di) = stats.cfg_dims;
+    PrunePlan::expert_level(&stats.counts, ratio, di)
+}
+
+/// NAEE-like expert dropping: measure each expert's calibration-loss damage
+/// when fully masked (one `loss_masked` call per expert over a small probe
+/// set), then drop the least-damaging experts.
+pub fn expert_drop_plan(
+    engine: &Engine,
+    params: &ParamStore,
+    probe: &[Vec<i32>],
+    ratio: f64,
+) -> Result<PrunePlan> {
+    let cfg = engine.config().clone();
+    let (l, e, di) = (cfg.n_layers, cfg.n_experts, cfg.d_inter);
+    let batches = CalibSampler::batches(probe, cfg.batch, cfg.seq_len);
+    let mut damage = Tensor::zeros(&[l, e]);
+    for li in 0..l {
+        for ei in 0..e {
+            let mut mask = Tensor::ones(&[l, e, di]);
+            for k in 0..di {
+                mask.set(&[li, ei, k], 0.0);
+            }
+            let mut nll = 0.0f64;
+            let mut cnt = 0.0f64;
+            for (tokens, targets) in &batches {
+                let mut inputs = params.values();
+                inputs.push(Value::F32(mask.clone()));
+                inputs.push(Value::I32(tokens.clone()));
+                inputs.push(Value::I32(targets.clone()));
+                let out = engine.run("loss_masked", &inputs)?;
+                nll += out[0].clone().f32()?.item() as f64;
+                cnt += out[1].clone().f32()?.item() as f64;
+            }
+            damage.set(&[li, ei], (nll / cnt.max(1.0)) as f32);
+        }
+    }
+    Ok(PrunePlan::expert_level(&damage, ratio, di))
+}
+
+/// Rank-agreement diagnostic between two criteria (used by experiments to
+/// report how close a heuristic gets to HEAPr's ordering).
+pub fn rank_overlap(a: &Tensor, b: &Tensor, frac: f64) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let n = a.len();
+    let k = ((n as f64) * frac).round() as usize;
+    let oa: std::collections::HashSet<usize> =
+        argsort(a.data()).into_iter().take(k).collect();
+    let ob: std::collections::HashSet<usize> =
+        argsort(b.data()).into_iter().take(k).collect();
+    if k == 0 {
+        return 1.0;
+    }
+    oa.intersection(&ob).count() as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_scores_deterministic() {
+        let a = random_scores(2, 2, 4, 1);
+        let b = random_scores(2, 2, 4, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, random_scores(2, 2, 4, 2));
+    }
+
+    #[test]
+    fn magnitude_scores_scale_with_weights() {
+        let names = vec!["l0.wg".into(), "l0.wu".into(), "l0.wd".into()];
+        let mut wg = Tensor::ones(&[1, 2, 3]);
+        // make atomic expert 1's gate row twice as large
+        for i in 0..3 {
+            wg.set(&[0, 1, i], 2.0);
+        }
+        let tensors = vec![wg, Tensor::ones(&[1, 2, 3]), Tensor::ones(&[1, 3, 2])];
+        let store = ParamStore::from_tensors(names, tensors);
+        let s = magnitude_scores(&store, 1, 1, 2).unwrap();
+        assert!((s.at(&[0, 0, 1]) / s.at(&[0, 0, 0]) - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn camera_uses_stats() {
+        let names = vec!["l0.wd".into()];
+        let tensors = vec![Tensor::ones(&[1, 2, 2])];
+        let store = ParamStore::from_tensors(names, tensors);
+        let stats = CalibStats {
+            cfg_dims: (1, 1, 2, 2),
+            gbar: Tensor::zeros(&[1, 1, 2, 2]),
+            hsq_mean: Tensor::from_vec(&[1, 1, 2], vec![4.0, 1.0]),
+            hmax: Tensor::from_vec(&[1, 1, 2], vec![2.0, 1.0]),
+            counts: Tensor::from_vec(&[1, 1], vec![4.0]),
+            calib_ce: 0.0,
+            n_sequences: 4,
+        };
+        let s = camera_scores(&store, &stats, 0.5).unwrap();
+        // k=0: (sqrt(16) + 0.5*2) * sqrt(2) = 5*sqrt2; k=1: (2+0.5)*sqrt2
+        assert!((s.at(&[0, 0, 0]) - 5.0 * 2f32.sqrt()).abs() < 1e-4);
+        assert!((s.at(&[0, 0, 1]) - 2.5 * 2f32.sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rank_overlap_bounds() {
+        let a = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(rank_overlap(&a, &b, 0.5), 1.0);
+        let c = Tensor::from_vec(&[4], vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(rank_overlap(&a, &c, 0.5), 0.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Criterion-substitute micro-benchmark harness.
+//!
+//! Used by `rust/benches/*.rs` (registered with `harness = false`). Each
+//! benchmark gets warmup iterations, then timed iterations until both a
+//! minimum count and a minimum wall budget are met; reports mean / p50 /
+//! p99 and writes machine-readable JSON lines for EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let tp = match self.throughput {
+            Some((v, unit)) => format!("  {v:12.1} {unit}"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>7} iters  mean {:>10.1}us  p50 {:>10.1}us  p99 {:>10.1}us{}",
+            self.name, self.iters, self.mean_us, self.p50_us, self.p99_us, tp
+        )
+    }
+
+    pub fn json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::s(self.name.clone())),
+            ("iters", Json::n(self.iters as f64)),
+            ("mean_us", Json::n(self.mean_us)),
+            ("p50_us", Json::n(self.p50_us)),
+            ("p99_us", Json::n(self.p99_us)),
+        ];
+        if let Some((v, unit)) = self.throughput {
+            pairs.push(("throughput", Json::n(v)));
+            pairs.push(("throughput_unit", Json::s(unit)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+pub struct Bench {
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_secs: f64,
+    pub warmup: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_iters: 10,
+            max_iters: 2000,
+            min_secs: 0.5,
+            warmup: 3,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { min_iters: 5, max_iters: 200, min_secs: 0.2, warmup: 1, ..Bench::default() }
+    }
+
+    /// Time `f`; `work` optionally converts per-iter seconds into a
+    /// throughput (value, unit), e.g. tokens/s.
+    pub fn run<F: FnMut()>(
+        &mut self,
+        name: &str,
+        mut f: F,
+        work: Option<(f64, &'static str)>,
+    ) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.min_secs
+                && samples.len() < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        let mean_us = mean(&samples);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_us,
+            p50_us: percentile(&samples, 50.0),
+            p99_us: percentile(&samples, 99.0),
+            throughput: work.map(|(units, label)| (units / (mean_us / 1e6), label)),
+        };
+        println!("{}", result.report());
+        self.results.push(result.clone());
+        result
+    }
+
+    /// Write all results as a JSON array (consumed by EXPERIMENTS.md §Perf).
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        let arr = Json::Arr(self.results.iter().map(|r| r.json()).collect());
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, arr.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let mut b = Bench { min_iters: 5, max_iters: 10, min_secs: 0.0, warmup: 1, results: vec![] };
+        let r = b.run("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        }, Some((1000.0, "adds/s")));
+        assert!(r.iters >= 5);
+        assert!(r.mean_us >= 0.0);
+        assert!(r.throughput.unwrap().0 > 0.0);
+        let j = r.json().to_string();
+        assert!(j.contains("\"name\":\"spin\""));
+    }
+}

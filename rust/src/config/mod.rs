@@ -1,0 +1,124 @@
+//! Configuration. The *model* configuration is read from
+//! `artifacts/<preset>/manifest.json` — the python exporter is the single
+//! source of truth, so rust can never disagree with the compiled HLO about
+//! shapes. Run-level knobs (steps, lr, corpus size, pruning ratio...) are
+//! rust-side with CLI overrides.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Mirror of `python/compile/configs.py::ModelConfig`, parsed from the
+/// manifest's `preset` object.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_inter: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub blk_n: usize,
+    pub blk_i: usize,
+    pub serve_batches: Vec<usize>,
+    pub token_buckets: Vec<usize>,
+    pub width_buckets: Vec<usize>,
+    pub max_decode_len: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_head: j.get("d_head")?.as_usize()?,
+            n_experts: j.get("n_experts")?.as_usize()?,
+            top_k: j.get("top_k")?.as_usize()?,
+            d_inter: j.get("d_inter")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            blk_n: j.get("blk_n")?.as_usize()?,
+            blk_i: j.get("blk_i")?.as_usize()?,
+            serve_batches: j.get("serve_batches")?.usize_vec()?,
+            token_buckets: j.get("token_buckets")?.usize_vec()?,
+            width_buckets: j.get("width_buckets")?.usize_vec()?,
+            max_decode_len: j.get("max_decode_len")?.as_usize()?,
+        })
+    }
+
+    /// Total atomic experts in the model (the pruning universe).
+    pub fn n_atomic(&self) -> usize {
+        self.n_layers * self.n_experts * self.d_inter
+    }
+
+    /// Tokens per training / calibration batch.
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+/// Run-level knobs with sensible defaults; every experiment binds these
+/// from CLI flags.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub seed: u64,
+    pub train_steps: usize,
+    pub lr: f64,
+    pub corpus_mb: f64,
+    /// Calibration samples (sequences), paper default 128.
+    pub calib_samples: usize,
+    pub eval_batches: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            seed: 0,
+            train_steps: 300,
+            lr: 3e-3,
+            corpus_mb: 2.0,
+            calib_samples: 128,
+            eval_batches: 16,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{"name":"tiny","vocab":260,"d_model":64,"n_layers":2,
+                "n_heads":2,"d_head":32,"n_experts":4,"top_k":2,
+                "d_inter":32,"seq_len":64,"batch":4,"blk_n":16,"blk_i":8,
+                "aux_coef":0.01,
+                "serve_batches":[1,4],"token_buckets":[8,32],
+                "width_buckets":[8,16,24,32],"max_decode_len":96}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_preset() {
+        let c = ModelConfig::from_json(&sample_json()).unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.n_atomic(), 2 * 4 * 32);
+        assert_eq!(c.tokens_per_batch(), 256);
+        assert_eq!(c.width_buckets, vec![8, 16, 24, 32]);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let j = Json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Request queue + continuous batcher.
+//!
+//! Producer threads submit [`Request`]s over an mpsc channel; the serving
+//! loop drains the queue into the largest serve-batch bucket that fits,
+//! waiting up to `max_wait` for stragglers — the standard continuous-
+//! batching trade-off between latency and occupancy.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+pub type RequestId = u64;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub submitted: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, submitted: Instant::now() }
+    }
+}
+
+pub struct Batcher {
+    rx: Receiver<Request>,
+    pending: VecDeque<Request>,
+    /// serve-batch buckets, ascending (from the manifest preset).
+    buckets: Vec<usize>,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(rx: Receiver<Request>, mut buckets: Vec<usize>, max_wait: Duration) -> Batcher {
+        buckets.sort_unstable();
+        assert!(!buckets.is_empty());
+        Batcher { rx, pending: VecDeque::new(), buckets, max_wait }
+    }
+
+    /// Largest bucket <= n, or the smallest bucket when n > 0 (padding).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        assert!(n > 0);
+        self.buckets
+            .iter()
+            .rev()
+            .find(|&&b| b <= n)
+            .copied()
+            .unwrap_or(self.buckets[0])
+    }
+
+    fn drain_channel(&mut self) {
+        while let Ok(r) = self.rx.try_recv() {
+            self.pending.push_back(r);
+        }
+    }
+
+    /// Block for the next batch; returns None when the channel closed and
+    /// the queue is empty. Never drops or duplicates a request; order is
+    /// FIFO within the queue.
+    pub fn next_batch(&mut self) -> Option<Vec<Request>> {
+        self.drain_channel();
+        if self.pending.is_empty() {
+            match self.rx.recv() {
+                Ok(r) => self.pending.push_back(r),
+                Err(_) => return None,
+            }
+            self.drain_channel();
+        }
+        // wait briefly for a fuller bucket
+        let deadline = Instant::now() + self.max_wait;
+        while self.pending.len() < *self.buckets.last().unwrap() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(r) => self.pending.push_back(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            self.drain_channel();
+        }
+        let take = self.bucket_for(self.pending.len()).min(self.pending.len());
+        Some(self.pending.drain(..take).collect())
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn mk(buckets: Vec<usize>) -> (std::sync::mpsc::Sender<Request>, Batcher) {
+        let (tx, rx) = channel();
+        let b = Batcher::new(rx, buckets, Duration::from_millis(5));
+        (tx, b)
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let (_tx, b) = mk(vec![1, 4, 8]);
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(3), 1);
+        assert_eq!(b.bucket_for(4), 4);
+        assert_eq!(b.bucket_for(7), 4);
+        assert_eq!(b.bucket_for(100), 8);
+    }
+
+    #[test]
+    fn batches_are_fifo_and_lossless() {
+        let (tx, mut b) = mk(vec![1, 4]);
+        for i in 0..6 {
+            tx.send(Request::new(i, vec![1], 4)).unwrap();
+        }
+        drop(tx);
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() == 1 || batch.len() == 4);
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn closed_empty_returns_none() {
+        let (tx, mut b) = mk(vec![1]);
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn prop_batcher_never_drops() {
+        use crate::util::prop::check;
+        check("batcher-lossless", 20,
+              |g| {
+                  let n = g.usize_in(1, 40);
+                  let buckets = match g.usize_in(0, 2) {
+                      0 => vec![1],
+                      1 => vec![1, 4],
+                      _ => vec![2, 8],
+                  };
+                  (n, buckets)
+              },
+              |&(n, ref buckets)| {
+                  let (tx, rx) = channel();
+                  let mut b = Batcher::new(rx, buckets.clone(),
+                                           Duration::from_millis(0));
+                  for i in 0..n as u64 {
+                      tx.send(Request::new(i, vec![1], 1)).unwrap();
+                  }
+                  drop(tx);
+                  let mut ids = Vec::new();
+                  while let Some(batch) = b.next_batch() {
+                      ids.extend(batch.iter().map(|r| r.id));
+                  }
+                  ids.len() == n && ids.windows(2).all(|w| w[0] < w[1])
+              });
+    }
+}

@@ -1,0 +1,9 @@
+//! Serving coordinator (filled in by `engine.rs`/`batcher.rs`/`router.rs`).
+
+pub mod batcher;
+pub mod router;
+pub mod serve;
+
+pub use batcher::{Batcher, Request, RequestId};
+pub use router::Router;
+pub use serve::{ServeMetrics, Server};

@@ -1,0 +1,111 @@
+//! Expert router: turns dense top-k gate rows into per-expert token groups
+//! for width-bucketed dispatch.
+//!
+//! The `moe_gate_n*` artifact returns gates [N, E] with exact zeros outside
+//! each token's top-k. The router inverts that map: for every expert, the
+//! (token index, gate weight) list of tokens routed to it — the unit of
+//! work the serving loop feeds to `expert_n{N}_w{W}` executables.
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug, Default)]
+pub struct ExpertGroup {
+    pub token_idx: Vec<usize>,
+    pub weights: Vec<f32>,
+}
+
+pub struct Router;
+
+impl Router {
+    /// gates: [N, E] dense top-k weights. Returns E groups.
+    pub fn group(gates: &Tensor) -> Vec<ExpertGroup> {
+        let &[n, e] = gates.shape() else {
+            panic!("gates must be [N,E], got {:?}", gates.shape())
+        };
+        let mut groups = vec![ExpertGroup::default(); e];
+        for t in 0..n {
+            for x in 0..e {
+                let w = gates.at(&[t, x]);
+                if w > 0.0 {
+                    groups[x].token_idx.push(t);
+                    groups[x].weights.push(w);
+                }
+            }
+        }
+        groups
+    }
+
+    /// Smallest bucket >= n from `buckets` (ascending); None if n == 0.
+    /// Falls back to chunks of the largest bucket when n exceeds it (the
+    /// caller loops).
+    pub fn token_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+        if n == 0 {
+            return None;
+        }
+        buckets.iter().find(|&&b| b >= n).copied().or(buckets.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn groups_invert_gates() {
+        // 3 tokens, 2 experts
+        let gates = Tensor::from_vec(&[3, 2], vec![0.7, 0.3, 0.0, 1.0, 0.5, 0.5]);
+        let g = Router::group(&gates);
+        assert_eq!(g[0].token_idx, vec![0, 2]);
+        assert_eq!(g[0].weights, vec![0.7, 0.5]);
+        assert_eq!(g[1].token_idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn bucket_choice() {
+        let b = vec![8, 32, 128];
+        assert_eq!(Router::token_bucket(&b, 0), None);
+        assert_eq!(Router::token_bucket(&b, 1), Some(8));
+        assert_eq!(Router::token_bucket(&b, 9), Some(32));
+        assert_eq!(Router::token_bucket(&b, 1000), Some(128));
+    }
+
+    #[test]
+    fn prop_grouping_preserves_mass() {
+        check("router-mass", 30,
+              |g| {
+                  let n = g.usize_in(1, 20);
+                  let e = g.usize_in(1, 6);
+                  let k = g.usize_in(1, e);
+                  let mut data = vec![0.0f32; n * e];
+                  for t in 0..n {
+                      let picks = g.rng.choose_distinct(e, k);
+                      for &p in &picks {
+                          data[t * e + p] = 0.01 + g.rng.f32();
+                      }
+                  }
+                  (n, e, k, data)
+              },
+              |&(n, e, k, ref data)| {
+                  let gates = Tensor::from_vec(&[n, e], data.clone());
+                  let groups = Router::group(&gates);
+                  // every token appears exactly k times across groups
+                  let mut count = vec![0usize; n];
+                  let mut mass = vec![0.0f32; n];
+                  for (ei, g) in groups.iter().enumerate() {
+                      for (i, &t) in g.token_idx.iter().enumerate() {
+                          count[t] += 1;
+                          mass[t] += g.weights[i];
+                          if (gates.at(&[t, ei]) - g.weights[i]).abs() > 1e-6 {
+                              return false;
+                          }
+                      }
+                  }
+                  count.iter().all(|&c| c == k)
+                      && mass.iter().enumerate().all(|(t, &m)| {
+                          let want: f32 = (0..e).map(|x| gates.at(&[t, x])).sum();
+                          (m - want).abs() < 1e-5
+                      })
+              });
+    }
+}

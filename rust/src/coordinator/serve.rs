@@ -1,0 +1,571 @@
+//! The serving engine: composes per-layer artifacts with rust-side routing,
+//! width-bucketed expert dispatch and KV-cache decode.
+//!
+//! This is where HEAPr's atomic pruning turns into real latency: pruned
+//! experts carry physically sliced weights whose retained width W selects a
+//! smaller `expert_n{N}_w{W}` executable — fewer Pallas grid steps, fewer
+//! FLOPs, measured end to end by `benches/bench_serve.rs`.
+//!
+//! Layer composition per token batch (python never runs):
+//!   embed+pos (rust) → [attn_prefill | attn_decode] → moe_gate →
+//!   router groups (rust) → expert_n{N}_w{W} per routed expert →
+//!   weighted scatter-add + residual (rust) → … → lm_head → greedy sample.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::Request;
+use crate::coordinator::router::Router;
+use crate::data::tokenizer::{EOS, PAD};
+use crate::heapr::plan::{surgery, PrunePlan};
+use crate::model::store::ParamStore;
+use crate::model::WidthProfile;
+use crate::runtime::{DeviceTensor, Engine, Value};
+use crate::tensor::{ITensor, Tensor};
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub latencies_ms: Vec<f64>,
+    pub expert_tokens: Vec<usize>, // routed token count per (layer*E + e)
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.wall_s
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub latency_ms: f64,
+}
+
+struct ExpertWeights {
+    /// device-resident weight buffers [wg, wu, wd] (§Perf: uploaded once at
+    /// server build; per-call uploads are activations only)
+    bufs: [DeviceTensor; 3],
+    /// host copies for the legacy literal path (HEAPR_NO_BUFFER_CACHE=1,
+    /// kept for the §Perf before/after measurement)
+    host: [Tensor; 3],
+    width: usize,
+}
+
+/// §Perf before/after switch: set HEAPR_NO_BUFFER_CACHE=1 to re-measure the
+/// pre-optimization path (every input marshalled host->literal per call).
+fn buffer_cache_enabled() -> bool {
+    std::env::var("HEAPR_NO_BUFFER_CACHE").map(|v| v != "1").unwrap_or(true)
+}
+
+/// Per-layer device-resident static weights.
+struct LayerBuffers {
+    attn: [DeviceTensor; 5], // ln1, wq, wk, wv, wo
+    ln2: DeviceTensor,
+    router: DeviceTensor,
+}
+
+pub struct Server<'e> {
+    engine: &'e Engine,
+    base: ParamStore,
+    experts: Vec<Vec<ExpertWeights>>, // [layer][expert]
+    layers: Vec<LayerBuffers>,
+    lnf_buf: DeviceTensor,
+    embed_buf: DeviceTensor,
+    pub widths: WidthProfile,
+    pub metrics: ServeMetrics,
+}
+
+impl<'e> Server<'e> {
+    /// Build from a full checkpoint and an optional (bucket-aligned!)
+    /// pruning plan. With a plan, expert weights are physically sliced.
+    pub fn new(engine: &'e Engine, store: &ParamStore, plan: Option<&PrunePlan>) -> Result<Server<'e>> {
+        let cfg = engine.config().clone();
+        let full_plan;
+        let plan = match plan {
+            Some(p) => p,
+            None => {
+                full_plan = PrunePlan {
+                    keep: vec![
+                        vec![(0..cfg.d_inter).collect(); cfg.n_experts];
+                        cfg.n_layers
+                    ],
+                    d_inter: cfg.d_inter,
+                };
+                &full_plan
+            }
+        };
+        for layer in &plan.keep {
+            for keep in layer {
+                if keep.len() % cfg.blk_i != 0 {
+                    return Err(anyhow!(
+                        "plan width {} not a multiple of blk_i {} — call \
+                         bucket_aligned() first",
+                        keep.len(),
+                        cfg.blk_i
+                    ));
+                }
+            }
+        }
+        let sliced = surgery(store, plan)?;
+        let up = |t: &Tensor| engine.upload(&Value::F32(t.clone()));
+        let mut experts = Vec::with_capacity(cfg.n_layers);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let mut row = Vec::with_capacity(cfg.n_experts);
+            for e in 0..cfg.n_experts {
+                let wg = sliced.get(&format!("l{l}.e{e}.wg"))?;
+                let wu = sliced.get(&format!("l{l}.e{e}.wu"))?;
+                let wd = sliced.get(&format!("l{l}.e{e}.wd"))?;
+                let width = wg.shape()[0];
+                // width-0 experts never execute; upload a 1-element dummy
+                let bufs = if width == 0 {
+                    let dummy = Tensor::zeros(&[1]);
+                    [up(&dummy)?, up(&dummy)?, up(&dummy)?]
+                } else {
+                    [up(wg)?, up(wu)?, up(wd)?]
+                };
+                row.push(ExpertWeights {
+                    bufs,
+                    host: [wg.clone(), wu.clone(), wd.clone()],
+                    width,
+                });
+            }
+            experts.push(row);
+            layers.push(LayerBuffers {
+                attn: [
+                    up(store.get(&format!("l{l}.ln1"))?)?,
+                    up(store.get(&format!("l{l}.wq"))?)?,
+                    up(store.get(&format!("l{l}.wk"))?)?,
+                    up(store.get(&format!("l{l}.wv"))?)?,
+                    up(store.get(&format!("l{l}.wo"))?)?,
+                ],
+                ln2: up(store.get(&format!("l{l}.ln2"))?)?,
+                router: up(store.get(&format!("l{l}.router"))?)?,
+            });
+        }
+        let lnf_buf = up(store.get("lnf")?)?;
+        let embed_buf = up(store.get("embed")?)?;
+        Ok(Server {
+            engine,
+            base: store.clone(),
+            widths: plan.widths(),
+            experts,
+            layers,
+            lnf_buf,
+            embed_buf,
+            metrics: ServeMetrics {
+                expert_tokens: vec![0; cfg.n_layers * cfg.n_experts],
+                ..Default::default()
+            },
+        })
+    }
+
+    fn cfg(&self) -> crate::config::ModelConfig {
+        self.engine.config().clone()
+    }
+
+    /// embed lookup + positional embedding; pad id embeds position anyway.
+    fn embed(&self, tokens: &[i32], positions: &[usize]) -> Result<Tensor> {
+        let cfg = self.cfg();
+        let embed = self.base.get("embed")?;
+        let pos = self.base.get("pos")?;
+        let d = cfg.d_model;
+        let mut out = vec![0.0f32; tokens.len() * d];
+        for (i, (&t, &p)) in tokens.iter().zip(positions).enumerate() {
+            let trow = &embed.data()[(t as usize) * d..(t as usize + 1) * d];
+            let prow = &pos.data()[p * d..(p + 1) * d];
+            for j in 0..d {
+                out[i * d + j] = trow[j] + prow[j];
+            }
+        }
+        Ok(Tensor::from_vec(&[tokens.len(), d], out))
+    }
+
+    /// MoE layer over a flat token matrix [N, d]; returns x + moe(x).
+    fn moe_layer(&mut self, l: usize, x: Tensor) -> Result<Tensor> {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        let n = x.shape()[0];
+        let buckets = cfg.token_buckets.clone();
+        let max_bucket = *buckets.last().unwrap();
+        let mut y = x.clone(); // residual accumulates expert outputs
+
+        let mut start = 0usize;
+        while start < n {
+            let take = (n - start).min(max_bucket);
+            let nb = Router::token_bucket(&buckets, take).unwrap();
+            // pad chunk to bucket
+            let mut chunk = vec![0.0f32; nb * d];
+            chunk[..take * d]
+                .copy_from_slice(&x.data()[start * d..(start + take) * d]);
+            let chunk_t = Tensor::from_vec(&[nb, d], chunk);
+            let out = if buffer_cache_enabled() {
+                let chunk_b = self.engine.upload(&Value::F32(chunk_t))?;
+                self.engine.run_b(
+                    &format!("moe_gate_n{nb}"),
+                    &[&chunk_b.buf, &self.layers[l].ln2.buf, &self.layers[l].router.buf],
+                )?
+            } else {
+                self.engine.run(
+                    &format!("moe_gate_n{nb}"),
+                    &[
+                        Value::F32(chunk_t),
+                        Value::F32(self.base.get(&format!("l{l}.ln2"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.router"))?.clone()),
+                    ],
+                )?
+            };
+            let xn = out[0].clone().f32()?;
+            let gates = out[1].clone().f32()?;
+            let groups = Router::group(&gates);
+
+            for (e, group) in groups.iter().enumerate() {
+                // drop padding rows from the group
+                let pairs: Vec<(usize, f32)> = group
+                    .token_idx
+                    .iter()
+                    .zip(&group.weights)
+                    .filter(|(&t, _)| t < take)
+                    .map(|(&t, &w)| (t, w))
+                    .collect();
+                if pairs.is_empty() {
+                    continue;
+                }
+                let ew = &self.experts[l][e];
+                self.metrics.expert_tokens[l * cfg.n_experts + e] += pairs.len();
+                if ew.width == 0 {
+                    continue; // fully pruned expert contributes nothing
+                }
+                let mut gstart = 0usize;
+                while gstart < pairs.len() {
+                    let gtake = (pairs.len() - gstart).min(max_bucket);
+                    let gb = Router::token_bucket(&buckets, gtake).unwrap();
+                    let mut xs = vec![0.0f32; gb * d];
+                    for (i, (t, _)) in
+                        pairs[gstart..gstart + gtake].iter().enumerate()
+                    {
+                        xs[i * d..(i + 1) * d]
+                            .copy_from_slice(&xn.data()[t * d..(t + 1) * d]);
+                    }
+                    let xs_t = Tensor::from_vec(&[gb, d], xs);
+                    let res = if buffer_cache_enabled() {
+                        let xs_b = self.engine.upload(&Value::F32(xs_t))?;
+                        self.engine.run_b(
+                            &format!("expert_n{gb}_w{}", ew.width),
+                            &[&xs_b.buf, &ew.bufs[0].buf, &ew.bufs[1].buf, &ew.bufs[2].buf],
+                        )?
+                    } else {
+                        self.engine.run(
+                            &format!("expert_n{gb}_w{}", ew.width),
+                            &[
+                                Value::F32(xs_t),
+                                Value::F32(ew.host[0].clone()),
+                                Value::F32(ew.host[1].clone()),
+                                Value::F32(ew.host[2].clone()),
+                            ],
+                        )?
+                    };
+                    let ys = res.into_iter().next().unwrap().f32()?;
+                    for (i, (t, w)) in
+                        pairs[gstart..gstart + gtake].iter().enumerate()
+                    {
+                        let dst = (start + t) * d;
+                        let src = &ys.data()[i * d..(i + 1) * d];
+                        for j in 0..d {
+                            y.data_mut()[dst + j] += w * src[j];
+                        }
+                    }
+                    gstart += gtake;
+                }
+            }
+            start += take;
+        }
+        Ok(y)
+    }
+
+    /// Last-position logits for a set of row states [B, d].
+    fn lm_head(&self, states: Tensor) -> Result<Tensor> {
+        let cfg = self.cfg();
+        let b = states.shape()[0];
+        let d = cfg.d_model;
+        let nb = Router::token_bucket(&cfg.token_buckets, b).unwrap();
+        let mut xs = vec![0.0f32; nb * d];
+        xs[..b * d].copy_from_slice(states.data());
+        let xs_t = Tensor::from_vec(&[nb, d], xs);
+        let out = if buffer_cache_enabled() {
+            let xs_b = self.engine.upload(&Value::F32(xs_t))?;
+            self.engine.run_b(
+                &format!("lm_head_n{nb}"),
+                &[&xs_b.buf, &self.lnf_buf.buf, &self.embed_buf.buf],
+            )?
+        } else {
+            self.engine.run(
+                &format!("lm_head_n{nb}"),
+                &[
+                    Value::F32(xs_t),
+                    Value::F32(self.base.get("lnf")?.clone()),
+                    Value::F32(self.base.get("embed")?.clone()),
+                ],
+            )?
+        };
+        let logits = out.into_iter().next().unwrap().f32()?;
+        Ok(logits.slice0(0, b))
+    }
+
+    /// Full-batch prefill; returns (per-seq last-position logits [B, V],
+    /// per-layer KV caches sized [B, H, Smax, hd]).
+    #[allow(clippy::type_complexity)]
+    pub fn prefill(
+        &mut self,
+        prompts: &[Vec<i32>],
+    ) -> Result<(Tensor, Vec<(Tensor, Tensor)>)> {
+        let cfg = self.cfg();
+        let (t, d) = (cfg.seq_len, cfg.d_model);
+        let bb = cfg
+            .serve_batches
+            .iter()
+            .find(|&&b| b >= prompts.len())
+            .copied()
+            .ok_or_else(|| anyhow!("batch {} exceeds buckets", prompts.len()))?;
+
+        let mut tokens = vec![PAD; bb * t];
+        let mut lmask = vec![0.0f32; bb * t];
+        for (i, p) in prompts.iter().enumerate() {
+            assert!(p.len() <= t, "prompt longer than seq_len");
+            tokens[i * t..i * t + p.len()].copy_from_slice(p);
+            for j in 0..p.len() {
+                lmask[i * t + j] = 1.0;
+            }
+        }
+        let positions: Vec<usize> = (0..bb * t).map(|i| i % t).collect();
+        let x0 = self.embed(&tokens, &positions)?;
+        let mut x = x0.reshape(&[bb, t, d])?;
+        let lmask_t = Tensor::from_vec(&[bb, t], lmask);
+
+        let lmask_b = self.engine.upload(&Value::F32(lmask_t.clone()))?;
+        let mut caches = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let out = if buffer_cache_enabled() {
+                let x_b = self.engine.upload(&Value::F32(x.clone()))?;
+                let a = &self.layers[l].attn;
+                self.engine.run_b(
+                    &format!("attn_prefill_b{bb}"),
+                    &[&x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf, &a[3].buf, &a[4].buf, &lmask_b.buf],
+                )?
+            } else {
+                self.engine.run(
+                    &format!("attn_prefill_b{bb}"),
+                    &[
+                        Value::F32(x.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.ln1"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.wq"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.wk"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.wv"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.wo"))?.clone()),
+                        Value::F32(lmask_t.clone()),
+                    ],
+                )?
+            };
+            let [y, k, v]: [Value; 3] = out
+                .try_into()
+                .map_err(|_| anyhow!("attn_prefill output arity"))?;
+            // place prefill K/V into Smax-sized caches
+            let (kt, vt) = (k.f32()?, v.f32()?);
+            caches.push((
+                grow_cache(&kt, cfg.max_decode_len),
+                grow_cache(&vt, cfg.max_decode_len),
+            ));
+            let flat = y.f32()?.reshape(&[bb * t, d])?;
+            let merged = self.moe_layer(l, flat)?;
+            x = merged.reshape(&[bb, t, d])?;
+        }
+        // last valid position per sequence
+        let xf = x.reshape(&[bb * t, d])?;
+        let mut states = vec![0.0f32; prompts.len() * d];
+        for (i, p) in prompts.iter().enumerate() {
+            let pos = i * t + p.len() - 1;
+            states[i * d..(i + 1) * d]
+                .copy_from_slice(&xf.data()[pos * d..(pos + 1) * d]);
+        }
+        let logits = self.lm_head(Tensor::from_vec(&[prompts.len(), d], states))?;
+        Ok((logits, caches))
+    }
+
+    /// One greedy decode step for `batch` sequences at `positions`.
+    pub fn decode_step(
+        &mut self,
+        next_tokens: &[i32],
+        positions: &[usize],
+        caches: &mut [(Tensor, Tensor)],
+        bb: usize,
+    ) -> Result<Tensor> {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        let b = next_tokens.len();
+        assert!(b <= bb);
+        let mut toks = vec![PAD; bb];
+        toks[..b].copy_from_slice(next_tokens);
+        let mut poss = vec![0usize; bb];
+        poss[..b].copy_from_slice(positions);
+        let x = self.embed(&toks, &poss)?.reshape(&[bb, 1, d])?;
+
+        let pos_t = ITensor::from_vec(&[bb], poss.iter().map(|&p| p as i32).collect());
+        let pos_b = self.engine.upload(&Value::I32(pos_t.clone()))?;
+        let mut x = x;
+        for l in 0..cfg.n_layers {
+            let out = if buffer_cache_enabled() {
+                let x_b = self.engine.upload(&Value::F32(x.clone()))?;
+                let kc_b = self.engine.upload(&Value::F32(caches[l].0.clone()))?;
+                let vc_b = self.engine.upload(&Value::F32(caches[l].1.clone()))?;
+                let a = &self.layers[l].attn;
+                self.engine.run_b(
+                    &format!("attn_decode_b{bb}"),
+                    &[&x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf, &a[3].buf, &a[4].buf, &kc_b.buf, &vc_b.buf, &pos_b.buf],
+                )?
+            } else {
+                self.engine.run(
+                    &format!("attn_decode_b{bb}"),
+                    &[
+                        Value::F32(x.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.ln1"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.wq"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.wk"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.wv"))?.clone()),
+                        Value::F32(self.base.get(&format!("l{l}.wo"))?.clone()),
+                        Value::F32(caches[l].0.clone()),
+                        Value::F32(caches[l].1.clone()),
+                        Value::I32(pos_t.clone()),
+                    ],
+                )?
+            };
+            let [y, kc, vc]: [Value; 3] = out
+                .try_into()
+                .map_err(|_| anyhow!("attn_decode output arity"))?;
+            caches[l] = (kc.f32()?, vc.f32()?);
+            let flat = y.f32()?.reshape(&[bb, d])?;
+            let merged = self.moe_layer(l, flat)?;
+            x = merged.reshape(&[bb, 1, d])?;
+        }
+        self.lm_head(x.reshape(&[bb, d])?.slice0(0, b))
+    }
+
+    /// Serve a batch of requests to completion (greedy decoding).
+    pub fn serve_batch(&mut self, requests: &[Request]) -> Result<Vec<Response>> {
+        let cfg = self.cfg();
+        let t0 = Instant::now();
+        let prompts: Vec<Vec<i32>> = requests.iter().map(|r| r.prompt.clone()).collect();
+        let bb = cfg
+            .serve_batches
+            .iter()
+            .find(|&&b| b >= prompts.len())
+            .copied()
+            .ok_or_else(|| anyhow!("batch too large"))?;
+        let (logits, mut caches) = self.prefill(&prompts)?;
+        let b = prompts.len();
+
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut done = vec![false; b];
+        let mut next: Vec<i32> = (0..b).map(|i| argmax_row(&logits, i)).collect();
+        let mut positions: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let max_pos = cfg.seq_len.min(cfg.max_decode_len);
+
+        loop {
+            let mut active = false;
+            for i in 0..b {
+                if done[i] {
+                    continue;
+                }
+                generated[i].push(next[i]);
+                if next[i] == EOS
+                    || generated[i].len() >= requests[i].max_new_tokens
+                    || positions[i] + 1 >= max_pos
+                {
+                    done[i] = true;
+                } else {
+                    active = true;
+                }
+            }
+            if !active {
+                break;
+            }
+            let logits = self.decode_step(&next, &positions, &mut caches, bb)?;
+            for i in 0..b {
+                if !done[i] {
+                    next[i] = argmax_row(&logits, i);
+                    positions[i] += 1;
+                }
+            }
+        }
+        let latency = t0.elapsed().as_secs_f64() * 1000.0;
+        self.metrics.requests += b;
+        self.metrics.prompt_tokens += prompts.iter().map(|p| p.len()).sum::<usize>();
+        self.metrics.generated_tokens +=
+            generated.iter().map(|g| g.len()).sum::<usize>();
+        self.metrics.wall_s += latency / 1000.0;
+        Ok(requests
+            .iter()
+            .zip(generated)
+            .map(|(r, tokens)| {
+                self.metrics.latencies_ms.push(latency);
+                Response { id: r.id, tokens, latency_ms: latency }
+            })
+            .collect())
+    }
+}
+
+fn argmax_row(logits: &Tensor, row: usize) -> i32 {
+    let v = logits.shape()[1];
+    let xs = &logits.data()[row * v..(row + 1) * v];
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as i32
+}
+
+/// Copy a [B, H, T, hd] prefill cache into a [B, H, Smax, hd] decode cache.
+fn grow_cache(kv: &Tensor, smax: usize) -> Tensor {
+    let &[b, h, t, hd] = kv.shape() else { panic!("bad cache shape") };
+    assert!(smax >= t);
+    let mut out = Tensor::zeros(&[b, h, smax, hd]);
+    for bi in 0..b {
+        for hi in 0..h {
+            let src = ((bi * h) + hi) * t * hd;
+            let dst = ((bi * h) + hi) * smax * hd;
+            out.data_mut()[dst..dst + t * hd]
+                .copy_from_slice(&kv.data()[src..src + t * hd]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_row_picks_max() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0]);
+        assert_eq!(argmax_row(&t, 0), 1);
+        assert_eq!(argmax_row(&t, 1), 0);
+    }
+
+    #[test]
+    fn grow_cache_preserves_prefix() {
+        let kv = Tensor::from_vec(&[1, 2, 2, 2], (0..8).map(|x| x as f32).collect());
+        let g = grow_cache(&kv, 4);
+        assert_eq!(g.shape(), &[1, 2, 4, 2]);
+        assert_eq!(g.at(&[0, 0, 1, 1]), 3.0);
+        assert_eq!(g.at(&[0, 1, 0, 0]), 4.0);
+        assert_eq!(g.at(&[0, 0, 2, 0]), 0.0); // grown region zeroed
+    }
+}

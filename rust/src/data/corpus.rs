@@ -1,0 +1,450 @@
+//! Deterministic topic-grammar corpus generator.
+//!
+//! Structure (all seeded, fully reproducible):
+//! * `N_TOPICS` topics, each with disjoint noun/verb/adjective banks built
+//!   from per-topic syllable inventories — documents stay within one topic,
+//!   so the router learns topic-specialised experts (the redundancy pattern
+//!   HEAPr exploits).
+//! * Shared function words and person names.
+//! * Sentence templates embed the patterns the zero-shot tasks test:
+//!   subject-verb agreement, fact retrieval, antonym negation, phrase copy,
+//!   token alternation, counting.
+//!
+//! Two "corpora" (synth-wiki / synth-c4) differ by seed stream and topic
+//! mixture — standing in for the paper's WikiText-2 vs C4 calibration
+//! robustness study (Figure 4).
+
+use crate::util::rng::Pcg64;
+
+pub const N_TOPICS: usize = 6;
+const NOUNS_PER_TOPIC: usize = 8;
+const VERBS_PER_TOPIC: usize = 6;
+const ADJ_PAIRS_PER_TOPIC: usize = 4;
+
+const NAMES: [&str; 10] = [
+    "ana", "bo", "cleo", "dag", "eli", "finn", "gia", "hugo", "iris", "jun",
+];
+
+const NUMBERS: [&str; 10] = [
+    "one", "two", "three", "four", "five", "six", "seven", "eight", "nine",
+    "ten",
+];
+
+/// Per-topic syllable inventories keep topic vocabularies disjoint and
+/// visually distinct (useful when eyeballing generations).
+const ONSETS: [[&str; 4]; N_TOPICS] = [
+    ["br", "gr", "dr", "tr"],
+    ["sl", "sm", "sn", "sp"],
+    ["k", "kl", "kr", "qu"],
+    ["v", "z", "zh", "w"],
+    ["pl", "pr", "fl", "fr"],
+    ["m", "n", "l", "r"],
+];
+const VOWELS: [&str; 5] = ["a", "e", "i", "o", "u"];
+const CODAS: [[&str; 4]; N_TOPICS] = [
+    ["k", "g", "t", "d"],
+    ["p", "b", "m", "n"],
+    ["sh", "ch", "x", "s"],
+    ["l", "r", "v", "z"],
+    ["nt", "nd", "mp", "st"],
+    ["ff", "ll", "ss", "zz"],
+];
+
+#[derive(Clone, Debug)]
+pub struct Topic {
+    pub nouns: Vec<String>,
+    pub verbs: Vec<String>,
+    /// Antonym pairs (a, b): corpus guarantees "not a ... b" co-occurrence.
+    pub adj_pairs: Vec<(String, String)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Grammar {
+    pub topics: Vec<Topic>,
+}
+
+/// Zero-shot task kinds (the 7 synthetic benchmarks of DESIGN.md §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    TopicCloze,
+    Agreement,
+    Retrieval,
+    Negation,
+    Copy,
+    Pattern,
+    Counting,
+}
+
+pub const ALL_TASKS: [TaskKind; 7] = [
+    TaskKind::TopicCloze,
+    TaskKind::Agreement,
+    TaskKind::Retrieval,
+    TaskKind::Negation,
+    TaskKind::Copy,
+    TaskKind::Pattern,
+    TaskKind::Counting,
+];
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::TopicCloze => "TopicCloze",
+            TaskKind::Agreement => "Agreement",
+            TaskKind::Retrieval => "Retrieval",
+            TaskKind::Negation => "Negation",
+            TaskKind::Copy => "Copy",
+            TaskKind::Pattern => "Pattern",
+            TaskKind::Counting => "Counting",
+        }
+    }
+}
+
+/// A multiple-choice item scored LM-Eval style: the model must assign the
+/// correct continuation a higher length-normalised log-likelihood.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub kind: TaskKind,
+    pub prefix: String,
+    pub choices: Vec<String>,
+    pub correct: usize,
+}
+
+impl Grammar {
+    /// The grammar itself is fixed (independent of corpus seed): tasks and
+    /// corpus must share word banks.
+    pub fn standard() -> Grammar {
+        let mut topics = Vec::with_capacity(N_TOPICS);
+        for t in 0..N_TOPICS {
+            let mut words = Vec::new();
+            // enumerate syllable products deterministically
+            for &on in &ONSETS[t] {
+                for &v in &VOWELS {
+                    for &cod in &CODAS[t] {
+                        words.push(format!("{on}{v}{cod}"));
+                    }
+                }
+            }
+            let need = NOUNS_PER_TOPIC + VERBS_PER_TOPIC + 2 * ADJ_PAIRS_PER_TOPIC;
+            assert!(words.len() >= need);
+            // deterministic stride sampling so banks are spread out
+            let stride = words.len() / need;
+            let picks: Vec<String> =
+                (0..need).map(|i| words[i * stride].clone()).collect();
+            let nouns = picks[..NOUNS_PER_TOPIC].to_vec();
+            let verbs =
+                picks[NOUNS_PER_TOPIC..NOUNS_PER_TOPIC + VERBS_PER_TOPIC].to_vec();
+            let adjs = &picks[NOUNS_PER_TOPIC + VERBS_PER_TOPIC..];
+            let adj_pairs = (0..ADJ_PAIRS_PER_TOPIC)
+                .map(|i| (adjs[2 * i].clone(), adjs[2 * i + 1].clone()))
+                .collect();
+            topics.push(Topic { nouns, verbs, adj_pairs });
+        }
+        Grammar { topics }
+    }
+
+    // ---------------------------------------------------------------------
+    // sentence generators (each mirrors a task pattern)
+    // ---------------------------------------------------------------------
+
+    fn s_topic(&self, t: usize, rng: &mut Pcg64) -> String {
+        let tp = &self.topics[t];
+        let n1 = &tp.nouns[rng.below(tp.nouns.len())];
+        let v = &tp.verbs[rng.below(tp.verbs.len())];
+        let n2 = &tp.nouns[rng.below(tp.nouns.len())];
+        format!("the {n1} {v} the {n2} .")
+    }
+
+    fn s_agreement(&self, t: usize, rng: &mut Pcg64) -> String {
+        let tp = &self.topics[t];
+        let n = &tp.nouns[rng.below(tp.nouns.len())];
+        let (a, b) = &tp.adj_pairs[rng.below(tp.adj_pairs.len())];
+        let adj = if rng.below(2) == 0 { a } else { b };
+        if rng.below(2) == 0 {
+            format!("the {n} is {adj} .")
+        } else {
+            format!("the {n}s are {adj} .")
+        }
+    }
+
+    fn s_fact(&self, t: usize, name: &str, noun: &str, _rng: &mut Pcg64) -> String {
+        let _ = t;
+        format!("{name} likes the {noun} .")
+    }
+
+    fn s_negation(&self, t: usize, rng: &mut Pcg64) -> String {
+        let tp = &self.topics[t];
+        let n = &tp.nouns[rng.below(tp.nouns.len())];
+        let (a, b) = &tp.adj_pairs[rng.below(tp.adj_pairs.len())];
+        let (neg, pos) = if rng.below(2) == 0 { (a, b) } else { (b, a) };
+        format!("the {n} is not {neg} . the {n} is {pos} .")
+    }
+
+    fn s_copy(&self, t: usize, rng: &mut Pcg64) -> String {
+        let tp = &self.topics[t];
+        let w: Vec<&String> =
+            (0..3).map(|_| &tp.nouns[rng.below(tp.nouns.len())]).collect();
+        format!("{} {} {} . {} {} {} .", w[0], w[1], w[2], w[0], w[1], w[2])
+    }
+
+    fn s_pattern(&self, t: usize, rng: &mut Pcg64) -> String {
+        let tp = &self.topics[t];
+        let a = &tp.nouns[rng.below(tp.nouns.len())];
+        let b = &tp.verbs[rng.below(tp.verbs.len())];
+        format!("{a} {b} {a} {b} {a} {b} .")
+    }
+
+    fn s_counting(&self, rng: &mut Pcg64) -> String {
+        let start = rng.below(6);
+        let len = 4 + rng.below(3);
+        let words: Vec<&str> = NUMBERS[start..(start + len).min(10)].to_vec();
+        format!("{} .", words.join(" "))
+    }
+
+    /// One document: a topic, 4–9 sentences mixing the pattern families.
+    pub fn document(&self, rng: &mut Pcg64, topic_weights: &[f32]) -> String {
+        let t = rng.weighted(topic_weights);
+        let n_sent = 4 + rng.below(6);
+        let mut sents = Vec::with_capacity(n_sent);
+        // one persistent fact per doc supports the retrieval pattern
+        let name = NAMES[rng.below(NAMES.len())];
+        let noun = self.topics[t].nouns[rng.below(NOUNS_PER_TOPIC)].clone();
+        for _ in 0..n_sent {
+            let s = match rng.below(10) {
+                0..=3 => self.s_topic(t, rng),
+                4 => self.s_agreement(t, rng),
+                5 => self.s_fact(t, name, &noun, rng),
+                6 => self.s_negation(t, rng),
+                7 => self.s_copy(t, rng),
+                8 => self.s_pattern(t, rng),
+                _ => self.s_counting(rng),
+            };
+            sents.push(s);
+        }
+        // restate the fact at the end: retrieval is learnable in-context
+        sents.push(self.s_fact(t, name, &noun, rng));
+        sents.join(" ")
+    }
+
+    /// Generate a corpus of roughly `target_bytes` as a list of documents.
+    /// `flavor` selects the seed stream + topic mixture — "wiki" is uniform,
+    /// "c4" is skewed (some topics rarer), "ptb" is a different skew used as
+    /// the second perplexity column in Table 1.
+    pub fn corpus(&self, flavor: &str, seed: u64, target_bytes: usize) -> Vec<String> {
+        let (stream, weights): (u64, Vec<f32>) = match flavor {
+            "wiki" => (1, vec![1.0; N_TOPICS]),
+            "c4" => (2, (0..N_TOPICS).map(|t| 1.0 / (1.0 + t as f32)).collect()),
+            "ptb" => (3, (0..N_TOPICS).map(|t| 0.3 + ((t * 7) % 5) as f32).collect()),
+            _ => panic!("unknown corpus flavor {flavor:?}"),
+        };
+        let mut rng = Pcg64::with_stream(seed, stream);
+        let mut docs = Vec::new();
+        let mut total = 0usize;
+        while total < target_bytes {
+            let d = self.document(&mut rng, &weights);
+            total += d.len() + 2;
+            docs.push(d);
+        }
+        docs
+    }
+
+    // ---------------------------------------------------------------------
+    // zero-shot task items (held-out instantiations of the same patterns)
+    // ---------------------------------------------------------------------
+
+    pub fn task_items(&self, kind: TaskKind, n: usize, seed: u64) -> Vec<TaskItem> {
+        let mut rng = Pcg64::with_stream(seed, 100 + kind as u64);
+        (0..n).map(|_| self.task_item(kind, &mut rng)).collect()
+    }
+
+    fn task_item(&self, kind: TaskKind, rng: &mut Pcg64) -> TaskItem {
+        match kind {
+            TaskKind::TopicCloze => {
+                let t = rng.below(N_TOPICS);
+                let other = (t + 1 + rng.below(N_TOPICS - 1)) % N_TOPICS;
+                let tp = &self.topics[t];
+                let ctx = format!("{} {}", self.s_topic(t, rng), self.s_topic(t, rng));
+                let v = &tp.verbs[rng.below(tp.verbs.len())];
+                let n1 = &tp.nouns[rng.below(tp.nouns.len())];
+                let good = &tp.nouns[rng.below(tp.nouns.len())];
+                let bad = &self.topics[other].nouns
+                    [rng.below(self.topics[other].nouns.len())];
+                TaskItem {
+                    kind,
+                    prefix: format!("{ctx} the {n1} {v} the"),
+                    choices: vec![format!(" {good}"), format!(" {bad}")],
+                    correct: 0,
+                }
+            }
+            TaskKind::Agreement => {
+                let t = rng.below(N_TOPICS);
+                let tp = &self.topics[t];
+                let n = &tp.nouns[rng.below(tp.nouns.len())];
+                let plural = rng.below(2) == 1;
+                let subj = if plural { format!("{n}s") } else { n.clone() };
+                let (good, bad) = if plural { (" are", " is") } else { (" is", " are") };
+                TaskItem {
+                    kind,
+                    prefix: format!("{} the {subj}", self.s_topic(t, rng)),
+                    choices: vec![good.to_string(), bad.to_string()],
+                    correct: 0,
+                }
+            }
+            TaskKind::Retrieval => {
+                let t = rng.below(N_TOPICS);
+                let tp = &self.topics[t];
+                let name = NAMES[rng.below(NAMES.len())];
+                let good = &tp.nouns[rng.below(tp.nouns.len())];
+                let mut bad = &tp.nouns[rng.below(tp.nouns.len())];
+                while bad == good {
+                    bad = &tp.nouns[rng.below(tp.nouns.len())];
+                }
+                let filler = self.s_topic(t, rng);
+                TaskItem {
+                    kind,
+                    prefix: format!("{name} likes the {good} . {filler} {name} likes the"),
+                    choices: vec![format!(" {good}"), format!(" {bad}")],
+                    correct: 0,
+                }
+            }
+            TaskKind::Negation => {
+                let t = rng.below(N_TOPICS);
+                let tp = &self.topics[t];
+                let n = &tp.nouns[rng.below(tp.nouns.len())];
+                let (a, b) = &tp.adj_pairs[rng.below(tp.adj_pairs.len())];
+                let (neg, pos) = if rng.below(2) == 0 { (a, b) } else { (b, a) };
+                TaskItem {
+                    kind,
+                    prefix: format!("the {n} is not {neg} . the {n} is"),
+                    choices: vec![format!(" {pos}"), format!(" {neg}")],
+                    correct: 0,
+                }
+            }
+            TaskKind::Copy => {
+                let t = rng.below(N_TOPICS);
+                let tp = &self.topics[t];
+                let w: Vec<String> = (0..3)
+                    .map(|_| tp.nouns[rng.below(tp.nouns.len())].clone())
+                    .collect();
+                let mut bad = tp.nouns[rng.below(tp.nouns.len())].clone();
+                while bad == w[2] {
+                    bad = tp.nouns[rng.below(tp.nouns.len())].clone();
+                }
+                TaskItem {
+                    kind,
+                    prefix: format!("{} {} {} . {} {}", w[0], w[1], w[2], w[0], w[1]),
+                    choices: vec![format!(" {}", w[2]), format!(" {bad}")],
+                    correct: 0,
+                }
+            }
+            TaskKind::Pattern => {
+                let t = rng.below(N_TOPICS);
+                let tp = &self.topics[t];
+                let a = &tp.nouns[rng.below(tp.nouns.len())];
+                let b = &tp.verbs[rng.below(tp.verbs.len())];
+                let mut bad = &tp.verbs[rng.below(tp.verbs.len())];
+                while bad == b {
+                    bad = &tp.verbs[rng.below(tp.verbs.len())];
+                }
+                TaskItem {
+                    kind,
+                    prefix: format!("{a} {b} {a} {b} {a}"),
+                    choices: vec![format!(" {b}"), format!(" {bad}")],
+                    correct: 0,
+                }
+            }
+            TaskKind::Counting => {
+                let start = rng.below(5);
+                let len = 3 + rng.below(3);
+                let prefix = NUMBERS[start..start + len].join(" ");
+                let good = NUMBERS[start + len];
+                let mut bi = rng.below(10);
+                while bi == start + len {
+                    bi = rng.below(10);
+                }
+                TaskItem {
+                    kind,
+                    prefix,
+                    choices: vec![format!(" {good}"), format!(" {}", NUMBERS[bi])],
+                    correct: 0,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_topics_are_disjoint() {
+        let g = Grammar::standard();
+        assert_eq!(g.topics.len(), N_TOPICS);
+        let mut all: Vec<&String> = Vec::new();
+        for t in &g.topics {
+            all.extend(t.nouns.iter());
+            all.extend(t.verbs.iter());
+            for (a, b) in &t.adj_pairs {
+                all.push(a);
+                all.push(b);
+            }
+        }
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n, "word banks must be globally disjoint");
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_sized() {
+        let g = Grammar::standard();
+        let a = g.corpus("wiki", 7, 10_000);
+        let b = g.corpus("wiki", 7, 10_000);
+        assert_eq!(a, b);
+        // target counts "\n\n" separators; allow for them here
+        let total: usize = a.iter().map(|d| d.len() + 2).sum();
+        assert!(total >= 10_000);
+        let c = g.corpus("wiki", 8, 10_000);
+        assert_ne!(a, c, "different seed -> different corpus");
+    }
+
+    #[test]
+    fn flavors_differ() {
+        let g = Grammar::standard();
+        assert_ne!(g.corpus("wiki", 7, 5_000), g.corpus("c4", 7, 5_000));
+        assert_ne!(g.corpus("c4", 7, 5_000), g.corpus("ptb", 7, 5_000));
+    }
+
+    #[test]
+    fn task_items_well_formed() {
+        let g = Grammar::standard();
+        for kind in ALL_TASKS {
+            let items = g.task_items(kind, 50, 3);
+            assert_eq!(items.len(), 50);
+            for it in &items {
+                assert_eq!(it.choices.len(), 2);
+                assert_eq!(it.correct, 0);
+                assert_ne!(it.choices[0], it.choices[1], "{it:?}");
+                assert!(!it.prefix.is_empty());
+                assert!(it.choices.iter().all(|c| c.starts_with(' ')), "{it:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn task_items_deterministic_per_seed() {
+        let g = Grammar::standard();
+        let a = g.task_items(TaskKind::Retrieval, 5, 11);
+        let b = g.task_items(TaskKind::Retrieval, 5, 11);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn documents_restate_fact() {
+        let g = Grammar::standard();
+        let mut rng = Pcg64::new(5);
+        let d = g.document(&mut rng, &[1.0; N_TOPICS]);
+        assert!(d.contains("likes the"));
+        assert!(d.ends_with('.'));
+    }
+}

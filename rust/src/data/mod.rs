@@ -1,0 +1,18 @@
+//! Data substrate: synthetic corpus, tokenizers, calibration sampler.
+//!
+//! The paper calibrates on WikiText-2/C4 and evaluates on LM-Eval zero-shot
+//! tasks; neither is available offline, so we build the closest synthetic
+//! equivalent (DESIGN.md §2): a deterministic *topic grammar* whose
+//! documents carry (a) topic-clustered vocabulary — which drives MoE expert
+//! specialisation, the statistical structure HEAPr's routed-token
+//! calibration depends on — and (b) recurring linguistic patterns
+//! (agreement, retrieval, negation, ...) that the 7 zero-shot tasks probe
+//! with held-out instantiations.
+
+pub mod corpus;
+pub mod tokenizer;
+pub mod sampler;
+
+pub use corpus::{Grammar, TaskItem, TaskKind};
+pub use sampler::{CalibSampler, Split};
+pub use tokenizer::{ByteTokenizer, Bpe, PAD, BOS, EOS, SEP};

@@ -1,0 +1,172 @@
+//! Corpus chunking + the paper's calibration sampling strategy.
+//!
+//! Paper Appendix B: concatenate all documents with "\n\n", tokenize the
+//! full stream, split into consecutive fixed-length samples, then (with a
+//! fixed random seed) select `n` samples uniformly. We reproduce exactly
+//! that, plus train/eval splits for the training loop and perplexity
+//! evaluation.
+
+use crate::data::tokenizer::{ByteTokenizer, BOS, PAD};
+use crate::tensor::ITensor;
+use crate::util::rng::Pcg64;
+
+/// A tokenized corpus split into fixed-length chunks.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub chunks: Vec<Vec<i32>>,
+    pub seq_len: usize,
+}
+
+impl Split {
+    /// Appendix-B chunking: docs joined by "\n\n", byte-tokenized, cut into
+    /// consecutive `seq_len`-token samples (remainder dropped).
+    pub fn from_docs(docs: &[String], seq_len: usize) -> Split {
+        let text = docs.join("\n\n");
+        let stream = ByteTokenizer.encode(&text);
+        let chunks = stream
+            .chunks_exact(seq_len)
+            .map(|c| c.to_vec())
+            .collect();
+        Split { chunks, seq_len }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Fixed-seed random selection of `n` chunks (paper: random.seed(0),
+    /// 128 samples). Errors if the corpus is too small.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<Vec<i32>> {
+        assert!(
+            n <= self.chunks.len(),
+            "requested {n} calibration samples from {} chunks",
+            self.chunks.len()
+        );
+        let mut rng = Pcg64::with_stream(seed, 0xca11b);
+        rng.choose_distinct(self.chunks.len(), n)
+            .into_iter()
+            .map(|i| self.chunks[i].clone())
+            .collect()
+    }
+
+    /// Deterministic head/tail split for train vs held-out perplexity.
+    pub fn train_eval(self, eval_frac: f64) -> (Split, Split) {
+        let n_eval = ((self.chunks.len() as f64) * eval_frac).ceil() as usize;
+        let n_train = self.chunks.len() - n_eval;
+        let (train, eval) = {
+            let mut c = self.chunks;
+            let eval = c.split_off(n_train);
+            (c, eval)
+        };
+        (
+            Split { chunks: train, seq_len: self.seq_len },
+            Split { chunks: eval, seq_len: self.seq_len },
+        )
+    }
+}
+
+/// Batches of (tokens, targets) for the train_step / calib / loss
+/// artifacts. Targets are next-token; the final target of each chunk is PAD
+/// (ignored by the loss). Short batches are padded with PAD rows.
+pub struct CalibSampler;
+
+impl CalibSampler {
+    /// Pack `chunks[lo..hi]` into one (tokens, targets) pair of shape
+    /// [batch, seq_len], padding missing rows entirely with PAD.
+    pub fn pack(chunks: &[Vec<i32>], batch: usize, seq_len: usize) -> (ITensor, ITensor) {
+        assert!(chunks.len() <= batch);
+        let mut toks = vec![PAD; batch * seq_len];
+        let mut tgts = vec![PAD; batch * seq_len];
+        for (b, c) in chunks.iter().enumerate() {
+            assert_eq!(c.len(), seq_len);
+            // input: BOS + chunk[..-1]; target: chunk — next-token LM over
+            // the chunk's own tokens.
+            toks[b * seq_len] = BOS;
+            toks[b * seq_len + 1..(b + 1) * seq_len].copy_from_slice(&c[..seq_len - 1]);
+            tgts[b * seq_len..(b + 1) * seq_len].copy_from_slice(c);
+        }
+        (
+            ITensor::from_vec(&[batch, seq_len], toks),
+            ITensor::from_vec(&[batch, seq_len], tgts),
+        )
+    }
+
+    /// All batches covering `chunks` in order.
+    pub fn batches(chunks: &[Vec<i32>], batch: usize, seq_len: usize) -> Vec<(ITensor, ITensor)> {
+        chunks
+            .chunks(batch)
+            .map(|group| Self::pack(group, batch, seq_len))
+            .collect()
+    }
+
+    /// Random training batch.
+    pub fn train_batch(
+        split: &Split,
+        batch: usize,
+        rng: &mut Pcg64,
+    ) -> (ITensor, ITensor) {
+        let picks: Vec<Vec<i32>> = (0..batch.min(split.n_chunks()))
+            .map(|_| split.chunks[rng.below(split.n_chunks())].clone())
+            .collect();
+        Self::pack(&picks, batch, split.seq_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Grammar;
+
+    fn small_split() -> Split {
+        let g = Grammar::standard();
+        Split::from_docs(&g.corpus("wiki", 0, 50_000), 64)
+    }
+
+    #[test]
+    fn chunking_is_exact() {
+        let s = small_split();
+        assert!(s.n_chunks() > 100);
+        assert!(s.chunks.iter().all(|c| c.len() == 64));
+    }
+
+    #[test]
+    fn sampling_is_seeded_and_distinct() {
+        let s = small_split();
+        let a = s.sample(16, 0);
+        let b = s.sample(16, 0);
+        assert_eq!(a, b);
+        let c = s.sample(16, 1);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn pack_produces_shifted_targets() {
+        let chunks = vec![(0..64).map(|x| x % 256).collect::<Vec<i32>>()];
+        let (toks, tgts) = CalibSampler::pack(&chunks, 2, 64);
+        assert_eq!(toks.shape(), &[2, 64]);
+        assert_eq!(toks.data()[0], BOS);
+        assert_eq!(toks.data()[1], 0);
+        assert_eq!(tgts.data()[0], 0);
+        assert_eq!(tgts.data()[63], 63);
+        // padded second row
+        assert!(toks.data()[64..].iter().all(|&t| t == PAD));
+        assert!(tgts.data()[64..].iter().all(|&t| t == PAD));
+    }
+
+    #[test]
+    fn batches_cover_all_chunks() {
+        let s = small_split();
+        let sample = s.sample(10, 0);
+        let bs = CalibSampler::batches(&sample, 4, 64);
+        assert_eq!(bs.len(), 3); // 4 + 4 + 2(padded)
+    }
+
+    #[test]
+    fn train_eval_split_disjoint_sizes() {
+        let s = small_split();
+        let total = s.n_chunks();
+        let (tr, ev) = s.train_eval(0.1);
+        assert_eq!(tr.n_chunks() + ev.n_chunks(), total);
+        assert!(ev.n_chunks() >= total / 20);
+    }
+}

@@ -1,0 +1,174 @@
+//! Tokenizers.
+//!
+//! The compiled models use the *byte* tokenizer (vocab 260 = 256 bytes +
+//! specials) — simple, lossless, and matches the vocab baked into the HLO
+//! artifacts. A small BPE trainer/encoder is provided as a substrate for
+//! corpus analysis and for validating the data pipeline against a
+//! merged-token view (it is exercised by tests and the corpus-stats tool,
+//! not by the model path).
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 256;
+pub const BOS: i32 = 257;
+pub const EOS: i32 = 258;
+pub const SEP: i32 = 259;
+pub const VOCAB: usize = 260;
+
+/// Lossless byte-level tokenizer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, s: &str) -> Vec<i32> {
+        s.bytes().map(|b| b as i32).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Byte-pair encoding with a trained merge table.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merge rank: (left, right) -> merged symbol id (>= 256)
+    merges: HashMap<(u32, u32), u32>,
+    /// symbol id -> byte expansion
+    pieces: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Train `n_merges` merges on `text` by iterated most-frequent-pair.
+    pub fn train(text: &str, n_merges: usize) -> Bpe {
+        let mut pieces: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        let mut merges = HashMap::new();
+        // work on a sample of words to keep training cheap
+        let mut words: Vec<Vec<u32>> = text
+            .split_whitespace()
+            .take(50_000)
+            .map(|w| w.bytes().map(|b| b as u32).collect())
+            .collect();
+        for _ in 0..n_merges {
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in &words {
+                for pair in w.windows(2) {
+                    *counts.entry((pair[0], pair[1])).or_insert(0) += 1;
+                }
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(p, &c)| (c, std::cmp::Reverse(**p))) else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = pieces.len() as u32;
+            let mut expansion = pieces[pair.0 as usize].clone();
+            expansion.extend_from_slice(&pieces[pair.1 as usize]);
+            pieces.push(expansion);
+            merges.insert(pair, new_id);
+            for w in &mut words {
+                Self::apply_merge(w, pair, new_id);
+            }
+        }
+        Bpe { merges, pieces }
+    }
+
+    fn apply_merge(w: &mut Vec<u32>, pair: (u32, u32), new_id: u32) {
+        let mut out = Vec::with_capacity(w.len());
+        let mut i = 0;
+        while i < w.len() {
+            if i + 1 < w.len() && (w[i], w[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(w[i]);
+                i += 1;
+            }
+        }
+        *w = out;
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    pub fn encode(&self, s: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for word in s.split_inclusive(' ') {
+            let mut syms: Vec<u32> = word.bytes().map(|b| b as u32).collect();
+            loop {
+                // find the applicable merge that was learned (any; repeat to
+                // fixpoint — merge table is closed under composition order)
+                let mut applied = false;
+                let mut i = 0;
+                while i + 1 < syms.len() {
+                    if let Some(&id) = self.merges.get(&(syms[i], syms[i + 1])) {
+                        syms[i] = id;
+                        syms.remove(i + 1);
+                        applied = true;
+                    } else {
+                        i += 1;
+                    }
+                }
+                if !applied {
+                    break;
+                }
+            }
+            out.extend(syms);
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            bytes.extend_from_slice(&self.pieces[id as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "the brak slom kesh . 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn byte_decode_skips_specials() {
+        let t = ByteTokenizer;
+        let mut ids = t.encode("hi");
+        ids.insert(0, BOS);
+        ids.push(EOS);
+        ids.push(PAD);
+        assert_eq!(t.decode(&ids), "hi");
+    }
+
+    #[test]
+    fn bpe_roundtrip_and_compresses() {
+        let text = "the brak likes the brak . the brak is big . ".repeat(50);
+        let bpe = Bpe::train(&text, 40);
+        assert!(bpe.vocab_size() > 256);
+        let enc = bpe.encode(&text);
+        assert_eq!(bpe.decode(&enc), text);
+        assert!(enc.len() < text.len(), "{} !< {}", enc.len(), text.len());
+    }
+
+    #[test]
+    fn bpe_handles_unseen_text() {
+        let bpe = Bpe::train("aaa bbb aaa bbb", 10);
+        let s = "zq xw";
+        assert_eq!(bpe.decode(&bpe.encode(s)), s);
+    }
+}

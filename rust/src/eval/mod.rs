@@ -1,0 +1,58 @@
+//! Evaluation harness: held-out perplexity + the 7 synthetic zero-shot
+//! tasks, scored LM-Eval style (length-normalised choice log-likelihood).
+
+pub mod tasks;
+
+pub use tasks::{eval_tasks, TaskResult};
+
+use anyhow::Result;
+
+use crate::data::sampler::{CalibSampler, Split};
+use crate::model::store::ParamStore;
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+
+/// exp(mean NLL) on up to `max_batches` of the split, under an atomic-expert
+/// keep mask (all-ones = unpruned).
+pub fn perplexity(
+    engine: &Engine,
+    params: &ParamStore,
+    mask: &Tensor,
+    split: &Split,
+    max_batches: usize,
+) -> Result<f64> {
+    let cfg = engine.config().clone();
+    let batches = CalibSampler::batches(&split.chunks, cfg.batch, cfg.seq_len);
+    let mut nll = 0.0f64;
+    let mut cnt = 0.0f64;
+    for (tokens, targets) in batches.into_iter().take(max_batches) {
+        let mut inputs = params.values();
+        inputs.push(Value::F32(mask.clone()));
+        inputs.push(Value::I32(tokens));
+        inputs.push(Value::I32(targets));
+        let out = engine.run("loss_masked", &inputs)?;
+        nll += out[0].clone().f32()?.item() as f64;
+        cnt += out[1].clone().f32()?.item() as f64;
+    }
+    Ok((nll / cnt.max(1.0)).exp())
+}
+
+/// Convenience: the all-ones mask for a config.
+pub fn ones_mask(engine: &Engine) -> Tensor {
+    let c = engine.config();
+    Tensor::ones(&[c.n_layers, c.n_experts, c.d_inter])
+}
+
+#[cfg(test)]
+mod tests {
+    // artifact-backed perplexity is covered by rust/tests/integration.rs;
+    // the pure logic here (mask shape) is trivial enough to assert inline.
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn ones_mask_shape_logic() {
+        let m = Tensor::ones(&[2, 4, 32]);
+        assert_eq!(m.len(), 256);
+        assert!(m.data().iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,180 @@
+//! Zero-shot task evaluation (LM-Eval mechanics).
+//!
+//! Every `TaskItem` contributes two scored sequences (prefix+choice); the
+//! model is correct when the *correct* choice has higher length-normalised
+//! log-likelihood. Sequences are packed `batch` per `seq_nll` call; targets
+//! are PAD everywhere except the choice span, so the artifact returns
+//! exactly the choice log-likelihood.
+
+use anyhow::Result;
+
+use crate::data::corpus::{Grammar, TaskItem, TaskKind, ALL_TASKS};
+use crate::data::tokenizer::{ByteTokenizer, BOS, PAD};
+use crate::model::store::ParamStore;
+use crate::runtime::{Engine, Value};
+use crate::tensor::{ITensor, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub kind: TaskKind,
+    pub accuracy: f64,
+    pub n_items: usize,
+}
+
+/// Encode one (prefix, choice) into a (tokens, targets) row pair.
+/// Targets are PAD outside the choice span. Truncates the prefix from the
+/// left if the sequence exceeds seq_len.
+fn encode_row(prefix: &str, choice: &str, seq_len: usize) -> (Vec<i32>, Vec<i32>) {
+    let tok = ByteTokenizer;
+    let mut p = tok.encode(prefix);
+    let c = tok.encode(choice);
+    // need 1 (BOS) + len(p) + len(c) <= seq_len + 1 positions; inputs drop
+    // the final token (it is only ever a target).
+    let max_p = seq_len.saturating_sub(c.len());
+    if p.len() > max_p {
+        p = p[p.len() - max_p..].to_vec();
+    }
+    let full: Vec<i32> = p.iter().chain(c.iter()).copied().collect();
+    let mut tokens = vec![PAD; seq_len];
+    let mut targets = vec![PAD; seq_len];
+    tokens[0] = BOS;
+    for (i, &t) in full[..full.len() - 1].iter().enumerate() {
+        tokens[i + 1] = t;
+    }
+    // target[t] = full[t]; mask to the choice span only
+    for (i, &t) in full.iter().enumerate().skip(p.len()) {
+        targets[i] = t;
+    }
+    (tokens, targets)
+}
+
+/// Batched per-row NLL of many (prefix, choice) rows.
+fn score_rows(
+    engine: &Engine,
+    params: &ParamStore,
+    mask: &Tensor,
+    rows: &[(Vec<i32>, Vec<i32>)],
+) -> Result<Vec<f64>> {
+    let cfg = engine.config().clone();
+    let (b, t) = (cfg.batch, cfg.seq_len);
+    let mut out = Vec::with_capacity(rows.len());
+    for group in rows.chunks(b) {
+        let mut toks = vec![PAD; b * t];
+        let mut tgts = vec![PAD; b * t];
+        for (i, (tk, tg)) in group.iter().enumerate() {
+            toks[i * t..(i + 1) * t].copy_from_slice(tk);
+            tgts[i * t..(i + 1) * t].copy_from_slice(tg);
+        }
+        let mut inputs = params.values();
+        inputs.push(Value::F32(mask.clone()));
+        inputs.push(Value::I32(ITensor::from_vec(&[b, t], toks)));
+        inputs.push(Value::I32(ITensor::from_vec(&[b, t], tgts)));
+        let res = engine.run("seq_nll", &inputs)?;
+        let nll = res[0].clone().f32()?;
+        let cnt = res[1].clone().f32()?;
+        for i in 0..group.len() {
+            // length-normalised log-likelihood (higher = better)
+            out.push(-(nll.data()[i] as f64) / (cnt.data()[i] as f64).max(1.0));
+        }
+    }
+    Ok(out)
+}
+
+/// Accuracy of one task's items.
+pub fn eval_task(
+    engine: &Engine,
+    params: &ParamStore,
+    mask: &Tensor,
+    items: &[TaskItem],
+) -> Result<TaskResult> {
+    let seq_len = engine.config().seq_len;
+    let mut rows = Vec::with_capacity(items.len() * 2);
+    for it in items {
+        for ch in &it.choices {
+            rows.push(encode_row(&it.prefix, ch, seq_len));
+        }
+    }
+    let scores = score_rows(engine, params, mask, &rows)?;
+    let mut correct = 0usize;
+    for (i, it) in items.iter().enumerate() {
+        let s = &scores[i * it.choices.len()..(i + 1) * it.choices.len()];
+        let best = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == it.correct {
+            correct += 1;
+        }
+    }
+    Ok(TaskResult {
+        kind: items[0].kind,
+        accuracy: correct as f64 / items.len() as f64,
+        n_items: items.len(),
+    })
+}
+
+/// Run all 7 tasks with `n_items` each.
+pub fn eval_tasks(
+    engine: &Engine,
+    params: &ParamStore,
+    mask: &Tensor,
+    n_items: usize,
+    seed: u64,
+) -> Result<Vec<TaskResult>> {
+    let grammar = Grammar::standard();
+    ALL_TASKS
+        .iter()
+        .map(|&kind| {
+            let items = grammar.task_items(kind, n_items, seed);
+            eval_task(engine, params, mask, &items)
+        })
+        .collect()
+}
+
+/// Mean accuracy across task results.
+pub fn mean_accuracy(results: &[TaskResult]) -> f64 {
+    results.iter().map(|r| r.accuracy).sum::<f64>() / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_row_spans() {
+        let (toks, tgts) = encode_row("ab", " cd", 16);
+        // full = "ab cd" (5 bytes); prefix 2, choice 3
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks[1], 'a' as i32);
+        assert_eq!(toks[2], 'b' as i32);
+        assert_eq!(toks[3], ' ' as i32);
+        assert_eq!(toks[4], 'c' as i32);
+        assert_eq!(toks[5], PAD); // final 'd' never an input
+        // targets only on choice span (positions 2..5 predict " cd")
+        assert_eq!(tgts[0], PAD);
+        assert_eq!(tgts[1], PAD);
+        assert_eq!(tgts[2], ' ' as i32);
+        assert_eq!(tgts[3], 'c' as i32);
+        assert_eq!(tgts[4], 'd' as i32);
+        assert_eq!(tgts[5], PAD);
+    }
+
+    #[test]
+    fn encode_row_truncates_left() {
+        let long_prefix = "x".repeat(100);
+        let (toks, tgts) = encode_row(&long_prefix, " yz", 32);
+        assert_eq!(toks.len(), 32);
+        assert_eq!(tgts.len(), 32);
+        // choice still present at the tail
+        let n_tgt = tgts.iter().filter(|&&t| t != PAD).count();
+        assert_eq!(n_tgt, 3);
+    }
+
+    #[test]
+    fn choice_tokens_count_matches() {
+        let (_, tgts) = encode_row("the brak", " slom", 64);
+        assert_eq!(tgts.iter().filter(|&&t| t != PAD).count(), 5);
+    }
+}

@@ -1,0 +1,234 @@
+//! Shared experiment plumbing: one trained model per preset (cached on
+//! disk), corpus splits, the evaluation suite, and table formatting.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::data::corpus::{Grammar, ALL_TASKS};
+use crate::data::sampler::Split;
+use crate::eval::tasks::{eval_tasks, mean_accuracy};
+use crate::eval::{ones_mask, perplexity};
+use crate::info;
+use crate::model::checkpoint::Checkpoint;
+use crate::model::store::ParamStore;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::train::Trainer;
+use crate::util::json::Json;
+
+pub struct Ctx {
+    pub engine: Engine,
+    pub run: RunConfig,
+    pub grammar: Grammar,
+    pub train_split: Split,
+    /// held-out synth-wiki (perplexity column 1)
+    pub eval_wiki: Split,
+    /// held-out synth-ptb (perplexity column 2)
+    pub eval_ptb: Split,
+    /// synth-c4 calibration corpus (Figure 4)
+    pub calib_c4: Split,
+    pub params: ParamStore,
+    pub out_dir: PathBuf,
+}
+
+impl Ctx {
+    /// Open artifacts, build corpora, and train (or load the cached)
+    /// model checkpoint at `<out>/model-<preset>.ckpt`.
+    pub fn prepare(artifact_dir: &str, run: RunConfig, out: &str) -> Result<Ctx> {
+        let engine = Engine::open(artifact_dir)?;
+        let cfg = engine.config().clone();
+        let grammar = Grammar::standard();
+
+        let bytes = (run.corpus_mb * 1e6) as usize;
+        let wiki = Split::from_docs(&grammar.corpus("wiki", run.seed, bytes), cfg.seq_len);
+        let (train_split, eval_wiki) = wiki.train_eval(0.05);
+        let eval_ptb = Split::from_docs(
+            &grammar.corpus("ptb", run.seed, bytes / 8),
+            cfg.seq_len,
+        );
+        let calib_c4 = Split::from_docs(
+            &grammar.corpus("c4", run.seed, bytes / 2),
+            cfg.seq_len,
+        );
+
+        let out_dir = PathBuf::from(out);
+        std::fs::create_dir_all(&out_dir)?;
+        let ckpt_path = out_dir.join(format!("model-{}.ckpt", cfg.name));
+        let params = if ckpt_path.exists() {
+            info!("loading cached checkpoint {ckpt_path:?}");
+            Checkpoint::load(&ckpt_path)?.store
+        } else {
+            info!(
+                "training {} ({} steps, lr {}) on synth-wiki…",
+                cfg.name, run.train_steps, run.lr
+            );
+            let mut params = ParamStore::init(&engine.manifest, run.seed);
+            let mut trainer = Trainer::new(&engine);
+            let report = trainer.train(&mut params, &train_split, &run)?;
+            info!(
+                "trained: final loss {:.4} in {:.1}s",
+                report.final_loss, report.wallclock_s
+            );
+            let curve = Json::Arr(
+                report
+                    .curve
+                    .iter()
+                    .map(|&(s, l, c)| {
+                        Json::Arr(vec![
+                            Json::n(s as f64),
+                            Json::n(l as f64),
+                            Json::n(c as f64),
+                        ])
+                    })
+                    .collect(),
+            );
+            Checkpoint {
+                store: params.clone(),
+                widths: None,
+                meta: Json::obj(vec![
+                    ("steps", Json::n(run.train_steps as f64)),
+                    ("final_loss", Json::n(report.final_loss as f64)),
+                    ("curve", curve),
+                ]),
+            }
+            .save(&ckpt_path)?;
+            params
+        };
+        Ok(Ctx {
+            engine,
+            run,
+            grammar,
+            train_split,
+            eval_wiki,
+            eval_ptb,
+            calib_c4,
+            params,
+            out_dir,
+        })
+    }
+
+    /// Calibration sample per the paper's Appendix-B strategy, from the
+    /// training-distribution corpus.
+    pub fn calib_wiki(&self, n: usize, seed: u64) -> Vec<Vec<i32>> {
+        self.train_split.sample(n.min(self.train_split.n_chunks()), seed)
+    }
+
+    pub fn ones(&self) -> Tensor {
+        ones_mask(&self.engine)
+    }
+}
+
+/// Full Table-1-style evaluation row under a mask.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub ppl_wiki: f64,
+    pub ppl_ptb: f64,
+    pub task_acc: Vec<f64>, // per ALL_TASKS order
+    pub avg: f64,
+}
+
+pub fn eval_suite(ctx: &Ctx, params: &ParamStore, mask: &Tensor) -> Result<SuiteResult> {
+    let ppl_wiki = perplexity(&ctx.engine, params, mask, &ctx.eval_wiki, ctx.run.eval_batches)?;
+    let ppl_ptb = perplexity(&ctx.engine, params, mask, &ctx.eval_ptb, ctx.run.eval_batches)?;
+    let results = eval_tasks(&ctx.engine, params, mask, 32, 777)?;
+    let task_acc: Vec<f64> = results.iter().map(|r| r.accuracy).collect();
+    let avg = mean_accuracy(&results);
+    Ok(SuiteResult { ppl_wiki, ppl_ptb, task_acc, avg })
+}
+
+pub fn suite_headers() -> Vec<String> {
+    let mut h = vec!["Wiki↓".to_string(), "PTB↓".to_string()];
+    h.extend(ALL_TASKS.iter().map(|t| t.name().to_string()));
+    h.push("Avg↑".to_string());
+    h
+}
+
+pub fn suite_row(s: &SuiteResult) -> Vec<String> {
+    let mut r = vec![format!("{:.2}", s.ppl_wiki), format!("{:.2}", s.ppl_ptb)];
+    r.extend(s.task_acc.iter().map(|a| format!("{a:.2}")));
+    r.push(format!("{:.3}", s.avg));
+    r
+}
+
+/// Monospace table printer (markdown-ish, matches EXPERIMENTS.md style).
+pub fn print_table(title: &str, headers: &[String], rows: &[(String, Vec<String>)]) {
+    println!("\n### {title}\n");
+    let label_w = rows
+        .iter()
+        .map(|(l, _)| l.len())
+        .chain(std::iter::once(6))
+        .max()
+        .unwrap();
+    let col_ws: Vec<usize> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|(_, r)| r.get(i).map(|c| c.len()).unwrap_or(0))
+                .chain(std::iter::once(h.len()))
+                .max()
+                .unwrap()
+        })
+        .collect();
+    let mut line = format!("| {:label_w$} |", "Method");
+    for (h, w) in headers.iter().zip(&col_ws) {
+        line += &format!(" {h:>w$} |");
+    }
+    println!("{line}");
+    let mut sep = format!("|{}|", "-".repeat(label_w + 2));
+    for w in &col_ws {
+        sep += &format!("{}|", "-".repeat(w + 2));
+    }
+    println!("{sep}");
+    for (label, cells) in rows {
+        let mut line = format!("| {label:label_w$} |");
+        for (c, w) in cells.iter().zip(&col_ws) {
+            line += &format!(" {c:>w$} |");
+        }
+        println!("{line}");
+    }
+}
+
+/// Append a rendered experiment block to `<out>/results.md` (the raw
+/// material EXPERIMENTS.md quotes).
+pub fn save_result(out_dir: &Path, name: &str, body: &str) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(out_dir.join("results.md"))?;
+    writeln!(f, "\n## {name}\n\n{body}")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_rendering_aligns() {
+        let headers = vec!["A".to_string(), "Long↑".to_string()];
+        let rows = vec![
+            ("Original".to_string(), vec!["1.0".into(), "0.95".into()]),
+            ("HEAPr".to_string(), vec!["12.34".into(), "0.5".into()]),
+        ];
+        // should not panic, covers width logic
+        print_table("test", &headers, &rows);
+    }
+
+    #[test]
+    fn suite_row_formats() {
+        let s = SuiteResult {
+            ppl_wiki: 3.14159,
+            ppl_ptb: 2.0,
+            task_acc: vec![0.5; 7],
+            avg: 0.5,
+        };
+        let r = suite_row(&s);
+        assert_eq!(r.len(), 10);
+        assert_eq!(r[0], "3.14");
+        assert_eq!(r[9], "0.500");
+    }
+}

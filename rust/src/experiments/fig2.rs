@@ -1,0 +1,64 @@
+//! Figure 2: performance/FLOPs frontier under compression ratios 0 → 0.9.
+//!
+//! Paper shape: near-flat accuracy-retention to ~0.4 compression with ~20%
+//! FLOPs saving, then graceful degradation; non-trivial retention even at
+//! 0.9.
+
+use anyhow::Result;
+
+use crate::experiments::common::*;
+use crate::heapr::{self, PrunePlan, Scope};
+use crate::info;
+use crate::model::flops::{expert_flops_reduction, flops_reduction};
+
+pub fn run(ctx: &Ctx, ratios: &[f64]) -> Result<()> {
+    let cfg = ctx.engine.config().clone();
+    let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+    let (scores, _stats) = heapr::heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+
+    let base = eval_suite(ctx, &ctx.params, &ctx.ones())?;
+    let headers: Vec<String> =
+        ["Wiki↓", "Avg acc", "Retention", "FLOPsRR", "ExpFLOPsRR"]
+            .iter().map(|s| s.to_string()).collect();
+    let mut rows = vec![(
+        "ratio 0.00".to_string(),
+        vec![
+            format!("{:.2}", base.ppl_wiki),
+            format!("{:.3}", base.avg),
+            "100%".to_string(),
+            "0%".to_string(),
+            "0%".to_string(),
+        ],
+    )];
+    let mut series = vec![(0.0, 1.0, 0.0, 0.0)];
+    for &ratio in ratios {
+        let plan = PrunePlan::from_scores(&scores, ratio, Scope::Global);
+        let suite = eval_suite(ctx, &ctx.params, &plan.mask())?;
+        let rr = flops_reduction(&cfg, &plan.widths());
+        let err = expert_flops_reduction(&cfg, &plan.widths());
+        let retention = suite.avg / base.avg;
+        info!(
+            "fig2 ratio {ratio:.2}: ppl {:.2} avg {:.3} retention {:.2} rr {:.2}/{err:.2}",
+            suite.ppl_wiki, suite.avg, retention, rr
+        );
+        rows.push((
+            format!("ratio {ratio:.2}"),
+            vec![
+                format!("{:.2}", suite.ppl_wiki),
+                format!("{:.3}", suite.avg),
+                format!("{:.0}%", retention * 100.0),
+                format!("{:.0}%", rr * 100.0),
+                format!("{:.0}%", err * 100.0),
+            ],
+        ));
+        series.push((ratio, retention, rr, err));
+    }
+    print_table("Figure 2 — accuracy & FLOPs vs compression ratio", &headers, &rows);
+    let body = series
+        .iter()
+        .map(|(r, ret, rr, err)| format!("{r:.2} {ret:.4} {rr:.4} {err:.4}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    save_result(&ctx.out_dir, "fig2 (ratio retention flops_rr expert_flops_rr)", &body)?;
+    Ok(())
+}

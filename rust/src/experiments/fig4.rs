@@ -1,0 +1,55 @@
+//! Figure 4: robustness to the calibration corpus and its size.
+//!
+//! Calibrate on synth-wiki vs synth-c4, sizes {8, 32, full}, 3 seeds each;
+//! report mean ± std of average task accuracy at a fixed pruning ratio.
+//! Paper shape: corpus choice barely matters; more samples help modestly.
+
+use anyhow::Result;
+
+use crate::data::sampler::Split;
+use crate::experiments::common::*;
+use crate::heapr::{self, PrunePlan, Scope};
+use crate::info;
+use crate::util::stats::{mean, std};
+
+pub fn run(ctx: &Ctx, ratio: f64, sizes: &[usize], seeds: &[u64]) -> Result<()> {
+    let headers: Vec<String> = ["mean Avg↑", "std"].iter().map(|s| s.to_string()).collect();
+    let mut rows = Vec::new();
+    for (corpus_name, split) in [
+        ("synth-wiki", &ctx.train_split),
+        ("synth-c4", &ctx.calib_c4),
+    ] as [(&str, &Split); 2]
+    {
+        for &size in sizes {
+            let mut accs = Vec::new();
+            for &seed in seeds {
+                let calib = split.sample(size.min(split.n_chunks()), seed);
+                let (scores, _stats) =
+                    heapr::heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+                let plan = PrunePlan::from_scores(&scores, ratio, Scope::Global);
+                let suite = eval_suite(ctx, &ctx.params, &plan.mask())?;
+                info!(
+                    "fig4 {corpus_name} size {size} seed {seed}: avg {:.3}",
+                    suite.avg
+                );
+                accs.push(suite.avg);
+            }
+            rows.push((
+                format!("{corpus_name} n={size}"),
+                vec![format!("{:.3}", mean(&accs)), format!("{:.3}", std(&accs))],
+            ));
+        }
+    }
+    print_table(
+        &format!("Figure 4 — calibration robustness at {:.0}% pruning", ratio * 100.0),
+        &headers,
+        &rows,
+    );
+    let body = rows
+        .iter()
+        .map(|(l, r)| format!("{l}: {}", r.join(" ± ")))
+        .collect::<Vec<_>>()
+        .join("\n");
+    save_result(&ctx.out_dir, "fig4", &body)?;
+    Ok(())
+}

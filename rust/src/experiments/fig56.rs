@@ -1,0 +1,45 @@
+//! Figures 5/6: per-layer compression-rate profile under global pruning at
+//! 25% and 50%.
+//!
+//! Paper shape: non-monotonic over depth — early layers pruned hardest,
+//! middle layers preserved, deepest layers pruned again.
+
+use anyhow::Result;
+
+use crate::experiments::common::*;
+use crate::heapr::{self, PrunePlan, Scope};
+
+pub fn run(ctx: &Ctx, ratios: &[f64]) -> Result<()> {
+    let cfg = ctx.engine.config().clone();
+    let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+    let (scores, _stats) = heapr::heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+
+    let headers: Vec<String> =
+        (0..cfg.n_layers).map(|l| format!("L{l}")).collect();
+    let mut rows = Vec::new();
+    let mut body = String::new();
+    for &ratio in ratios {
+        let plan = PrunePlan::from_scores(&scores, ratio, Scope::Global);
+        let keep = plan.widths().per_layer_keep(cfg.d_inter);
+        let pruned: Vec<f64> = keep.iter().map(|k| 1.0 - k).collect();
+        rows.push((
+            format!("{:.0}% global", ratio * 100.0),
+            pruned.iter().map(|p| format!("{:.0}%", p * 100.0)).collect(),
+        ));
+        body += &format!(
+            "{ratio:.2}: {}\n",
+            pruned
+                .iter()
+                .map(|p| format!("{p:.3}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    print_table(
+        "Figures 5/6 — per-layer compression rate under global pruning",
+        &headers,
+        &rows,
+    );
+    save_result(&ctx.out_dir, "fig56 (per-layer pruned fraction)", &body)?;
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! One module per paper table/figure (DESIGN.md §6 experiment index).
+
+pub mod common;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table5;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig56;

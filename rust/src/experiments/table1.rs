@@ -1,0 +1,79 @@
+//! Table 1: main results — methods × pruning ratios × {Wiki↓, PTB↓,
+//! 7 zero-shot tasks, Avg}.
+//!
+//! Paper shape to reproduce: HEAPr ≥ every baseline at every ratio;
+//! near-lossless at 20–25%; graceful at 40–50% while heuristics crater.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::experiments::common::*;
+use crate::heapr::{self, PrunePlan, Scope};
+use crate::info;
+
+pub fn run(ctx: &Ctx, ratios: &[f64]) -> Result<()> {
+    let cfg = ctx.engine.config().clone();
+    let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+    info!("table1: calibrating on {} sequences", calib.len());
+    let (scores, stats) = heapr::heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+    let camera = baselines::camera_scores(&ctx.params, &stats, 0.5)?;
+    let magnitude =
+        baselines::magnitude_scores(&ctx.params, cfg.n_layers, cfg.n_experts, cfg.d_inter)?;
+    let random = baselines::random_scores(cfg.n_layers, cfg.n_experts, cfg.d_inter, 42);
+
+    let mut rows = Vec::new();
+    let original = eval_suite(ctx, &ctx.params, &ctx.ones())?;
+    rows.push(("0% Original".to_string(), suite_row(&original)));
+
+    // probe set for the NAEE-like expert-drop criterion (small, like NAEE)
+    let probe = ctx.calib_wiki(cfg.batch * 2, 3);
+
+    for &ratio in ratios {
+        let pct = (ratio * 100.0).round() as usize;
+        let mut methods: Vec<(String, PrunePlan)> = vec![
+            (
+                format!("{pct}% HEAPr"),
+                PrunePlan::from_scores(&scores, ratio, Scope::Global),
+            ),
+            (
+                format!("{pct}% CAMERA-P"),
+                PrunePlan::from_scores(&camera, ratio, Scope::Layerwise),
+            ),
+            (
+                format!("{pct}% Magnitude"),
+                PrunePlan::from_scores(&magnitude, ratio, Scope::Layerwise),
+            ),
+            (
+                format!("{pct}% Random"),
+                PrunePlan::from_scores(&random, ratio, Scope::Global),
+            ),
+            (
+                format!("{pct}% FreqDrop"),
+                baselines::freq_drop_plan(&stats, ratio),
+            ),
+        ];
+        methods.push((
+            format!("{pct}% ExpertDrop"),
+            baselines::expert_drop_plan(&ctx.engine, &ctx.params, &probe, ratio)?,
+        ));
+        for (name, plan) in methods {
+            info!("table1: evaluating {name} (pruned {:.1}%)", plan.pruned_ratio() * 100.0);
+            let suite = eval_suite(ctx, &ctx.params, &plan.mask())?;
+            rows.push((name, suite_row(&suite)));
+        }
+    }
+
+    let headers = suite_headers();
+    print_table(
+        &format!("Table 1 — main results ({} model)", cfg.name),
+        &headers,
+        &rows,
+    );
+    let body = rows
+        .iter()
+        .map(|(l, r)| format!("{l}: {}", r.join(" ")))
+        .collect::<Vec<_>>()
+        .join("\n");
+    save_result(&ctx.out_dir, "table1", &body)?;
+    Ok(())
+}

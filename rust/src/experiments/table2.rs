@@ -1,0 +1,48 @@
+//! Table 2: global vs layer-wise ranking — CAMERA-P vs HEAPr-L vs HEAPr-G.
+//!
+//! Paper shape: HEAPr-L > CAMERA-P (better criterion at equal scope);
+//! HEAPr-G ≥ HEAPr-L (loss-calibrated scores are globally comparable).
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::experiments::common::*;
+use crate::heapr::{self, PrunePlan, Scope};
+use crate::info;
+
+pub fn run(ctx: &Ctx, ratios: &[f64]) -> Result<()> {
+    let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+    let (scores, stats) = heapr::heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+    let camera = baselines::camera_scores(&ctx.params, &stats, 0.5)?;
+
+    let mut rows = Vec::new();
+    for &ratio in ratios {
+        let pct = (ratio * 100.0).round() as usize;
+        for (name, plan) in [
+            (
+                format!("{pct}% CAMERA-P (layer)"),
+                PrunePlan::from_scores(&camera, ratio, Scope::Layerwise),
+            ),
+            (
+                format!("{pct}% HEAPr-L"),
+                PrunePlan::from_scores(&scores, ratio, Scope::Layerwise),
+            ),
+            (
+                format!("{pct}% HEAPr-G"),
+                PrunePlan::from_scores(&scores, ratio, Scope::Global),
+            ),
+        ] {
+            info!("table2: {name}");
+            let suite = eval_suite(ctx, &ctx.params, &plan.mask())?;
+            rows.push((name, suite_row(&suite)));
+        }
+    }
+    print_table("Table 2 — layer-wise vs global pruning", &suite_headers(), &rows);
+    let body = rows
+        .iter()
+        .map(|(l, r)| format!("{l}: {}", r.join(" ")))
+        .collect::<Vec<_>>()
+        .join("\n");
+    save_result(&ctx.out_dir, "table2", &body)?;
+    Ok(())
+}

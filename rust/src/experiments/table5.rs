@@ -1,0 +1,88 @@
+//! Table 5 (Appendix C): pruning cost — calibration samples, analytic
+//! TFLOPs, measured wallclock, peak memory — HEAPr vs an expert-drop
+//! (NAEE-like) baseline vs a D²-MoE-like decomposition cost model.
+//!
+//! Paper shape: HEAPr sits between NAEE (cheapest, worst quality) and
+//! D²-MoE (4× samples + SVD decomposition, far more expensive), while
+//! matching/unlocking the best quality (Table 1).
+//! Includes the paper's Table 4 calibration-size constants.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::experiments::common::*;
+use crate::heapr;
+use crate::info;
+use crate::model::flops::calib_flops;
+use crate::util::{peak_rss_mib, Timer};
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let cfg = ctx.engine.config().clone();
+    let n_tok = |samples: usize| samples * cfg.seq_len;
+
+    // --- HEAPr: measured ---------------------------------------------------
+    let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+    let t = Timer::start("heapr");
+    let (_scores, _stats) = heapr::heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+    let heapr_s = t.secs();
+    let heapr_rss = peak_rss_mib();
+    // two forward passes + one backward pass on 128 samples
+    let heapr_fl = calib_flops(&cfg, n_tok(ctx.run.calib_samples), 2.0, 1.0);
+
+    // --- NAEE-like expert drop: measured ------------------------------------
+    let probe = ctx.calib_wiki(cfg.batch * 2, 3);
+    let t = Timer::start("expert-drop");
+    let _ = baselines::expert_drop_plan(&ctx.engine, &ctx.params, &probe, 0.25)?;
+    let naee_s = t.secs();
+    let naee_rss = peak_rss_mib();
+    // L·E masked forward evaluations over the probe set
+    let naee_fl = calib_flops(&cfg, n_tok(probe.len()), (cfg.n_layers * cfg.n_experts) as f64, 0.0);
+
+    // --- D²-MoE-like: cost model (paper used 512 samples + per-expert SVD) --
+    let d2_samples = 512;
+    let d2_fl = calib_flops(&cfg, n_tok(d2_samples), 2.0, 0.0)
+        + svd_flops(&cfg) ;
+    let d2_s = heapr_s * (d2_fl / heapr_fl); // scale measured rate
+    let d2_rss = heapr_rss * 1.5; // decomposition workspaces (documented model)
+
+    let headers: Vec<String> = ["Samples", "GFLOPs", "Time(s)", "PeakRSS(MiB)"]
+        .iter().map(|s| s.to_string()).collect();
+    let rows = vec![
+        ("NAEE-like ExpertDrop".to_string(), vec![
+            probe.len().to_string(),
+            format!("{:.2}", naee_fl / 1e9),
+            format!("{naee_s:.1}"),
+            format!("{naee_rss:.0}"),
+        ]),
+        ("D2-MoE-like (cost model)".to_string(), vec![
+            d2_samples.to_string(),
+            format!("{:.2}", d2_fl / 1e9),
+            format!("{d2_s:.1}"),
+            format!("{d2_rss:.0}"),
+        ]),
+        ("HEAPr".to_string(), vec![
+            ctx.run.calib_samples.to_string(),
+            format!("{:.2}", heapr_fl / 1e9),
+            format!("{heapr_s:.1}"),
+            format!("{heapr_rss:.0}"),
+        ]),
+    ];
+    print_table("Table 5 — pruning cost", &headers, &rows);
+    info!("table4 constants (calibration sizes, seq 2048 in paper): NAEE=128, D2-MoE=512, Sub-MoE=128, HEAPr=128");
+
+    let body = rows
+        .iter()
+        .map(|(l, r)| format!("{l}: {}", r.join(" ")))
+        .collect::<Vec<_>>()
+        .join("\n");
+    save_result(&ctx.out_dir, "table5", &body)?;
+    Ok(())
+}
+
+/// FLOPs of one full-rank SVD per expert matrix (the D²-MoE-style cost):
+/// ~ 4·m·n·min(m,n) per matrix, three matrices per expert.
+fn svd_flops(cfg: &crate::config::ModelConfig) -> f64 {
+    let (m, n) = (cfg.d_inter as f64, cfg.d_model as f64);
+    let per = 4.0 * m * n * m.min(n);
+    3.0 * per * (cfg.n_layers * cfg.n_experts) as f64
+}

@@ -1,0 +1,206 @@
+//! Calibration accumulators (HEAPr stage 1 + the pass-2 statistics).
+//!
+//! Streams batches: per batch, `calib_pass1` returns the *sums*
+//! Σ g g^T per (layer, expert) and routed-token counts; `calib_pass2`
+//! returns Σ h², max |h| and the same counts. The accumulator adds across
+//! batches and normalises once in [`Calibrator::finish`] — numerically
+//! identical to the paper's dataset-level means, while keeping rust-side
+//! memory at O(L·E·d²) (the paper's headline complexity).
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::model::store::ParamStore;
+use crate::runtime::{Engine, Value};
+use crate::tensor::{ITensor, Tensor};
+
+/// Final calibration statistics.
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    pub cfg_dims: (usize, usize, usize, usize), // (L, E, d, di)
+    /// Ḡ_{l,e} = Σ g g^T / |T_{l,e}|  — flattened [L, E, d, d].
+    pub gbar: Tensor,
+    /// mean_routed(h_k²) — [L, E, di].
+    pub hsq_mean: Tensor,
+    /// max_routed |h_k| — [L, E, di] (CAMERA-P baseline input).
+    pub hmax: Tensor,
+    /// routed-token counts |T_{l,e}| — [L, E].
+    pub counts: Tensor,
+    /// mean calibration CE loss across pass-1 batches.
+    pub calib_ce: f32,
+    /// number of sequences consumed.
+    pub n_sequences: usize,
+}
+
+pub struct Calibrator {
+    l: usize,
+    e: usize,
+    d: usize,
+    di: usize,
+    gsum: Tensor,
+    hsq: Tensor,
+    hmax: Tensor,
+    counts1: Tensor,
+    counts2: Tensor,
+    ce_sum: f64,
+    n_batches1: usize,
+    n_batches2: usize,
+    n_sequences: usize,
+}
+
+impl Calibrator {
+    pub fn new(cfg: &ModelConfig) -> Calibrator {
+        let (l, e, d, di) = (cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_inter);
+        Calibrator {
+            l,
+            e,
+            d,
+            di,
+            gsum: Tensor::zeros(&[l, e, d, d]),
+            hsq: Tensor::zeros(&[l, e, di]),
+            hmax: Tensor::zeros(&[l, e, di]),
+            counts1: Tensor::zeros(&[l, e]),
+            counts2: Tensor::zeros(&[l, e]),
+            ce_sum: 0.0,
+            n_batches1: 0,
+            n_batches2: 0,
+            n_sequences: 0,
+        }
+    }
+
+    /// Pass 1: forward+backward — accumulate Σ g g^T and counts.
+    pub fn accumulate_pass1(
+        &mut self,
+        engine: &Engine,
+        params: &ParamStore,
+        tokens: &ITensor,
+        targets: &ITensor,
+    ) -> Result<()> {
+        let mut inputs = params.values();
+        inputs.push(Value::I32(tokens.clone()));
+        inputs.push(Value::I32(targets.clone()));
+        let out = engine.run("calib_pass1", &inputs)?;
+        let [ce, gsum, counts]: [Value; 3] = out
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("calib_pass1 output arity"))?;
+        self.ce_sum += ce.f32()?.item() as f64;
+        add_into(&mut self.gsum, &gsum.f32()?);
+        add_into(&mut self.counts1, &counts.f32()?);
+        self.n_batches1 += 1;
+        self.n_sequences += tokens.shape()[0];
+        Ok(())
+    }
+
+    /// Pass 2: forward — accumulate Σ h², max |h| and counts.
+    pub fn accumulate_pass2(
+        &mut self,
+        engine: &Engine,
+        params: &ParamStore,
+        tokens: &ITensor,
+    ) -> Result<()> {
+        let mut inputs = params.values();
+        inputs.push(Value::I32(tokens.clone()));
+        let out = engine.run("calib_pass2", &inputs)?;
+        let [hsq, hmax, counts, _probe]: [Value; 4] = out
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("calib_pass2 output arity"))?;
+        add_into(&mut self.hsq, &hsq.f32()?);
+        max_into(&mut self.hmax, &hmax.f32()?);
+        add_into(&mut self.counts2, &counts.f32()?);
+        self.n_batches2 += 1;
+        Ok(())
+    }
+
+    /// Normalise sums into the dataset-level means of eqs. 15/16.
+    pub fn finish(self) -> CalibStats {
+        assert!(self.n_batches1 > 0, "no pass-1 batches accumulated");
+        assert!(self.n_batches2 > 0, "no pass-2 batches accumulated");
+        let (l, e, d, di) = (self.l, self.e, self.d, self.di);
+        let mut gbar = self.gsum;
+        let mut hsq_mean = self.hsq;
+        // both passes see the same routed sets; prefer pass-1 counts for Ḡ
+        // and pass-2 counts for h² (they are asserted equal in tests).
+        for li in 0..l {
+            for ei in 0..e {
+                let c1 = self.counts1.at(&[li, ei]).max(1.0);
+                let c2 = self.counts2.at(&[li, ei]).max(1.0);
+                let base = (li * e + ei) * d * d;
+                for x in &mut gbar.data_mut()[base..base + d * d] {
+                    *x /= c1;
+                }
+                let hbase = (li * e + ei) * di;
+                for x in &mut hsq_mean.data_mut()[hbase..hbase + di] {
+                    *x /= c2;
+                }
+            }
+        }
+        CalibStats {
+            cfg_dims: (l, e, d, di),
+            gbar,
+            hsq_mean,
+            hmax: self.hmax,
+            counts: self.counts1,
+            calib_ce: (self.ce_sum / self.n_batches1 as f64) as f32,
+            n_sequences: self.n_sequences,
+        }
+    }
+}
+
+fn add_into(acc: &mut Tensor, x: &Tensor) {
+    assert_eq!(acc.shape(), x.shape());
+    for (a, b) in acc.data_mut().iter_mut().zip(x.data()) {
+        *a += *b;
+    }
+}
+
+fn max_into(acc: &mut Tensor, x: &Tensor) {
+    assert_eq!(acc.shape(), x.shape());
+    for (a, b) in acc.data_mut().iter_mut().zip(x.data()) {
+        *a = a.max(*b);
+    }
+}
+
+impl CalibStats {
+    /// Ḡ for one (layer, expert) as a [d, d] tensor.
+    pub fn gbar_at(&self, l: usize, e: usize) -> Tensor {
+        let (_, ne, d, _) = self.cfg_dims;
+        let base = (l * ne + e) * d * d;
+        Tensor::from_vec(&[d, d], self.gbar.data()[base..base + d * d].to_vec())
+    }
+
+    /// mean h² slice for one (layer, expert) as [di].
+    pub fn hsq_at(&self, l: usize, e: usize) -> Tensor {
+        let (_, ne, _, di) = self.cfg_dims;
+        let base = (l * ne + e) * di;
+        Tensor::from_vec(&[di], self.hsq_mean.data()[base..base + di].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_max_into() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        add_into(&mut a, &Tensor::from_vec(&[3], vec![1.0, -1.0, 0.5]));
+        assert_eq!(a.data(), &[2.0, 1.0, 3.5]);
+        max_into(&mut a, &Tensor::from_vec(&[3], vec![5.0, 0.0, 3.6]));
+        assert_eq!(a.data(), &[5.0, 1.0, 3.6]);
+    }
+
+    #[test]
+    fn stats_slicing() {
+        let stats = CalibStats {
+            cfg_dims: (1, 2, 2, 3),
+            gbar: Tensor::from_vec(&[1, 2, 2, 2], (0..8).map(|x| x as f32).collect()),
+            hsq_mean: Tensor::from_vec(&[1, 2, 3], (0..6).map(|x| x as f32).collect()),
+            hmax: Tensor::zeros(&[1, 2, 3]),
+            counts: Tensor::ones(&[1, 2]),
+            calib_ce: 0.0,
+            n_sequences: 0,
+        };
+        assert_eq!(stats.gbar_at(0, 1).data(), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(stats.hsq_at(0, 0).data(), &[0.0, 1.0, 2.0]);
+    }
+}

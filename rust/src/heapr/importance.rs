@@ -1,0 +1,73 @@
+//! Atomic-expert importance (eq. 13 via the output-space factorisation).
+//!
+//! s̄_{l,e,k} = ½ · q_k · mean_routed(h_k²),
+//! q = diag(W_down^T Ḡ_{l,e} W_down)   (the Pallas `quadform` artifact).
+//!
+//! Scores are loss-calibrated (expected Δℓ of removing the atomic expert),
+//! hence comparable across layers — this is what licenses HEAPr-G's global
+//! ranking (paper §3.2).
+
+use anyhow::Result;
+
+use crate::heapr::calibrate::CalibStats;
+use crate::model::store::ParamStore;
+use crate::runtime::{Engine, Value};
+use crate::tensor::Tensor;
+
+/// Importance tensor [L, E, di]; smaller = prune first.
+pub fn importance_scores(
+    engine: &Engine,
+    params: &ParamStore,
+    stats: &CalibStats,
+) -> Result<Tensor> {
+    let (l, e, _d, di) = stats.cfg_dims;
+    let mut scores = Tensor::zeros(&[l, e, di]);
+    for li in 0..l {
+        let wd_all = params.get(&format!("l{li}.wd"))?; // [E, d, di]
+        for ei in 0..e {
+            if stats.counts.at(&[li, ei]) == 0.0 {
+                continue; // never-routed expert: importance stays 0
+            }
+            let wd = wd_all.index0(ei); // [d, di]
+            let gbar = stats.gbar_at(li, ei);
+            let out = engine.run("quadform", &[Value::F32(wd), Value::F32(gbar)])?;
+            let q = out.into_iter().next().unwrap().f32()?;
+            let hsq = stats.hsq_at(li, ei);
+            for k in 0..di {
+                scores.set(&[li, ei, k], 0.5 * q.data()[k] * hsq.data()[k]);
+            }
+        }
+    }
+    Ok(scores)
+}
+
+/// Expert-level importance = Σ_k atomic importance (Table 3 ablation; valid
+/// because cross-atomic Hessian terms vanish, eq. 7/8).
+pub fn expert_scores(scores: &Tensor) -> Tensor {
+    let &[l, e, di] = scores.shape() else {
+        panic!("scores must be [L,E,di]")
+    };
+    let mut out = Tensor::zeros(&[l, e]);
+    for li in 0..l {
+        for ei in 0..e {
+            let mut s = 0.0;
+            for k in 0..di {
+                s += scores.at(&[li, ei, k]);
+            }
+            out.set(&[li, ei], s);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expert_scores_sum_atomics() {
+        let s = Tensor::from_vec(&[1, 2, 3], vec![1., 2., 3., 10., 20., 30.]);
+        let e = expert_scores(&s);
+        assert_eq!(e.data(), &[6.0, 60.0]);
+    }
+}

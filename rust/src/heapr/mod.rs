@@ -1,0 +1,52 @@
+//! HEAPr: Hessian-based Efficient Atomic Expert Pruning in Output Space.
+//!
+//! The paper's algorithm (Algorithm 1), end to end:
+//!
+//! 1. [`calibrate::Calibrator`] streams the calibration set through the
+//!    `calib_pass1` (fwd+bwd) and `calib_pass2` (fwd) artifacts,
+//!    accumulating per-expert gradient covariances Ḡ_{l,e} (eq. 15) and
+//!    routed atomic-activation second moments (the sufficient statistic for
+//!    eq. 16 under the rank-1 factorisation, DESIGN.md §1) — two forward
+//!    passes + one backward pass total, O(d²) memory per expert.
+//! 2. [`importance::importance_scores`] combines them through the Pallas
+//!    `quadform` artifact: s̄_{l,e,k} = ½ · (w_down_k^T Ḡ w_down_k) ·
+//!    mean_routed(h_k²).
+//! 3. [`plan::PrunePlan`] ranks atomic experts globally (HEAPr-G) or per
+//!    layer (HEAPr-L) and prunes the lowest r%.
+//! 4. [`plan::surgery`] physically slices W_gate/W_up rows and W_down
+//!    columns; [`plan::PrunePlan::mask`] produces the equivalent 0/1 mask
+//!    for the masked-eval artifacts (the two are asserted equivalent in
+//!    integration tests).
+
+pub mod calibrate;
+pub mod importance;
+pub mod plan;
+
+pub use calibrate::{CalibStats, Calibrator};
+pub use importance::importance_scores;
+pub use plan::{surgery, PrunePlan, Scope};
+
+use anyhow::Result;
+
+use crate::data::sampler::CalibSampler;
+use crate::model::store::ParamStore;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Convenience: run both calibration passes + importance over a sampled
+/// calibration set (the paper's "two forward passes and one backward pass").
+pub fn heapr_scores(
+    engine: &Engine,
+    params: &ParamStore,
+    calib: &[Vec<i32>],
+) -> Result<(Tensor, CalibStats)> {
+    let cfg = engine.config().clone();
+    let mut cal = Calibrator::new(&cfg);
+    for (tokens, targets) in CalibSampler::batches(calib, cfg.batch, cfg.seq_len) {
+        cal.accumulate_pass1(engine, params, &tokens, &targets)?;
+        cal.accumulate_pass2(engine, params, &tokens)?;
+    }
+    let stats = cal.finish();
+    let scores = importance_scores(engine, params, &stats)?;
+    Ok((scores, stats))
+}

@@ -1,0 +1,360 @@
+//! Pruning plans: ranking, masks, and weight surgery.
+
+use anyhow::Result;
+
+use crate::model::store::ParamStore;
+use crate::model::WidthProfile;
+use crate::tensor::{argsort, gather0, gather_cols, Tensor};
+
+/// Ranking scope (Table 2 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scope {
+    /// HEAPr-G: one ranking across every layer/expert.
+    Global,
+    /// HEAPr-L / CAMERA-P style: rank within each MoE layer.
+    Layerwise,
+}
+
+/// Which atomic experts to keep, per (layer, expert). Kept indices are
+/// sorted ascending so sliced weights preserve column order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrunePlan {
+    pub keep: Vec<Vec<Vec<usize>>>, // [layer][expert] -> kept atomic indices
+    pub d_inter: usize,
+}
+
+impl PrunePlan {
+    /// Build a plan pruning the `ratio` lowest-scoring atomic experts.
+    /// `scores` is [L, E, di]; lower = pruned first.
+    pub fn from_scores(scores: &Tensor, ratio: f64, scope: Scope) -> PrunePlan {
+        let &[l, e, di] = scores.shape() else {
+            panic!("scores must be [L,E,di], got {:?}", scores.shape())
+        };
+        assert!((0.0..=1.0).contains(&ratio), "ratio {ratio}");
+        let mut pruned = vec![vec![vec![false; di]; e]; l];
+        match scope {
+            Scope::Global => {
+                let order = argsort(scores.data());
+                let n_prune = ((l * e * di) as f64 * ratio).round() as usize;
+                for &flat in order.iter().take(n_prune) {
+                    let (li, rest) = (flat / (e * di), flat % (e * di));
+                    pruned[li][rest / di][rest % di] = true;
+                }
+            }
+            Scope::Layerwise => {
+                let n_prune = ((e * di) as f64 * ratio).round() as usize;
+                for li in 0..l {
+                    let base = li * e * di;
+                    let layer_scores = &scores.data()[base..base + e * di];
+                    let order = argsort(layer_scores);
+                    for &flat in order.iter().take(n_prune) {
+                        pruned[li][flat / di][flat % di] = true;
+                    }
+                }
+            }
+        }
+        let keep = pruned
+            .into_iter()
+            .map(|layer| {
+                layer
+                    .into_iter()
+                    .map(|ex| {
+                        (0..di).filter(|&k| !ex[k]).collect::<Vec<usize>>()
+                    })
+                    .collect()
+            })
+            .collect();
+        PrunePlan { keep, d_inter: di }
+    }
+
+    /// Expert-level plan (Table 3): drop whole experts by summed score
+    /// until at least `ratio` of atomic experts are removed.
+    pub fn expert_level(expert_scores: &Tensor, ratio: f64, di: usize) -> PrunePlan {
+        let &[l, e] = expert_scores.shape() else {
+            panic!("expert scores must be [L,E]")
+        };
+        let order = argsort(expert_scores.data());
+        let n_drop = ((l * e) as f64 * ratio).round() as usize;
+        let mut keep = vec![vec![(0..di).collect::<Vec<usize>>(); e]; l];
+        for &flat in order.iter().take(n_drop) {
+            keep[flat / e][flat % e] = Vec::new();
+        }
+        PrunePlan { keep, d_inter: di }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.keep.len()
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.keep[0].len()
+    }
+
+    /// Total pruned fraction.
+    pub fn pruned_ratio(&self) -> f64 {
+        let total = self.n_layers() * self.n_experts() * self.d_inter;
+        let kept: usize = self.keep.iter().flatten().map(|k| k.len()).sum();
+        1.0 - kept as f64 / total as f64
+    }
+
+    /// 0/1 keep-mask [L, E, di] for the masked-eval artifacts.
+    pub fn mask(&self) -> Tensor {
+        let (l, e, di) = (self.n_layers(), self.n_experts(), self.d_inter);
+        let mut m = Tensor::zeros(&[l, e, di]);
+        for li in 0..l {
+            for ei in 0..e {
+                for &k in &self.keep[li][ei] {
+                    m.set(&[li, ei, k], 1.0);
+                }
+            }
+        }
+        m
+    }
+
+    pub fn widths(&self) -> WidthProfile {
+        WidthProfile {
+            widths: self
+                .keep
+                .iter()
+                .map(|l| l.iter().map(|k| k.len()).collect())
+                .collect(),
+        }
+    }
+
+    /// Round the plan *up* to serving width buckets: per expert, re-add the
+    /// highest-scoring pruned atomic experts until the kept width is a
+    /// multiple of `blk`. Keeps masked-eval and serving numerics identical.
+    pub fn bucket_aligned(&self, scores: &Tensor, blk: usize) -> PrunePlan {
+        let (l, e, di) = (self.n_layers(), self.n_experts(), self.d_inter);
+        let mut keep = self.keep.clone();
+        for li in 0..l {
+            for ei in 0..e {
+                let k = &mut keep[li][ei];
+                if k.is_empty() {
+                    continue;
+                }
+                let target = (k.len().div_ceil(blk) * blk).min(di);
+                if k.len() == target {
+                    continue;
+                }
+                // candidates: currently pruned, best score first
+                let kept: std::collections::HashSet<usize> = k.iter().copied().collect();
+                let mut cand: Vec<usize> =
+                    (0..di).filter(|x| !kept.contains(x)).collect();
+                cand.sort_by(|&a, &b| {
+                    scores.at(&[li, ei, b]).partial_cmp(&scores.at(&[li, ei, a])).unwrap()
+                });
+                k.extend(cand.into_iter().take(target - k.len()));
+                k.sort_unstable();
+            }
+        }
+        PrunePlan { keep, d_inter: di }
+    }
+}
+
+/// Physically slice expert weights per plan. Produces a store where
+/// `l{l}.wg/wu/wd` are replaced by per-expert `l{l}.e{e}.wg` ([w,d]),
+/// `.wu` ([w,d]) and `.wd` ([d,w]); all other params pass through.
+pub fn surgery(params: &ParamStore, plan: &PrunePlan) -> Result<ParamStore> {
+    let mut names = Vec::new();
+    let mut tensors = Vec::new();
+    for (name, t) in params.iter() {
+        let is_expert = name.ends_with(".wg") || name.ends_with(".wu") || name.ends_with(".wd");
+        if !is_expert {
+            names.push(name.clone());
+            tensors.push(t.clone());
+            continue;
+        }
+        let li: usize = name
+            .strip_prefix('l')
+            .and_then(|s| s.split('.').next())
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad expert param name {name:?}"))?;
+        let kind = &name[name.len() - 2..];
+        for (ei, keep) in plan.keep[li].iter().enumerate() {
+            let full = t.index0(ei); // wg/wu: [di, d]; wd: [d, di]
+            let sliced = if kind == "wd" {
+                gather_cols(&full, keep)
+            } else {
+                gather0(&full, keep)
+            };
+            names.push(format!("l{li}.e{ei}.{kind}"));
+            tensors.push(sliced);
+        }
+    }
+    Ok(ParamStore::from_tensors(names, tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Pcg64;
+
+    fn scores(l: usize, e: usize, di: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::new(seed);
+        Tensor::from_vec(
+            &[l, e, di],
+            (0..l * e * di).map(|_| rng.f32()).collect(),
+        )
+    }
+
+    #[test]
+    fn global_prunes_exact_count_of_lowest() {
+        let s = scores(2, 3, 8, 1);
+        let plan = PrunePlan::from_scores(&s, 0.25, Scope::Global);
+        let total = 2 * 3 * 8;
+        let kept: usize = plan.keep.iter().flatten().map(|k| k.len()).sum();
+        assert_eq!(total - kept, total / 4);
+        // every pruned score <= every kept score
+        let mask = plan.mask();
+        let pruned_max = s
+            .data()
+            .iter()
+            .zip(mask.data())
+            .filter(|(_, &m)| m == 0.0)
+            .map(|(&v, _)| v)
+            .fold(f32::NEG_INFINITY, f32::max);
+        let kept_min = s
+            .data()
+            .iter()
+            .zip(mask.data())
+            .filter(|(_, &m)| m == 1.0)
+            .map(|(&v, _)| v)
+            .fold(f32::INFINITY, f32::min);
+        assert!(pruned_max <= kept_min);
+    }
+
+    #[test]
+    fn layerwise_prunes_per_layer() {
+        let s = scores(3, 2, 8, 2);
+        let plan = PrunePlan::from_scores(&s, 0.5, Scope::Layerwise);
+        for l in 0..3 {
+            let kept: usize = plan.keep[l].iter().map(|k| k.len()).sum();
+            assert_eq!(kept, 8); // 16 per layer, half pruned
+        }
+    }
+
+    #[test]
+    fn mask_matches_keep_sets() {
+        let s = scores(2, 2, 4, 3);
+        let plan = PrunePlan::from_scores(&s, 0.5, Scope::Global);
+        let m = plan.mask();
+        for l in 0..2 {
+            for e in 0..2 {
+                for k in 0..4 {
+                    let kept = plan.keep[l][e].contains(&k);
+                    assert_eq!(m.at(&[l, e, k]) == 1.0, kept);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expert_level_drops_whole_experts() {
+        let es = Tensor::from_vec(&[2, 2], vec![3.0, 1.0, 2.0, 4.0]);
+        let plan = PrunePlan::expert_level(&es, 0.5, 8);
+        assert!(plan.keep[0][1].is_empty()); // score 1.0 dropped
+        assert!(plan.keep[1][0].is_empty()); // score 2.0 dropped
+        assert_eq!(plan.keep[0][0].len(), 8);
+        assert_eq!(plan.keep[1][1].len(), 8);
+    }
+
+    #[test]
+    fn bucket_aligned_rounds_up_with_best_scores() {
+        let s = scores(1, 1, 16, 4);
+        let plan = PrunePlan::from_scores(&s, 0.4, Scope::Global); // keep 10
+        assert_eq!(plan.keep[0][0].len(), 10);
+        let aligned = plan.bucket_aligned(&s, 8);
+        assert_eq!(aligned.keep[0][0].len(), 16); // rounded to 16
+        // the re-added ones are the best-scoring pruned units: the plan now
+        // keeps everything, trivially satisfying that.
+        let plan2 = PrunePlan::from_scores(&s, 0.75, Scope::Global); // keep 4
+        let aligned2 = plan2.bucket_aligned(&s, 8); // -> 8
+        assert_eq!(aligned2.keep[0][0].len(), 8);
+        for k in &plan2.keep[0][0] {
+            assert!(aligned2.keep[0][0].contains(k));
+        }
+    }
+
+    #[test]
+    fn prop_plan_invariants() {
+        check("plan-invariants", 40,
+              |g| {
+                  let l = g.usize_in(1, 3);
+                  let e = g.usize_in(1, 4);
+                  let di = g.usize_in(2, 16);
+                  let ratio = g.f32_in(0.0, 1.0) as f64;
+                  let seed = g.rng.next_u64();
+                  (l, e, di, ratio, seed)
+              },
+              |&(l, e, di, ratio, seed)| {
+                  let s = scores(l, e, di, seed);
+                  for scope in [Scope::Global, Scope::Layerwise] {
+                      let plan = PrunePlan::from_scores(&s, ratio, scope);
+                      // kept indices sorted & in range & distinct
+                      for layer in &plan.keep {
+                          for keep in layer {
+                              if !keep.windows(2).all(|w| w[0] < w[1]) {
+                                  return false;
+                              }
+                              if keep.iter().any(|&k| k >= di) {
+                                  return false;
+                              }
+                          }
+                      }
+                      // pruned count correct (global: exact; layerwise: per layer)
+                      let total = l * e * di;
+                      let kept: usize =
+                          plan.keep.iter().flatten().map(|k| k.len()).sum();
+                      let expect = match scope {
+                          Scope::Global => (total as f64 * ratio).round() as usize,
+                          Scope::Layerwise =>
+                              l * (((e * di) as f64 * ratio).round() as usize),
+                      };
+                      if total - kept != expect {
+                          return false;
+                      }
+                  }
+                  true
+              });
+    }
+
+    #[test]
+    fn surgery_slices_shapes() {
+        // build a minimal 1-layer store with E=2, di=4, d=3
+        let names = vec![
+            "embed".to_string(),
+            "l0.wg".to_string(),
+            "l0.wu".to_string(),
+            "l0.wd".to_string(),
+        ];
+        let mut rng = Pcg64::new(6);
+        let mk = |shape: &[usize], rng: &mut Pcg64| {
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(shape, (0..n).map(|_| rng.normal()).collect())
+        };
+        let tensors = vec![
+            mk(&[5, 3], &mut rng),
+            mk(&[2, 4, 3], &mut rng),
+            mk(&[2, 4, 3], &mut rng),
+            mk(&[2, 3, 4], &mut rng),
+        ];
+        let store = ParamStore::from_tensors(names, tensors);
+        let plan = PrunePlan {
+            keep: vec![vec![vec![0, 2], vec![1, 2, 3]]],
+            d_inter: 4,
+        };
+        let pruned = surgery(&store, &plan).unwrap();
+        assert_eq!(pruned.get("l0.e0.wg").unwrap().shape(), &[2, 3]);
+        assert_eq!(pruned.get("l0.e1.wg").unwrap().shape(), &[3, 3]);
+        assert_eq!(pruned.get("l0.e0.wd").unwrap().shape(), &[3, 2]);
+        assert_eq!(pruned.get("embed").unwrap().shape(), &[5, 3]);
+        // values come from the right columns
+        let full_wd = store.get("l0.wd").unwrap().index0(0);
+        let cut_wd = pruned.get("l0.e0.wd").unwrap();
+        for r in 0..3 {
+            assert_eq!(cut_wd.at(&[r, 1]), full_wd.at(&[r, 2]));
+        }
+    }
+}

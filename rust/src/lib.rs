@@ -1,0 +1,40 @@
+//! HEAPr — Hessian-based Efficient Atomic Expert Pruning in Output Space.
+//!
+//! Full-system reproduction of the paper as a three-layer Rust + JAX +
+//! Pallas stack. This crate is Layer 3: it owns the event loop, training
+//! loop, pruning pipeline, evaluation harness and serving coordinator, and
+//! executes AOT-compiled HLO artifacts through the PJRT C API (`xla` crate).
+//! Python never runs at request time.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`util`] — substrates the offline image lacks crates for: PCG64 rng,
+//!   JSON, CLI args, logging, property-test helper.
+//! * [`tensor`] — host-side f32/i32 tensors + the ops the pipeline needs.
+//! * [`config`] — model/run presets mirrored from `python/compile/configs.py`.
+//! * [`data`] — synthetic topic-grammar corpus, tokenizers, calibration
+//!   sampler (paper Appendix B sampling strategy).
+//! * [`runtime`] — PJRT client wrapper, artifact manifest, executable cache.
+//! * [`model`] — parameter store, checkpoint IO, width profiles, FLOPs.
+//! * [`train`] — training-loop driver over the `train_step` artifact.
+//! * [`heapr`] — the paper's contribution: calibration accumulators,
+//!   atomic-expert importance, global/layerwise ranking, weight surgery.
+//! * [`baselines`] — expert-drop / frequency / random / magnitude /
+//!   CAMERA-P / expert-level-HEAPr comparison methods.
+//! * [`eval`] — perplexity + 7 synthetic zero-shot tasks + FLOPs accounting.
+//! * [`coordinator`] — serving engine with width-bucketed expert dispatch.
+//! * [`experiments`] — one module per paper table/figure.
+//! * [`bench`] — criterion-substitute micro-benchmark harness.
+
+pub mod util;
+pub mod tensor;
+pub mod config;
+pub mod data;
+pub mod runtime;
+pub mod model;
+pub mod train;
+pub mod heapr;
+pub mod baselines;
+pub mod eval;
+pub mod coordinator;
+pub mod experiments;
+pub mod bench;

@@ -1,0 +1,332 @@
+//! `heapr` — CLI entrypoint for the HEAPr reproduction.
+//!
+//! Subcommands:
+//!   pipeline    train → calibrate → prune → eval (the end-to-end driver)
+//!   train       train a MiniMoE LM and save the checkpoint + loss curve
+//!   prune       calibrate + prune at a ratio, save pruned checkpoint
+//!   eval        evaluate a (possibly masked) checkpoint on the suite
+//!   serve       serving demo: batched requests through the coordinator
+//!   experiment  regenerate a paper table/figure: table1|table2|table3|
+//!               table5|fig2|fig3|fig4|fig56|all
+//!   corpus      print corpus statistics (substrate sanity)
+//!
+//! Common flags: --preset tiny|small|base (default small), --out DIR,
+//! --steps N, --lr F, --calib N, --ratio F, --seed N, --verbose.
+
+use anyhow::{bail, Result};
+
+use heapr::config::RunConfig;
+use heapr::coordinator::{Batcher, Request, Server};
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::data::tokenizer::ByteTokenizer;
+use heapr::experiments::{common::Ctx, fig2, fig3, fig4, fig56, table1, table2, table3, table5};
+use heapr::heapr::{heapr_scores, surgery, PrunePlan, Scope};
+use heapr::info;
+use heapr::model::checkpoint::Checkpoint;
+use heapr::model::flops::flops_reduction;
+use heapr::util::args::Args;
+use heapr::util::json::Json;
+use heapr::util::logging::{set_level, Level};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let sub = args.subcommand.clone();
+    if args.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let preset = args.str("preset", "small");
+    let artifact_dir = args.str("artifacts", &format!("artifacts/{preset}"));
+    let out = args.str("out", &format!("runs/{preset}"));
+    let run = RunConfig {
+        seed: args.usize("seed", 0)? as u64,
+        train_steps: args.usize("steps", default_steps(&preset))?,
+        lr: args.f64("lr", 3e-3)?,
+        corpus_mb: args.f64("corpus-mb", 2.0)?,
+        calib_samples: args.usize("calib", 128)?,
+        eval_batches: args.usize("eval-batches", 16)?,
+    };
+
+    match sub.as_str() {
+        "pipeline" => {
+            let ratio = args.f64("ratio", 0.25)?;
+            args.finish()?;
+            cmd_pipeline(&artifact_dir, run, &out, ratio)
+        }
+        "train" => {
+            args.finish()?;
+            let _ctx = Ctx::prepare(&artifact_dir, run, &out)?;
+            info!("checkpoint ready under {out}");
+            Ok(())
+        }
+        "prune" => {
+            let ratio = args.f64("ratio", 0.25)?;
+            let scope = args.str("scope", "global");
+            args.finish()?;
+            cmd_prune(&artifact_dir, run, &out, ratio, &scope)
+        }
+        "eval" => {
+            let ratio = args.f64("ratio", 0.0)?;
+            args.finish()?;
+            cmd_eval(&artifact_dir, run, &out, ratio)
+        }
+        "serve" => {
+            let ratio = args.f64("ratio", 0.25)?;
+            let n_req = args.usize("requests", 16)?;
+            let new_tokens = args.usize("new-tokens", 16)?;
+            args.finish()?;
+            cmd_serve(&artifact_dir, run, &out, ratio, n_req, new_tokens)
+        }
+        "experiment" => {
+            let which = args.str("id", "all");
+            let ratios: Vec<f64> = args
+                .str("ratios", "0.25,0.5")
+                .split(',')
+                .map(|s| s.trim().parse::<f64>())
+                .collect::<Result<_, _>>()?;
+            args.finish()?;
+            cmd_experiment(&artifact_dir, run, &out, &which, &ratios)
+        }
+        "corpus" => {
+            args.finish()?;
+            cmd_corpus(run)
+        }
+        "" | "help" => {
+            println!("usage: heapr <pipeline|train|prune|eval|serve|experiment|corpus> [--flags]");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `heapr help`)"),
+    }
+}
+
+fn default_steps(preset: &str) -> usize {
+    match preset {
+        "tiny" => 120,
+        "base" => 400,
+        _ => 300,
+    }
+}
+
+/// The end-to-end driver: train → calibrate → prune → eval, printing the
+/// paper's headline comparison (original vs HEAPr-pruned at `ratio`).
+fn cmd_pipeline(artifact_dir: &str, run: RunConfig, out: &str, ratio: f64) -> Result<()> {
+    use heapr::experiments::common::{eval_suite, print_table, suite_headers, suite_row};
+    let ctx = Ctx::prepare(artifact_dir, run, out)?;
+    let cfg = ctx.engine.config().clone();
+
+    info!("calibrating ({} samples)…", ctx.run.calib_samples);
+    let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+    let (scores, stats) = heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+    info!("calibration CE {:.4} over {} sequences", stats.calib_ce, stats.n_sequences);
+
+    let plan = PrunePlan::from_scores(&scores, ratio, Scope::Global);
+    let rr = flops_reduction(&cfg, &plan.widths());
+    info!(
+        "pruned {:.1}% of atomic experts; activated-FLOPs reduction {:.1}%",
+        plan.pruned_ratio() * 100.0,
+        rr * 100.0
+    );
+
+    let aligned = plan.bucket_aligned(&scores, cfg.blk_i);
+    let sliced = surgery(&ctx.params, &aligned)?;
+    let ckpt = Checkpoint {
+        store: sliced,
+        widths: Some(aligned.widths()),
+        meta: Json::obj(vec![("ratio", Json::n(ratio))]),
+    };
+    let pruned_path = ctx.out_dir.join(format!("pruned-{:.0}.ckpt", ratio * 100.0));
+    ckpt.save(&pruned_path)?;
+    info!("pruned checkpoint -> {pruned_path:?}");
+
+    let base = eval_suite(&ctx, &ctx.params, &ctx.ones())?;
+    let pruned = eval_suite(&ctx, &ctx.params, &plan.mask())?;
+    print_table(
+        &format!("pipeline — original vs {:.0}% HEAPr", ratio * 100.0),
+        &suite_headers(),
+        &[
+            ("Original".to_string(), suite_row(&base)),
+            (format!("HEAPr {:.0}%", ratio * 100.0), suite_row(&pruned)),
+        ],
+    );
+    Ok(())
+}
+
+fn cmd_prune(artifact_dir: &str, run: RunConfig, out: &str, ratio: f64, scope: &str) -> Result<()> {
+    let ctx = Ctx::prepare(artifact_dir, run, out)?;
+    let cfg = ctx.engine.config().clone();
+    let scope = match scope {
+        "global" => Scope::Global,
+        "layerwise" => Scope::Layerwise,
+        other => bail!("scope must be global|layerwise, got {other:?}"),
+    };
+    let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+    let (scores, _stats) = heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+    let plan = PrunePlan::from_scores(&scores, ratio, scope).bucket_aligned(&scores, cfg.blk_i);
+    let sliced = surgery(&ctx.params, &plan)?;
+    let path = ctx.out_dir.join(format!("pruned-{:.0}.ckpt", ratio * 100.0));
+    Checkpoint {
+        store: sliced,
+        widths: Some(plan.widths()),
+        meta: Json::obj(vec![("ratio", Json::n(ratio))]),
+    }
+    .save(&path)?;
+    info!(
+        "saved {path:?} (keep ratio {:.3}, flops rr {:.3})",
+        plan.widths().keep_ratio(cfg.d_inter),
+        flops_reduction(&cfg, &plan.widths())
+    );
+    Ok(())
+}
+
+fn cmd_eval(artifact_dir: &str, run: RunConfig, out: &str, ratio: f64) -> Result<()> {
+    use heapr::experiments::common::{eval_suite, print_table, suite_headers, suite_row};
+    let ctx = Ctx::prepare(artifact_dir, run, out)?;
+    let mask = if ratio > 0.0 {
+        let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+        let (scores, _) = heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+        PrunePlan::from_scores(&scores, ratio, Scope::Global).mask()
+    } else {
+        ctx.ones()
+    };
+    let suite = eval_suite(&ctx, &ctx.params, &mask)?;
+    print_table(
+        &format!("eval (ratio {ratio})"),
+        &suite_headers(),
+        &[(format!("ratio {ratio}"), suite_row(&suite))],
+    );
+    Ok(())
+}
+
+fn cmd_serve(
+    artifact_dir: &str,
+    run: RunConfig,
+    out: &str,
+    ratio: f64,
+    n_req: usize,
+    new_tokens: usize,
+) -> Result<()> {
+    let ctx = Ctx::prepare(artifact_dir, run, out)?;
+    let cfg = ctx.engine.config().clone();
+
+    let plan = if ratio > 0.0 {
+        let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+        let (scores, _) = heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+        Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
+            .bucket_aligned(&scores, cfg.blk_i))
+    } else {
+        None
+    };
+    let mut server = Server::new(&ctx.engine, &ctx.params, plan.as_ref())?;
+
+    // producer thread feeds the batcher; the engine thread (here) serves.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let grammar = Grammar::standard();
+    let tok = ByteTokenizer;
+    let producer = std::thread::spawn(move || {
+        let mut rng = heapr::util::rng::Pcg64::new(1);
+        for i in 0..n_req {
+            let doc = grammar.document(&mut rng, &[1.0; 6]);
+            let prompt: Vec<i32> = tok.encode(&doc[..doc.len().min(48)]).to_vec();
+            tx.send(Request::new(i as u64, prompt, new_tokens)).unwrap();
+        }
+    });
+    let mut batcher = Batcher::new(
+        rx,
+        cfg.serve_batches.clone(),
+        std::time::Duration::from_millis(2),
+    );
+    let mut responses = Vec::new();
+    while let Some(batch) = batcher.next_batch() {
+        responses.extend(server.serve_batch(&batch)?);
+    }
+    producer.join().unwrap();
+
+    let m = &server.metrics;
+    info!(
+        "served {} requests: {} prompt tok, {} generated tok, {:.1} tok/s, \
+         p50 latency {:.0}ms",
+        m.requests,
+        m.prompt_tokens,
+        m.generated_tokens,
+        m.throughput_tps(),
+        heapr::util::stats::percentile(&m.latencies_ms, 50.0),
+    );
+    for r in responses.iter().take(2) {
+        info!("  req {} -> {:?}", r.id, ByteTokenizer.decode(&r.tokens));
+    }
+    Ok(())
+}
+
+fn cmd_experiment(
+    artifact_dir: &str,
+    run: RunConfig,
+    out: &str,
+    which: &str,
+    ratios: &[f64],
+) -> Result<()> {
+    let ctx = Ctx::prepare(artifact_dir, run, out)?;
+    let all = which == "all";
+    if all || which == "table1" {
+        table1::run(&ctx, ratios)?;
+    }
+    if all || which == "table2" {
+        table2::run(&ctx, ratios)?;
+    }
+    if all || which == "table3" {
+        table3::run(&ctx, ratios)?;
+    }
+    if all || which == "table5" {
+        table5::run(&ctx)?;
+    }
+    if all || which == "fig2" {
+        fig2::run(&ctx, &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9])?;
+    }
+    if all || which == "fig3" {
+        fig3::run(&ctx, 10)?;
+    }
+    if all || which == "fig4" {
+        fig4::run(&ctx, 0.25, &[8, 32, 128], &[0, 1, 2])?;
+    }
+    if all || which == "fig56" {
+        fig56::run(&ctx, &[0.25, 0.5])?;
+    }
+    if !all
+        && !["table1", "table2", "table3", "table5", "fig2", "fig3", "fig4", "fig56"]
+            .contains(&which)
+    {
+        bail!("unknown experiment {which:?}");
+    }
+    info!("results appended to {}/results.md", out);
+    Ok(())
+}
+
+fn cmd_corpus(run: RunConfig) -> Result<()> {
+    let g = Grammar::standard();
+    let docs = g.corpus("wiki", run.seed, (run.corpus_mb * 1e6) as usize);
+    let total: usize = docs.iter().map(|d| d.len()).sum();
+    let split = Split::from_docs(&docs, 128);
+    println!(
+        "corpus: {} docs, {} bytes, {} chunks of 128 tokens",
+        docs.len(),
+        total,
+        split.n_chunks()
+    );
+    let bpe = heapr::data::tokenizer::Bpe::train(&docs[..docs.len().min(200)].join(" "), 64);
+    let enc = bpe.encode(&docs[0]);
+    println!(
+        "bpe: vocab {}, compression {:.2}x on doc0 ({} bytes -> {} tokens)",
+        bpe.vocab_size(),
+        docs[0].len() as f64 / enc.len() as f64,
+        docs[0].len(),
+        enc.len()
+    );
+    println!("sample: {}", &docs[0][..docs[0].len().min(200)]);
+    Ok(())
+}

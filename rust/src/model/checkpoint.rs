@@ -1,0 +1,194 @@
+//! Checkpoint format (safetensors-like, custom because the image has no
+//! serde): magic + u32 header length + JSON header + raw little-endian f32
+//! payloads, each tensor aligned to its header-declared offset.
+//!
+//! Stores full *or* pruned (ragged-width) models: the header carries every
+//! tensor's shape plus the optional width profile, so a pruned checkpoint
+//! is self-describing for the serving coordinator.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::store::ParamStore;
+use crate::model::WidthProfile;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"HEAPRCK1";
+
+pub struct Checkpoint {
+    pub store: ParamStore,
+    pub widths: Option<WidthProfile>,
+    /// free-form metadata (training step, loss, preset name...)
+    pub meta: Json,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut header_tensors = Vec::new();
+        let mut offset = 0usize;
+        for (name, t) in self.store.iter() {
+            header_tensors.push(Json::obj(vec![
+                ("name", Json::s(name.clone())),
+                ("shape", Json::Arr(t.shape().iter().map(|&s| Json::n(s as f64)).collect())),
+                ("offset", Json::n(offset as f64)),
+            ]));
+            offset += t.len() * 4;
+        }
+        let widths = match &self.widths {
+            Some(w) => Json::Arr(
+                w.widths
+                    .iter()
+                    .map(|l| Json::Arr(l.iter().map(|&x| Json::n(x as f64)).collect()))
+                    .collect(),
+            ),
+            None => Json::Null,
+        };
+        let header = Json::obj(vec![
+            ("tensors", Json::Arr(header_tensors)),
+            ("widths", widths),
+            ("meta", self.meta.clone()),
+        ])
+        .to_string();
+
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, t) in self.store.iter() {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).map_err(|e| anyhow!("open {path:?}: {e}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic {magic:?}");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let mut expected_offset = 0usize;
+        for t in header.get("tensors")?.as_arr()? {
+            let name = t.get("name")?.as_str()?.to_string();
+            let shape = t.get("shape")?.usize_vec()?;
+            let offset = t.get("offset")?.as_usize()?;
+            if offset != expected_offset {
+                bail!("checkpoint corrupt: offset {offset} != {expected_offset}");
+            }
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            names.push(name);
+            tensors.push(Tensor::from_vec(&shape, data));
+            expected_offset += n * 4;
+        }
+        let widths = match header.get("widths")? {
+            Json::Null => None,
+            w => {
+                let widths = w
+                    .as_arr()?
+                    .iter()
+                    .map(|l| l.usize_vec())
+                    .collect::<Result<Vec<_>>>()?;
+                Some(WidthProfile { widths })
+            }
+        };
+        Ok(Checkpoint {
+            store: ParamStore::from_tensors(names, tensors),
+            widths,
+            meta: header.get("meta")?.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("heapr-test-{name}-{}", std::process::id()))
+    }
+
+    fn random_store() -> ParamStore {
+        let mut rng = Pcg64::new(1);
+        let shapes: Vec<(&str, Vec<usize>)> = vec![
+            ("embed", vec![16, 8]),
+            ("l0.wd", vec![4, 8, 6]),
+            ("lnf", vec![8]),
+        ];
+        let names = shapes.iter().map(|(n, _)| n.to_string()).collect();
+        let tensors = shapes
+            .iter()
+            .map(|(_, s)| {
+                let n: usize = s.iter().product();
+                Tensor::from_vec(s, (0..n).map(|_| rng.normal()).collect())
+            })
+            .collect();
+        ParamStore::from_tensors(names, tensors)
+    }
+
+    #[test]
+    fn roundtrip_full() {
+        let path = temp("full");
+        let ck = Checkpoint {
+            store: random_store(),
+            widths: None,
+            meta: Json::obj(vec![("step", Json::n(42.0))]),
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        for (name, t) in ck.store.iter() {
+            assert_eq!(back.store.get(name).unwrap(), t);
+        }
+        assert!(back.widths.is_none());
+        assert_eq!(back.meta.get("step").unwrap().as_usize().unwrap(), 42);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_with_widths() {
+        let path = temp("widths");
+        let ck = Checkpoint {
+            store: random_store(),
+            widths: Some(WidthProfile { widths: vec![vec![8, 0], vec![16, 24]] }),
+            meta: Json::Null,
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.widths.unwrap().widths, vec![vec![8, 0], vec![16, 24]]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let path = temp("bad");
+        std::fs::write(&path, b"NOTAHDR!....").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

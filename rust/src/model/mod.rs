@@ -1,0 +1,78 @@
+//! Model-side state: the flat parameter store, checkpoint IO, pruned-width
+//! profiles, and FLOPs accounting.
+
+pub mod store;
+pub mod checkpoint;
+pub mod flops;
+
+pub use flops::{flops_per_token, FlopsBreakdown};
+pub use store::ParamStore;
+
+/// Per-(layer, expert) retained atomic-expert widths after pruning; the
+/// serving coordinator rounds these up to width buckets when dispatching.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WidthProfile {
+    pub widths: Vec<Vec<usize>>, // [layer][expert]
+}
+
+impl WidthProfile {
+    pub fn full(n_layers: usize, n_experts: usize, d_inter: usize) -> Self {
+        WidthProfile { widths: vec![vec![d_inter; n_experts]; n_layers] }
+    }
+
+    pub fn total(&self) -> usize {
+        self.widths.iter().flatten().sum()
+    }
+
+    /// Fraction of atomic experts retained.
+    pub fn keep_ratio(&self, d_inter: usize) -> f64 {
+        let full: usize = self.widths.iter().map(|l| l.len() * d_inter).sum();
+        self.total() as f64 / full as f64
+    }
+
+    /// Per-layer keep ratios (Figures 5/6).
+    pub fn per_layer_keep(&self, d_inter: usize) -> Vec<f64> {
+        self.widths
+            .iter()
+            .map(|l| l.iter().sum::<usize>() as f64 / (l.len() * d_inter) as f64)
+            .collect()
+    }
+
+    /// Round every width up to the nearest serving bucket (0 stays 0).
+    pub fn bucketed(&self, blk: usize, d_inter: usize) -> WidthProfile {
+        let widths = self
+            .widths
+            .iter()
+            .map(|l| {
+                l.iter()
+                    .map(|&w| if w == 0 { 0 } else { (w.div_ceil(blk) * blk).min(d_inter) })
+                    .collect()
+            })
+            .collect();
+        WidthProfile { widths }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_profile_ratios() {
+        let mut p = WidthProfile::full(2, 2, 32);
+        assert_eq!(p.keep_ratio(32), 1.0);
+        p.widths[0][0] = 16;
+        p.widths[1][1] = 0;
+        assert_eq!(p.total(), 16 + 32 + 32);
+        let per = p.per_layer_keep(32);
+        assert_eq!(per[0], 0.75);
+        assert_eq!(per[1], 0.5);
+    }
+
+    #[test]
+    fn bucketing_rounds_up() {
+        let p = WidthProfile { widths: vec![vec![1, 8, 9, 0, 32]] };
+        let b = p.bucketed(8, 32);
+        assert_eq!(b.widths[0], vec![8, 8, 16, 0, 32]);
+    }
+}

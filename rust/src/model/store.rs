@@ -1,0 +1,196 @@
+//! ParamStore: the ordered flat parameter list shared with the artifacts.
+//!
+//! Order and shapes come from the manifest (which mirrors
+//! `python/compile/model.py::param_specs`); marshalling params into an
+//! artifact call is `store.values()`, and a train_step's returned params
+//! re-enter via `set_all`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Manifest, Value};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    tensors: Vec<Tensor>,
+}
+
+impl ParamStore {
+    pub fn from_tensors(names: Vec<String>, tensors: Vec<Tensor>) -> ParamStore {
+        assert_eq!(names.len(), tensors.len());
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        ParamStore { names, index, tensors }
+    }
+
+    /// Zero-initialised store with manifest shapes (Adam moment buffers).
+    pub fn zeros(manifest: &Manifest) -> ParamStore {
+        let names = manifest.params.iter().map(|(n, _)| n.clone()).collect();
+        let tensors = manifest
+            .params
+            .iter()
+            .map(|(_, s)| Tensor::zeros(s))
+            .collect();
+        ParamStore::from_tensors(names, tensors)
+    }
+
+    /// Random init mirroring `model.py::init_params`: RMSNorm scales = 1,
+    /// embeddings ~ N(0, 0.02), projections ~ N(0, fan_in^-1/2).
+    pub fn init(manifest: &Manifest, seed: u64) -> ParamStore {
+        let mut rng = Pcg64::with_stream(seed, 0x1417);
+        let names: Vec<String> = manifest.params.iter().map(|(n, _)| n.clone()).collect();
+        let tensors = manifest
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                if name.ends_with("ln1") || name.ends_with("ln2") || name == "lnf" {
+                    Tensor::ones(shape)
+                } else {
+                    let fan_in = *shape.last().unwrap() as f32;
+                    let scale = if name == "embed" || name == "pos" {
+                        0.02
+                    } else {
+                        fan_in.powf(-0.5)
+                    };
+                    let n: usize = shape.iter().product();
+                    Tensor::from_vec(
+                        shape,
+                        (0..n).map(|_| rng.normal() * scale).collect(),
+                    )
+                }
+            })
+            .collect();
+        ParamStore::from_tensors(names, tensors)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow!("no param {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("no param {name:?}"))?;
+        Ok(&mut self.tensors[i])
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        *self.get_mut(name)? = t;
+        Ok(())
+    }
+
+    /// Marshal every parameter as artifact inputs (manifest order).
+    pub fn values(&self) -> Vec<Value> {
+        self.tensors.iter().map(|t| Value::F32(t.clone())).collect()
+    }
+
+    /// Replace all tensors from artifact outputs (manifest order).
+    pub fn set_all(&mut self, values: Vec<Value>) -> Result<()> {
+        if values.len() != self.tensors.len() {
+            return Err(anyhow!(
+                "set_all: {} values for {} params",
+                values.len(),
+                self.tensors.len()
+            ));
+        }
+        for (slot, v) in self.tensors.iter_mut().zip(values) {
+            *slot = v.f32()?;
+        }
+        Ok(())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.names.iter().zip(self.tensors.iter())
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "preset": {"name":"tiny","vocab":260,"d_model":64,"n_layers":2,
+            "n_heads":2,"d_head":32,"n_experts":4,"top_k":2,"d_inter":32,
+            "seq_len":64,"batch":4,"blk_n":16,"blk_i":8,"aux_coef":0.01,
+            "serve_batches":[1,4],"token_buckets":[8,32],
+            "width_buckets":[8,16,24,32],"max_decode_len":96},
+          "params": [{"name":"embed","shape":[260,64]},
+                     {"name":"l0.ln1","shape":[64]},
+                     {"name":"l0.wq","shape":[64,64]},
+                     {"name":"lnf","shape":[64]}],
+          "artifacts": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_follows_scheme() {
+        let m = manifest();
+        let s = ParamStore::init(&m, 0);
+        assert_eq!(s.len(), 4);
+        // rmsnorm scales exactly one
+        assert!(s.get("l0.ln1").unwrap().data().iter().all(|&x| x == 1.0));
+        assert!(s.get("lnf").unwrap().data().iter().all(|&x| x == 1.0));
+        // embed small scale
+        let emax = s.get("embed").unwrap().data().iter()
+            .fold(0.0f32, |a, &b| a.max(b.abs()));
+        assert!(emax < 0.15, "{emax}");
+        // projections ~ fan_in^-1/2 = 0.125
+        let wq = s.get("l0.wq").unwrap();
+        let std = (wq.data().iter().map(|x| x * x).sum::<f32>()
+            / wq.len() as f32).sqrt();
+        assert!((std - 0.125).abs() < 0.01, "{std}");
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let m = manifest();
+        let a = ParamStore::init(&m, 7);
+        let b = ParamStore::init(&m, 7);
+        assert_eq!(a.get("embed").unwrap(), b.get("embed").unwrap());
+        let c = ParamStore::init(&m, 8);
+        assert_ne!(a.get("embed").unwrap(), c.get("embed").unwrap());
+    }
+
+    #[test]
+    fn values_set_all_roundtrip() {
+        let m = manifest();
+        let mut s = ParamStore::init(&m, 0);
+        let vals = s.values();
+        let before = s.get("l0.wq").unwrap().clone();
+        s.set_all(vals).unwrap();
+        assert_eq!(s.get("l0.wq").unwrap(), &before);
+    }
+}

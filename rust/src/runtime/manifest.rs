@@ -1,0 +1,150 @@
+//! manifest.json parsing — the shape contract between aot.py and rust.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub preset: ModelConfig,
+    /// Flat parameter registry in artifact order: (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    let dtype = match j.get("dtype")?.as_str()? {
+        "f32" => Dtype::F32,
+        "i32" => Dtype::I32,
+        other => return Err(anyhow!("unknown dtype {other:?}")),
+    };
+    Ok(IoSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.usize_vec()?,
+        dtype,
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src)?;
+        let preset = ModelConfig::from_json(j.get("preset")?)?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.get("name")?.as_str()?.to_string(),
+                    p.get("shape")?.usize_vec()?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            let inputs = a
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { preset, params, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                                   self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Total parameter element count.
+    pub fn n_param_elems(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": {"name":"tiny","vocab":260,"d_model":64,"n_layers":2,
+        "n_heads":2,"d_head":32,"n_experts":4,"top_k":2,"d_inter":32,
+        "seq_len":64,"batch":4,"blk_n":16,"blk_i":8,"aux_coef":0.01,
+        "serve_batches":[1,4],"token_buckets":[8,32],
+        "width_buckets":[8,16,24,32],"max_decode_len":96},
+      "params": [{"name":"embed","shape":[260,64]},{"name":"lnf","shape":[64]}],
+      "artifacts": {
+        "quadform": {"file":"quadform.hlo.txt",
+          "inputs":[{"name":"wd","shape":[64,32],"dtype":"f32"},
+                    {"name":"G","shape":[64,64],"dtype":"f32"}],
+          "outputs":[{"name":"q","shape":[32],"dtype":"f32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset.d_model, 64);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.n_param_elems(), 260 * 64 + 64);
+        let a = m.artifact("quadform").unwrap();
+        assert_eq!(a.inputs[1].shape, vec![64, 64]);
+        assert_eq!(a.outputs[0].dtype, Dtype::F32);
+        assert!(m.artifact("nope").is_err());
+    }
+}

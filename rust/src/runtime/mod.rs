@@ -1,0 +1,235 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! The contract with the build side (python/compile/aot.py):
+//! * artifacts are HLO *text* — xla_extension 0.5.1 rejects jax>=0.5's
+//!   64-bit-id serialized protos, the text parser reassigns ids;
+//! * every artifact returns a tuple (lowered with return_tuple=True);
+//! * `manifest.json` records each artifact's ordered input/output specs,
+//!   which [`Engine::run`] validates on every call — a shape mismatch is a
+//!   bug report at the call site instead of a PJRT abort.
+
+pub mod manifest;
+pub mod value;
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use value::Value;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::debug;
+
+/// Compiled-executable cache keyed by artifact name, over one PJRT CPU
+/// client. Not Send/Sync (PJRT handles are raw pointers): the serving
+/// coordinator owns one Engine on a dedicated execution thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// (artifact, calls) counters for the perf report.
+    calls: RefCell<HashMap<String, usize>>,
+}
+
+impl Engine {
+    /// Open `artifacts/<preset>/` (must contain manifest.json).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.manifest.preset
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    fn executable(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        debug!("compiled {name} in {:.2}s", t.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (serving startup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with `inputs` (order per manifest). Returns outputs
+    /// in manifest order.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (v, io) in inputs.iter().zip(&spec.inputs) {
+            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
+                bail!(
+                    "{name}: input {:?} got shape {:?} dtype {}, want {:?} {}",
+                    io.name,
+                    v.shape(),
+                    v.dtype(),
+                    io.shape,
+                    io.dtype
+                );
+            }
+        }
+        self.executable(name)?;
+        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} output: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: {} outputs, manifest wants {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, io)| Value::from_literal(&lit, io))
+            .collect()
+    }
+
+    /// Per-artifact call counts (perf accounting).
+    pub fn call_counts(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> =
+            self.calls.borrow().iter().map(|(k, &c)| (k.clone(), c)).collect();
+        v.sort();
+        v
+    }
+
+    // -- device-resident inputs (perf path) ---------------------------------
+    //
+    // `run` marshals every input host->literal->device on every call. For
+    // loops that reuse large constant inputs (model params in eval/calib,
+    // expert weights in serving) that is pure overhead: `upload` pins a
+    // Value as a device buffer once, and `run_b` executes on buffers.
+    // Measured impact is logged in EXPERIMENTS.md §Perf.
+
+    /// Pin a host value as a device-resident buffer.
+    ///
+    /// The source Literal MUST outlive the transfer: BufferFromHostLiteral
+    /// is asynchronous and the 0.5.1 C shim does not await the copy (the
+    /// literal-input `execute` path does, explicitly, for this reason).
+    /// DeviceTensor therefore owns the literal for the buffer's lifetime.
+    pub fn upload(&self, v: &Value) -> Result<DeviceTensor> {
+        let lit = v.to_literal()?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("upload: {e}"))?;
+        Ok(DeviceTensor { _lit: lit, buf })
+    }
+
+    /// Execute on pre-uploaded buffers (mixed with per-call inputs the
+    /// caller uploads itself). Shape validation already happened at upload
+    /// construction time; PJRT still checks buffer count/types.
+    pub fn run_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} buffers given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        self.executable(name)?;
+        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("executing {name} (buffers): {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} output: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: {} outputs, manifest wants {}", parts.len(), spec.outputs.len());
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, io)| Value::from_literal(&lit, io))
+            .collect()
+    }
+}
+
+/// A device-resident tensor: the PJRT buffer plus the host literal backing
+/// the (possibly still in-flight) transfer.
+pub struct DeviceTensor {
+    _lit: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+/// A set of pre-uploaded buffers (e.g. all model params), reusable across
+/// many `run_b` calls.
+pub struct BufferSet {
+    pub tensors: Vec<DeviceTensor>,
+}
+
+impl BufferSet {
+    pub fn upload(engine: &Engine, values: &[Value]) -> Result<BufferSet> {
+        Ok(BufferSet {
+            tensors: values
+                .iter()
+                .map(|v| engine.upload(v))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn refs(&self) -> Vec<&xla::PjRtBuffer> {
+        self.tensors.iter().map(|t| &t.buf).collect()
+    }
+}

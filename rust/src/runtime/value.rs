@@ -1,0 +1,124 @@
+//! Value: the marshalling type between host tensors and PJRT literals.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::manifest::{Dtype, IoSpec};
+use crate::tensor::{ITensor, Tensor};
+
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(ITensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) => Dtype::F32,
+            Value::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn i32(self) -> Result<ITensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => bail!("expected i32 value, got f32"),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32(ITensor::scalar(v))
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, shape, bytes): (xla::ElementType, &[usize], &[u8]) = match self {
+            Value::F32(t) => (
+                xla::ElementType::F32,
+                t.shape(),
+                bytemuck_f32(t.data()),
+            ),
+            Value::I32(t) => (
+                xla::ElementType::S32,
+                t.shape(),
+                bytemuck_i32(t.data()),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+            .map_err(|e| anyhow!("literal from shape {shape:?}: {e}"))
+    }
+
+    pub fn from_literal(lit: &xla::Literal, io: &IoSpec) -> Result<Value> {
+        match io.dtype {
+            Dtype::F32 => {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output {:?} as f32: {e}", io.name))?;
+                Ok(Value::F32(Tensor::from_vec(&io.shape, data)))
+            }
+            Dtype::I32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("output {:?} as i32: {e}", io.name))?;
+                Ok(Value::I32(ITensor::from_vec(&io.shape, data)))
+            }
+        }
+    }
+}
+
+fn bytemuck_f32(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+fn bytemuck_i32(xs: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        let v = Value::F32(t.clone());
+        let lit = v.to_literal().unwrap();
+        let io = IoSpec { name: "x".into(), shape: vec![2, 3], dtype: Dtype::F32 };
+        let back = Value::from_literal(&lit, &io).unwrap().f32().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = ITensor::from_vec(&[4], vec![1, -2, 300, 65536]);
+        let lit = Value::I32(t.clone()).to_literal().unwrap();
+        let io = IoSpec { name: "x".into(), shape: vec![4], dtype: Dtype::I32 };
+        let back = Value::from_literal(&lit, &io).unwrap().i32().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let lit = Value::scalar_f32(2.5).to_literal().unwrap();
+        let io = IoSpec { name: "s".into(), shape: vec![], dtype: Dtype::F32 };
+        let v = Value::from_literal(&lit, &io).unwrap().f32().unwrap();
+        assert_eq!(v.item(), 2.5);
+    }
+}

@@ -1,0 +1,191 @@
+//! Host-side tensors: contiguous row-major f32 / i32 buffers with the ops
+//! the L3 pipeline needs (marshalling to PJRT literals, weight surgery,
+//! small matmuls for the coordinator's router, reductions for reports).
+//!
+//! Deliberately minimal — the heavy math lives in the AOT HLO artifacts;
+//! this type exists so rust can slice, pack, score and route without a
+//! numerics crate.
+
+mod ops;
+
+pub use ops::*;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 1.0)
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Row-major flat index of a multi-index.
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(x < s, "index {idx:?} out of bounds {:?} at dim {i}", self.shape);
+            off = off * s + x;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let i = self.flat(idx);
+        self.data[i] = v;
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {shape:?} length mismatch", self.shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// Sub-tensor along axis 0: rows [lo, hi).
+    pub fn slice0(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(lo <= hi && hi <= self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor { shape, data: self.data[lo * row..hi * row].to_vec() }
+    }
+
+    /// Extract index `i` along axis 0 (drops the axis).
+    pub fn index0(&self, i: usize) -> Tensor {
+        let t = self.slice0(i, i + 1);
+        Tensor { shape: self.shape[1..].to_vec(), data: t.data }
+    }
+}
+
+/// Integer tensor (token ids, routing indices, positions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ITensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl ITensor {
+    pub fn zeros(shape: &[usize]) -> ITensor {
+        let n = shape.iter().product();
+        ITensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> ITensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        ITensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: i32) -> ITensor {
+        ITensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn slice0_and_index0() {
+        let t = Tensor::from_vec(&[3, 2], (0..6).map(|x| x as f32).collect());
+        let s = t.slice0(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+        let r = t.index0(2);
+        assert_eq!(r.shape(), &[2]);
+        assert_eq!(r.data(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn reshape_checks_len() {
+        let t = Tensor::zeros(&[4, 4]);
+        assert!(t.reshape(&[2, 8]).is_ok());
+        assert!(t.reshape(&[3, 5]).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_panics() {
+        let t = Tensor::zeros(&[2, 2]);
+        t.at(&[2, 0]);
+    }
+}

@@ -1,0 +1,259 @@
+//! Tensor operations used on the rust side of the pipeline.
+//!
+//! The coordinator's hot path uses `matmul_tn` (router scores) and
+//! `rmsnorm`; weight surgery uses the gather ops; experiments use the
+//! reductions. Everything is straightforward single-threaded f32 — the
+//! heavy lifting runs inside XLA.
+
+use super::Tensor;
+
+/// C[m,n] = A[m,k] @ B[n,k]^T  (B stored row-major as [n,k] — matches the
+/// `router: [E, d]`, `w*: [di, d]` layouts coming from the checkpoints).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, kb) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, kb, "matmul_tn inner dim {k} vs {kb}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += arow[t] * brow[t];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// RMSNorm along the last axis: x * w / sqrt(mean(x^2) + eps).
+pub fn rmsnorm(x: &Tensor, w: &Tensor, eps: f32) -> Tensor {
+    let d = *x.shape().last().unwrap();
+    assert_eq!(w.shape(), &[d]);
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xs = &x.data()[r * d..(r + 1) * d];
+        let ms: f32 = xs.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for i in 0..d {
+            out[r * d + i] = xs[i] * inv * w.data()[i];
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+/// Elementwise a += b.
+pub fn add_assign(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += *y;
+    }
+}
+
+/// Elementwise a += s * b.
+pub fn axpy(a: &mut Tensor, s: f32, b: &Tensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += s * *y;
+    }
+}
+
+pub fn scale(a: &mut Tensor, s: f32) {
+    for x in a.data_mut() {
+        *x *= s;
+    }
+}
+
+/// Softmax along the last axis.
+pub fn softmax(x: &Tensor) -> Tensor {
+    let d = *x.shape().last().unwrap();
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xs = &x.data()[r * d..(r + 1) * d];
+        let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for i in 0..d {
+            let e = (xs[i] - mx).exp();
+            out[r * d + i] = e;
+            z += e;
+        }
+        for i in 0..d {
+            out[r * d + i] /= z;
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+/// Top-k (values, indices) along the last axis, descending.
+pub fn topk(x: &Tensor, k: usize) -> (Tensor, Vec<Vec<usize>>) {
+    let d = *x.shape().last().unwrap();
+    assert!(k <= d);
+    let rows = x.len() / d;
+    let mut vals = vec![0.0f32; rows * k];
+    let mut idxs = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let xs = &x.data()[r * d..(r + 1) * d];
+        let mut order: Vec<usize> = (0..d).collect();
+        order.sort_by(|&i, &j| xs[j].partial_cmp(&xs[i]).unwrap().then(i.cmp(&j)));
+        order.truncate(k);
+        for (t, &i) in order.iter().enumerate() {
+            vals[r * k + t] = xs[i];
+        }
+        idxs.push(order);
+    }
+    let mut shape = x.shape().to_vec();
+    *shape.last_mut().unwrap() = k;
+    (Tensor::from_vec(&shape, vals), idxs)
+}
+
+/// Gather rows of a [n, ...] tensor: out[i] = x[rows[i]].
+pub fn gather0(x: &Tensor, rows: &[usize]) -> Tensor {
+    let stride: usize = x.shape()[1..].iter().product();
+    let mut data = Vec::with_capacity(rows.len() * stride);
+    for &r in rows {
+        assert!(r < x.shape()[0]);
+        data.extend_from_slice(&x.data()[r * stride..(r + 1) * stride]);
+    }
+    let mut shape = x.shape().to_vec();
+    shape[0] = rows.len();
+    Tensor::from_vec(&shape, data)
+}
+
+/// Gather columns of a [r, c] matrix: out[:, j] = x[:, cols[j]].
+pub fn gather_cols(x: &Tensor, cols: &[usize]) -> Tensor {
+    assert_eq!(x.shape().len(), 2);
+    let (r, c) = (x.shape()[0], x.shape()[1]);
+    let mut data = Vec::with_capacity(r * cols.len());
+    for i in 0..r {
+        for &j in cols {
+            assert!(j < c);
+            data.push(x.data()[i * c + j]);
+        }
+    }
+    Tensor::from_vec(&[r, cols.len()], data)
+}
+
+/// Sum along the last axis.
+pub fn sum_last(x: &Tensor) -> Tensor {
+    let d = *x.shape().last().unwrap();
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; rows];
+    for r in 0..rows {
+        out[r] = x.data()[r * d..(r + 1) * d].iter().sum();
+    }
+    Tensor::from_vec(&x.shape()[..x.shape().len() - 1], out)
+}
+
+/// Frobenius / L2 norm of the whole tensor.
+pub fn norm2(x: &Tensor) -> f32 {
+    x.data().iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+/// Argsort (ascending) of a flat slice, stable on ties.
+pub fn argsort(xs: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    order.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap().then(i.cmp(&j)));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg64;
+
+    fn randt(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn matmul_tn_hand_case() {
+        // A=[1,2;3,4], B rows are b0=[1,0], b1=[0,1], b2=[1,1]
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = matmul_tn(&a, &b);
+        assert_eq!(c.data(), &[1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Pcg64::new(2);
+        let x = randt(&mut rng, &[5, 7]);
+        let s = softmax(&x);
+        for r in 0..5 {
+            let sum: f32 = s.data()[r * 7..(r + 1) * 7].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s.data()[r * 7..(r + 1) * 7].iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn topk_returns_descending_max() {
+        let x = Tensor::from_vec(&[1, 5], vec![0.1, 0.9, -0.3, 0.9, 0.5]);
+        let (vals, idx) = topk(&x, 3);
+        assert_eq!(vals.data(), &[0.9, 0.9, 0.5]);
+        assert_eq!(idx[0], vec![1, 3, 4]); // stable on ties
+    }
+
+    #[test]
+    fn gather_ops() {
+        let x = Tensor::from_vec(&[3, 2], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(gather0(&x, &[2, 0]).data(), &[4., 5., 0., 1.]);
+        assert_eq!(gather_cols(&x, &[1]).data(), &[1., 3., 5.]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale_has_unit_rms() {
+        let mut rng = Pcg64::new(4);
+        let x = randt(&mut rng, &[3, 16]);
+        let w = Tensor::ones(&[16]);
+        let y = rmsnorm(&x, &w, 1e-6);
+        for r in 0..3 {
+            let ms: f32 = y.data()[r * 16..(r + 1) * 16]
+                .iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!((ms - 1.0).abs() < 1e-3, "{ms}");
+        }
+    }
+
+    #[test]
+    fn prop_matmul_left_distributive() {
+        check("matmul-distributive", 30,
+              |g: &mut Gen| {
+                  let m = g.usize_in(1, 6);
+                  let k = g.usize_in(1, 6);
+                  let n = g.usize_in(1, 6);
+                  let mut r = Pcg64::new(g.rng.next_u64());
+                  (randt(&mut r, &[m, k]), randt(&mut r, &[m, k]),
+                   randt(&mut r, &[n, k]))
+              },
+              |(a, b, c)| {
+                  let mut ab = a.clone();
+                  add_assign(&mut ab, b);
+                  let lhs = matmul_tn(&ab, c);
+                  let mut rhs = matmul_tn(a, c);
+                  add_assign(&mut rhs, &matmul_tn(b, c));
+                  lhs.data().iter().zip(rhs.data())
+                      .all(|(x, y)| (x - y).abs() < 1e-3)
+              });
+    }
+
+    #[test]
+    fn prop_argsort_is_sorted_permutation() {
+        check("argsort", 50,
+              |g: &mut Gen| g.vec_f32(32, -10.0, 10.0),
+              |xs| {
+                  let ord = argsort(xs);
+                  let mut seen = vec![false; xs.len()];
+                  for &i in &ord { seen[i] = true; }
+                  seen.iter().all(|&b| b)
+                      && ord.windows(2).all(|w| xs[w[0]] <= xs[w[1]])
+              });
+    }
+}

@@ -1,0 +1,110 @@
+//! Training-loop driver.
+//!
+//! Rust owns the loop (data order, schedule, logging, checkpoints); the
+//! `train_step` artifact owns one Adam step. The loop feeds (params, m, v,
+//! step, lr, tokens, targets) and swaps the returned states back in —
+//! python never runs.
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::data::sampler::{CalibSampler, Split};
+use crate::info;
+use crate::model::store::ParamStore;
+use crate::runtime::{Engine, Value};
+use crate::util::rng::Pcg64;
+use crate::util::Timer;
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// (step, total loss, ce loss) at every logged step.
+    pub curve: Vec<(usize, f32, f32)>,
+    pub final_loss: f32,
+    pub wallclock_s: f64,
+}
+
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    m: ParamStore,
+    v: ParamStore,
+    step: usize,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine) -> Trainer<'e> {
+        Trainer {
+            engine,
+            m: ParamStore::zeros(&engine.manifest),
+            v: ParamStore::zeros(&engine.manifest),
+            step: 0,
+        }
+    }
+
+    /// One optimisation step on a packed batch; updates `params` in place.
+    pub fn step(
+        &mut self,
+        params: &mut ParamStore,
+        tokens: &crate::tensor::ITensor,
+        targets: &crate::tensor::ITensor,
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let mut inputs = params.values();
+        inputs.extend(self.m.values());
+        inputs.extend(self.v.values());
+        inputs.push(Value::scalar_i32(self.step as i32));
+        inputs.push(Value::scalar_f32(lr));
+        inputs.push(Value::I32(tokens.clone()));
+        inputs.push(Value::I32(targets.clone()));
+
+        let mut out = self.engine.run("train_step", &inputs)?;
+        let n = params.len();
+        if out.len() != 2 + 3 * n {
+            bail!("train_step returned {} outputs, expected {}", out.len(), 2 + 3 * n);
+        }
+        let rest = out.split_off(2);
+        let loss = out[0].clone().f32()?.item();
+        let ce = out[1].clone().f32()?.item();
+        let mut rest = rest;
+        let vs = rest.split_off(2 * n);
+        let ms = rest.split_off(n);
+        params.set_all(rest)?;
+        self.m.set_all(ms)?;
+        self.v.set_all(vs)?;
+        self.step += 1;
+        if !loss.is_finite() {
+            bail!("training diverged at step {}: loss={loss}", self.step);
+        }
+        Ok((loss, ce))
+    }
+
+    /// Full training run on a corpus split; returns the loss curve.
+    pub fn train(
+        &mut self,
+        params: &mut ParamStore,
+        split: &Split,
+        run: &RunConfig,
+    ) -> Result<TrainReport> {
+        let cfg = self.engine.config().clone();
+        let mut rng = Pcg64::with_stream(run.seed, 0x7247);
+        let timer = Timer::start("train");
+        let mut curve = Vec::new();
+        let log_every = (run.train_steps / 20).max(1);
+        let mut last = (0.0, 0.0);
+        for s in 0..run.train_steps {
+            // simple warmup then constant lr
+            let warm = ((s + 1) as f64 / 20.0).min(1.0);
+            let lr = (run.lr * warm) as f32;
+            let (tokens, targets) = CalibSampler::train_batch(split, cfg.batch, &mut rng);
+            last = self.step(params, &tokens, &targets, lr)?;
+            if s % log_every == 0 || s + 1 == run.train_steps {
+                curve.push((s, last.0, last.1));
+                info!("step {s:>5}  loss {:.4}  ce {:.4}", last.0, last.1);
+            }
+        }
+        Ok(TrainReport {
+            curve,
+            final_loss: last.0,
+            wallclock_s: timer.secs(),
+        })
+    }
+}

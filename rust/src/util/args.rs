@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Grammar: `binary <subcommand> [--key value]... [--flag]...`.
+//! Unknown keys are an error — catches typos in experiment invocations.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                a.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("positional argument {tok:?} not allowed here");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    a.kv.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => a.flags.push(key.to_string()),
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str(&mut self, key: &str, default: &str) -> String {
+        self.known.push(key.to_string());
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&mut self, key: &str) -> Option<String> {
+        self.known.push(key.to_string());
+        self.kv.get(key).cloned()
+    }
+
+    pub fn usize(&mut self, key: &str, default: usize) -> Result<usize> {
+        self.known.push(key.to_string());
+        match self.kv.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64(&mut self, key: &str, default: f64) -> Result<f64> {
+        self.known.push(key.to_string());
+        match self.kv.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.known.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Call after all lookups: errors on unrecognised keys/flags.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.kv.keys() {
+            if !self.known.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags() {
+        let mut a = Args::parse(&sv(&["train", "--steps", "100", "--quiet"])).unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
+        assert!(a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(&sv(&["x"])).unwrap();
+        assert_eq!(a.str("preset", "small"), "small");
+        assert_eq!(a.f64("ratio", 0.25).unwrap(), 0.25);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut a = Args::parse(&sv(&["x", "--bogus", "1"])).unwrap();
+        let _ = a.str("good", "");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let mut a = Args::parse(&sv(&["x", "--steps", "ten"])).unwrap();
+        assert!(a.usize("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! Substrate utilities. The offline image only vendors the `xla` crate's
+//! dependency closure, so the usual ecosystem crates (rand, serde_json,
+//! clap, proptest, log) are re-implemented here as small, tested modules.
+
+pub mod rng;
+pub mod json;
+pub mod args;
+pub mod logging;
+pub mod prop;
+pub mod stats;
+
+pub use rng::Pcg64;
+pub use json::Json;
+
+use std::time::Instant;
+
+/// Wall-clock timer for coarse pipeline phases.
+pub struct Timer {
+    start: Instant,
+    label: String,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Self {
+        Timer { start: Instant::now(), label: label.to_string() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!("{}: {:.2}s", self.label, self.secs())
+    }
+}
+
+/// Peak resident-set size of this process in MiB (Linux), for Table 5.
+pub fn peak_rss_mib() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: f64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0.0);
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_time() {
+        let t = Timer::start("x");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(t.secs() >= 0.009);
+        assert!(t.report().starts_with("x:"));
+    }
+
+    #[test]
+    fn peak_rss_positive_on_linux() {
+        assert!(peak_rss_mib() > 0.0);
+    }
+}

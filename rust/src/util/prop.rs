@@ -1,0 +1,102 @@
+//! Property-testing helper (proptest substitute, offline image has none).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it retries the failing seed with progressively "smaller"
+//! regenerations (the generator receives a shrink factor in [0,1], 1 = full
+//! size) and reports the smallest failing input's debug form.
+
+use crate::util::rng::Pcg64;
+
+/// Generator context handed to property generators.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    /// Shrink factor in (0, 1]; generators should scale collection sizes
+    /// and magnitudes by this to produce smaller counterexamples.
+    pub size: f64,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + (((hi - lo) as f64) * self.size).round() as usize;
+        lo + self.rng.below(hi_scaled.max(lo) - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo) * self.size as f32
+    }
+
+    pub fn vec_f32(&mut self, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(1, max_len);
+        (0..n).map(|_| lo + self.rng.f32() * (hi - lo)).collect()
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with the seed and the
+/// smallest regenerated failing input on failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let base_seed = 0x9e37_79b9_7f4a_7c15u64 ^ hash_name(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::new(seed);
+        let input = gen(&mut Gen { rng: &mut rng, size: 1.0 });
+        if prop(&input) {
+            continue;
+        }
+        // Shrink: regenerate from the same seed at smaller sizes, keep the
+        // smallest input that still fails.
+        let mut smallest = format!("{input:?}");
+        for step in 1..=8 {
+            let size = 1.0 - step as f64 * 0.115;
+            let mut rng = Pcg64::new(seed);
+            let candidate = gen(&mut Gen { rng: &mut rng, size: size.max(0.05) });
+            if !prop(&candidate) {
+                smallest = format!("{candidate:?}");
+            }
+        }
+        panic!(
+            "property {name:?} failed at case {case} (seed {seed:#x});\n\
+             smallest failing input: {smallest}"
+        );
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-comm", 50,
+              |g| (g.usize_in(0, 100), g.usize_in(0, 100)),
+              |&(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-false\"")]
+    fn failing_property_reports() {
+        check("always-false", 5, |g| g.usize_in(0, 10), |_| false);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100,
+              |g| g.vec_f32(16, -2.0, 2.0),
+              |v| !v.is_empty() && v.len() <= 16
+                  && v.iter().all(|x| (-2.0..=2.0).contains(x)));
+    }
+}

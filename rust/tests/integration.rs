@@ -1,0 +1,268 @@
+//! Artifact-backed integration tests over the tiny preset.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! One shared Engine per process: PJRT CPU client construction is cheap
+//! but compilations are cached per Engine, so tests share a context.
+
+use std::sync::{Mutex, OnceLock};
+
+use heapr::config::RunConfig;
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::{CalibSampler, Split};
+use heapr::eval::{ones_mask, perplexity};
+use heapr::heapr::{heapr_scores, importance_scores, Calibrator, PrunePlan, Scope};
+use heapr::model::store::ParamStore;
+use heapr::runtime::{Engine, Value};
+use heapr::tensor::Tensor;
+use heapr::train::Trainer;
+
+const DIR: &str = "artifacts/tiny";
+
+struct Shared {
+    engine: Engine,
+    params: ParamStore,
+    train_split: Split,
+    eval_split: Split,
+}
+
+// SAFETY: Engine holds raw PJRT pointers and is not Send by default; the
+// shared context is only ever accessed under the Mutex below, so at most
+// one thread touches the client at a time (the same discipline the serving
+// coordinator uses).
+unsafe impl Send for Shared {}
+
+// Engine is not Sync; serialize access through a mutex on a leaked context.
+fn shared() -> &'static Mutex<Shared> {
+    static CTX: OnceLock<Mutex<Shared>> = OnceLock::new();
+    CTX.get_or_init(|| {
+        let engine = Engine::open(DIR).expect("run `make artifacts` first");
+        let cfg = engine.config().clone();
+        let grammar = Grammar::standard();
+        let docs = grammar.corpus("wiki", 0, 400_000);
+        let (train_split, eval_split) =
+            Split::from_docs(&docs, cfg.seq_len).train_eval(0.1);
+        // short training run so pruning has signal
+        let mut params = ParamStore::init(&engine.manifest, 0);
+        let run = RunConfig { train_steps: 60, lr: 4e-3, ..RunConfig::default() };
+        let mut trainer = Trainer::new(&engine);
+        trainer.train(&mut params, &train_split, &run).expect("train");
+        Mutex::new(Shared { engine, params, train_split, eval_split })
+    })
+}
+
+#[test]
+fn training_reduces_loss() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    // fresh params, few steps on a fixed batch must reduce loss
+    let mut params = ParamStore::init(&ctx.engine.manifest, 9);
+    let mut trainer = Trainer::new(&ctx.engine);
+    let chunk = ctx.train_split.sample(cfg.batch, 5);
+    let (tokens, targets) = CalibSampler::pack(&chunk, cfg.batch, cfg.seq_len);
+    let (first, _) = trainer.step(&mut params, &tokens, &targets, 3e-3).unwrap();
+    let mut last = first;
+    for _ in 0..10 {
+        last = trainer.step(&mut params, &tokens, &targets, 3e-3).unwrap().0;
+    }
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn trained_model_beats_uniform() {
+    let ctx = shared().lock().unwrap();
+    let mask = ones_mask(&ctx.engine);
+    let ppl = perplexity(&ctx.engine, &ctx.params, &mask, &ctx.eval_split, 4).unwrap();
+    // uniform over 260 symbols = 260 ppl; byte LMs on the grammar corpus
+    // should be far below after even 60 steps
+    assert!(ppl < 30.0, "ppl {ppl}");
+    assert!(ppl > 1.0);
+}
+
+#[test]
+fn calibration_counts_match_topk() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let calib = ctx.train_split.sample(cfg.batch * 2, 0);
+    let mut cal = Calibrator::new(&cfg);
+    let mut total_tokens = 0usize;
+    for (tokens, targets) in CalibSampler::batches(&calib, cfg.batch, cfg.seq_len) {
+        cal.accumulate_pass1(&ctx.engine, &ctx.params, &tokens, &targets).unwrap();
+        cal.accumulate_pass2(&ctx.engine, &ctx.params, &tokens).unwrap();
+        total_tokens += cfg.batch * cfg.seq_len;
+    }
+    let stats = cal.finish();
+    // Σ_e counts per layer == tokens · top_k
+    for l in 0..cfg.n_layers {
+        let mut sum = 0.0;
+        for e in 0..cfg.n_experts {
+            sum += stats.counts.at(&[l, e]);
+        }
+        assert_eq!(sum as usize, total_tokens * cfg.top_k, "layer {l}");
+    }
+    assert!(stats.calib_ce > 0.0 && stats.calib_ce.is_finite());
+    // Ḡ diagonal nonnegative
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            let g = stats.gbar_at(l, e);
+            for i in 0..cfg.d_model {
+                assert!(g.at(&[i, i]) >= -1e-6);
+            }
+        }
+    }
+}
+
+#[test]
+fn importance_scores_nonnegative_and_structured() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let calib = ctx.train_split.sample(cfg.batch * 2, 1);
+    let (scores, stats) = heapr_scores(&ctx.engine, &ctx.params, &calib).unwrap();
+    assert_eq!(scores.shape(), &[cfg.n_layers, cfg.n_experts, cfg.d_inter]);
+    assert!(scores.data().iter().all(|&s| s >= 0.0 && s.is_finite()));
+    assert!(scores.data().iter().any(|&s| s > 0.0), "all-zero scores");
+    // recompute one entry by hand from the stats: s = ½ q hsq_mean
+    let (l, e) = (0, 0);
+    let wd = ctx.params.get("l0.wd").unwrap().index0(e);
+    let g = stats.gbar_at(l, e);
+    let out = ctx.engine
+        .run("quadform", &[Value::F32(wd), Value::F32(g)])
+        .unwrap();
+    let q = out.into_iter().next().unwrap().f32().unwrap();
+    let hsq = stats.hsq_at(l, e);
+    for k in [0usize, cfg.d_inter / 2] {
+        let want = 0.5 * q.data()[k] * hsq.data()[k];
+        let got = scores.at(&[l, e, k]);
+        assert!(
+            (got - want).abs() <= 1e-6 * want.abs().max(1e-6),
+            "k={k}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn mask_eval_matches_unmasked_with_all_ones() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let chunk = ctx.eval_split.sample(cfg.batch, 2);
+    let (tokens, targets) = CalibSampler::pack(&chunk, cfg.batch, cfg.seq_len);
+    let mask = ones_mask(&ctx.engine);
+
+    let mut inputs = ctx.params.values();
+    inputs.push(Value::F32(mask));
+    inputs.push(Value::I32(tokens));
+    inputs.push(Value::I32(targets));
+    let out = ctx.engine.run("loss_masked", &inputs).unwrap();
+    let nll = out[0].clone().f32().unwrap().item();
+    let cnt = out[1].clone().f32().unwrap().item();
+    assert!(nll > 0.0 && cnt > 0.0);
+    assert_eq!(cnt as usize, cfg.batch * cfg.seq_len);
+}
+
+#[test]
+fn heapr_pruning_hurts_less_than_antiheapr() {
+    // Decisive behavioural test of eq. 13: removing the LOWEST-importance
+    // 25% must hurt much less than removing the HIGHEST-importance 25%.
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let calib = ctx.train_split.sample(cfg.batch * 4, 3);
+    let (scores, _) = heapr_scores(&ctx.engine, &ctx.params, &calib).unwrap();
+
+    let plan = PrunePlan::from_scores(&scores, 0.25, Scope::Global);
+    // invert scores to prune the most-important instead
+    let inv = Tensor::from_vec(
+        scores.shape(),
+        scores.data().iter().map(|&s| -s).collect(),
+    );
+    let anti = PrunePlan::from_scores(&inv, 0.25, Scope::Global);
+
+    let base =
+        perplexity(&ctx.engine, &ctx.params, &ones_mask(&ctx.engine), &ctx.eval_split, 2)
+            .unwrap();
+    let good =
+        perplexity(&ctx.engine, &ctx.params, &plan.mask(), &ctx.eval_split, 2).unwrap();
+    let bad =
+        perplexity(&ctx.engine, &ctx.params, &anti.mask(), &ctx.eval_split, 2).unwrap();
+    assert!(good < bad, "heapr {good} should beat anti-heapr {bad}");
+    assert!(
+        good < base * 2.0,
+        "25% heapr pruning should be mild: {base} -> {good}"
+    );
+}
+
+#[test]
+fn seq_nll_rows_are_independent() {
+    // packing different rows must not leak across rows: row i's nll is the
+    // same whether packed alone or with others
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let chunk = ctx.eval_split.sample(cfg.batch, 4);
+    let (tokens, targets) = CalibSampler::pack(&chunk, cfg.batch, cfg.seq_len);
+    let mask = ones_mask(&ctx.engine);
+
+    let mut inputs = ctx.params.values();
+    inputs.push(Value::F32(mask.clone()));
+    inputs.push(Value::I32(tokens.clone()));
+    inputs.push(Value::I32(targets.clone()));
+    let out = ctx.engine.run("seq_nll", &inputs).unwrap();
+    let all_rows = out[0].clone().f32().unwrap();
+
+    // repack row 0 alone (others PAD)
+    let (solo_t, solo_g) = CalibSampler::pack(&chunk[..1], cfg.batch, cfg.seq_len);
+    let mut inputs = ctx.params.values();
+    inputs.push(Value::F32(mask));
+    inputs.push(Value::I32(solo_t));
+    inputs.push(Value::I32(solo_g));
+    let out = ctx.engine.run("seq_nll", &inputs).unwrap();
+    let solo = out[0].clone().f32().unwrap();
+    let (a, b) = (all_rows.data()[0], solo.data()[0]);
+    assert!(
+        (a - b).abs() < 1e-3 * a.abs().max(1.0),
+        "row leakage: {a} vs {b}"
+    );
+}
+
+#[test]
+fn quadform_artifact_matches_host_math() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let (d, di) = (cfg.d_model, cfg.d_inter);
+    let mut rng = heapr::util::rng::Pcg64::new(4);
+    let wd = Tensor::from_vec(&[d, di], (0..d * di).map(|_| rng.normal()).collect());
+    let a = Tensor::from_vec(&[d, d], (0..d * d).map(|_| rng.normal() * 0.1).collect());
+    // G = A A^T (PSD)
+    let g = heapr::tensor::matmul_tn(&a, &a);
+    let out = ctx.engine
+        .run("quadform", &[Value::F32(wd.clone()), Value::F32(g.clone())])
+        .unwrap();
+    let q = out.into_iter().next().unwrap().f32().unwrap();
+    for k in 0..di {
+        // host: q_k = w_k^T G w_k
+        let mut want = 0.0f32;
+        for i in 0..d {
+            for j in 0..d {
+                want += wd.at(&[i, k]) * g.at(&[i, j]) * wd.at(&[j, k]);
+            }
+        }
+        let got = q.data()[k];
+        assert!(
+            (got - want).abs() < 1e-2 * want.abs().max(1e-3),
+            "k={k}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn importance_reuses_stats_consistently() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let calib = ctx.train_split.sample(cfg.batch, 6);
+    let mut cal = Calibrator::new(&cfg);
+    for (tokens, targets) in CalibSampler::batches(&calib, cfg.batch, cfg.seq_len) {
+        cal.accumulate_pass1(&ctx.engine, &ctx.params, &tokens, &targets).unwrap();
+        cal.accumulate_pass2(&ctx.engine, &ctx.params, &tokens).unwrap();
+    }
+    let stats = cal.finish();
+    let s1 = importance_scores(&ctx.engine, &ctx.params, &stats).unwrap();
+    let s2 = importance_scores(&ctx.engine, &ctx.params, &stats).unwrap();
+    assert_eq!(s1, s2, "importance must be deterministic");
+}

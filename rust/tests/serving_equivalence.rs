@@ -1,0 +1,163 @@
+//! Coordinator correctness: the per-layer serving composition (rust routing
+//! + width-bucketed expert executables) must reproduce the monolithic
+//! `forward_masked` artifact, unpruned and pruned; and pruned serving must
+//! equal masked evaluation.
+
+use std::sync::{Mutex, OnceLock};
+
+use heapr::coordinator::Server;
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::data::tokenizer::{ByteTokenizer, PAD};
+use heapr::heapr::{heapr_scores, PrunePlan, Scope};
+use heapr::model::store::ParamStore;
+use heapr::runtime::{Engine, Value};
+use heapr::tensor::{ITensor, Tensor};
+
+const DIR: &str = "artifacts/tiny";
+
+struct Shared {
+    engine: Engine,
+    params: ParamStore,
+}
+
+// SAFETY: access is serialized through the Mutex (see integration.rs).
+unsafe impl Send for Shared {}
+
+fn shared() -> &'static Mutex<Shared> {
+    static CTX: OnceLock<Mutex<Shared>> = OnceLock::new();
+    CTX.get_or_init(|| {
+        let engine = Engine::open(DIR).expect("run `make artifacts` first");
+        // random params suffice for numerics-equivalence tests
+        let params = ParamStore::init(&engine.manifest, 11);
+        Mutex::new(Shared { engine, params })
+    })
+}
+
+/// Reference logits from the monolithic artifact for one full-length row.
+fn reference_logits(
+    ctx: &Shared,
+    prompt: &[i32],
+    mask: &Tensor,
+) -> Vec<f32> {
+    let cfg = ctx.engine.config().clone();
+    let (b, t, v) = (cfg.batch, cfg.seq_len, cfg.vocab);
+    let mut toks = vec![PAD; b * t];
+    // forward_masked has no length mask: use a full-length row
+    assert_eq!(prompt.len(), t);
+    toks[..t].copy_from_slice(prompt);
+    let mut inputs = ctx.params.values();
+    inputs.push(Value::F32(mask.clone()));
+    inputs.push(Value::I32(ITensor::from_vec(&[b, t], toks)));
+    let out = ctx.engine.run("forward_masked", &inputs).unwrap();
+    let logits = out.into_iter().next().unwrap().f32().unwrap();
+    // last position of row 0
+    logits.data()[(t - 1) * v..t * v].to_vec()
+}
+
+fn test_prompt(t: usize) -> Vec<i32> {
+    let g = Grammar::standard();
+    let docs = g.corpus("wiki", 3, 4000);
+    let split = Split::from_docs(&docs, t);
+    split.chunks[0].clone()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len());
+    let max = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < tol, "{what}: max |Δlogit| = {max}");
+}
+
+#[test]
+fn unpruned_prefill_matches_forward_masked() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let prompt = test_prompt(cfg.seq_len);
+    let ones = Tensor::ones(&[cfg.n_layers, cfg.n_experts, cfg.d_inter]);
+    let want = reference_logits(&ctx, &prompt, &ones);
+
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let (logits, _caches) = server.prefill(&[prompt]).unwrap();
+    assert_close(logits.data(), &want, 2e-3, "unpruned prefill");
+}
+
+#[test]
+fn pruned_prefill_matches_masked_eval() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let prompt = test_prompt(cfg.seq_len);
+
+    // random-ish but bucket-aligned plan from arbitrary scores
+    let scores = Tensor::from_vec(
+        &[cfg.n_layers, cfg.n_experts, cfg.d_inter],
+        (0..cfg.n_layers * cfg.n_experts * cfg.d_inter)
+            .map(|i| ((i * 2654435761) % 1000) as f32)
+            .collect(),
+    );
+    let plan = PrunePlan::from_scores(&scores, 0.4, Scope::Global)
+        .bucket_aligned(&scores, cfg.blk_i);
+    let want = reference_logits(&ctx, &prompt, &plan.mask());
+
+    let mut server = Server::new(&ctx.engine, &ctx.params, Some(&plan)).unwrap();
+    let (logits, _caches) = server.prefill(&[prompt]).unwrap();
+    assert_close(logits.data(), &want, 2e-3, "pruned prefill vs masked eval");
+}
+
+#[test]
+fn decode_extends_prefill_consistently() {
+    // prefill(T tokens) + decode(token T) must equal prefill(T+1 tokens)
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let full = test_prompt(cfg.seq_len);
+    let t_half = cfg.seq_len / 2;
+
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    // reference: prefill over t_half+1 tokens, logits at last position
+    let (want, _) = server.prefill(&[full[..t_half + 1].to_vec()]).unwrap();
+
+    // prefill t_half, then decode token at position t_half
+    let (_l, mut caches) = server.prefill(&[full[..t_half].to_vec()]).unwrap();
+    let got = server
+        .decode_step(&[full[t_half]], &[t_half], &mut caches, 1)
+        .unwrap();
+    assert_close(got.data(), want.data(), 2e-3, "decode vs prefill");
+}
+
+#[test]
+fn serve_batch_generates_deterministically() {
+    let ctx = shared().lock().unwrap();
+    let prompt = test_prompt(16);
+    let mk = |id| heapr::coordinator::Request::new(id, prompt.clone(), 8);
+
+    let mut s1 = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let r1 = s1.serve_batch(&[mk(0)]).unwrap();
+    let mut s2 = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let r2 = s2.serve_batch(&[mk(1)]).unwrap();
+    assert_eq!(r1[0].tokens, r2[0].tokens, "greedy decode must be deterministic");
+    assert!(!r1[0].tokens.is_empty());
+    assert!(s1.metrics.generated_tokens >= r1[0].tokens.len());
+    let text = ByteTokenizer.decode(&r1[0].tokens);
+    assert!(text.len() <= 8 * 4);
+}
+
+#[test]
+fn batched_serving_matches_single() {
+    // same prompt served solo and in a batch of 4 must generate the same
+    // tokens (padding rows must not contaminate real rows)
+    let ctx = shared().lock().unwrap();
+    let prompt = test_prompt(16);
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let solo = server.serve_batch(&[heapr::coordinator::Request::new(0, prompt.clone(), 6)])
+        .unwrap();
+    let reqs: Vec<_> = (0..4)
+        .map(|i| heapr::coordinator::Request::new(i, prompt.clone(), 6))
+        .collect();
+    let batch = server.serve_batch(&reqs).unwrap();
+    for r in &batch {
+        assert_eq!(r.tokens, solo[0].tokens, "req {}", r.id);
+    }
+}
