@@ -1,53 +1,62 @@
-//! Runtime micro-benchmarks: PJRT execute overhead, literal marshalling,
-//! quadform artifact latency. Establishes the L3 dispatch floor that the
-//! coordinator's per-call costs sit on (EXPERIMENTS.md §Perf).
+//! Runtime micro-benchmarks: dispatch overhead, literal marshalling, and
+//! the quadform/gate artifacts across the `HEAPR_THREADS` axis. Establishes
+//! the per-call floor the coordinator's costs sit on (EXPERIMENTS.md §Perf).
 
 use heapr::bench::Bench;
 use heapr::runtime::{Engine, Value};
 use heapr::tensor::Tensor;
+use heapr::util::pool;
 use heapr::util::rng::Pcg64;
 
+const THREAD_AXIS: &[usize] = &[1, 2, 4];
+
 fn main() {
-    let engine = Engine::open("artifacts/tiny").expect("run `make artifacts`");
+    let engine = Engine::open("artifacts/tiny").expect("open tiny preset");
     let cfg = engine.config().clone();
     let (d, di) = (cfg.d_model, cfg.d_inter);
     let mut rng = Pcg64::new(1);
     let mut bench = Bench::default();
 
-    // literal marshalling round-trip cost
+    // literal marshalling round-trip cost (thread-independent)
     let big = Tensor::from_vec(&[256, 256], (0..256 * 256).map(|_| rng.normal()).collect());
     bench.run("literal/to_literal 256x256", || {
         let v = Value::F32(big.clone());
         std::hint::black_box(v.to_literal().unwrap());
     }, Some((256.0 * 256.0 * 4.0 / 1e6, "MB/s")));
 
-    // smallest artifact: measures PJRT dispatch floor
     let wd = Tensor::from_vec(&[d, di], (0..d * di).map(|_| rng.normal()).collect());
     let a = Tensor::from_vec(&[d, d], (0..d * d).map(|_| rng.normal() * 0.1).collect());
     let g = heapr::tensor::matmul_tn(&a, &a);
-    engine.warmup(&["quadform"]).unwrap();
-    bench.run("artifact/quadform (d=64, di=32)", || {
-        std::hint::black_box(
-            engine.run("quadform", &[Value::F32(wd.clone()), Value::F32(g.clone())]).unwrap(),
-        );
-    }, None);
-
-    // gate artifact at each token bucket: dispatch + small GEMM
     let router = Tensor::from_vec(&[cfg.n_experts, d],
                                   (0..cfg.n_experts * d).map(|_| rng.normal()).collect());
     let ln = Tensor::ones(&[d]);
-    for &n in &cfg.token_buckets {
-        let name = format!("moe_gate_n{n}");
-        engine.warmup(&[name.as_str()]).unwrap();
-        let x = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.normal()).collect());
-        bench.run(&format!("artifact/{name}"), || {
-            std::hint::black_box(engine.run(&name, &[
-                Value::F32(x.clone()),
-                Value::F32(ln.clone()),
-                Value::F32(router.clone()),
-            ]).unwrap());
-        }, Some((n as f64, "tok/s")));
+    engine.warmup(&["quadform"]).unwrap();
+
+    for &threads in THREAD_AXIS {
+        pool::set_threads(threads);
+
+        // smallest artifact: measures the dispatch floor
+        bench.run(&format!("artifact/quadform (d={d}, di={di}) threads={threads}"), || {
+            std::hint::black_box(
+                engine.run("quadform", &[Value::F32(wd.clone()), Value::F32(g.clone())]).unwrap(),
+            );
+        }, None);
+
+        // gate artifact at each token bucket: dispatch + small GEMM
+        for &n in &cfg.token_buckets {
+            let name = format!("moe_gate_n{n}");
+            engine.warmup(&[name.as_str()]).unwrap();
+            let x = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.normal()).collect());
+            bench.run(&format!("artifact/{name} threads={threads}"), || {
+                std::hint::black_box(engine.run(&name, &[
+                    Value::F32(x.clone()),
+                    Value::F32(ln.clone()),
+                    Value::F32(router.clone()),
+                ]).unwrap());
+            }, Some((n as f64, "tok/s")));
+        }
     }
+    pool::set_threads(pool::default_threads());
 
     bench.save("runs/bench/runtime.json").unwrap();
 }

@@ -1,5 +1,11 @@
-//! End-to-end serving throughput, dense vs HEAPr-pruned (Appendix C shape):
-//! the headline "pruning buys real latency" measurement.
+//! End-to-end serving throughput, dense vs HEAPr-pruned (Appendix C shape)
+//! across the `HEAPR_THREADS` axis: the headline "pruning buys real
+//! latency, threads buy real throughput" measurement.
+//!
+//! Per (threads, ratio) cell one server is built and one batch is served
+//! to warm the executables, then `serve_batch` is timed. The final line
+//! reports the dense-serving speedup of the widest thread count over the
+//! serial pool — the §Perf acceptance number.
 
 use heapr::bench::Bench;
 use heapr::coordinator::{Request, Server};
@@ -11,9 +17,13 @@ use heapr::heapr::Scope;
 use heapr::model::store::ParamStore;
 use heapr::runtime::Engine;
 use heapr::tensor::Tensor;
+use heapr::util::pool;
+
+const THREAD_AXIS: &[usize] = &[1, 2, 4];
+const RATIOS: &[f64] = &[0.0, 0.25, 0.5, 0.75];
 
 fn main() {
-    let engine = Engine::open("artifacts/tiny").expect("run `make artifacts`");
+    let engine = Engine::open("artifacts/tiny").expect("open tiny preset");
     let cfg = engine.config().clone();
     let grammar = Grammar::standard();
     let split = Split::from_docs(&grammar.corpus("wiki", 0, 100_000), cfg.seq_len);
@@ -35,22 +45,42 @@ fn main() {
     };
     let tok_per_run = (bb * new_tokens) as f64;
 
-    for ratio in [0.0, 0.25, 0.5, 0.75] {
-        let plan = if ratio == 0.0 {
-            None
-        } else {
-            Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
-                .bucket_aligned(&scores, cfg.blk_i))
-        };
-        let mut server = Server::new(&engine, &params, plan.as_ref()).unwrap();
-        // warm the executables once
-        server.serve_batch(&mk_requests()).unwrap();
-        bench.run(&format!("serve b{bb} gen{new_tokens} ratio={ratio:.2}"), || {
-            let reqs = mk_requests();
-            std::hint::black_box(server.serve_batch(&reqs).unwrap());
-        }, Some((tok_per_run, "tok/s")));
+    let mut dense_tps = Vec::new(); // (threads, tok/s) at ratio 0.0
+    for &threads in THREAD_AXIS {
+        pool::set_threads(threads);
+        for &ratio in RATIOS {
+            let plan = if ratio == 0.0 {
+                None
+            } else {
+                Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
+                    .bucket_aligned(&scores, cfg.blk_i))
+            };
+            let mut server = Server::new(&engine, &params, plan.as_ref()).unwrap();
+            // warm the executables once
+            server.serve_batch(&mk_requests()).unwrap();
+            let r = bench.run(
+                &format!("serve b{bb} gen{new_tokens} ratio={ratio:.2} threads={threads}"),
+                || {
+                    let reqs = mk_requests();
+                    std::hint::black_box(server.serve_batch(&reqs).unwrap());
+                },
+                Some((tok_per_run, "tok/s")),
+            );
+            if ratio == 0.0 {
+                dense_tps.push((threads, r.throughput.unwrap().0));
+            }
+        }
         let _ = ByteTokenizer; // keep import for doc symmetry
     }
+    pool::set_threads(pool::default_threads());
 
+    if let (Some(&(t0, tps0)), Some(&(t1, tps1))) =
+        (dense_tps.first(), dense_tps.last())
+    {
+        println!(
+            "serve speedup (dense): threads={t1} vs threads={t0} -> {:.2}x",
+            tps1 / tps0
+        );
+    }
     bench.save("runs/bench/serve.json").unwrap();
 }

@@ -136,6 +136,49 @@ mod tests {
     }
 
     #[test]
+    fn fifo_per_producer_under_concurrent_producers() {
+        // Several producer threads share the channel. Global arrival order
+        // is scheduler-dependent, but the batcher must (a) never drop or
+        // duplicate, and (b) preserve each producer's submission order
+        // (mpsc is per-sender FIFO; draining must keep it that way).
+        const PRODUCERS: u64 = 4;
+        const PER_PRODUCER: u64 = 50;
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, vec![1, 4, 8], Duration::from_millis(1));
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for j in 0..PER_PRODUCER {
+                    tx.send(Request::new(p * 1000 + j, vec![1], 1)).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(seen.len() as u64, PRODUCERS * PER_PRODUCER);
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len() as u64, PRODUCERS * PER_PRODUCER, "duplicates");
+        for p in 0..PRODUCERS {
+            let mine: Vec<u64> = seen.iter().copied()
+                .filter(|id| id / 1000 == p)
+                .collect();
+            assert!(
+                mine.windows(2).all(|w| w[0] < w[1]),
+                "producer {p} order violated: {mine:?}"
+            );
+        }
+    }
+
+    #[test]
     fn prop_batcher_never_drops() {
         use crate::util::prop::check;
         check("batcher-lossless", 20,

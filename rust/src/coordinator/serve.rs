@@ -23,6 +23,13 @@ use crate::model::store::ParamStore;
 use crate::model::WidthProfile;
 use crate::runtime::{DeviceTensor, Engine, Value};
 use crate::tensor::{ITensor, Tensor};
+use crate::util::pool;
+use crate::util::pool::RowsPtr;
+
+/// Host-side gather/scatter chunks smaller than this stay serial — pool
+/// dispatch would dominate. Engine (device) calls are always serialized on
+/// the caller thread; only the host-side copies fan out.
+const PAR_MIN_ELEMS: usize = 1 << 13;
 
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
@@ -116,28 +123,35 @@ impl<'e> Server<'e> {
             }
         }
         let sliced = surgery(store, plan)?;
-        let up = |t: &Tensor| engine.upload(&Value::F32(t.clone()));
+        let up = |t: &Tensor| engine.upload(Value::F32(t.clone()));
+        // Host-side weight prep (per-expert tensor clones — the dominant
+        // build cost at scale) fans out across layers on the pool; engine
+        // uploads stay serialized below per the engine discipline.
+        let prepped: Vec<Result<Vec<([Tensor; 3], usize)>>> =
+            pool::par_map(cfg.n_layers, |l| {
+                (0..cfg.n_experts)
+                    .map(|e| -> Result<([Tensor; 3], usize)> {
+                        let wg = sliced.get(&format!("l{l}.e{e}.wg"))?;
+                        let wu = sliced.get(&format!("l{l}.e{e}.wu"))?;
+                        let wd = sliced.get(&format!("l{l}.e{e}.wd"))?;
+                        let width = wg.shape()[0];
+                        Ok(([wg.clone(), wu.clone(), wd.clone()], width))
+                    })
+                    .collect()
+            });
         let mut experts = Vec::with_capacity(cfg.n_layers);
         let mut layers = Vec::with_capacity(cfg.n_layers);
-        for l in 0..cfg.n_layers {
+        for (l, row_prep) in prepped.into_iter().enumerate() {
             let mut row = Vec::with_capacity(cfg.n_experts);
-            for e in 0..cfg.n_experts {
-                let wg = sliced.get(&format!("l{l}.e{e}.wg"))?;
-                let wu = sliced.get(&format!("l{l}.e{e}.wu"))?;
-                let wd = sliced.get(&format!("l{l}.e{e}.wd"))?;
-                let width = wg.shape()[0];
+            for ([wg, wu, wd], width) in row_prep? {
                 // width-0 experts never execute; upload a 1-element dummy
                 let bufs = if width == 0 {
                     let dummy = Tensor::zeros(&[1]);
                     [up(&dummy)?, up(&dummy)?, up(&dummy)?]
                 } else {
-                    [up(wg)?, up(wu)?, up(wd)?]
+                    [up(&wg)?, up(&wu)?, up(&wd)?]
                 };
-                row.push(ExpertWeights {
-                    bufs,
-                    host: [wg.clone(), wu.clone(), wd.clone()],
-                    width,
-                });
+                row.push(ExpertWeights { bufs, host: [wg, wu, wd], width });
             }
             experts.push(row);
             layers.push(LayerBuffers {
@@ -209,7 +223,7 @@ impl<'e> Server<'e> {
                 .copy_from_slice(&x.data()[start * d..(start + take) * d]);
             let chunk_t = Tensor::from_vec(&[nb, d], chunk);
             let out = if buffer_cache_enabled() {
-                let chunk_b = self.engine.upload(&Value::F32(chunk_t))?;
+                let chunk_b = self.engine.upload(Value::F32(chunk_t))?;
                 self.engine.run_b(
                     &format!("moe_gate_n{nb}"),
                     &[&chunk_b.buf, &self.layers[l].ln2.buf, &self.layers[l].router.buf],
@@ -250,15 +264,24 @@ impl<'e> Server<'e> {
                     let gtake = (pairs.len() - gstart).min(max_bucket);
                     let gb = Router::token_bucket(&buckets, gtake).unwrap();
                     let mut xs = vec![0.0f32; gb * d];
-                    for (i, (t, _)) in
-                        pairs[gstart..gstart + gtake].iter().enumerate()
-                    {
-                        xs[i * d..(i + 1) * d]
-                            .copy_from_slice(&xn.data()[t * d..(t + 1) * d]);
+                    let gather = |i: usize, dst: &mut [f32]| {
+                        let (t, _) = pairs[gstart + i];
+                        dst.copy_from_slice(&xn.data()[t * d..(t + 1) * d]);
+                    };
+                    if gtake * d < PAR_MIN_ELEMS {
+                        for i in 0..gtake {
+                            gather(i, &mut xs[i * d..(i + 1) * d]);
+                        }
+                    } else {
+                        // parallel gather: lane i fills row i only
+                        let ptr = RowsPtr::new(&mut xs);
+                        pool::par_for(gtake, |i| {
+                            gather(i, unsafe { ptr.slice(i * d, d) });
+                        });
                     }
                     let xs_t = Tensor::from_vec(&[gb, d], xs);
                     let res = if buffer_cache_enabled() {
-                        let xs_b = self.engine.upload(&Value::F32(xs_t))?;
+                        let xs_b = self.engine.upload(Value::F32(xs_t))?;
                         self.engine.run_b(
                             &format!("expert_n{gb}_w{}", ew.width),
                             &[&xs_b.buf, &ew.bufs[0].buf, &ew.bufs[1].buf, &ew.bufs[2].buf],
@@ -275,14 +298,27 @@ impl<'e> Server<'e> {
                         )?
                     };
                     let ys = res.into_iter().next().unwrap().f32()?;
-                    for (i, (t, w)) in
-                        pairs[gstart..gstart + gtake].iter().enumerate()
-                    {
-                        let dst = (start + t) * d;
+                    let scatter = |i: usize, dst: &mut [f32]| {
+                        let (_, w) = pairs[gstart + i];
                         let src = &ys.data()[i * d..(i + 1) * d];
                         for j in 0..d {
-                            y.data_mut()[dst + j] += w * src[j];
+                            dst[j] += w * src[j];
                         }
+                    };
+                    if gtake * d < PAR_MIN_ELEMS {
+                        for i in 0..gtake {
+                            let (t, _) = pairs[gstart + i];
+                            let dst = (start + t) * d;
+                            scatter(i, &mut y.data_mut()[dst..dst + d]);
+                        }
+                    } else {
+                        // parallel scatter-add: token indices are unique
+                        // within a group, so destination rows are disjoint
+                        let ptr = RowsPtr::new(y.data_mut());
+                        pool::par_for(gtake, |i| {
+                            let (t, _) = pairs[gstart + i];
+                            scatter(i, unsafe { ptr.slice((start + t) * d, d) });
+                        });
                     }
                     gstart += gtake;
                 }
@@ -302,7 +338,7 @@ impl<'e> Server<'e> {
         xs[..b * d].copy_from_slice(states.data());
         let xs_t = Tensor::from_vec(&[nb, d], xs);
         let out = if buffer_cache_enabled() {
-            let xs_b = self.engine.upload(&Value::F32(xs_t))?;
+            let xs_b = self.engine.upload(Value::F32(xs_t))?;
             self.engine.run_b(
                 &format!("lm_head_n{nb}"),
                 &[&xs_b.buf, &self.lnf_buf.buf, &self.embed_buf.buf],
@@ -351,11 +387,11 @@ impl<'e> Server<'e> {
         let mut x = x0.reshape(&[bb, t, d])?;
         let lmask_t = Tensor::from_vec(&[bb, t], lmask);
 
-        let lmask_b = self.engine.upload(&Value::F32(lmask_t.clone()))?;
+        let lmask_b = self.engine.upload(Value::F32(lmask_t.clone()))?;
         let mut caches = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             let out = if buffer_cache_enabled() {
-                let x_b = self.engine.upload(&Value::F32(x.clone()))?;
+                let x_b = self.engine.upload(Value::F32(x.clone()))?;
                 let a = &self.layers[l].attn;
                 self.engine.run_b(
                     &format!("attn_prefill_b{bb}"),
@@ -419,13 +455,13 @@ impl<'e> Server<'e> {
         let x = self.embed(&toks, &poss)?.reshape(&[bb, 1, d])?;
 
         let pos_t = ITensor::from_vec(&[bb], poss.iter().map(|&p| p as i32).collect());
-        let pos_b = self.engine.upload(&Value::I32(pos_t.clone()))?;
+        let pos_b = self.engine.upload(Value::I32(pos_t.clone()))?;
         let mut x = x;
         for l in 0..cfg.n_layers {
             let out = if buffer_cache_enabled() {
-                let x_b = self.engine.upload(&Value::F32(x.clone()))?;
-                let kc_b = self.engine.upload(&Value::F32(caches[l].0.clone()))?;
-                let vc_b = self.engine.upload(&Value::F32(caches[l].1.clone()))?;
+                let x_b = self.engine.upload(Value::F32(x.clone()))?;
+                let kc_b = self.engine.upload(Value::F32(caches[l].0.clone()))?;
+                let vc_b = self.engine.upload(Value::F32(caches[l].1.clone()))?;
                 let a = &self.layers[l].attn;
                 self.engine.run_b(
                     &format!("attn_decode_b{bb}"),

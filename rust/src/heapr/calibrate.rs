@@ -111,15 +111,45 @@ impl Calibrator {
         Ok(())
     }
 
+    /// First (layer, expert) whose pass-1 and pass-2 routed counts differ.
+    /// Both passes replay the same router on the same tokens, so any
+    /// divergence means the passes saw different data (caller bug) or the
+    /// routing drifted between passes (artifact bug).
+    fn counts_divergence(&self) -> Option<(usize, usize, f32, f32)> {
+        for li in 0..self.l {
+            for ei in 0..self.e {
+                let c1 = self.counts1.at(&[li, ei]);
+                let c2 = self.counts2.at(&[li, ei]);
+                if c1 != c2 {
+                    return Some((li, ei, c1, c2));
+                }
+            }
+        }
+        None
+    }
+
     /// Normalise sums into the dataset-level means of eqs. 15/16.
     pub fn finish(self) -> CalibStats {
         assert!(self.n_batches1 > 0, "no pass-1 batches accumulated");
         assert!(self.n_batches2 > 0, "no pass-2 batches accumulated");
+        // Both passes see the same routed sets: pass-1 counts normalise Ḡ,
+        // pass-2 counts normalise h². If they diverge the importance
+        // scores mix statistics from different token sets — surface it
+        // loudly instead of silently normalising past it.
+        if let Some((li, ei, c1, c2)) = self.counts_divergence() {
+            crate::warn!(
+                "calibration counts diverged at layer {li} expert {ei}: \
+                 pass1={c1} pass2={c2} — passes saw different batches?"
+            );
+            debug_assert!(
+                false,
+                "calibration count divergence: layer {li} expert {ei} \
+                 pass1={c1} pass2={c2}"
+            );
+        }
         let (l, e, d, di) = (self.l, self.e, self.d, self.di);
         let mut gbar = self.gsum;
         let mut hsq_mean = self.hsq;
-        // both passes see the same routed sets; prefer pass-1 counts for Ḡ
-        // and pass-2 counts for h² (they are asserted equal in tests).
         for li in 0..l {
             for ei in 0..e {
                 let c1 = self.counts1.at(&[li, ei]).max(1.0);
@@ -187,6 +217,42 @@ mod tests {
         assert_eq!(a.data(), &[2.0, 1.0, 3.5]);
         max_into(&mut a, &Tensor::from_vec(&[3], vec![5.0, 0.0, 3.6]));
         assert_eq!(a.data(), &[5.0, 1.0, 3.6]);
+    }
+
+    fn manual_calibrator() -> Calibrator {
+        let cfg = crate::runtime::preset::builtin("tiny").unwrap();
+        let mut cal = Calibrator::new(&cfg);
+        cal.n_batches1 = 1;
+        cal.n_batches2 = 1;
+        cal
+    }
+
+    #[test]
+    fn equal_counts_pass_the_divergence_check() {
+        let mut cal = manual_calibrator();
+        cal.counts1.set(&[0, 0], 4.0);
+        cal.counts2.set(&[0, 0], 4.0);
+        assert!(cal.counts_divergence().is_none());
+        let stats = cal.finish(); // must not assert
+        assert_eq!(stats.counts.at(&[0, 0]), 4.0);
+    }
+
+    #[test]
+    fn diverged_counts_are_detected() {
+        let mut cal = manual_calibrator();
+        cal.counts1.set(&[1, 2], 4.0);
+        cal.counts2.set(&[1, 2], 5.0);
+        assert_eq!(cal.counts_divergence(), Some((1, 2, 4.0, 5.0)));
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "calibration count divergence")]
+    fn diverged_counts_trip_the_debug_assert_in_finish() {
+        let mut cal = manual_calibrator();
+        cal.counts1.set(&[0, 1], 3.0);
+        cal.counts2.set(&[0, 1], 7.0);
+        let _ = cal.finish();
     }
 
     #[test]

@@ -13,29 +13,49 @@ use crate::heapr::calibrate::CalibStats;
 use crate::model::store::ParamStore;
 use crate::runtime::{Engine, Value};
 use crate::tensor::Tensor;
+#[cfg(not(feature = "pjrt"))]
+use crate::util::pool;
 
 /// Importance tensor [L, E, di]; smaller = prune first.
+///
+/// The L×E `quadform` + score loop fans out over the thread pool — each
+/// (layer, expert) pair slices its own Ḡ, runs the quadform artifact and
+/// produces its own [di] score row, so results are order-independent and
+/// identical for every `HEAPR_THREADS`. The fan-out requires the engine to
+/// be `Sync` (true of the host backend); pjrt builds compile the serial
+/// loop instead (the PJRT engine holds raw FFI pointers).
 pub fn importance_scores(
     engine: &Engine,
     params: &ParamStore,
     stats: &CalibStats,
 ) -> Result<Tensor> {
     let (l, e, _d, di) = stats.cfg_dims;
+    // hoist the per-layer weight handles once (not once per (l, e) pair)
+    let wd_alls: Vec<&Tensor> = (0..l)
+        .map(|li| params.get(&format!("l{li}.wd"))) // [E, d, di]
+        .collect::<Result<_>>()?;
+    let score_pair = |pair: usize| -> Result<Option<Vec<f32>>> {
+        let (li, ei) = (pair / e, pair % e);
+        if stats.counts.at(&[li, ei]) == 0.0 {
+            return Ok(None); // never-routed expert: importance stays 0
+        }
+        let wd = wd_alls[li].index0(ei); // [d, di]
+        let gbar = stats.gbar_at(li, ei);
+        let out = engine.run("quadform", &[Value::F32(wd), Value::F32(gbar)])?;
+        let q = out.into_iter().next().unwrap().f32()?;
+        let hsq = stats.hsq_at(li, ei);
+        Ok(Some(
+            (0..di).map(|k| 0.5 * q.data()[k] * hsq.data()[k]).collect(),
+        ))
+    };
+    #[cfg(not(feature = "pjrt"))]
+    let rows: Vec<Result<Option<Vec<f32>>>> = pool::par_map(l * e, score_pair);
+    #[cfg(feature = "pjrt")]
+    let rows: Vec<Result<Option<Vec<f32>>>> = (0..l * e).map(score_pair).collect();
     let mut scores = Tensor::zeros(&[l, e, di]);
-    for li in 0..l {
-        let wd_all = params.get(&format!("l{li}.wd"))?; // [E, d, di]
-        for ei in 0..e {
-            if stats.counts.at(&[li, ei]) == 0.0 {
-                continue; // never-routed expert: importance stays 0
-            }
-            let wd = wd_all.index0(ei); // [d, di]
-            let gbar = stats.gbar_at(li, ei);
-            let out = engine.run("quadform", &[Value::F32(wd), Value::F32(gbar)])?;
-            let q = out.into_iter().next().unwrap().f32()?;
-            let hsq = stats.hsq_at(li, ei);
-            for k in 0..di {
-                scores.set(&[li, ei, k], 0.5 * q.data()[k] * hsq.data()[k]);
-            }
+    for (pair, row) in rows.into_iter().enumerate() {
+        if let Some(vals) = row? {
+            scores.data_mut()[pair * di..(pair + 1) * di].copy_from_slice(&vals);
         }
     }
     Ok(scores)

@@ -1,0 +1,1319 @@
+//! Host backend: pure-rust execution of every AOT artifact, by name.
+//!
+//! The offline image cannot link PJRT (no `xla` crate), so this backend
+//! re-implements each artifact's semantics over [`crate::tensor`] ops —
+//! the same math `python/compile` lowers to HLO, validated against JAX
+//! autodiff (gradients matched to ~1e-7 relative during bring-up):
+//!
+//! * `train_step` — full forward + reverse-mode backward + Adam.
+//! * `forward_masked` / `loss_masked` / `seq_nll` — masked inference.
+//! * `calib_pass1` — backward w.r.t. per-layer MoE output taps, then
+//!   Ḡ_{l,e} = Σ_t (gate·g)(gate·g)^T (eq. 15).
+//! * `calib_pass2` — routed atomic-activation statistics (eq. 16).
+//! * `quadform` and the serving sub-graphs (`attn_prefill_b*`,
+//!   `attn_decode_b*`, `moe_gate_n*`, `lm_head_n*`, `expert_n*_w*`).
+//!
+//! Heavy matmuls route through the pool-parallel `tensor::ops` kernels, so
+//! `HEAPR_THREADS` scales the whole pipeline; results are bitwise
+//! identical for every thread count (row-disjoint writes only).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::value::Value;
+use crate::tensor::{matmul_at, matmul_nn, matmul_tn, rmsnorm, softmax, ITensor, Tensor};
+use crate::util::pool;
+
+const EPS: f32 = 1e-6;
+const NEG: f32 = -1e30;
+const PAD: i32 = 256;
+/// Mirror of `configs.py` `aux_coef` (same for every preset).
+const AUX_COEF: f32 = 0.01;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+pub struct HostBackend {
+    cfg: ModelConfig,
+    param_names: Vec<String>,
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Copy sub-matrix `idx` (of `rows * cols` elements) out of a stacked
+/// tensor laid out [..., rows, cols].
+fn sub2(t: &Tensor, idx: usize, rows: usize, cols: usize) -> Tensor {
+    let base = idx * rows * cols;
+    Tensor::from_vec(&[rows, cols], t.data()[base..base + rows * cols].to_vec())
+}
+
+/// out[n] = a[n] * s[n] (row-scaled copy); a: [N, d], s: [N].
+fn row_scale(a: &Tensor, s: &[f32]) -> Tensor {
+    let d = a.shape()[1];
+    let mut out = a.data().to_vec();
+    for (n, &w) in s.iter().enumerate() {
+        for x in &mut out[n * d..(n + 1) * d] {
+            *x *= w;
+        }
+    }
+    Tensor::from_vec(a.shape(), out)
+}
+
+fn add_into(a: &mut Tensor, b: &Tensor) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += *y;
+    }
+}
+
+/// Backward of row-wise softmax: dz = p * (dp - Σ p·dp), rows of width
+/// `last axis`.
+fn softmax_backward(p: &Tensor, dp: &Tensor) -> Tensor {
+    let d = *p.shape().last().unwrap();
+    let rows = p.len() / d;
+    let mut out = vec![0.0f32; p.len()];
+    for r in 0..rows {
+        let ps = &p.data()[r * d..(r + 1) * d];
+        let dps = &dp.data()[r * d..(r + 1) * d];
+        let dot: f32 = ps.iter().zip(dps).map(|(a, b)| a * b).sum();
+        for i in 0..d {
+            out[r * d + i] = ps[i] * (dps[i] - dot);
+        }
+    }
+    Tensor::from_vec(p.shape(), out)
+}
+
+/// Backward of `y = rmsnorm(x, w)` over rows; returns (dx, dw).
+fn rmsnorm_backward(dy: &Tensor, x: &Tensor, w: &Tensor) -> (Tensor, Tensor) {
+    let d = *x.shape().last().unwrap();
+    let rows = x.len() / d;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; d];
+    let wd = w.data();
+    for r in 0..rows {
+        let xs = &x.data()[r * d..(r + 1) * d];
+        let dys = &dy.data()[r * d..(r + 1) * d];
+        let ms: f32 = xs.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        let mut s = 0.0f32;
+        for i in 0..d {
+            dw[i] += dys[i] * xs[i] * inv;
+            s += dys[i] * wd[i] * xs[i];
+        }
+        let c = inv * inv * inv * s / d as f32;
+        for i in 0..d {
+            dx[r * d + i] = dys[i] * wd[i] * inv - c * xs[i];
+        }
+    }
+    (Tensor::from_vec(x.shape(), dx), Tensor::from_vec(&[d], dw))
+}
+
+/// [N, H*hd] -> [B, H, T, hd]
+fn split_heads(x: &Tensor, b: usize, t: usize, h: usize, hd: usize) -> Tensor {
+    let mut out = vec![0.0f32; b * h * t * hd];
+    for bi in 0..b {
+        for ti in 0..t {
+            for hi in 0..h {
+                let src = (bi * t + ti) * h * hd + hi * hd;
+                let dst = ((bi * h + hi) * t + ti) * hd;
+                out[dst..dst + hd].copy_from_slice(&x.data()[src..src + hd]);
+            }
+        }
+    }
+    Tensor::from_vec(&[b, h, t, hd], out)
+}
+
+/// [B, H, T, hd] -> [N, H*hd]
+fn merge_heads(x: &Tensor) -> Tensor {
+    let &[b, h, t, hd] = x.shape() else { panic!("merge_heads wants [B,H,T,hd]") };
+    let mut out = vec![0.0f32; b * t * h * hd];
+    for bi in 0..b {
+        for hi in 0..h {
+            for ti in 0..t {
+                let src = ((bi * h + hi) * t + ti) * hd;
+                let dst = (bi * t + ti) * h * hd + hi * hd;
+                out[dst..dst + hd].copy_from_slice(&x.data()[src..src + hd]);
+            }
+        }
+    }
+    Tensor::from_vec(&[b * t, h * hd], out)
+}
+
+// ----------------------------------------------------------- model pieces
+
+struct Params<'a> {
+    map: HashMap<&'a str, &'a Tensor>,
+}
+
+impl<'a> Params<'a> {
+    fn get(&self, name: &str) -> Result<&'a Tensor> {
+        self.map
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("host backend: no param {name:?}"))
+    }
+}
+
+struct AttnCache {
+    q: Tensor,    // [B,H,T,hd]
+    k: Tensor,    // [B,H,T,hd]
+    v: Tensor,    // [B,H,T,hd]
+    attn: Tensor, // [B,H,T,T]
+    outf: Tensor, // [N,d] (merged heads, pre-Wo)
+}
+
+struct LayerCache {
+    x_in: Tensor,           // [N,d]
+    xn1: Tensor,            // [N,d]
+    att: AttnCache,
+    x1: Tensor,             // [N,d]
+    xn2: Tensor,            // [N,d]
+    idx: Vec<Vec<usize>>,   // [N][k] routed expert ids, rank order
+    weights: Tensor,        // [N,k] softmax(top-k logits)
+    gates: Tensor,          // [N,E]
+    probs: Tensor,          // [N,E]
+    f: Vec<f32>,            // [E] routed fraction
+    pre: Vec<Tensor>,       // per e: [N,di] gate pre-activation
+    u: Vec<Tensor>,         // per e: [N,di]
+    h: Vec<Tensor>,         // per e: [N,di] silu(pre)*u (pre-mask)
+    out_e: Vec<Tensor>,     // per e: [N,d] (h*mask) @ wd^T
+}
+
+struct Cache {
+    b: usize,
+    t: usize,
+    layers: Vec<LayerCache>,
+    x_final: Tensor, // [N,d]
+    xf: Tensor,      // [N,d]
+    logits: Tensor,  // [N,V]
+    aux_mean: f32,
+}
+
+/// Causal multi-head attention over `xn1` [N,d]; returns the Wo-projected
+/// output (no residual) plus the cache backward needs.
+#[allow(clippy::too_many_arguments)]
+fn attention_forward(
+    xn1: &Tensor,
+    wq: &Tensor,
+    wk: &Tensor,
+    wv: &Tensor,
+    wo: &Tensor,
+    b: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+    len_mask: Option<&[f32]>,
+) -> (Tensor, AttnCache) {
+    let q = split_heads(&matmul_tn(xn1, wq), b, t, h, hd);
+    let k = split_heads(&matmul_tn(xn1, wk), b, t, h, hd);
+    let v = split_heads(&matmul_tn(xn1, wv), b, t, h, hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut attn = vec![0.0f32; b * h * t * t];
+    let mut outs = vec![0.0f32; b * h * t * hd];
+    for bi in 0..b {
+        for hi in 0..h {
+            let bh = bi * h + hi;
+            let qm = sub2(&q, bh, t, hd);
+            let km = sub2(&k, bh, t, hd);
+            let mut scores = matmul_tn(&qm, &km);
+            for i in 0..t {
+                for j in 0..t {
+                    let masked = j > i
+                        || len_mask.map(|m| m[bi * t + j] == 0.0).unwrap_or(false);
+                    let cell = &mut scores.data_mut()[i * t + j];
+                    *cell = if masked { NEG } else { *cell * scale };
+                }
+            }
+            let a = softmax(&scores);
+            let o = matmul_nn(&a, &sub2(&v, bh, t, hd));
+            attn[bh * t * t..(bh + 1) * t * t].copy_from_slice(a.data());
+            outs[bh * t * hd..(bh + 1) * t * hd].copy_from_slice(o.data());
+        }
+    }
+    let attn = Tensor::from_vec(&[b, h, t, t], attn);
+    let outf = merge_heads(&Tensor::from_vec(&[b, h, t, hd], outs));
+    let y = matmul_tn(&outf, wo);
+    (y, AttnCache { q, k, v, attn, outf })
+}
+
+/// Backward through [`attention_forward`]; returns dxn1 and, when
+/// `need_pg`, the four weight gradients (dwq, dwk, dwv, dwo).
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn attention_backward(
+    dy: &Tensor,
+    cache: &AttnCache,
+    xn1: &Tensor,
+    wq: &Tensor,
+    wk: &Tensor,
+    wv: &Tensor,
+    wo: &Tensor,
+    b: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+    need_pg: bool,
+) -> (Tensor, Option<[Tensor; 4]>) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let dwo = if need_pg { Some(matmul_at(dy, &cache.outf)) } else { None };
+    let dout = split_heads(&matmul_nn(dy, wo), b, t, h, hd);
+    let mut dq = vec![0.0f32; b * h * t * hd];
+    let mut dk = vec![0.0f32; b * h * t * hd];
+    let mut dv = vec![0.0f32; b * h * t * hd];
+    for bi in 0..b {
+        for hi in 0..h {
+            let bh = bi * h + hi;
+            let dout_m = sub2(&dout, bh, t, hd);
+            let a = sub2(&cache.attn, bh, t, t);
+            let vm = sub2(&cache.v, bh, t, hd);
+            let da = matmul_tn(&dout_m, &vm); // [T,T]
+            let dv_m = matmul_at(&a, &dout_m); // [T,hd]
+            let mut ds = softmax_backward(&a, &da);
+            for x in ds.data_mut() {
+                *x *= scale;
+            }
+            let dq_m = matmul_nn(&ds, &sub2(&cache.k, bh, t, hd));
+            let dk_m = matmul_at(&ds, &sub2(&cache.q, bh, t, hd));
+            dq[bh * t * hd..(bh + 1) * t * hd].copy_from_slice(dq_m.data());
+            dk[bh * t * hd..(bh + 1) * t * hd].copy_from_slice(dk_m.data());
+            dv[bh * t * hd..(bh + 1) * t * hd].copy_from_slice(dv_m.data());
+        }
+    }
+    let dq = merge_heads(&Tensor::from_vec(&[b, h, t, hd], dq));
+    let dk = merge_heads(&Tensor::from_vec(&[b, h, t, hd], dk));
+    let dv = merge_heads(&Tensor::from_vec(&[b, h, t, hd], dv));
+    let mut dxn1 = matmul_nn(&dq, wq);
+    add_into(&mut dxn1, &matmul_nn(&dk, wk));
+    add_into(&mut dxn1, &matmul_nn(&dv, wv));
+    let dws = if need_pg {
+        Some([
+            matmul_at(&dq, xn1),
+            matmul_at(&dk, xn1),
+            matmul_at(&dv, xn1),
+            dwo.unwrap(),
+        ])
+    } else {
+        None
+    };
+    (dxn1, dws)
+}
+
+/// Iterative-argmax top-k routing (ties -> lowest index, matching
+/// `model.py::topk_iterative`); returns (idx, weights [N,k], gates [N,E]).
+fn route(logits_r: &Tensor, k: usize) -> (Vec<Vec<usize>>, Tensor, Tensor) {
+    let &[n, e] = logits_r.shape() else { panic!("router logits must be [N,E]") };
+    let mut idx = Vec::with_capacity(n);
+    let mut weights = vec![0.0f32; n * k];
+    let mut gates = vec![0.0f32; n * e];
+    for r in 0..n {
+        let mut row = logits_r.data()[r * e..(r + 1) * e].to_vec();
+        let mut picks = Vec::with_capacity(k);
+        let mut vals = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut best = 0usize;
+            for j in 1..e {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            picks.push(best);
+            vals.push(row[best]);
+            row[best] -= 1e30;
+        }
+        // softmax over the k selected logits
+        let mx = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = vals.iter().map(|v| (v - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        for (j, &p) in picks.iter().enumerate() {
+            let w = exps[j] / z;
+            weights[r * k + j] = w;
+            gates[r * e + p] += w;
+        }
+        idx.push(picks);
+    }
+    (
+        idx,
+        Tensor::from_vec(&[n, k], weights),
+        Tensor::from_vec(&[n, e], gates),
+    )
+}
+
+struct CeOut {
+    ce: f32,
+    cnt: f32,
+    nll_rows: Vec<f32>, // per token
+    w_rows: Vec<f32>,   // per token (1.0 unless target == PAD)
+    dlogits: Option<Tensor>,
+}
+
+/// Mean cross-entropy over non-PAD targets (`model.py::ce_loss`), with the
+/// loss gradient when `need_grad`. Target ids are bounds-checked — unlike
+/// input tokens they never pass through the embedding lookup's validation.
+fn ce_loss(logits: &Tensor, targets: &[i32], need_grad: bool) -> Result<CeOut> {
+    let &[n, v] = logits.shape() else { panic!("logits must be [N,V]") };
+    assert_eq!(targets.len(), n);
+    let mut nll_rows = vec![0.0f32; n];
+    let mut w_rows = vec![0.0f32; n];
+    let mut logz = vec![0.0f32; n];
+    for r in 0..n {
+        let xs = &logits.data()[r * v..(r + 1) * v];
+        let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = xs.iter().map(|x| (x - mx).exp()).sum();
+        logz[r] = mx + z.ln();
+        let tgt = targets[r];
+        if tgt < 0 || tgt as usize >= v {
+            bail!("target id {tgt} out of range for vocab {v} (row {r})");
+        }
+        nll_rows[r] = logz[r] - xs[tgt as usize];
+        w_rows[r] = if tgt == PAD { 0.0 } else { 1.0 };
+    }
+    let cnt: f32 = w_rows.iter().sum();
+    let norm = cnt.max(1.0);
+    let ce = nll_rows
+        .iter()
+        .zip(&w_rows)
+        .map(|(l, w)| l * w)
+        .sum::<f32>()
+        / norm;
+    let dlogits = need_grad.then(|| {
+        let mut d = vec![0.0f32; n * v];
+        for r in 0..n {
+            let w = w_rows[r] / norm;
+            if w == 0.0 {
+                continue;
+            }
+            let xs = &logits.data()[r * v..(r + 1) * v];
+            for c in 0..v {
+                d[r * v + c] = (xs[c] - logz[r]).exp() * w;
+            }
+            d[r * v + targets[r] as usize] -= w;
+        }
+        Tensor::from_vec(&[n, v], d)
+    });
+    Ok(CeOut { ce, cnt, nll_rows, w_rows, dlogits })
+}
+
+impl HostBackend {
+    pub fn new(cfg: ModelConfig, param_names: Vec<String>) -> HostBackend {
+        HostBackend { cfg, param_names }
+    }
+
+    fn params<'a>(&'a self, inputs: &[&'a Value]) -> Result<Params<'a>> {
+        let np = self.param_names.len();
+        if inputs.len() < np {
+            bail!("host backend: {} inputs < {np} params", inputs.len());
+        }
+        let mut map = HashMap::with_capacity(np);
+        for (name, v) in self.param_names.iter().zip(inputs) {
+            map.insert(name.as_str(), v.as_f32()?);
+        }
+        Ok(Params { map })
+    }
+
+    // ------------------------------------------------------------ forward
+
+    /// Forward pass over flat tokens; caches everything backward needs.
+    fn forward(&self, p: &Params, tokens: &ITensor, mask: &Tensor) -> Result<Cache> {
+        let cfg = &self.cfg;
+        let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
+        let (d, e, di, kk) = (cfg.d_model, cfg.n_experts, cfg.d_inter, cfg.top_k);
+        let (h, hd) = (cfg.n_heads, cfg.d_head);
+        let n = b * t;
+
+        let embed = p.get("embed")?;
+        let posw = p.get("pos")?;
+        let mut x = vec![0.0f32; n * d];
+        for (i, &tok) in tokens.data().iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= cfg.vocab {
+                bail!("token id {tok} >= vocab {}", cfg.vocab);
+            }
+            let trow = &embed.data()[tok * d..(tok + 1) * d];
+            let prow = &posw.data()[(i % t) * d..(i % t + 1) * d];
+            for j in 0..d {
+                x[i * d + j] = trow[j] + prow[j];
+            }
+        }
+        let mut x = Tensor::from_vec(&[n, d], x);
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        let mut aux_total = 0.0f32;
+        for l in 0..cfg.n_layers {
+            let pre_name = |suffix: &str| format!("l{l}.{suffix}");
+            let x_in = x.clone();
+            let xn1 = rmsnorm(&x_in, p.get(&pre_name("ln1"))?, EPS);
+            let (y_att, att) = attention_forward(
+                &xn1,
+                p.get(&pre_name("wq"))?,
+                p.get(&pre_name("wk"))?,
+                p.get(&pre_name("wv"))?,
+                p.get(&pre_name("wo"))?,
+                b,
+                t,
+                h,
+                hd,
+                None,
+            );
+            let mut x1 = x_in.clone();
+            add_into(&mut x1, &y_att);
+            let xn2 = rmsnorm(&x1, p.get(&pre_name("ln2"))?, EPS);
+            let logits_r = matmul_tn(&xn2, p.get(&pre_name("router"))?);
+            let (idx, weights, gates) = route(&logits_r, kk);
+            let probs = softmax(&logits_r);
+
+            let wg_all = p.get(&pre_name("wg"))?;
+            let wu_all = p.get(&pre_name("wu"))?;
+            let wd_all = p.get(&pre_name("wd"))?;
+            let mask_l = &mask.data()[l * e * di..(l + 1) * e * di];
+            // experts are independent: fan out over the pool (each writes
+            // only its own cache slot), engine-free pure math.
+            let expert_out: Vec<(Tensor, Tensor, Tensor, Tensor)> =
+                pool::par_map(e, |ei| {
+                    let wg = sub2(wg_all, ei, di, d);
+                    let wu = sub2(wu_all, ei, di, d);
+                    let wd = sub2(wd_all, ei, d, di);
+                    let pre_g = matmul_tn(&xn2, &wg);
+                    let u = matmul_tn(&xn2, &wu);
+                    let mut hmat = vec![0.0f32; n * di];
+                    for i in 0..n * di {
+                        let pg = pre_g.data()[i];
+                        hmat[i] = pg * sigmoid(pg) * u.data()[i];
+                    }
+                    let hmat = Tensor::from_vec(&[n, di], hmat);
+                    let me = &mask_l[ei * di..(ei + 1) * di];
+                    let mut hm = hmat.data().to_vec();
+                    for r in 0..n {
+                        for c in 0..di {
+                            hm[r * di + c] *= me[c];
+                        }
+                    }
+                    let hm = Tensor::from_vec(&[n, di], hm);
+                    let out_e = matmul_tn(&hm, &wd);
+                    (pre_g, u, hmat, out_e)
+                });
+            let mut y = Tensor::zeros(&[n, d]);
+            let mut pre_v = Vec::with_capacity(e);
+            let mut u_v = Vec::with_capacity(e);
+            let mut h_v = Vec::with_capacity(e);
+            let mut out_v = Vec::with_capacity(e);
+            for (ei, (pre_g, u, hmat, out_e)) in expert_out.into_iter().enumerate() {
+                for r in 0..n {
+                    let g = gates.data()[r * e + ei];
+                    if g != 0.0 {
+                        for c in 0..d {
+                            y.data_mut()[r * d + c] += g * out_e.data()[r * d + c];
+                        }
+                    }
+                }
+                pre_v.push(pre_g);
+                u_v.push(u);
+                h_v.push(hmat);
+                out_v.push(out_e);
+            }
+
+            let mut f = vec![0.0f32; e];
+            for r in 0..n {
+                for ei in 0..e {
+                    if gates.data()[r * e + ei] > 0.0 {
+                        f[ei] += 1.0;
+                    }
+                }
+            }
+            for v in &mut f {
+                *v /= n as f32;
+            }
+            let mut aux = 0.0f32;
+            for ei in 0..e {
+                let pbar: f32 =
+                    (0..n).map(|r| probs.data()[r * e + ei]).sum::<f32>() / n as f32;
+                aux += f[ei] * pbar;
+            }
+            aux_total += e as f32 * aux;
+
+            let mut x2 = x1.clone();
+            add_into(&mut x2, &y);
+            layers.push(LayerCache {
+                x_in,
+                xn1,
+                att,
+                x1,
+                xn2,
+                idx,
+                weights,
+                gates,
+                probs,
+                f,
+                pre: pre_v,
+                u: u_v,
+                h: h_v,
+                out_e: out_v,
+            });
+            x = x2;
+        }
+        let xf = rmsnorm(&x, p.get("lnf")?, EPS);
+        let logits = matmul_tn(&xf, embed);
+        Ok(Cache {
+            b,
+            t,
+            layers,
+            x_final: x,
+            xf,
+            logits,
+            aux_mean: aux_total / cfg.n_layers as f32,
+        })
+    }
+
+    // ----------------------------------------------------------- backward
+
+    /// Reverse-mode pass from a CE gradient. Returns per-parameter grads
+    /// (empty map when `need_pg` is false) and the per-layer MoE-output
+    /// tap gradients ∂ℓ/∂y_moe_l (what `calib_pass1` needs).
+    fn backward(
+        &self,
+        p: &Params,
+        tokens: &ITensor,
+        cache: &Cache,
+        dlogits: &Tensor,
+        mask: &Tensor,
+        need_pg: bool,
+    ) -> Result<(HashMap<String, Tensor>, Vec<Tensor>)> {
+        let cfg = &self.cfg;
+        let (b, t) = (cache.b, cache.t);
+        let (d, e, di, kk) = (cfg.d_model, cfg.n_experts, cfg.d_inter, cfg.top_k);
+        let (h, hd) = (cfg.n_heads, cfg.d_head);
+        let n = b * t;
+        let aux_scale = AUX_COEF / cfg.n_layers as f32;
+
+        let mut g: HashMap<String, Tensor> = HashMap::new();
+        let embed = p.get("embed")?;
+
+        // head (tied embedding)
+        let mut dx = {
+            let dxf = matmul_nn(dlogits, embed);
+            if need_pg {
+                g.insert("embed".into(), matmul_at(dlogits, &cache.xf));
+            }
+            let (dx, dlnf) = rmsnorm_backward(&dxf, &cache.x_final, p.get("lnf")?);
+            if need_pg {
+                g.insert("lnf".into(), dlnf);
+            }
+            dx
+        };
+
+        let mut dtaps = vec![Tensor::zeros(&[0]); cfg.n_layers];
+        for l in (0..cfg.n_layers).rev() {
+            let pre_name = |suffix: &str| format!("l{l}.{suffix}");
+            let lc = &cache.layers[l];
+            let dy = dx.clone();
+            dtaps[l] = dx.clone();
+            let mut dx1 = dx.clone();
+
+            let wg_all = p.get(&pre_name("wg"))?;
+            let wu_all = p.get(&pre_name("wu"))?;
+            let wd_all = p.get(&pre_name("wd"))?;
+            let mask_l = &mask.data()[l * e * di..(l + 1) * e * di];
+
+            // per-expert backward, fanned out over the pool; each returns
+            // (dxn2 contribution, dgate column, optional [dwg,dwu,dwd]).
+            let parts: Vec<(Tensor, Vec<f32>, Option<[Tensor; 3]>)> =
+                pool::par_map(e, |ei| {
+                    let me = &mask_l[ei * di..(ei + 1) * di];
+                    let gate_col: Vec<f32> =
+                        (0..n).map(|r| lc.gates.data()[r * e + ei]).collect();
+                    let dout_e = row_scale(&dy, &gate_col);
+                    let out_e = &lc.out_e[ei];
+                    let dgate: Vec<f32> = (0..n)
+                        .map(|r| {
+                            let a = &dy.data()[r * d..(r + 1) * d];
+                            let o = &out_e.data()[r * d..(r + 1) * d];
+                            a.iter().zip(o).map(|(x, y)| x * y).sum()
+                        })
+                        .collect();
+                    let wd = sub2(wd_all, ei, d, di);
+                    let hmat = &lc.h[ei];
+                    let dwd = need_pg.then(|| {
+                        // dwd wants hm = h*mask as its right factor
+                        let mut hm = hmat.data().to_vec();
+                        for r in 0..n {
+                            for c in 0..di {
+                                hm[r * di + c] *= me[c];
+                            }
+                        }
+                        matmul_at(&dout_e, &Tensor::from_vec(&[n, di], hm))
+                    });
+                    let dhm = matmul_nn(&dout_e, &wd);
+                    let mut dh = dhm.data().to_vec();
+                    for r in 0..n {
+                        for c in 0..di {
+                            dh[r * di + c] *= me[c];
+                        }
+                    }
+                    let upre = &lc.pre[ei];
+                    let uu = &lc.u[ei];
+                    let mut dact = vec![0.0f32; n * di];
+                    let mut du = vec![0.0f32; n * di];
+                    let mut dpre = vec![0.0f32; n * di];
+                    for i in 0..n * di {
+                        let pg = upre.data()[i];
+                        let s = sigmoid(pg);
+                        let silu = pg * s;
+                        dact[i] = dh[i] * uu.data()[i];
+                        du[i] = dh[i] * silu;
+                        dpre[i] = dact[i] * (s * (1.0 + pg * (1.0 - s)));
+                    }
+                    let du = Tensor::from_vec(&[n, di], du);
+                    let dpre = Tensor::from_vec(&[n, di], dpre);
+                    let mut dxn2 = matmul_nn(&du, &sub2(wu_all, ei, di, d));
+                    add_into(&mut dxn2, &matmul_nn(&dpre, &sub2(wg_all, ei, di, d)));
+                    let dws = need_pg.then(|| {
+                        [
+                            matmul_at(&dpre, &lc.xn2), // dwg
+                            matmul_at(&du, &lc.xn2),   // dwu
+                            dwd.unwrap(),              // dwd
+                        ]
+                    });
+                    (dxn2, dgate, dws)
+                });
+
+            let mut dxn2 = Tensor::zeros(&[n, d]);
+            let mut dgates = vec![0.0f32; n * e];
+            if need_pg {
+                g.insert(pre_name("wg"), Tensor::zeros(&[e, di, d]));
+                g.insert(pre_name("wu"), Tensor::zeros(&[e, di, d]));
+                g.insert(pre_name("wd"), Tensor::zeros(&[e, d, di]));
+            }
+            for (ei, (dxn2_e, dgate, dws)) in parts.into_iter().enumerate() {
+                add_into(&mut dxn2, &dxn2_e);
+                for r in 0..n {
+                    dgates[r * e + ei] = dgate[r];
+                }
+                if let Some([dwg, dwu, dwd]) = dws {
+                    let dst = g.get_mut(&pre_name("wg")).unwrap();
+                    dst.data_mut()[ei * di * d..(ei + 1) * di * d]
+                        .copy_from_slice(dwg.data());
+                    let dst = g.get_mut(&pre_name("wu")).unwrap();
+                    dst.data_mut()[ei * di * d..(ei + 1) * di * d]
+                        .copy_from_slice(dwu.data());
+                    let dst = g.get_mut(&pre_name("wd")).unwrap();
+                    dst.data_mut()[ei * d * di..(ei + 1) * d * di]
+                        .copy_from_slice(dwd.data());
+                }
+            }
+
+            // gates -> router logits via the top-k softmax
+            let mut dlr = vec![0.0f32; n * e];
+            {
+                let mut dweights = vec![0.0f32; n * kk];
+                for r in 0..n {
+                    for j in 0..kk {
+                        dweights[r * kk + j] = dgates[r * e + lc.idx[r][j]];
+                    }
+                }
+                let dvals = softmax_backward(
+                    &lc.weights,
+                    &Tensor::from_vec(&[n, kk], dweights),
+                );
+                for r in 0..n {
+                    for j in 0..kk {
+                        dlr[r * e + lc.idx[r][j]] += dvals.data()[r * kk + j];
+                    }
+                }
+            }
+            // aux loss -> probs -> router logits
+            {
+                let mut dprobs = vec![0.0f32; n * e];
+                for ei in 0..e {
+                    let v = aux_scale * e as f32 * lc.f[ei] / n as f32;
+                    for r in 0..n {
+                        dprobs[r * e + ei] = v;
+                    }
+                }
+                let dz = softmax_backward(
+                    &lc.probs,
+                    &Tensor::from_vec(&[n, e], dprobs),
+                );
+                for i in 0..n * e {
+                    dlr[i] += dz.data()[i];
+                }
+            }
+            let dlr = Tensor::from_vec(&[n, e], dlr);
+            let router = p.get(&pre_name("router"))?;
+            if need_pg {
+                g.insert(pre_name("router"), matmul_at(&dlr, &lc.xn2));
+            }
+            add_into(&mut dxn2, &matmul_nn(&dlr, router));
+
+            let (dx1_rms, dln2) =
+                rmsnorm_backward(&dxn2, &lc.x1, p.get(&pre_name("ln2"))?);
+            if need_pg {
+                g.insert(pre_name("ln2"), dln2);
+            }
+            add_into(&mut dx1, &dx1_rms);
+
+            // attention: x1 = x_in + attn(xn1)
+            let dx_in = dx1.clone();
+            let (dxn1, dws) = attention_backward(
+                &dx1,
+                &lc.att,
+                &lc.xn1,
+                p.get(&pre_name("wq"))?,
+                p.get(&pre_name("wk"))?,
+                p.get(&pre_name("wv"))?,
+                p.get(&pre_name("wo"))?,
+                b,
+                t,
+                h,
+                hd,
+                need_pg,
+            );
+            if let Some([dwq, dwk, dwv, dwo]) = dws {
+                g.insert(pre_name("wq"), dwq);
+                g.insert(pre_name("wk"), dwk);
+                g.insert(pre_name("wv"), dwv);
+                g.insert(pre_name("wo"), dwo);
+            }
+            let (dx_rms, dln1) =
+                rmsnorm_backward(&dxn1, &lc.x_in, p.get(&pre_name("ln1"))?);
+            if need_pg {
+                g.insert(pre_name("ln1"), dln1);
+            }
+            dx = dx_in;
+            add_into(&mut dx, &dx_rms);
+        }
+
+        if need_pg {
+            // embedding lookups + positional embedding
+            let gemb = g.get_mut("embed").unwrap();
+            for (i, &tok) in tokens.data().iter().enumerate() {
+                let base = tok as usize * d;
+                for j in 0..d {
+                    gemb.data_mut()[base + j] += dx.data()[i * d + j];
+                }
+            }
+            let mut gpos = Tensor::zeros(&[cfg.seq_len, d]);
+            for i in 0..n {
+                let pos = i % t;
+                for j in 0..d {
+                    gpos.data_mut()[pos * d + j] += dx.data()[i * d + j];
+                }
+            }
+            g.insert("pos".into(), gpos);
+        }
+        Ok((g, dtaps))
+    }
+
+    fn ones_mask(&self) -> Tensor {
+        Tensor::ones(&[self.cfg.n_layers, self.cfg.n_experts, self.cfg.d_inter])
+    }
+
+    // ---------------------------------------------------------- artifacts
+
+    fn train_step(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let np = self.param_names.len();
+        if inputs.len() != 3 * np + 4 {
+            bail!("train_step wants {} inputs, got {}", 3 * np + 4, inputs.len());
+        }
+        let p = self.params(&inputs[..np])?;
+        let step = inputs[3 * np].as_i32()?.data()[0];
+        let lr = inputs[3 * np + 1].as_f32()?.data()[0];
+        let tokens = inputs[3 * np + 2].as_i32()?;
+        let targets = inputs[3 * np + 3].as_i32()?;
+
+        let mask = self.ones_mask();
+        let cache = self.forward(&p, tokens, &mask)?;
+        let ce = ce_loss(&cache.logits, targets.data(), true)?;
+        let loss = ce.ce + AUX_COEF * cache.aux_mean;
+        let (grads, _taps) =
+            self.backward(&p, tokens, &cache, ce.dlogits.as_ref().unwrap(), &mask, true)?;
+
+        let t = (step + 1) as f32;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        let mut new_p = Vec::with_capacity(np);
+        let mut new_m = Vec::with_capacity(np);
+        let mut new_v = Vec::with_capacity(np);
+        for (i, name) in self.param_names.iter().enumerate() {
+            let pw = inputs[i].as_f32()?;
+            let mw = inputs[np + i].as_f32()?;
+            let vw = inputs[2 * np + i].as_f32()?;
+            let gw = grads
+                .get(name)
+                .ok_or_else(|| anyhow!("train_step: missing grad for {name}"))?;
+            let len = pw.len();
+            let mut p2 = vec![0.0f32; len];
+            let mut m2 = vec![0.0f32; len];
+            let mut v2 = vec![0.0f32; len];
+            for j in 0..len {
+                let gj = gw.data()[j];
+                let mj = ADAM_B1 * mw.data()[j] + (1.0 - ADAM_B1) * gj;
+                let vj = ADAM_B2 * vw.data()[j] + (1.0 - ADAM_B2) * gj * gj;
+                let update = lr * (mj / bc1) / ((vj / bc2).sqrt() + ADAM_EPS);
+                p2[j] = pw.data()[j] - update;
+                m2[j] = mj;
+                v2[j] = vj;
+            }
+            new_p.push(Value::F32(Tensor::from_vec(pw.shape(), p2)));
+            new_m.push(Value::F32(Tensor::from_vec(mw.shape(), m2)));
+            new_v.push(Value::F32(Tensor::from_vec(vw.shape(), v2)));
+        }
+        let mut out = vec![Value::scalar_f32(loss), Value::scalar_f32(ce.ce)];
+        out.extend(new_p);
+        out.extend(new_m);
+        out.extend(new_v);
+        Ok(out)
+    }
+
+    fn forward_masked(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let np = self.param_names.len();
+        let p = self.params(inputs)?;
+        let mask = inputs[np].as_f32()?;
+        let tokens = inputs[np + 1].as_i32()?;
+        let cache = self.forward(&p, tokens, mask)?;
+        let (b, t, v) = (cache.b, cache.t, self.cfg.vocab);
+        Ok(vec![Value::F32(cache.logits.reshape(&[b, t, v])?)])
+    }
+
+    fn loss_masked(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let np = self.param_names.len();
+        let p = self.params(inputs)?;
+        let mask = inputs[np].as_f32()?;
+        let tokens = inputs[np + 1].as_i32()?;
+        let targets = inputs[np + 2].as_i32()?;
+        let cache = self.forward(&p, tokens, mask)?;
+        let ce = ce_loss(&cache.logits, targets.data(), false)?;
+        Ok(vec![
+            Value::scalar_f32(ce.ce * ce.cnt),
+            Value::scalar_f32(ce.cnt),
+        ])
+    }
+
+    fn seq_nll(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let np = self.param_names.len();
+        let p = self.params(inputs)?;
+        let mask = inputs[np].as_f32()?;
+        let tokens = inputs[np + 1].as_i32()?;
+        let targets = inputs[np + 2].as_i32()?;
+        let cache = self.forward(&p, tokens, mask)?;
+        let ce = ce_loss(&cache.logits, targets.data(), false)?;
+        let (b, t) = (cache.b, cache.t);
+        let mut nll_rows = vec![0.0f32; b];
+        let mut cnt_rows = vec![0.0f32; b];
+        for bi in 0..b {
+            for ti in 0..t {
+                let i = bi * t + ti;
+                nll_rows[bi] += ce.nll_rows[i] * ce.w_rows[i];
+                cnt_rows[bi] += ce.w_rows[i];
+            }
+        }
+        Ok(vec![
+            Value::F32(Tensor::from_vec(&[b], nll_rows)),
+            Value::F32(Tensor::from_vec(&[b], cnt_rows)),
+        ])
+    }
+
+    fn calib_pass1(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let np = self.param_names.len();
+        let p = self.params(inputs)?;
+        let tokens = inputs[np].as_i32()?;
+        let targets = inputs[np + 1].as_i32()?;
+        let cfg = &self.cfg;
+        let (l, e, d) = (cfg.n_layers, cfg.n_experts, cfg.d_model);
+        let mask = self.ones_mask();
+        let cache = self.forward(&p, tokens, &mask)?;
+        let ce = ce_loss(&cache.logits, targets.data(), true)?;
+        let (_g, dtaps) =
+            self.backward(&p, tokens, &cache, ce.dlogits.as_ref().unwrap(), &mask, false)?;
+
+        let n = cache.b * cache.t;
+        let mut gsum = Tensor::zeros(&[l, e, d, d]);
+        let mut counts = Tensor::zeros(&[l, e]);
+        // (layer, expert) pairs are independent: compute each Ḡ_{l,e} on
+        // the pool, then copy into the stacked output.
+        let covs: Vec<(Tensor, f32)> = pool::par_map(l * e, |pair| {
+            let (li, ei) = (pair / e, pair % e);
+            let lc = &cache.layers[li];
+            let w: Vec<f32> = (0..n).map(|r| lc.gates.data()[r * e + ei]).collect();
+            let a = row_scale(&dtaps[li], &w);
+            let cov = matmul_at(&a, &a);
+            let cnt = w.iter().filter(|&&x| x > 0.0).count() as f32;
+            (cov, cnt)
+        });
+        for (pair, (cov, cnt)) in covs.into_iter().enumerate() {
+            gsum.data_mut()[pair * d * d..(pair + 1) * d * d].copy_from_slice(cov.data());
+            counts.data_mut()[pair] = cnt;
+        }
+        Ok(vec![
+            Value::scalar_f32(ce.ce),
+            Value::F32(gsum),
+            Value::F32(counts),
+        ])
+    }
+
+    fn calib_pass2(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let np = self.param_names.len();
+        let p = self.params(inputs)?;
+        let tokens = inputs[np].as_i32()?;
+        let cfg = &self.cfg;
+        let (l, e, di) = (cfg.n_layers, cfg.n_experts, cfg.d_inter);
+        let mask = self.ones_mask();
+        let cache = self.forward(&p, tokens, &mask)?;
+        let n = cache.b * cache.t;
+        let mut hsq = Tensor::zeros(&[l, e, di]);
+        let mut hmax = Tensor::zeros(&[l, e, di]);
+        let mut counts = Tensor::zeros(&[l, e]);
+        for li in 0..l {
+            let lc = &cache.layers[li];
+            for ei in 0..e {
+                let h = &lc.h[ei];
+                let base = (li * e + ei) * di;
+                let mut cnt = 0.0f32;
+                for r in 0..n {
+                    if lc.gates.data()[r * e + ei] > 0.0 {
+                        cnt += 1.0;
+                        for c in 0..di {
+                            let hv = h.data()[r * di + c];
+                            hsq.data_mut()[base + c] += hv * hv;
+                            let a = hv.abs();
+                            if a > hmax.data()[base + c] {
+                                hmax.data_mut()[base + c] = a;
+                            }
+                        }
+                    }
+                }
+                counts.data_mut()[li * e + ei] = cnt;
+            }
+        }
+        let probe =
+            cache.xf.data().iter().sum::<f32>() / cache.xf.len() as f32;
+        Ok(vec![
+            Value::F32(hsq),
+            Value::F32(hmax),
+            Value::F32(counts),
+            Value::scalar_f32(probe),
+        ])
+    }
+
+    fn quadform(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let wd = inputs[0].as_f32()?; // [d, di]
+        let gm = inputs[1].as_f32()?; // [d, d]
+        let (d, di) = (wd.shape()[0], wd.shape()[1]);
+        let gw = matmul_nn(gm, wd); // [d, di]
+        let mut q = vec![0.0f32; di];
+        for c in 0..di {
+            let mut acc = 0.0f32;
+            for r in 0..d {
+                acc += wd.data()[r * di + c] * gw.data()[r * di + c];
+            }
+            q[c] = acc;
+        }
+        Ok(vec![Value::F32(Tensor::from_vec(&[di], q))])
+    }
+
+    fn attn_prefill(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let x = inputs[0].as_f32()?; // [b, T, d]
+        let &[b, t, d] = x.shape() else { bail!("attn_prefill x must be [b,T,d]") };
+        let (h, hd) = (self.cfg.n_heads, self.cfg.d_head);
+        let ln1 = inputs[1].as_f32()?;
+        let lm = inputs[6].as_f32()?;
+        let xf = x.reshape(&[b * t, d])?;
+        let xn = rmsnorm(&xf, ln1, EPS);
+        let (y_att, att) = attention_forward(
+            &xn,
+            inputs[2].as_f32()?,
+            inputs[3].as_f32()?,
+            inputs[4].as_f32()?,
+            inputs[5].as_f32()?,
+            b,
+            t,
+            h,
+            hd,
+            Some(lm.data()),
+        );
+        let mut y = xf.clone();
+        add_into(&mut y, &y_att);
+        Ok(vec![
+            Value::F32(y.reshape(&[b, t, d])?),
+            Value::F32(att.k),
+            Value::F32(att.v),
+        ])
+    }
+
+    fn attn_decode(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let x = inputs[0].as_f32()?; // [b, 1, d]
+        let &[b, one, d] = x.shape() else { bail!("attn_decode x must be [b,1,d]") };
+        if one != 1 {
+            bail!("attn_decode wants a single position, got {one}");
+        }
+        let (h, hd) = (self.cfg.n_heads, self.cfg.d_head);
+        let ln1 = inputs[1].as_f32()?;
+        let wq = inputs[2].as_f32()?;
+        let wk = inputs[3].as_f32()?;
+        let wv = inputs[4].as_f32()?;
+        let wo = inputs[5].as_f32()?;
+        let mut kc = inputs[6].as_f32()?.clone(); // [b,H,S,hd]
+        let mut vc = inputs[7].as_f32()?.clone();
+        let pos = inputs[8].as_i32()?;
+        let s = kc.shape()[2];
+
+        let xf = x.reshape(&[b, d])?;
+        let xn = rmsnorm(&xf, ln1, EPS);
+        let q = matmul_tn(&xn, wq); // [b, d] viewed as [b, H, hd]
+        let kn = matmul_tn(&xn, wk);
+        let vn = matmul_tn(&xn, wv);
+        for bi in 0..b {
+            let p = pos.data()[bi] as usize;
+            if p >= s {
+                bail!("decode position {p} >= cache size {s}");
+            }
+            for hi in 0..h {
+                let dst = ((bi * h + hi) * s + p) * hd;
+                let src = bi * d + hi * hd;
+                kc.data_mut()[dst..dst + hd].copy_from_slice(&kn.data()[src..src + hd]);
+                vc.data_mut()[dst..dst + hd].copy_from_slice(&vn.data()[src..src + hd]);
+            }
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            let pmax = pos.data()[bi] as usize;
+            for hi in 0..h {
+                let qrow = &q.data()[bi * d + hi * hd..bi * d + (hi + 1) * hd];
+                let cbase = (bi * h + hi) * s * hd;
+                let mut scores = vec![NEG; s];
+                for si in 0..=pmax {
+                    let krow = &kc.data()[cbase + si * hd..cbase + (si + 1) * hd];
+                    scores[si] =
+                        qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                let mut ex = vec![0.0f32; s];
+                for si in 0..s {
+                    ex[si] = (scores[si] - mx).exp();
+                    z += ex[si];
+                }
+                for si in 0..s {
+                    let a = ex[si] / z;
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vc.data()[cbase + si * hd..cbase + (si + 1) * hd];
+                    for c in 0..hd {
+                        out[bi * d + hi * hd + c] += a * vrow[c];
+                    }
+                }
+            }
+        }
+        let y_att = matmul_tn(&Tensor::from_vec(&[b, d], out), wo);
+        let mut y = xf;
+        add_into(&mut y, &y_att);
+        Ok(vec![
+            Value::F32(y.reshape(&[b, 1, d])?),
+            Value::F32(kc),
+            Value::F32(vc),
+        ])
+    }
+
+    fn moe_gate(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let x = inputs[0].as_f32()?; // [n, d]
+        let ln2 = inputs[1].as_f32()?;
+        let router = inputs[2].as_f32()?;
+        let xn = rmsnorm(x, ln2, EPS);
+        let logits = matmul_tn(&xn, router);
+        let (_idx, _w, gates) = route(&logits, self.cfg.top_k);
+        Ok(vec![Value::F32(xn), Value::F32(gates)])
+    }
+
+    fn lm_head(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let x = inputs[0].as_f32()?;
+        let lnf = inputs[1].as_f32()?;
+        let embed = inputs[2].as_f32()?;
+        let xn = rmsnorm(x, lnf, EPS);
+        Ok(vec![Value::F32(matmul_tn(&xn, embed))])
+    }
+
+    fn expert(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let xs = inputs[0].as_f32()?; // [n, d]
+        let wg = inputs[1].as_f32()?; // [w, d]
+        let wu = inputs[2].as_f32()?; // [w, d]
+        let wd = inputs[3].as_f32()?; // [d, w]
+        let pre = matmul_tn(xs, wg);
+        let u = matmul_tn(xs, wu);
+        let mut h = vec![0.0f32; pre.len()];
+        for i in 0..pre.len() {
+            let pg = pre.data()[i];
+            h[i] = pg * sigmoid(pg) * u.data()[i];
+        }
+        let h = Tensor::from_vec(pre.shape(), h);
+        Ok(vec![Value::F32(matmul_tn(&h, wd))])
+    }
+
+    /// Execute artifact `name`. Inputs were already shape-validated against
+    /// the manifest by the engine.
+    pub fn run(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        match name {
+            "train_step" => self.train_step(inputs),
+            "forward_masked" => self.forward_masked(inputs),
+            "loss_masked" => self.loss_masked(inputs),
+            "seq_nll" => self.seq_nll(inputs),
+            "calib_pass1" => self.calib_pass1(inputs),
+            "calib_pass2" => self.calib_pass2(inputs),
+            "quadform" => self.quadform(inputs),
+            _ if name.starts_with("attn_prefill_b") => self.attn_prefill(inputs),
+            _ if name.starts_with("attn_decode_b") => self.attn_decode(inputs),
+            _ if name.starts_with("moe_gate_n") => self.moe_gate(inputs),
+            _ if name.starts_with("lm_head_n") => self.lm_head(inputs),
+            _ if name.starts_with("expert_n") => self.expert(inputs),
+            other => bail!("host backend: unknown artifact {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::preset;
+    use crate::util::rng::Pcg64;
+
+    fn backend() -> HostBackend {
+        let cfg = preset::builtin("tiny").unwrap();
+        let names = preset::param_specs(&cfg).into_iter().map(|(n, _)| n).collect();
+        HostBackend::new(cfg, names)
+    }
+
+    fn randt(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal() * 0.1).collect())
+    }
+
+    #[test]
+    fn quadform_matches_naive_triple_loop() {
+        let be = backend();
+        let mut rng = Pcg64::new(1);
+        let (d, di) = (16, 6);
+        let wd = randt(&mut rng, &[d, di]);
+        let a = randt(&mut rng, &[d, d]);
+        let g = matmul_tn(&a, &a); // PSD
+        let out = be
+            .run("quadform", &[&Value::F32(wd.clone()), &Value::F32(g.clone())])
+            .unwrap();
+        let q = out.into_iter().next().unwrap().f32().unwrap();
+        for c in 0..di {
+            let mut want = 0.0f32;
+            for i in 0..d {
+                for j in 0..d {
+                    want += wd.at(&[i, c]) * g.at(&[i, j]) * wd.at(&[j, c]);
+                }
+            }
+            assert!((q.data()[c] - want).abs() < 1e-3 * want.abs().max(1e-3));
+        }
+    }
+
+    #[test]
+    fn route_topk_ties_pick_lowest_index() {
+        let logits = Tensor::from_vec(&[1, 4], vec![1.0, 5.0, 5.0, 0.0]);
+        let (idx, w, gates) = route(&logits, 2);
+        assert_eq!(idx[0], vec![1, 2]); // tie -> lowest index first
+        assert!((w.data()[0] - 0.5).abs() < 1e-6);
+        assert!((gates.at(&[0, 1]) - 0.5).abs() < 1e-6);
+        assert_eq!(gates.at(&[0, 0]), 0.0);
+        assert_eq!(gates.at(&[0, 3]), 0.0);
+    }
+
+    #[test]
+    fn ce_loss_uniform_logits_is_log_v() {
+        let logits = Tensor::zeros(&[3, 10]);
+        let out = ce_loss(&logits, &[1, 2, 3], true).unwrap();
+        assert!((out.ce - (10.0f32).ln()).abs() < 1e-5);
+        assert_eq!(out.cnt, 3.0);
+        // gradient sums to zero per row (softmax minus one-hot)
+        let d = out.dlogits.unwrap();
+        for r in 0..3 {
+            let s: f32 = d.data()[r * 10..(r + 1) * 10].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_backward_finite_difference() {
+        let mut rng = Pcg64::new(2);
+        let x = randt(&mut rng, &[2, 5]);
+        let w = randt(&mut rng, &[5]);
+        let dy = randt(&mut rng, &[2, 5]);
+        let (dx, dw) = rmsnorm_backward(&dy, &x, &w);
+        let loss = |x: &Tensor, w: &Tensor| -> f32 {
+            rmsnorm(x, w, EPS)
+                .data()
+                .iter()
+                .zip(dy.data())
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let h = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += h;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= h;
+            let fd = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * h);
+            assert!(
+                (fd - dx.data()[i]).abs() < 2e-2 * fd.abs().max(0.1),
+                "dx[{i}] fd={fd} got={}",
+                dx.data()[i]
+            );
+        }
+        for i in 0..w.len() {
+            let mut wp = w.clone();
+            wp.data_mut()[i] += h;
+            let mut wm = w.clone();
+            wm.data_mut()[i] -= h;
+            let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * h);
+            assert!(
+                (fd - dw.data()[i]).abs() < 2e-2 * fd.abs().max(0.1),
+                "dw[{i}] fd={fd} got={}",
+                dw.data()[i]
+            );
+        }
+    }
+
+    #[test]
+    fn expert_artifact_is_silu_gated_ffn() {
+        let be = backend();
+        let mut rng = Pcg64::new(3);
+        let (n, d, w) = (4, 8, 6);
+        let xs = randt(&mut rng, &[n, d]);
+        let wg = randt(&mut rng, &[w, d]);
+        let wu = randt(&mut rng, &[w, d]);
+        let wd = randt(&mut rng, &[d, w]);
+        let out = be
+            .run(
+                "expert_n4_w6",
+                &[
+                    &Value::F32(xs.clone()),
+                    &Value::F32(wg.clone()),
+                    &Value::F32(wu.clone()),
+                    &Value::F32(wd.clone()),
+                ],
+            )
+            .unwrap();
+        let ys = out.into_iter().next().unwrap().f32().unwrap();
+        // one element by hand
+        let (r, c) = (1, 2);
+        let mut want = 0.0f32;
+        for k in 0..w {
+            let mut pre = 0.0f32;
+            let mut up = 0.0f32;
+            for j in 0..d {
+                pre += xs.at(&[r, j]) * wg.at(&[k, j]);
+                up += xs.at(&[r, j]) * wu.at(&[k, j]);
+            }
+            want += (pre * sigmoid(pre) * up) * wd.at(&[c, k]);
+        }
+        assert!((ys.at(&[r, c]) - want).abs() < 1e-4);
+    }
+}

@@ -1,95 +1,159 @@
-//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//! Runtime: execute AOT artifacts behind a backend-agnostic [`Engine`].
 //!
-//! The contract with the build side (python/compile/aot.py):
-//! * artifacts are HLO *text* — xla_extension 0.5.1 rejects jax>=0.5's
-//!   64-bit-id serialized protos, the text parser reassigns ids;
-//! * every artifact returns a tuple (lowered with return_tuple=True);
-//! * `manifest.json` records each artifact's ordered input/output specs,
-//!   which [`Engine::run`] validates on every call — a shape mismatch is a
-//!   bug report at the call site instead of a PJRT abort.
+//! Two backends implement the same artifact contract (manifest-validated
+//! inputs in, manifest-ordered outputs out):
+//!
+//! * **host** (default) — pure-rust execution of every artifact by name
+//!   ([`host`]), pool-parallel via `HEAPR_THREADS`. Needs no artifacts on
+//!   disk: when `manifest.json` is absent the manifest is synthesized from
+//!   the built-in preset tables ([`preset`]), which mirror
+//!   `python/compile/configs.py` exactly.
+//! * **pjrt** (feature `pjrt`) — the original PJRT path: parse HLO text,
+//!   compile once through the `xla` crate, execute many. The offline image
+//!   has no `xla` crate, so the feature is off by default and enabling it
+//!   requires adding that dependency (see README §Backends).
+//!
+//! The host engine is `Send + Sync` (state behind a `Mutex`), which is
+//! what lets `heapr::importance_scores` fan `quadform` calls across the
+//! thread pool. The PJRT engine is neither (raw FFI pointers) — callers
+//! that share an engine across threads only compile in host builds.
 
+pub mod host;
 pub mod manifest;
+pub mod preset;
 pub mod value;
 
-pub use manifest::{ArtifactSpec, IoSpec, Manifest};
-pub use value::Value;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use std::cell::RefCell;
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use value::{Literal, Value};
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::debug;
 
-/// Compiled-executable cache keyed by artifact name, over one PJRT CPU
-/// client. Not Send/Sync (PJRT handles are raw pointers): the serving
-/// coordinator owns one Engine on a dedicated execution thread.
+enum Backend {
+    Host(host::HostBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
+}
+
+/// Artifact executor over one backend, with per-artifact call accounting.
 pub struct Engine {
-    client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    backend: Backend,
     /// (artifact, calls) counters for the perf report.
-    calls: RefCell<HashMap<String, usize>>,
+    calls: Mutex<HashMap<String, usize>>,
 }
 
 impl Engine {
-    /// Open `artifacts/<preset>/` (must contain manifest.json).
+    /// Open `artifacts/<preset>/`. Loads `manifest.json` when present;
+    /// otherwise synthesizes the manifest for a built-in preset named by
+    /// the directory's basename (`tiny` | `small` | `base`), which is all
+    /// the host backend needs.
     pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {dir:?}"))?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mpath = dir.join("manifest.json");
+        let manifest = if mpath.exists() {
+            Manifest::load(&mpath)
+                .with_context(|| format!("loading manifest from {dir:?}"))?
+        } else {
+            let base = dir
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or_default();
+            let cfg = preset::builtin(base).ok_or_else(|| {
+                anyhow!(
+                    "no manifest.json under {dir:?} and {base:?} is not a \
+                     built-in preset (tiny|small|base); run `make artifacts` \
+                     or point at a preset directory"
+                )
+            })?;
+            debug!("no manifest on disk; synthesized preset {base:?}");
+            preset::synthesize(&cfg)
+        };
+        let backend = Self::pick_backend(&dir, &manifest);
         Ok(Engine {
-            client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            calls: RefCell::new(HashMap::new()),
+            backend,
+            calls: Mutex::new(HashMap::new()),
         })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pick_backend(_dir: &Path, manifest: &Manifest) -> Backend {
+        let names = manifest.params.iter().map(|(n, _)| n.clone()).collect();
+        Backend::Host(host::HostBackend::new(manifest.preset.clone(), names))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pick_backend(dir: &Path, manifest: &Manifest) -> Backend {
+        match pjrt::PjrtBackend::open(dir) {
+            Ok(b) => Backend::Pjrt(b),
+            Err(e) => {
+                // Loud on purpose: a pjrt build silently executing on the
+                // host backend would invalidate any PJRT measurement.
+                crate::warn!(
+                    "pjrt feature is enabled but the PJRT backend failed to \
+                     initialize ({e}); FALLING BACK to the host backend — \
+                     results are host-executed"
+                );
+                let names = manifest.params.iter().map(|(n, _)| n.clone()).collect();
+                Backend::Host(host::HostBackend::new(manifest.preset.clone(), names))
+            }
+        }
+    }
+
+    /// The artifact directory this engine was opened on.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     pub fn config(&self) -> &ModelConfig {
         &self.manifest.preset
     }
 
-    /// Compile (or fetch cached) an artifact's executable.
-    fn executable(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
-            return Ok(());
+    /// Pre-compile a set of artifacts (serving startup). The host backend
+    /// only validates that the names exist.
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            let spec = self.manifest.artifact(n)?;
+            match &self.backend {
+                Backend::Host(_) => {}
+                #[cfg(feature = "pjrt")]
+                Backend::Pjrt(b) => b.compile(n, &self.dir.join(&spec.file))?,
+            }
+            let _ = spec;
         }
-        let spec = self.manifest.artifact(name)?;
-        let path = self.dir.join(&spec.file);
-        let t = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-        debug!("compiled {name} in {:.2}s", t.elapsed().as_secs_f64());
-        self.cache.borrow_mut().insert(name.to_string(), exe);
         Ok(())
     }
 
-    /// Pre-compile a set of artifacts (serving startup).
-    pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.executable(n)?;
+    fn dispatch(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        *self
+            .calls
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        match &self.backend {
+            Backend::Host(b) => b.run(name, inputs),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.run(name, inputs, self.manifest.artifact(name)?),
         }
-        Ok(())
     }
 
     /// Execute `name` with `inputs` (order per manifest). Returns outputs
     /// in manifest order.
     pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
-        let spec = self.manifest.artifact(name)?.clone();
+        let spec = self.manifest.artifact(name)?;
         if inputs.len() != spec.inputs.len() {
             bail!(
                 "{name}: {} inputs given, manifest wants {}",
@@ -109,72 +173,53 @@ impl Engine {
                 );
             }
         }
-        self.executable(name)?;
-        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
-
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} output: {e}"))?;
-        let parts = out
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling {name} output: {e}"))?;
-        if parts.len() != spec.outputs.len() {
-            bail!(
-                "{name}: {} outputs, manifest wants {}",
-                parts.len(),
-                spec.outputs.len()
-            );
-        }
-        parts
-            .into_iter()
-            .zip(&spec.outputs)
-            .map(|(lit, io)| Value::from_literal(&lit, io))
-            .collect()
+        let refs: Vec<&Value> = inputs.iter().collect();
+        let out = self.dispatch(name, &refs)?;
+        check_outputs(name, spec, &out)?;
+        Ok(out)
     }
 
     /// Per-artifact call counts (perf accounting).
     pub fn call_counts(&self) -> Vec<(String, usize)> {
-        let mut v: Vec<(String, usize)> =
-            self.calls.borrow().iter().map(|(k, &c)| (k.clone(), c)).collect();
+        let mut v: Vec<(String, usize)> = self
+            .calls
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &c)| (k.clone(), c))
+            .collect();
         v.sort();
         v
     }
 
     // -- device-resident inputs (perf path) ---------------------------------
     //
-    // `run` marshals every input host->literal->device on every call. For
-    // loops that reuse large constant inputs (model params in eval/calib,
-    // expert weights in serving) that is pure overhead: `upload` pins a
-    // Value as a device buffer once, and `run_b` executes on buffers.
-    // Measured impact is logged in EXPERIMENTS.md §Perf.
+    // `run` hands every input to the backend per call. For loops that reuse
+    // large constant inputs (model params in eval/calib, expert weights in
+    // serving), `upload` pins a Value once and `run_b` executes on the
+    // pinned buffers — on PJRT that skips the host->device copy, on the
+    // host backend it skips the caller-side clone-per-call of the legacy
+    // path (HEAPR_NO_BUFFER_CACHE=1 re-measures that path).
 
-    /// Pin a host value as a device-resident buffer.
-    ///
-    /// The source Literal MUST outlive the transfer: BufferFromHostLiteral
-    /// is asynchronous and the 0.5.1 C shim does not await the copy (the
-    /// literal-input `execute` path does, explicitly, for this reason).
-    /// DeviceTensor therefore owns the literal for the buffer's lifetime.
-    pub fn upload(&self, v: &Value) -> Result<DeviceTensor> {
-        let lit = v.to_literal()?;
-        let buf = self
-            .client
-            .buffer_from_host_literal(None, &lit)
-            .map_err(|e| anyhow!("upload: {e}"))?;
-        Ok(DeviceTensor { _lit: lit, buf })
+    /// Pin a value as a device-resident buffer. Takes the value by move so
+    /// the host backend pins it with zero copies (callers construct fresh
+    /// `Value`s at every upload site).
+    pub fn upload(&self, v: Value) -> Result<DeviceTensor> {
+        match &self.backend {
+            Backend::Host(_) => Ok(DeviceTensor {
+                buf: DeviceBuffer { value: v },
+            }),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.upload(v),
+        }
     }
 
     /// Execute on pre-uploaded buffers (mixed with per-call inputs the
-    /// caller uploads itself). Shape validation already happened at upload
-    /// construction time; PJRT still checks buffer count/types.
-    pub fn run_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Value>> {
-        let spec = self.manifest.artifact(name)?.clone();
+    /// caller uploads itself). Buffers are shape-validated against the
+    /// manifest exactly like `run` inputs — the backends assume validated
+    /// inputs.
+    pub fn run_b(&self, name: &str, inputs: &[&DeviceBuffer]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(name)?;
         if inputs.len() != spec.inputs.len() {
             bail!(
                 "{name}: {} buffers given, manifest wants {}",
@@ -182,35 +227,68 @@ impl Engine {
                 spec.inputs.len()
             );
         }
-        self.executable(name)?;
-        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).unwrap();
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .map_err(|e| anyhow!("executing {name} (buffers): {e}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} output: {e}"))?;
-        let parts = out
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling {name} output: {e}"))?;
-        if parts.len() != spec.outputs.len() {
-            bail!("{name}: {} outputs, manifest wants {}", parts.len(), spec.outputs.len());
+        for (b, io) in inputs.iter().zip(&spec.inputs) {
+            let v = &b.value;
+            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
+                bail!(
+                    "{name}: buffer {:?} got shape {:?} dtype {}, want {:?} {}",
+                    io.name,
+                    v.shape(),
+                    v.dtype(),
+                    io.shape,
+                    io.dtype
+                );
+            }
         }
-        parts
-            .into_iter()
-            .zip(&spec.outputs)
-            .map(|(lit, io)| Value::from_literal(&lit, io))
-            .collect()
+        let refs: Vec<&Value> = inputs.iter().map(|b| &b.value).collect();
+        let out = self.dispatch(name, &refs)?;
+        check_outputs(name, spec, &out)?;
+        Ok(out)
     }
 }
 
-/// A device-resident tensor: the PJRT buffer plus the host literal backing
-/// the (possibly still in-flight) transfer.
+/// Backend outputs must honor the manifest contract — count, shape and
+/// dtype — so a kernel bug surfaces here as an error naming the artifact,
+/// not as wrong numerics or a slice panic downstream.
+fn check_outputs(name: &str, spec: &ArtifactSpec, out: &[Value]) -> Result<()> {
+    if out.len() != spec.outputs.len() {
+        bail!(
+            "{name}: backend produced {} outputs, manifest wants {}",
+            out.len(),
+            spec.outputs.len()
+        );
+    }
+    for (v, io) in out.iter().zip(&spec.outputs) {
+        if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
+            bail!(
+                "{name}: output {:?} has shape {:?} dtype {}, manifest wants {:?} {}",
+                io.name,
+                v.shape(),
+                v.dtype(),
+                io.shape,
+                io.dtype
+            );
+        }
+    }
+    Ok(())
+}
+
+/// A pinned runtime buffer. Host backend: the value itself. PJRT backend:
+/// the device buffer plus the literal backing the (possibly in-flight)
+/// transfer.
+pub struct DeviceBuffer {
+    value: Value,
+}
+
+impl DeviceBuffer {
+    pub fn value(&self) -> &Value {
+        &self.value
+    }
+}
+
+/// A pinned tensor; `buf` is what `run_b` consumes.
 pub struct DeviceTensor {
-    _lit: xla::Literal,
-    pub buf: xla::PjRtBuffer,
+    pub buf: DeviceBuffer,
 }
 
 /// A set of pre-uploaded buffers (e.g. all model params), reusable across
@@ -224,12 +302,74 @@ impl BufferSet {
         Ok(BufferSet {
             tensors: values
                 .iter()
-                .map(|v| engine.upload(v))
+                .map(|v| engine.upload(v.clone()))
                 .collect::<Result<_>>()?,
         })
     }
 
-    pub fn refs(&self) -> Vec<&xla::PjRtBuffer> {
+    pub fn refs(&self) -> Vec<&DeviceBuffer> {
         self.tensors.iter().map(|t| &t.buf).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_synthesizes_builtin_presets() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        assert_eq!(e.config().name, "tiny");
+        assert_eq!(e.config().d_model, 64);
+        assert!(e.manifest.artifact("train_step").is_ok());
+        assert!(Engine::open("artifacts/no-such-preset").is_err());
+    }
+
+    #[test]
+    fn run_validates_shapes_and_counts_calls() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        // wrong arity
+        assert!(e.run("quadform", &[]).is_err());
+        // wrong shape
+        let bad = Value::F32(crate::tensor::Tensor::zeros(&[3, 3]));
+        let g = Value::F32(crate::tensor::Tensor::zeros(&[64, 64]));
+        assert!(e.run("quadform", &[bad, g.clone()]).is_err());
+        // correct call executes on the host backend and is counted
+        let wd = Value::F32(crate::tensor::Tensor::zeros(&[64, 32]));
+        let out = e.run("quadform", &[wd, g]).unwrap();
+        assert_eq!(out[0].shape(), &[32]);
+        assert_eq!(e.call_counts(), vec![("quadform".to_string(), 1)]);
+    }
+
+    #[test]
+    fn upload_run_b_matches_run() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        let mut rng = crate::util::rng::Pcg64::new(5);
+        let mk = |shape: &[usize], rng: &mut crate::util::rng::Pcg64| {
+            let n: usize = shape.iter().product();
+            crate::tensor::Tensor::from_vec(
+                shape,
+                (0..n).map(|_| rng.normal() * 0.1).collect(),
+            )
+        };
+        let wd = Value::F32(mk(&[64, 32], &mut rng));
+        let a = mk(&[64, 64], &mut rng);
+        let g = Value::F32(crate::tensor::matmul_tn(&a, &a));
+        let direct = e.run("quadform", &[wd.clone(), g.clone()]).unwrap();
+        let wd_b = e.upload(wd).unwrap();
+        let g_b = e.upload(g).unwrap();
+        let via_buf = e.run_b("quadform", &[&wd_b.buf, &g_b.buf]).unwrap();
+        let (x, y) = (
+            direct[0].clone().f32().unwrap(),
+            via_buf[0].clone().f32().unwrap(),
+        );
+        assert_eq!(x, y, "buffer path must match literal path bitwise");
+    }
+
+    #[test]
+    fn warmup_checks_artifact_names() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        assert!(e.warmup(&["quadform", "moe_gate_n8"]).is_ok());
+        assert!(e.warmup(&["not_an_artifact"]).is_err());
     }
 }

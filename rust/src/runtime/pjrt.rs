@@ -1,0 +1,149 @@
+//! PJRT backend (feature `pjrt`): compile HLO-text artifacts once through
+//! the published `xla` crate, execute many.
+//!
+//! This module is OFF by default: the offline build image vendors no
+//! crates.io registry, so the `xla = "0.1.6"` dependency cannot resolve
+//! there. To re-enable on a networked machine:
+//!
+//! 1. add `xla = "0.1.6"` to `[dependencies]` in Cargo.toml,
+//! 2. make it non-optional or wire `pjrt = ["dep:xla"]`,
+//! 3. build with `--features pjrt`, and re-plumb `DeviceBuffer` to carry
+//!    the `xla::PjRtBuffer` (+ backing literal — BufferFromHostLiteral is
+//!    asynchronous in the 0.5.1 C shim; the literal must outlive the
+//!    transfer) instead of a host `Value`.
+//!
+//! The artifact contract is unchanged from the host backend: HLO text (not
+//! serialized protos — xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id
+//! protos; the text parser reassigns ids), every artifact lowered with
+//! `return_tuple=True`, inputs/outputs ordered per manifest.json.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::debug;
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::value::Value;
+
+/// Compiled-executable cache keyed by artifact name, over one PJRT CPU
+/// client. Not Send/Sync (PJRT handles are raw pointers): the serving
+/// coordinator owns one engine on a dedicated execution thread.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    /// Open a PJRT CPU client over `dir` (must contain the .hlo.txt files
+    /// named by the manifest).
+    pub fn open(dir: &Path) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(PjrtBackend {
+            client,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn compile(&self, name: &str, path: &Path) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        debug!("compiled {name} in {:.2}s", t.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pin a value for `run_b`. Until `DeviceBuffer` carries a real
+    /// `xla::PjRtBuffer` (see module docs), values stay host-held and the
+    /// literal marshalling happens per call.
+    pub fn upload(&self, v: Value) -> Result<crate::runtime::DeviceTensor> {
+        Ok(crate::runtime::DeviceTensor {
+            buf: crate::runtime::DeviceBuffer { value: v },
+        })
+    }
+
+    /// Execute `name` (literal-marshalled path).
+    pub fn run(&self, name: &str, inputs: &[&Value], spec: &ArtifactSpec) -> Result<Vec<Value>> {
+        self.compile(name, &self.dir.join(&spec.file))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| host_to_xla_literal(v))
+            .collect::<Result<_>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} output: {e}"))?;
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, io)| xla_literal_to_value(&lit, io))
+            .collect()
+    }
+}
+
+fn host_to_xla_literal(v: &Value) -> Result<xla::Literal> {
+    // Serialize once, straight from the tensor — no intermediate host
+    // Literal (its byte buffer would be built and thrown away).
+    let (ty, bytes) = match v {
+        Value::F32(t) => (
+            xla::ElementType::F32,
+            t.data()
+                .iter()
+                .flat_map(|x| x.to_le_bytes())
+                .collect::<Vec<u8>>(),
+        ),
+        Value::I32(t) => (
+            xla::ElementType::S32,
+            t.data()
+                .iter()
+                .flat_map(|x| x.to_le_bytes())
+                .collect::<Vec<u8>>(),
+        ),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, v.shape(), &bytes)
+        .map_err(|e| anyhow!("literal from shape {:?}: {e}", v.shape()))
+}
+
+fn xla_literal_to_value(
+    lit: &xla::Literal,
+    io: &crate::runtime::manifest::IoSpec,
+) -> Result<Value> {
+    use crate::runtime::manifest::Dtype;
+    use crate::tensor::{ITensor, Tensor};
+    match io.dtype {
+        Dtype::F32 => {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output {:?} as f32: {e}", io.name))?;
+            Ok(Value::F32(Tensor::from_vec(&io.shape, data)))
+        }
+        Dtype::I32 => {
+            let data = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("output {:?} as i32: {e}", io.name))?;
+            Ok(Value::I32(ITensor::from_vec(&io.shape, data)))
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! Built-in presets + manifest synthesis for the host backend.
+//!
+//! `python/compile/configs.py` is the source of truth when artifacts are
+//! exported (`make artifacts` writes manifest.json and `Engine::open`
+//! loads it). When no manifest exists — the offline image cannot run the
+//! AOT exporter's PJRT toolchain — the host backend synthesizes an
+//! identical manifest from the preset tables mirrored here, so every
+//! consumer (ParamStore layout, shape validation, serving buckets) sees
+//! the same contract either way.
+
+use crate::config::ModelConfig;
+use crate::runtime::manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
+
+/// Mirror of `configs.py::PRESETS`. `width_buckets` = blk_i..=d_inter.
+pub fn builtin(name: &str) -> Option<ModelConfig> {
+    let cfg = match name {
+        "tiny" => ModelConfig {
+            name: "tiny".into(),
+            vocab: 260,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            n_experts: 4,
+            top_k: 2,
+            d_inter: 32,
+            seq_len: 64,
+            batch: 4,
+            blk_n: 16,
+            blk_i: 8,
+            serve_batches: vec![1, 4],
+            token_buckets: vec![8, 32],
+            width_buckets: (1..=4).map(|i| i * 8).collect(),
+            max_decode_len: 96,
+        },
+        "small" => ModelConfig {
+            name: "small".into(),
+            vocab: 260,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 32,
+            n_experts: 8,
+            top_k: 2,
+            d_inter: 64,
+            seq_len: 128,
+            batch: 8,
+            blk_n: 32,
+            blk_i: 16,
+            serve_batches: vec![1, 8],
+            token_buckets: vec![8, 32, 128],
+            width_buckets: (1..=4).map(|i| i * 16).collect(),
+            max_decode_len: 160,
+        },
+        "base" => ModelConfig {
+            name: "base".into(),
+            vocab: 260,
+            d_model: 192,
+            n_layers: 6,
+            n_heads: 6,
+            d_head: 32,
+            n_experts: 16,
+            top_k: 2,
+            d_inter: 96,
+            seq_len: 128,
+            batch: 8,
+            blk_n: 32,
+            blk_i: 16,
+            serve_batches: vec![1, 8],
+            token_buckets: vec![8, 32, 128],
+            width_buckets: (1..=6).map(|i| i * 16).collect(),
+            max_decode_len: 160,
+        },
+        _ => return None,
+    };
+    Some(cfg)
+}
+
+/// Mirror of `model.py::param_specs` — the flat layout contract.
+pub fn param_specs(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let (d, di, e) = (cfg.d_model, cfg.d_inter, cfg.n_experts);
+    let mut specs = vec![
+        ("embed".to_string(), vec![cfg.vocab, d]),
+        ("pos".to_string(), vec![cfg.seq_len, d]),
+    ];
+    for l in 0..cfg.n_layers {
+        specs.push((format!("l{l}.ln1"), vec![d]));
+        specs.push((format!("l{l}.wq"), vec![d, d]));
+        specs.push((format!("l{l}.wk"), vec![d, d]));
+        specs.push((format!("l{l}.wv"), vec![d, d]));
+        specs.push((format!("l{l}.wo"), vec![d, d]));
+        specs.push((format!("l{l}.ln2"), vec![d]));
+        specs.push((format!("l{l}.router"), vec![e, d]));
+        specs.push((format!("l{l}.wg"), vec![e, di, d]));
+        specs.push((format!("l{l}.wu"), vec![e, di, d]));
+        specs.push((format!("l{l}.wd"), vec![e, d, di]));
+    }
+    specs.push(("lnf".to_string(), vec![d]));
+    specs
+}
+
+fn f(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.to_string(), shape: shape.to_vec(), dtype: Dtype::F32 }
+}
+
+fn i(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.to_string(), shape: shape.to_vec(), dtype: Dtype::I32 }
+}
+
+/// Synthesize the manifest `aot.py` would export for `cfg` (same artifact
+/// names and I/O specs; the `.hlo.txt` files simply do not exist, which
+/// only the PJRT backend would need).
+pub fn synthesize(cfg: &ModelConfig) -> Manifest {
+    let params = param_specs(cfg);
+    let (b, t, v) = (cfg.batch, cfg.seq_len, cfg.vocab);
+    let (l, e, d, di) = (cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_inter);
+    let (h, hd, smax) = (cfg.n_heads, cfg.d_head, cfg.max_decode_len);
+
+    let pspecs: Vec<IoSpec> = params.iter().map(|(n, s)| f(n, s)).collect();
+    let mut artifacts = std::collections::BTreeMap::new();
+    let mut add = |name: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>| {
+        artifacts.insert(
+            name.to_string(),
+            ArtifactSpec { file: format!("{name}.hlo.txt"), inputs, outputs },
+        );
+    };
+
+    // train_step: params + m + v + step + lr + tokens + targets
+    let mut inp = pspecs.clone();
+    inp.extend(params.iter().map(|(n, s)| f(&format!("m.{n}"), s)));
+    inp.extend(params.iter().map(|(n, s)| f(&format!("v.{n}"), s)));
+    inp.push(i("step", &[]));
+    inp.push(f("lr", &[]));
+    inp.push(i("tokens", &[b, t]));
+    inp.push(i("targets", &[b, t]));
+    let mut out = vec![f("loss", &[]), f("ce", &[])];
+    out.extend(params.iter().map(|(n, s)| f(n, s)));
+    out.extend(params.iter().map(|(n, s)| f(&format!("m.{n}"), s)));
+    out.extend(params.iter().map(|(n, s)| f(&format!("v.{n}"), s)));
+    add("train_step", inp, out);
+
+    let masked = |extra: &[IoSpec]| -> Vec<IoSpec> {
+        let mut v = pspecs.clone();
+        v.push(f("mask", &[l, e, di]));
+        v.extend(extra.iter().cloned());
+        v
+    };
+    add(
+        "forward_masked",
+        masked(&[i("tokens", &[b, t])]),
+        vec![f("logits", &[b, t, v])],
+    );
+    add(
+        "loss_masked",
+        masked(&[i("tokens", &[b, t]), i("targets", &[b, t])]),
+        vec![f("nll_sum", &[]), f("tok_cnt", &[])],
+    );
+    add(
+        "seq_nll",
+        masked(&[i("tokens", &[b, t]), i("targets", &[b, t])]),
+        vec![f("nll_rows", &[b]), f("cnt_rows", &[b])],
+    );
+
+    let mut inp = pspecs.clone();
+    inp.push(i("tokens", &[b, t]));
+    inp.push(i("targets", &[b, t]));
+    add(
+        "calib_pass1",
+        inp,
+        vec![f("ce", &[]), f("gsum", &[l, e, d, d]), f("counts", &[l, e])],
+    );
+    let mut inp = pspecs.clone();
+    inp.push(i("tokens", &[b, t]));
+    add(
+        "calib_pass2",
+        inp,
+        vec![
+            f("hsq", &[l, e, di]),
+            f("hmax", &[l, e, di]),
+            f("counts", &[l, e]),
+            f("probe", &[]),
+        ],
+    );
+    add(
+        "quadform",
+        vec![f("wd", &[d, di]), f("G", &[d, d])],
+        vec![f("q", &[di])],
+    );
+
+    let attn_w = |v: &mut Vec<IoSpec>| {
+        v.push(f("ln1", &[d]));
+        v.push(f("wq", &[d, d]));
+        v.push(f("wk", &[d, d]));
+        v.push(f("wv", &[d, d]));
+        v.push(f("wo", &[d, d]));
+    };
+    for &bb in &cfg.serve_batches {
+        let mut inp = vec![f("x", &[bb, t, d])];
+        attn_w(&mut inp);
+        inp.push(f("len_mask", &[bb, t]));
+        add(
+            &format!("attn_prefill_b{bb}"),
+            inp,
+            vec![
+                f("y", &[bb, t, d]),
+                f("k", &[bb, h, t, hd]),
+                f("v", &[bb, h, t, hd]),
+            ],
+        );
+        let mut inp = vec![f("x", &[bb, 1, d])];
+        attn_w(&mut inp);
+        inp.push(f("kcache", &[bb, h, smax, hd]));
+        inp.push(f("vcache", &[bb, h, smax, hd]));
+        inp.push(i("pos", &[bb]));
+        add(
+            &format!("attn_decode_b{bb}"),
+            inp,
+            vec![
+                f("y", &[bb, 1, d]),
+                f("kcache", &[bb, h, smax, hd]),
+                f("vcache", &[bb, h, smax, hd]),
+            ],
+        );
+    }
+    for &n in &cfg.token_buckets {
+        add(
+            &format!("moe_gate_n{n}"),
+            vec![f("x", &[n, d]), f("ln2", &[d]), f("router", &[e, d])],
+            vec![f("xn", &[n, d]), f("gates", &[n, e])],
+        );
+        add(
+            &format!("lm_head_n{n}"),
+            vec![f("x", &[n, d]), f("lnf", &[d]), f("embed", &[v, d])],
+            vec![f("logits", &[n, v])],
+        );
+        for &w in &cfg.width_buckets {
+            add(
+                &format!("expert_n{n}_w{w}"),
+                vec![
+                    f("xs", &[n, d]),
+                    f("wg", &[w, d]),
+                    f("wu", &[w, d]),
+                    f("wd", &[d, w]),
+                ],
+                vec![f("ys", &[n, d])],
+            );
+        }
+    }
+
+    Manifest { preset: cfg.clone(), params, artifacts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_preset_matches_configs_py() {
+        let c = builtin("tiny").unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.d_head, 32);
+        assert_eq!(c.width_buckets, vec![8, 16, 24, 32]);
+        assert!(builtin("nope").is_none());
+    }
+
+    #[test]
+    fn synthesized_manifest_is_complete() {
+        let cfg = builtin("tiny").unwrap();
+        let m = synthesize(&cfg);
+        // param registry: embed, pos, 10 per layer, lnf
+        assert_eq!(m.params.len(), 2 + 10 * cfg.n_layers + 1);
+        assert_eq!(m.params[0].0, "embed");
+        assert_eq!(m.params.last().unwrap().0, "lnf");
+        // core + serving artifacts all present
+        for name in [
+            "train_step",
+            "forward_masked",
+            "loss_masked",
+            "seq_nll",
+            "calib_pass1",
+            "calib_pass2",
+            "quadform",
+            "attn_prefill_b1",
+            "attn_decode_b4",
+            "moe_gate_n8",
+            "lm_head_n32",
+            "expert_n8_w16",
+            "expert_n32_w32",
+        ] {
+            assert!(m.artifact(name).is_ok(), "missing {name}");
+        }
+        let ts = m.artifact("train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 3 * m.params.len() + 4);
+        assert_eq!(ts.outputs.len(), 2 + 3 * m.params.len());
+        let q = m.artifact("quadform").unwrap();
+        assert_eq!(q.inputs[0].shape, vec![64, 32]);
+        assert_eq!(q.outputs[0].shape, vec![32]);
+    }
+
+    #[test]
+    fn param_specs_order_matches_store_expectations() {
+        let cfg = builtin("tiny").unwrap();
+        let specs = param_specs(&cfg);
+        let names: Vec<&str> = specs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(&names[..3], &["embed", "pos", "l0.ln1"]);
+        assert!(names.contains(&"l1.router"));
+        let wd = specs.iter().find(|(n, _)| n == "l0.wd").unwrap();
+        assert_eq!(wd.1, vec![cfg.n_experts, cfg.d_model, cfg.d_inter]);
+    }
+}

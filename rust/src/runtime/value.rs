@@ -1,4 +1,8 @@
-//! Value: the marshalling type between host tensors and PJRT literals.
+//! Value: the marshalling type between host tensors and runtime literals.
+//!
+//! [`Literal`] is the untyped-bytes wire format artifacts consume. The
+//! host backend reads it directly; the PJRT backend (feature `pjrt`)
+//! converts it to an `xla::Literal` at the FFI boundary.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -40,6 +44,22 @@ impl Value {
         }
     }
 
+    /// Borrow the f32 tensor (host-backend fast path; no clone).
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    /// Borrow the i32 tensor (host-backend fast path; no clone).
+    pub fn as_i32(&self) -> Result<&ITensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => bail!("expected i32 value, got f32"),
+        }
+    }
+
     pub fn scalar_f32(v: f32) -> Value {
         Value::F32(Tensor::scalar(v))
     }
@@ -48,34 +68,35 @@ impl Value {
         Value::I32(ITensor::scalar(v))
     }
 
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let (ty, shape, bytes): (xla::ElementType, &[usize], &[u8]) = match self {
-            Value::F32(t) => (
-                xla::ElementType::F32,
-                t.shape(),
-                bytemuck_f32(t.data()),
-            ),
-            Value::I32(t) => (
-                xla::ElementType::S32,
-                t.shape(),
-                bytemuck_i32(t.data()),
-            ),
+    pub fn to_literal(&self) -> Result<Literal> {
+        // Build the byte buffer once and hand it over — no re-copy through
+        // the validating constructor (lengths are correct by construction).
+        let (dtype, shape, bytes) = match self {
+            Value::F32(t) => (Dtype::F32, t.shape(), bytes_f32(t.data())),
+            Value::I32(t) => (Dtype::I32, t.shape(), bytes_i32(t.data())),
         };
-        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
-            .map_err(|e| anyhow!("literal from shape {shape:?}: {e}"))
+        Ok(Literal { dtype, shape: shape.to_vec(), bytes })
     }
 
-    pub fn from_literal(lit: &xla::Literal, io: &IoSpec) -> Result<Value> {
+    pub fn from_literal(lit: &Literal, io: &IoSpec) -> Result<Value> {
+        if lit.shape != io.shape {
+            bail!(
+                "literal shape {:?} does not match spec {:?} for {:?}",
+                lit.shape,
+                io.shape,
+                io.name
+            );
+        }
         match io.dtype {
             Dtype::F32 => {
                 let data = lit
-                    .to_vec::<f32>()
+                    .to_f32_vec()
                     .map_err(|e| anyhow!("output {:?} as f32: {e}", io.name))?;
                 Ok(Value::F32(Tensor::from_vec(&io.shape, data)))
             }
             Dtype::I32 => {
                 let data = lit
-                    .to_vec::<i32>()
+                    .to_i32_vec()
                     .map_err(|e| anyhow!("output {:?} as i32: {e}", io.name))?;
                 Ok(Value::I32(ITensor::from_vec(&io.shape, data)))
             }
@@ -83,12 +104,73 @@ impl Value {
     }
 }
 
-fn bytemuck_f32(xs: &[f32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+/// Shape- and dtype-tagged little-endian byte buffer, mirroring the slice
+/// of the PJRT literal API the pipeline uses.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    bytes: Vec<u8>,
 }
 
-fn bytemuck_i32(xs: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        dtype: Dtype,
+        shape: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!(
+                "literal shape {shape:?} wants {} bytes, got {}",
+                n * 4,
+                bytes.len()
+            );
+        }
+        Ok(Literal { dtype, shape: shape.to_vec(), bytes: bytes.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("literal is {}, not f32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_i32_vec(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 {
+            bail!("literal is {}, not i32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn bytes_f32(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_i32(xs: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
 }
 
 #[cfg(test)]
@@ -120,5 +202,13 @@ mod tests {
         let io = IoSpec { name: "s".into(), shape: vec![], dtype: Dtype::F32 };
         let v = Value::from_literal(&lit, &io).unwrap().f32().unwrap();
         assert_eq!(v.item(), 2.5);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let lit = Value::scalar_f32(1.0).to_literal().unwrap();
+        assert!(lit.to_i32_vec().is_err());
+        let io = IoSpec { name: "s".into(), shape: vec![2], dtype: Dtype::F32 };
+        assert!(Value::from_literal(&lit, &io).is_err());
     }
 }

@@ -6,6 +6,7 @@ pub mod rng;
 pub mod json;
 pub mod args;
 pub mod logging;
+pub mod pool;
 pub mod prop;
 pub mod stats;
 

@@ -1,0 +1,383 @@
+//! Home-grown fixed-worker thread pool with scoped `par_for` / `par_map`.
+//!
+//! The offline image has no rayon; this module supplies the minimal
+//! data-parallel substrate the serving and calibration hot paths need:
+//!
+//! * a global pool sized by `HEAPR_THREADS` (default: available
+//!   parallelism). `HEAPR_THREADS=1` makes every `par_for` run inline in
+//!   the caller — byte-identical to the pre-pool serial code path, the
+//!   before/after switch for §Perf measurements.
+//! * [`par_for`]`(n, f)` — call `f(i)` for `i in 0..n`, work-stealing
+//!   chunks across workers, caller participates. Panics in `f` propagate
+//!   to the caller after every worker has finished (no detached unwinding).
+//! * [`par_map`]`(n, f)` — same, collecting results in index order.
+//!
+//! Determinism: each index is processed exactly once and writes only its
+//! own outputs, so results are bitwise identical for every thread count.
+//!
+//! Nesting: a `par_for` issued from inside a worker runs serially in that
+//! worker (a thread-local marks worker context). This both avoids
+//! oversubscription and makes the pool deadlock-free: only non-worker
+//! callers ever block on helper completion.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared job queue: FIFO + shutdown flag.
+struct Queue {
+    state: Mutex<(VecDeque<Job>, bool)>,
+    cv: Condvar,
+}
+
+impl Queue {
+    fn push(&self, job: Job) {
+        let mut s = self.state.lock().unwrap();
+        s.0.push_back(job);
+        drop(s);
+        self.cv.notify_one();
+    }
+
+    /// Pop a job, blocking; None once shut down and drained.
+    fn pop(&self) -> Option<Job> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = s.0.pop_front() {
+                return Some(job);
+            }
+            if s.1 {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    fn shutdown(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+thread_local! {
+    static IN_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Fixed pool of `threads - 1` workers (the caller is the remaining lane).
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool that runs `par_for` across `threads` lanes total.
+    /// `threads <= 1` spawns nothing and runs everything inline.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let queue = Arc::new(Queue {
+            state: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        });
+        for w in 0..threads.saturating_sub(1) {
+            let q = Arc::clone(&queue);
+            thread::Builder::new()
+                .name(format!("heapr-pool-{w}"))
+                .spawn(move || {
+                    IN_WORKER.with(|f| f.set(true));
+                    while let Some(job) = q.pop() {
+                        job();
+                    }
+                })
+                .expect("spawn pool worker");
+        }
+        ThreadPool { queue, threads }
+    }
+
+    /// Total parallel lanes (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..n)`, distributing chunks over the pool. Blocks until every
+    /// index is done; re-raises the first panic observed in `f`.
+    pub fn par_for<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        let helpers = self.threads.saturating_sub(1).min(n.saturating_sub(1));
+        if helpers == 0 || IN_WORKER.with(|w| w.get()) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+
+        let chunk = (n / (self.threads * 4)).max(1);
+        let ctx = TaskCtx {
+            f: &f,
+            n,
+            chunk,
+            next: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            remaining: Mutex::new(helpers),
+            done_cv: Condvar::new(),
+        };
+        // SAFETY: helper jobs only dereference `ctx` before they decrement
+        // `remaining`; the caller blocks below until `remaining == 0`, so
+        // `ctx` (and the borrow of `f`) strictly outlives every access.
+        let ptr = SendPtr(&ctx as *const TaskCtx as *const ());
+        for _ in 0..helpers {
+            let p = ptr;
+            self.queue.push(Box::new(move || {
+                let ctx = unsafe { &*(p.0 as *const TaskCtx) };
+                ctx.run_lane();
+                let mut rem = ctx.remaining.lock().unwrap();
+                *rem -= 1;
+                ctx.done_cv.notify_all();
+                // last ctx access is releasing this lock
+            }));
+        }
+        ctx.run_lane(); // caller participates
+        let mut rem = ctx.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = ctx.done_cv.wait(rem).unwrap();
+        }
+        drop(rem);
+        if let Some(payload) = ctx.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// `par_for` collecting `f(i)` into index order.
+    pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(&self, n: usize, f: F) -> Vec<T> {
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.par_for(n, |i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("par_map slot filled"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Workers drain queued jobs, then exit; nothing to join (they hold
+        // their own Arc<Queue> clones).
+        self.queue.shutdown();
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*const ());
+unsafe impl Send for SendPtr {}
+
+struct TaskCtx<'a> {
+    f: &'a (dyn Fn(usize) + Sync),
+    n: usize,
+    chunk: usize,
+    next: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl TaskCtx<'_> {
+    /// Claim chunks until the index space is exhausted. Never unwinds: a
+    /// panic in `f` is parked in `self.panic` for the caller to re-raise.
+    fn run_lane(&self) {
+        loop {
+            let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+            if start >= self.n {
+                return;
+            }
+            let end = (start + self.chunk).min(self.n);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                for i in start..end {
+                    (self.f)(i);
+                }
+            }));
+            if let Err(payload) = r {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+                // Lane keeps claiming chunks so the index space drains and
+                // the caller never deadlocks. Note: the rest of THIS chunk
+                // is skipped (the panic aborted it mid-loop), so coverage
+                // is not complete under panics — fine, because the parked
+                // payload is re-raised and the results are discarded.
+            }
+        }
+    }
+}
+
+/// Write handle for `par_for` lanes that fill disjoint row ranges of one
+/// f32 buffer (the shared unsafe substrate for row-blocked tensor ops and
+/// the serving gather/scatter paths).
+#[derive(Clone, Copy)]
+pub struct RowsPtr(*mut f32);
+// SAFETY: lanes write only the ranges they own (callers guarantee
+// disjointness) and the buffer outlives the par_for call.
+unsafe impl Send for RowsPtr {}
+unsafe impl Sync for RowsPtr {}
+
+impl RowsPtr {
+    pub fn new(buf: &mut [f32]) -> RowsPtr {
+        RowsPtr(buf.as_mut_ptr())
+    }
+
+    /// The `len`-element range starting at `offset`.
+    ///
+    /// # Safety
+    /// `offset + len` must be in bounds and ranges handed to concurrent
+    /// lanes must not overlap.
+    pub unsafe fn slice(&self, offset: usize, len: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+// ---------------------------------------------------------------- global --
+
+static GLOBAL: OnceLock<RwLock<Arc<ThreadPool>>> = OnceLock::new();
+
+fn global() -> &'static RwLock<Arc<ThreadPool>> {
+    GLOBAL.get_or_init(|| RwLock::new(Arc::new(ThreadPool::new(default_threads()))))
+}
+
+/// `HEAPR_THREADS` if set to a positive integer, else available
+/// parallelism. A malformed value falls back to available parallelism too
+/// (with a warning) — never to a silently serial pool.
+pub fn default_threads() -> usize {
+    let hw = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("HEAPR_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                crate::warn!(
+                    "HEAPR_THREADS={v:?} is not a positive integer; \
+                     using available parallelism ({hw})"
+                );
+                hw
+            }
+        },
+        Err(_) => hw,
+    }
+}
+
+/// Handle to the process-wide pool.
+pub fn pool() -> Arc<ThreadPool> {
+    global().read().unwrap().clone()
+}
+
+/// Current global lane count.
+pub fn threads() -> usize {
+    pool().threads()
+}
+
+/// Swap the global pool for one with `n` lanes (benchmark threads axis;
+/// library code never calls this). In-flight `par_for`s on the old pool
+/// finish normally — its workers drain and exit once unreferenced.
+pub fn set_threads(n: usize) {
+    *global().write().unwrap() = Arc::new(ThreadPool::new(n));
+}
+
+/// `f(i)` for `i in 0..n` on the global pool.
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    pool().par_for(n, f)
+}
+
+/// Collect `f(i)` for `i in 0..n` on the global pool, in index order.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    pool().par_map(n, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let p = ThreadPool::new(1);
+        let caller = thread::current().id();
+        let ids = Mutex::new(Vec::new());
+        p.par_for(8, |_| ids.lock().unwrap().push(thread::current().id()));
+        let ids = ids.into_inner().unwrap();
+        assert_eq!(ids.len(), 8);
+        assert!(ids.iter().all(|&id| id == caller), "threads=1 must be inline");
+    }
+
+    #[test]
+    fn every_index_exactly_once() {
+        let p = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        p.par_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_in_index_order() {
+        let p = ThreadPool::new(3);
+        let v = p.par_map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uses_multiple_threads_when_sized_up() {
+        let p = ThreadPool::new(4);
+        let ids = Mutex::new(std::collections::HashSet::new());
+        p.par_for(64, |_| {
+            ids.lock().unwrap().insert(thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(ids.into_inner().unwrap().len() > 1, "expected >1 worker thread");
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let p = ThreadPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            p.par_for(50, |i| {
+                if i == 17 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic in par_for body must propagate");
+        // pool remains usable after a propagated panic
+        let sum = AtomicU64::new(0);
+        p.par_for(10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn nested_par_for_runs_serial_not_deadlocked() {
+        let p = Arc::new(ThreadPool::new(2));
+        let q = Arc::clone(&p);
+        let total = AtomicUsize::new(0);
+        p.par_for(4, |_| {
+            // nested: must run inline in the worker, not deadlock
+            q.par_for(4, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn sum_matches_serial() {
+        let p = ThreadPool::new(8);
+        let par = Mutex::new(0u64);
+        p.par_for(5000, |i| {
+            *par.lock().unwrap() += (i as u64).wrapping_mul(2654435761);
+        });
+        let want: u64 = (0..5000u64).map(|i| i.wrapping_mul(2654435761)).sum();
+        assert_eq!(*par.lock().unwrap(), want);
+    }
+}

@@ -19,15 +19,19 @@ pub fn std(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// p-th percentile (0..=100) via nearest-rank on a sorted copy.
+/// p-th percentile (0..=100) via the nearest-rank method on a sorted copy:
+/// the smallest value with at least p% of the sample at or below it —
+/// `sorted[ceil(p/100 · n) - 1]`, rank clamped to [1, n]. Always returns
+/// an element of `xs` (p=0 → minimum, p=100 → maximum); 0.0 when empty.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    let n = v.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    v[rank.clamp(1, n) - 1]
 }
 
 /// Spearman rank correlation (ties broken by index; inputs same length).
@@ -82,6 +86,37 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 5.0);
         assert_eq!(percentile(&xs, 100.0), 9.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_odd_length() {
+        // sorted: [1, 3, 5, 7, 9]; rank = ceil(p/100 * 5)
+        let xs = [9.0, 7.0, 5.0, 3.0, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0); // rank clamps to 1
+        assert_eq!(percentile(&xs, 20.0), 1.0); // ceil(1.0) = 1
+        assert_eq!(percentile(&xs, 50.0), 5.0); // ceil(2.5) = 3
+        assert_eq!(percentile(&xs, 99.0), 9.0); // ceil(4.95) = 5
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_even_length() {
+        // sorted: [1, 3, 5, 7]; rank = ceil(p/100 * 4)
+        let xs = [7.0, 1.0, 5.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 25.0), 1.0); // ceil(1.0) = 1
+        assert_eq!(percentile(&xs, 50.0), 3.0); // ceil(2.0) = 2
+        assert_eq!(percentile(&xs, 75.0), 5.0); // ceil(3.0) = 3
+        assert_eq!(percentile(&xs, 99.0), 7.0); // ceil(3.96) = 4
+        assert_eq!(percentile(&xs, 100.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_singleton_and_empty() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[2.5], 0.0), 2.5);
+        assert_eq!(percentile(&[2.5], 99.0), 2.5);
+        assert_eq!(percentile(&[2.5], 100.0), 2.5);
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Offline-image subset of the `anyhow` crate.
+//!
+//! The container this repo builds in has no crates.io registry, so the
+//! handful of `anyhow` APIs the codebase uses are re-implemented here:
+//! [`Error`] (a context chain of messages), [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension trait.
+//!
+//! Semantics intentionally mirror upstream where the codebase depends on
+//! them: `{e}` prints the outermost message, `{e:#}` prints the whole
+//! chain joined by `: `, `{e:?}` prints the chain as a `Caused by:` list,
+//! and `?` converts any `std::error::Error + Send + Sync + 'static`.
+
+use std::fmt;
+
+/// Error as a chain of context messages; `chain[0]` is the outermost.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (becomes the new outermost).
+    pub fn context(mut self, message: impl fmt::Display) -> Error {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is what
+// makes the blanket `From` below coherent (same trick as upstream anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to `Result`/`Option` errors.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, message: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, message: C) -> Result<T> {
+        self.map_err(|e| e.into().context(message))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, message: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] from format-args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading x").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading x: gone");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 1, "too small: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "too small: 0");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+        let e = anyhow!("v={}", 3);
+        assert_eq!(format!("{e}"), "v=3");
+    }
+}
