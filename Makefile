@@ -1,10 +1,11 @@
 # HEAPr build / verify entry points.
 #
-# `make verify` is the one-stop gate: advisory lints (fmt, clippy) followed
-# by tier-1 (release build + full test suite). The lints are advisory —
-# prefixed with `-` — because the offline build image pins no rustfmt or
-# clippy; formatting drift must not mask tier-1 signal. Promote them to
-# gating once CI pins a toolchain (see ROADMAP Open items).
+# `make verify` is the one-stop gate: gating lints (fmt, clippy -D
+# warnings) followed by tier-1 (release build + full test suite). The
+# toolchain — including rustfmt and clippy — is pinned by
+# rust-toolchain.toml, so lint drift is a real signal, not toolchain skew.
+# Use `make tier1` alone when iterating on a machine without the lint
+# components.
 
 PRESET ?= tiny
 ARTIFACTS := artifacts/$(PRESET)
@@ -23,10 +24,10 @@ test:
 tier1: build test
 
 fmt:
-	-cargo fmt --check
+	cargo fmt --check
 
 clippy:
-	-cargo clippy --all-targets
+	cargo clippy --all-targets -- -D warnings
 
 verify: fmt clippy tier1
 

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 use heapr::config::RunConfig;
-use heapr::coordinator::{Request, Server};
+use heapr::coordinator::{Request, Residency, Server};
 use heapr::data::corpus::Grammar;
 use heapr::data::sampler::Split;
 use heapr::data::tokenizer::ByteTokenizer;
@@ -50,8 +50,8 @@ fn main() -> Result<()> {
         })
         .collect();
 
-    println!("{:<14} {:>10} {:>12} {:>12} {:>10}",
-             "config", "tok/s", "p50 ms", "p99 ms", "widths");
+    println!("{:<22} {:>10} {:>12} {:>12} {:>10} {:>10}",
+             "config", "tok/s", "p50 ms", "p99 ms", "widths", "B/step");
     for ratio in [0.0, 0.25, 0.5, 0.75] {
         let plan = if ratio == 0.0 {
             None
@@ -59,21 +59,27 @@ fn main() -> Result<()> {
             Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
                 .bucket_aligned(&scores, cfg.blk_i))
         };
-        let mut server = Server::new(&engine, &params, plan.as_ref())?;
-        let bucket = *cfg.serve_batches.last().unwrap();
-        for chunk in requests.chunks(bucket) {
-            server.serve_batch(chunk)?;
+        for (residency, label) in
+            [(Residency::Resident, "session"), (Residency::Legacy, "legacy")]
+        {
+            let mut server = Server::new(&engine, &params, plan.as_ref())?;
+            server.set_residency(residency);
+            let bucket = *cfg.serve_batches.last().unwrap();
+            for chunk in requests.chunks(bucket) {
+                server.serve_batch(chunk)?;
+            }
+            let m = &server.metrics;
+            let mean_width: f64 = server.widths.widths.iter().flatten()
+                .map(|&w| w as f64).sum::<f64>()
+                / (cfg.n_layers * cfg.n_experts) as f64;
+            println!("{:<22} {:>10.1} {:>12.1} {:>12.1} {:>10.1} {:>10.0}",
+                     format!("ratio {ratio:.2} {label}"),
+                     m.throughput_tps(),
+                     percentile(&m.latencies_ms, 50.0),
+                     percentile(&m.latencies_ms, 99.0),
+                     mean_width,
+                     m.upload_bytes_per_step());
         }
-        let m = &server.metrics;
-        let mean_width: f64 = server.widths.widths.iter().flatten()
-            .map(|&w| w as f64).sum::<f64>()
-            / (cfg.n_layers * cfg.n_experts) as f64;
-        println!("{:<14} {:>10.1} {:>12.1} {:>12.1} {:>10.1}",
-                 format!("ratio {ratio:.2}"),
-                 m.throughput_tps(),
-                 percentile(&m.latencies_ms, 50.0),
-                 percentile(&m.latencies_ms, 99.0),
-                 mean_width);
     }
     Ok(())
 }

@@ -31,7 +31,11 @@ fn main() -> Result<()> {
     let grammar = Grammar::standard();
     let docs = grammar.corpus("wiki", 0, 2_000_000);
     let (train_split, eval_split) = Split::from_docs(&docs, cfg.seq_len).train_eval(0.05);
-    println!("corpus: {} train chunks, {} eval chunks", train_split.n_chunks(), eval_split.n_chunks());
+    println!(
+        "corpus: {} train chunks, {} eval chunks",
+        train_split.n_chunks(),
+        eval_split.n_chunks()
+    );
 
     let mut params = ParamStore::init(&engine.manifest, 0);
     let run = RunConfig { train_steps: steps, lr, ..Default::default() };

@@ -1,14 +1,18 @@
 //! End-to-end serving throughput, dense vs HEAPr-pruned (Appendix C shape)
-//! across the `HEAPR_THREADS` axis: the headline "pruning buys real
-//! latency, threads buy real throughput" measurement.
+//! across the `HEAPR_THREADS` axis and the decode-residency axis: the
+//! headline "pruning buys real latency, threads buy real throughput, and
+//! engine-resident KV sessions stop paying the marshalling tax"
+//! measurement.
 //!
-//! Per (threads, ratio) cell one server is built and one batch is served
-//! to warm the executables, then `serve_batch` is timed. The final line
-//! reports the dense-serving speedup of the widest thread count over the
-//! serial pool — the §Perf acceptance number.
+//! Per (threads, ratio, residency) cell one server is built and one batch
+//! is served to warm the executables, then `serve_batch` is timed and the
+//! per-decode-step upload traffic is reported next to tokens/s. The final
+//! lines report the dense-serving speedup of the widest thread count over
+//! the serial pool and of the session path over the legacy re-upload path
+//! — the §Perf acceptance numbers.
 
 use heapr::bench::Bench;
-use heapr::coordinator::{Request, Server};
+use heapr::coordinator::{Request, Residency, Server};
 use heapr::data::corpus::Grammar;
 use heapr::data::sampler::Split;
 use heapr::data::tokenizer::ByteTokenizer;
@@ -21,6 +25,8 @@ use heapr::util::pool;
 
 const THREAD_AXIS: &[usize] = &[1, 2, 4];
 const RATIOS: &[f64] = &[0.0, 0.25, 0.5, 0.75];
+const RESIDENCY_AXIS: &[(Residency, &str)] =
+    &[(Residency::Resident, "session"), (Residency::Legacy, "legacy")];
 
 fn main() {
     let engine = Engine::open("artifacts/tiny").expect("open tiny preset");
@@ -45,7 +51,8 @@ fn main() {
     };
     let tok_per_run = (bb * new_tokens) as f64;
 
-    let mut dense_tps = Vec::new(); // (threads, tok/s) at ratio 0.0
+    // (threads, tok/s) at ratio 0.0, per residency label
+    let mut dense_tps: Vec<(usize, &str, f64)> = Vec::new();
     for &threads in THREAD_AXIS {
         pool::set_threads(threads);
         for &ratio in RATIOS {
@@ -55,32 +62,48 @@ fn main() {
                 Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
                     .bucket_aligned(&scores, cfg.blk_i))
             };
-            let mut server = Server::new(&engine, &params, plan.as_ref()).unwrap();
-            // warm the executables once
-            server.serve_batch(&mk_requests()).unwrap();
-            let r = bench.run(
-                &format!("serve b{bb} gen{new_tokens} ratio={ratio:.2} threads={threads}"),
-                || {
-                    let reqs = mk_requests();
-                    std::hint::black_box(server.serve_batch(&reqs).unwrap());
-                },
-                Some((tok_per_run, "tok/s")),
-            );
-            if ratio == 0.0 {
-                dense_tps.push((threads, r.throughput.unwrap().0));
+            for &(residency, label) in RESIDENCY_AXIS {
+                let mut server = Server::new(&engine, &params, plan.as_ref()).unwrap();
+                server.set_residency(residency);
+                // warm the executables once
+                server.serve_batch(&mk_requests()).unwrap();
+                let r = bench.run(
+                    &format!(
+                        "serve b{bb} gen{new_tokens} ratio={ratio:.2} \
+                         threads={threads} {label}"
+                    ),
+                    || {
+                        let reqs = mk_requests();
+                        std::hint::black_box(server.serve_batch(&reqs).unwrap());
+                    },
+                    Some((tok_per_run, "tok/s")),
+                );
+                println!(
+                    "    upload {:>10.0} B/step over {} decode steps ({label})",
+                    server.metrics.upload_bytes_per_step(),
+                    server.metrics.decode_steps,
+                );
+                if ratio == 0.0 {
+                    dense_tps.push((threads, label, r.throughput.unwrap().0));
+                }
             }
         }
         let _ = ByteTokenizer; // keep import for doc symmetry
     }
     pool::set_threads(pool::default_threads());
 
-    if let (Some(&(t0, tps0)), Some(&(t1, tps1))) =
-        (dense_tps.first(), dense_tps.last())
-    {
-        println!(
-            "serve speedup (dense): threads={t1} vs threads={t0} -> {:.2}x",
-            tps1 / tps0
-        );
+    let find = |threads: usize, label: &str| {
+        dense_tps
+            .iter()
+            .find(|(t, l, _)| *t == threads && *l == label)
+            .map(|(_, _, tps)| *tps)
+    };
+    let (t0, t1) = (THREAD_AXIS[0], *THREAD_AXIS.last().unwrap());
+    if let (Some(a), Some(b)) = (find(t0, "session"), find(t1, "session")) {
+        println!("serve speedup (dense, session): threads={t1} vs threads={t0} -> {:.2}x", b / a);
+    }
+    if let (Some(l), Some(s)) = (find(t1, "legacy"), find(t1, "session")) {
+        println!("serve speedup (dense, threads={t1}): session vs legacy -> {:.2}x", s / l);
     }
     bench.save("runs/bench/serve.json").unwrap();
 }

@@ -124,7 +124,8 @@ mod tests {
 
     #[test]
     fn bench_measures_and_reports() {
-        let mut b = Bench { min_iters: 5, max_iters: 10, min_secs: 0.0, warmup: 1, results: vec![] };
+        let mut b =
+            Bench { min_iters: 5, max_iters: 10, min_secs: 0.0, warmup: 1, results: vec![] };
         let r = b.run("spin", || {
             std::hint::black_box((0..1000).sum::<u64>());
         }, Some((1000.0, "adds/s")));

@@ -23,6 +23,13 @@ impl Request {
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
         Request { id, prompt, max_new_tokens, submitted: Instant::now() }
     }
+
+    /// Worst-case sequence extent: prompt plus full generation budget.
+    /// This is what sizes a batch's resident KV capacity (the serving
+    /// session allocates `max` extent over the batch).
+    pub fn extent(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
 }
 
 pub struct Batcher {
@@ -31,13 +38,32 @@ pub struct Batcher {
     /// serve-batch buckets, ascending (from the manifest preset).
     buckets: Vec<usize>,
     pub max_wait: Duration,
+    group_by_extent: bool,
 }
 
 impl Batcher {
     pub fn new(rx: Receiver<Request>, mut buckets: Vec<usize>, max_wait: Duration) -> Batcher {
         buckets.sort_unstable();
         assert!(!buckets.is_empty());
-        Batcher { rx, pending: VecDeque::new(), buckets, max_wait }
+        Batcher {
+            rx,
+            pending: VecDeque::new(),
+            buckets,
+            max_wait,
+            group_by_extent: false,
+        }
+    }
+
+    /// Opt into extent grouping: when more requests are pending than fit
+    /// one bucket, pick the window of most-similar [`Request::extent`]s
+    /// instead of strict FIFO, so the batch's resident KV capacity (its
+    /// max extent) wastes the least memory and stragglers don't pin short
+    /// requests to long decode loops. Trades global FIFO order (still
+    /// lossless, still FIFO within a batch) for occupancy; leave off when
+    /// arrival order must be preserved across batches.
+    pub fn group_by_extent(mut self, on: bool) -> Batcher {
+        self.group_by_extent = on;
+        self
     }
 
     /// Largest bucket <= n, or the smallest bucket when n > 0 (padding).
@@ -59,7 +85,9 @@ impl Batcher {
 
     /// Block for the next batch; returns None when the channel closed and
     /// the queue is empty. Never drops or duplicates a request; order is
-    /// FIFO within the queue.
+    /// FIFO within the queue (globally FIFO unless
+    /// [`Batcher::group_by_extent`] is on, in which case only the order
+    /// within a batch is arrival order).
     pub fn next_batch(&mut self) -> Option<Vec<Request>> {
         self.drain_channel();
         if self.pending.is_empty() {
@@ -84,7 +112,33 @@ impl Batcher {
             self.drain_channel();
         }
         let take = self.bucket_for(self.pending.len()).min(self.pending.len());
-        Some(self.pending.drain(..take).collect())
+        if !self.group_by_extent || take == self.pending.len() {
+            return Some(self.pending.drain(..take).collect());
+        }
+        // extent grouping: scan extent-sorted windows of width `take` for
+        // the smallest extent spread; ties keep the lowest-extent window
+        // (short requests drain first). Within a window, the stable sort
+        // preserves arrival order among equal extents.
+        let mut order: Vec<usize> = (0..self.pending.len()).collect();
+        order.sort_by_key(|&i| self.pending[i].extent());
+        let mut best = 0usize;
+        let mut best_spread = usize::MAX;
+        for w in 0..=order.len() - take {
+            let spread = self.pending[order[w + take - 1]].extent()
+                - self.pending[order[w]].extent();
+            if spread < best_spread {
+                best_spread = spread;
+                best = w;
+            }
+        }
+        let mut picked: Vec<usize> = order[best..best + take].to_vec();
+        picked.sort_unstable(); // arrival order within the batch
+        let mut batch = Vec::with_capacity(take);
+        for &i in picked.iter().rev() {
+            batch.push(self.pending.remove(i).unwrap());
+        }
+        batch.reverse();
+        Some(batch)
     }
 
     pub fn queue_len(&self) -> usize {
@@ -176,6 +230,43 @@ mod tests {
                 "producer {p} order violated: {mine:?}"
             );
         }
+    }
+
+    #[test]
+    fn extent_grouping_packs_similar_requests() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, vec![2], Duration::from_millis(0)).group_by_extent(true);
+        // two long and two short requests, interleaved by arrival
+        tx.send(Request::new(0, vec![1; 40], 40)).unwrap(); // extent 80
+        tx.send(Request::new(1, vec![1; 4], 4)).unwrap(); // extent 8
+        tx.send(Request::new(2, vec![1; 42], 40)).unwrap(); // extent 82
+        tx.send(Request::new(3, vec![1; 6], 4)).unwrap(); // extent 10
+        drop(tx);
+        let first = b.next_batch().unwrap();
+        let second = b.next_batch().unwrap();
+        assert!(b.next_batch().is_none());
+        let ids = |v: &[Request]| v.iter().map(|r| r.id).collect::<Vec<_>>();
+        // lossless, and each batch holds the similar-extent pair, in
+        // arrival order within the batch
+        assert_eq!(ids(&first), vec![1, 3]);
+        assert_eq!(ids(&second), vec![0, 2]);
+    }
+
+    #[test]
+    fn extent_grouping_off_preserves_fifo() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, vec![2], Duration::from_millis(0));
+        tx.send(Request::new(0, vec![1; 40], 40)).unwrap();
+        tx.send(Request::new(1, vec![1; 4], 4)).unwrap();
+        tx.send(Request::new(2, vec![1; 42], 40)).unwrap();
+        drop(tx);
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn request_extent_is_prompt_plus_budget() {
+        assert_eq!(Request::new(0, vec![1; 7], 5).extent(), 12);
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod serve;
 
 pub use batcher::{Batcher, Request, RequestId};
 pub use router::Router;
-pub use serve::{ServeMetrics, Server};
+pub use serve::{DecodeState, Residency, ServeMetrics, Server};

@@ -21,7 +21,7 @@ use crate::data::tokenizer::{EOS, PAD};
 use crate::heapr::plan::{surgery, PrunePlan};
 use crate::model::store::ParamStore;
 use crate::model::WidthProfile;
-use crate::runtime::{DeviceTensor, Engine, Value};
+use crate::runtime::{DeviceTensor, Engine, SArg, Session, Value};
 use crate::tensor::{ITensor, Tensor};
 use crate::util::pool;
 use crate::util::pool::RowsPtr;
@@ -39,6 +39,15 @@ pub struct ServeMetrics {
     pub latencies_ms: Vec<f64>,
     pub expert_tokens: Vec<usize>, // routed token count per (layer*E + e)
     pub wall_s: f64,
+    /// Batched decode iterations (one per generated position per batch).
+    pub decode_steps: usize,
+    /// Host->device bytes moved during decode ([`Engine::upload_stats`]
+    /// deltas around the decode loop): the number the session refactor
+    /// drives toward "one token embedding per step".
+    pub decode_upload_bytes: u64,
+    /// Subset of `decode_upload_bytes` spent re-uploading KV caches —
+    /// exactly zero on the session path (asserted by tests).
+    pub decode_kv_upload_bytes: u64,
 }
 
 impl ServeMetrics {
@@ -47,6 +56,95 @@ impl ServeMetrics {
             return 0.0;
         }
         self.generated_tokens as f64 / self.wall_s
+    }
+
+    /// Mean host->device traffic per decode step.
+    pub fn upload_bytes_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.decode_upload_bytes as f64 / self.decode_steps as f64
+    }
+}
+
+/// Where decode state lives between steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// KV caches are engine residents ([`Session`]), sized to the batch's
+    /// actual decode extent and appended to in place; per-step uploads
+    /// shrink to the [bb, d] hidden-state vector and positions per layer —
+    /// zero KV-cache bytes.
+    Resident,
+    /// PR-1 behavior: caches held host-side at the compiled maximum and
+    /// re-uploaded (plus re-downloaded) every step. Kept selectable for
+    /// the §Perf before/after measurement.
+    Legacy,
+}
+
+impl Residency {
+    /// `HEAPR_NO_BUFFER_CACHE=1` selects the legacy path, same switch as
+    /// the weight-pinning fallback.
+    pub fn from_env() -> Residency {
+        if buffer_cache_enabled() {
+            Residency::Resident
+        } else {
+            Residency::Legacy
+        }
+    }
+}
+
+/// Per-batch decode state returned by [`Server::prefill`] and advanced by
+/// [`Server::decode_step`]; release (or drop) it at end of sequence.
+pub struct DecodeState<'e> {
+    kind: StateKind<'e>,
+    /// KV capacity along the sequence axis.
+    capacity: usize,
+    /// Batch bucket the state was allocated for.
+    bb: usize,
+}
+
+enum StateKind<'e> {
+    Resident(Session<'e>),
+    Legacy(Vec<(Tensor, Tensor)>),
+}
+
+impl DecodeState<'_> {
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.bb
+    }
+
+    pub fn residency(&self) -> Residency {
+        match self.kind {
+            StateKind::Resident(_) => Residency::Resident,
+            StateKind::Legacy(_) => Residency::Legacy,
+        }
+    }
+
+    /// Host copies of layer `l`'s (K, V) caches (tests / introspection).
+    pub fn kv_cache(&self, l: usize) -> Result<(Tensor, Tensor)> {
+        match &self.kind {
+            StateKind::Resident(sess) => Ok((
+                sess.download(&format!("kc{l}"))?.f32()?,
+                sess.download(&format!("vc{l}"))?.f32()?,
+            )),
+            StateKind::Legacy(caches) => caches
+                .get(l)
+                .cloned()
+                .ok_or_else(|| anyhow!("no cache for layer {l}")),
+        }
+    }
+
+    /// End of sequence: free the engine residents. Dropping the state is
+    /// equivalent; this spells out the prefill -> decode -> release
+    /// lifecycle at call sites.
+    pub fn release(mut self) {
+        if let StateKind::Resident(sess) = &mut self.kind {
+            sess.clear();
+        }
     }
 }
 
@@ -87,6 +185,7 @@ pub struct Server<'e> {
     layers: Vec<LayerBuffers>,
     lnf_buf: DeviceTensor,
     embed_buf: DeviceTensor,
+    residency: Residency,
     pub widths: WidthProfile,
     pub metrics: ServeMetrics,
 }
@@ -94,7 +193,11 @@ pub struct Server<'e> {
 impl<'e> Server<'e> {
     /// Build from a full checkpoint and an optional (bucket-aligned!)
     /// pruning plan. With a plan, expert weights are physically sliced.
-    pub fn new(engine: &'e Engine, store: &ParamStore, plan: Option<&PrunePlan>) -> Result<Server<'e>> {
+    pub fn new(
+        engine: &'e Engine,
+        store: &ParamStore,
+        plan: Option<&PrunePlan>,
+    ) -> Result<Server<'e>> {
         let cfg = engine.config().clone();
         let full_plan;
         let plan = match plan {
@@ -176,11 +279,21 @@ impl<'e> Server<'e> {
             layers,
             lnf_buf,
             embed_buf,
+            residency: Residency::from_env(),
             metrics: ServeMetrics {
                 expert_tokens: vec![0; cfg.n_layers * cfg.n_experts],
                 ..Default::default()
             },
         })
+    }
+
+    /// Override the env-selected decode residency (tests, benchmarks).
+    pub fn set_residency(&mut self, r: Residency) {
+        self.residency = r;
+    }
+
+    pub fn residency(&self) -> Residency {
+        self.residency
     }
 
     fn cfg(&self) -> crate::config::ModelConfig {
@@ -357,13 +470,38 @@ impl<'e> Server<'e> {
         Ok(logits.slice0(0, b))
     }
 
-    /// Full-batch prefill; returns (per-seq last-position logits [B, V],
-    /// per-layer KV caches sized [B, H, Smax, hd]).
-    #[allow(clippy::type_complexity)]
+    /// Full-batch prefill; returns per-seq last-position logits [B, V]
+    /// and the decode state holding every layer's KV cache.
+    ///
+    /// On the [`Residency::Resident`] path the caches become session
+    /// residents sized `max_i(prompt_i + max_new_tokens)` (clamped to the
+    /// decode window) — short requests stop paying for `max_decode_len`
+    /// rows. The legacy path keeps full-size host caches, matching the
+    /// compiled artifact shapes it re-uploads each step.
     pub fn prefill(
         &mut self,
         prompts: &[Vec<i32>],
-    ) -> Result<(Tensor, Vec<(Tensor, Tensor)>)> {
+        max_new_tokens: usize,
+    ) -> Result<(Tensor, DecodeState<'e>)> {
+        let max_pos = self.cfg().seq_len.min(self.cfg().max_decode_len);
+        let capacity = prompts
+            .iter()
+            .map(|p| (p.len() + max_new_tokens).min(max_pos))
+            .max()
+            .unwrap_or(max_pos);
+        self.prefill_with_capacity(prompts, capacity)
+    }
+
+    /// [`Server::prefill`] with an explicit resident KV capacity —
+    /// `serve_batch` sizes it per request ([`Request::extent`] clamped to
+    /// the decode window), so one small-budget long prompt plus one
+    /// large-budget short prompt does not allocate their sum. The value
+    /// is clamped to `[longest prompt, decode window]`.
+    pub fn prefill_with_capacity(
+        &mut self,
+        prompts: &[Vec<i32>],
+        capacity: usize,
+    ) -> Result<(Tensor, DecodeState<'e>)> {
         let cfg = self.cfg();
         let (t, d) = (cfg.seq_len, cfg.d_model);
         let bb = cfg
@@ -372,6 +510,27 @@ impl<'e> Server<'e> {
             .find(|&&b| b >= prompts.len())
             .copied()
             .ok_or_else(|| anyhow!("batch {} exceeds buckets", prompts.len()))?;
+        let max_pos = cfg.seq_len.min(cfg.max_decode_len);
+        let min_cap = prompts
+            .iter()
+            .map(|p| p.len())
+            .max()
+            .unwrap_or(1)
+            .max(1)
+            .min(max_pos);
+        let capacity = capacity.clamp(min_cap, max_pos);
+        let mut state = match self.residency {
+            Residency::Resident => DecodeState {
+                kind: StateKind::Resident(self.engine.session()),
+                capacity,
+                bb,
+            },
+            Residency::Legacy => DecodeState {
+                kind: StateKind::Legacy(Vec::with_capacity(cfg.n_layers)),
+                capacity: cfg.max_decode_len,
+                bb,
+            },
+        };
 
         let mut tokens = vec![PAD; bb * t];
         let mut lmask = vec![0.0f32; bb * t];
@@ -388,14 +547,16 @@ impl<'e> Server<'e> {
         let lmask_t = Tensor::from_vec(&[bb, t], lmask);
 
         let lmask_b = self.engine.upload(Value::F32(lmask_t.clone()))?;
-        let mut caches = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             let out = if buffer_cache_enabled() {
                 let x_b = self.engine.upload(Value::F32(x.clone()))?;
                 let a = &self.layers[l].attn;
                 self.engine.run_b(
                     &format!("attn_prefill_b{bb}"),
-                    &[&x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf, &a[3].buf, &a[4].buf, &lmask_b.buf],
+                    &[
+                        &x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf, &a[3].buf,
+                        &a[4].buf, &lmask_b.buf,
+                    ],
                 )?
             } else {
                 self.engine.run(
@@ -414,12 +575,26 @@ impl<'e> Server<'e> {
             let [y, k, v]: [Value; 3] = out
                 .try_into()
                 .map_err(|_| anyhow!("attn_prefill output arity"))?;
-            // place prefill K/V into Smax-sized caches
+            // place prefill K/V into decode caches (allocated once here)
             let (kt, vt) = (k.f32()?, v.f32()?);
-            caches.push((
-                grow_cache(&kt, cfg.max_decode_len),
-                grow_cache(&vt, cfg.max_decode_len),
-            ));
+            match &mut state.kind {
+                StateKind::Resident(sess) => {
+                    sess.alloc_resident(
+                        format!("kc{l}"),
+                        Value::F32(fit_cache(&kt, state.capacity)),
+                    );
+                    sess.alloc_resident(
+                        format!("vc{l}"),
+                        Value::F32(fit_cache(&vt, state.capacity)),
+                    );
+                }
+                StateKind::Legacy(caches) => {
+                    caches.push((
+                        fit_cache(&kt, cfg.max_decode_len),
+                        fit_cache(&vt, cfg.max_decode_len),
+                    ));
+                }
+            }
             let flat = y.f32()?.reshape(&[bb * t, d])?;
             let merged = self.moe_layer(l, flat)?;
             x = merged.reshape(&[bb, t, d])?;
@@ -433,61 +608,108 @@ impl<'e> Server<'e> {
                 .copy_from_slice(&xf.data()[pos * d..(pos + 1) * d]);
         }
         let logits = self.lm_head(Tensor::from_vec(&[prompts.len(), d], states))?;
-        Ok((logits, caches))
+        Ok((logits, state))
     }
 
-    /// One greedy decode step for `batch` sequences at `positions`.
+    /// One greedy decode step for `batch` sequences at `positions`
+    /// (each must be below `state.capacity()`).
+    ///
+    /// Resident path: each layer appends one position into its KV
+    /// residents via [`Session::run_s`]; per-step uploads are one
+    /// [bb, d] hidden-state vector and the positions per layer (the
+    /// token embedding at layer 0, intermediate activations after) —
+    /// zero KV-cache bytes. Legacy path: both cache tensors round-trip
+    /// through the engine every layer, every step.
     pub fn decode_step(
         &mut self,
         next_tokens: &[i32],
         positions: &[usize],
-        caches: &mut [(Tensor, Tensor)],
-        bb: usize,
+        state: &mut DecodeState<'e>,
     ) -> Result<Tensor> {
         let cfg = self.cfg();
         let d = cfg.d_model;
+        let bb = state.bb;
         let b = next_tokens.len();
         assert!(b <= bb);
         let mut toks = vec![PAD; bb];
         toks[..b].copy_from_slice(next_tokens);
         let mut poss = vec![0usize; bb];
         poss[..b].copy_from_slice(positions);
-        let x = self.embed(&toks, &poss)?.reshape(&[bb, 1, d])?;
+        let mut x = self.embed(&toks, &poss)?.reshape(&[bb, 1, d])?;
 
         let pos_t = ITensor::from_vec(&[bb], poss.iter().map(|&p| p as i32).collect());
-        let pos_b = self.engine.upload(Value::I32(pos_t.clone()))?;
-        let mut x = x;
+        let pos_val = Value::I32(pos_t.clone());
+        let pos_b = match &state.kind {
+            StateKind::Legacy(_) if buffer_cache_enabled() => {
+                Some(self.engine.upload(Value::I32(pos_t.clone()))?)
+            }
+            _ => None,
+        };
         for l in 0..cfg.n_layers {
-            let out = if buffer_cache_enabled() {
-                let x_b = self.engine.upload(Value::F32(x.clone()))?;
-                let kc_b = self.engine.upload(Value::F32(caches[l].0.clone()))?;
-                let vc_b = self.engine.upload(Value::F32(caches[l].1.clone()))?;
-                let a = &self.layers[l].attn;
-                self.engine.run_b(
-                    &format!("attn_decode_b{bb}"),
-                    &[&x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf, &a[3].buf, &a[4].buf, &kc_b.buf, &vc_b.buf, &pos_b.buf],
-                )?
-            } else {
-                self.engine.run(
-                    &format!("attn_decode_b{bb}"),
-                    &[
-                        Value::F32(x.clone()),
-                        Value::F32(self.base.get(&format!("l{l}.ln1"))?.clone()),
-                        Value::F32(self.base.get(&format!("l{l}.wq"))?.clone()),
-                        Value::F32(self.base.get(&format!("l{l}.wk"))?.clone()),
-                        Value::F32(self.base.get(&format!("l{l}.wv"))?.clone()),
-                        Value::F32(self.base.get(&format!("l{l}.wo"))?.clone()),
-                        Value::F32(caches[l].0.clone()),
-                        Value::F32(caches[l].1.clone()),
-                        Value::I32(pos_t.clone()),
-                    ],
-                )?
+            let a = &self.layers[l].attn;
+            let flat = match &mut state.kind {
+                StateKind::Resident(sess) => {
+                    let x_val = Value::F32(x.clone());
+                    let (kn, vn) = (format!("kc{l}"), format!("vc{l}"));
+                    let out = sess.run_s(
+                        &format!("attn_decode_b{bb}"),
+                        &[
+                            SArg::Val(&x_val),
+                            SArg::Buf(&a[0].buf),
+                            SArg::Buf(&a[1].buf),
+                            SArg::Buf(&a[2].buf),
+                            SArg::Buf(&a[3].buf),
+                            SArg::Buf(&a[4].buf),
+                            SArg::Res(&kn),
+                            SArg::Res(&vn),
+                            SArg::Val(&pos_val),
+                        ],
+                    )?;
+                    let y = out
+                        .into_iter()
+                        .next()
+                        .ok_or_else(|| anyhow!("attn_decode output arity"))?;
+                    y.f32()?.reshape(&[bb, d])?
+                }
+                StateKind::Legacy(caches) => {
+                    let kv_bytes =
+                        ((caches[l].0.len() + caches[l].1.len()) * 4) as u64;
+                    let out = if buffer_cache_enabled() {
+                        let x_b = self.engine.upload(Value::F32(x.clone()))?;
+                        let kc_b = self.engine.upload(Value::F32(caches[l].0.clone()))?;
+                        let vc_b = self.engine.upload(Value::F32(caches[l].1.clone()))?;
+                        self.engine.run_b(
+                            &format!("attn_decode_b{bb}"),
+                            &[
+                                &x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf,
+                                &a[3].buf, &a[4].buf, &kc_b.buf, &vc_b.buf,
+                                &pos_b.as_ref().unwrap().buf,
+                            ],
+                        )?
+                    } else {
+                        self.engine.run(
+                            &format!("attn_decode_b{bb}"),
+                            &[
+                                Value::F32(x.clone()),
+                                Value::F32(self.base.get(&format!("l{l}.ln1"))?.clone()),
+                                Value::F32(self.base.get(&format!("l{l}.wq"))?.clone()),
+                                Value::F32(self.base.get(&format!("l{l}.wk"))?.clone()),
+                                Value::F32(self.base.get(&format!("l{l}.wv"))?.clone()),
+                                Value::F32(self.base.get(&format!("l{l}.wo"))?.clone()),
+                                Value::F32(caches[l].0.clone()),
+                                Value::F32(caches[l].1.clone()),
+                                Value::I32(pos_t.clone()),
+                            ],
+                        )?
+                    };
+                    self.metrics.decode_kv_upload_bytes += kv_bytes;
+                    let [y, kc, vc]: [Value; 3] = out
+                        .try_into()
+                        .map_err(|_| anyhow!("attn_decode output arity"))?;
+                    caches[l] = (kc.f32()?, vc.f32()?);
+                    y.f32()?.reshape(&[bb, d])?
+                }
             };
-            let [y, kc, vc]: [Value; 3] = out
-                .try_into()
-                .map_err(|_| anyhow!("attn_decode output arity"))?;
-            caches[l] = (kc.f32()?, vc.f32()?);
-            let flat = y.f32()?.reshape(&[bb, d])?;
             let merged = self.moe_layer(l, flat)?;
             x = merged.reshape(&[bb, 1, d])?;
         }
@@ -499,21 +721,23 @@ impl<'e> Server<'e> {
         let cfg = self.cfg();
         let t0 = Instant::now();
         let prompts: Vec<Vec<i32>> = requests.iter().map(|r| r.prompt.clone()).collect();
-        let bb = cfg
-            .serve_batches
+        let max_pos = cfg.seq_len.min(cfg.max_decode_len);
+        // per-request extents, not prompt-max + budget-max: a long prompt
+        // with a tiny budget must not inflate every lane's cache
+        let capacity = requests
             .iter()
-            .find(|&&b| b >= prompts.len())
-            .copied()
-            .ok_or_else(|| anyhow!("batch too large"))?;
-        let (logits, mut caches) = self.prefill(&prompts)?;
+            .map(|r| r.extent().min(max_pos))
+            .max()
+            .unwrap_or(max_pos);
+        let (logits, mut state) = self.prefill_with_capacity(&prompts, capacity)?;
         let b = prompts.len();
 
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
         let mut done = vec![false; b];
         let mut next: Vec<i32> = (0..b).map(|i| argmax_row(&logits, i)).collect();
         let mut positions: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
-        let max_pos = cfg.seq_len.min(cfg.max_decode_len);
 
+        let upload0 = self.engine.upload_stats().1;
         loop {
             let mut active = false;
             for i in 0..b {
@@ -533,7 +757,19 @@ impl<'e> Server<'e> {
             if !active {
                 break;
             }
-            let logits = self.decode_step(&next, &positions, &mut caches, bb)?;
+            // done lanes carry a stale position that can sit AT the
+            // right-sized resident capacity (e.g. a full-window prompt
+            // finishing on the first token); clamp them into range — their
+            // cache rows and logits are never read again, and active
+            // lanes always sit strictly below capacity, so generated
+            // tokens are unaffected on both residency paths.
+            let step_positions: Vec<usize> = positions
+                .iter()
+                .zip(&done)
+                .map(|(&p, &d)| if d { p.min(state.capacity() - 1) } else { p })
+                .collect();
+            let logits = self.decode_step(&next, &step_positions, &mut state)?;
+            self.metrics.decode_steps += 1;
             for i in 0..b {
                 if !done[i] {
                     next[i] = argmax_row(&logits, i);
@@ -541,6 +777,8 @@ impl<'e> Server<'e> {
                 }
             }
         }
+        self.metrics.decode_upload_bytes += self.engine.upload_stats().1 - upload0;
+        state.release();
         let latency = t0.elapsed().as_secs_f64() * 1000.0;
         self.metrics.requests += b;
         self.metrics.prompt_tokens += prompts.iter().map(|p| p.len()).sum::<usize>();
@@ -568,17 +806,20 @@ fn argmax_row(logits: &Tensor, row: usize) -> i32 {
         .0 as i32
 }
 
-/// Copy a [B, H, T, hd] prefill cache into a [B, H, Smax, hd] decode cache.
-fn grow_cache(kv: &Tensor, smax: usize) -> Tensor {
+/// Re-seat a [B, H, T, hd] prefill cache in a [B, H, S, hd] decode cache
+/// of any capacity S: the first min(T, S) positions are copied, the rest
+/// (if growing) zeroed. Runs once per sequence at prefill — per-step cache
+/// movement is gone; the resident path appends in place instead.
+fn fit_cache(kv: &Tensor, s: usize) -> Tensor {
     let &[b, h, t, hd] = kv.shape() else { panic!("bad cache shape") };
-    assert!(smax >= t);
-    let mut out = Tensor::zeros(&[b, h, smax, hd]);
+    let keep = t.min(s);
+    let mut out = Tensor::zeros(&[b, h, s, hd]);
     for bi in 0..b {
         for hi in 0..h {
             let src = ((bi * h) + hi) * t * hd;
-            let dst = ((bi * h) + hi) * smax * hd;
-            out.data_mut()[dst..dst + t * hd]
-                .copy_from_slice(&kv.data()[src..src + t * hd]);
+            let dst = ((bi * h) + hi) * s * hd;
+            out.data_mut()[dst..dst + keep * hd]
+                .copy_from_slice(&kv.data()[src..src + keep * hd]);
         }
     }
     out
@@ -596,12 +837,21 @@ mod tests {
     }
 
     #[test]
-    fn grow_cache_preserves_prefix() {
+    fn fit_cache_grows_with_zeroed_tail() {
         let kv = Tensor::from_vec(&[1, 2, 2, 2], (0..8).map(|x| x as f32).collect());
-        let g = grow_cache(&kv, 4);
+        let g = fit_cache(&kv, 4);
         assert_eq!(g.shape(), &[1, 2, 4, 2]);
         assert_eq!(g.at(&[0, 0, 1, 1]), 3.0);
         assert_eq!(g.at(&[0, 1, 0, 0]), 4.0);
         assert_eq!(g.at(&[0, 0, 2, 0]), 0.0); // grown region zeroed
+    }
+
+    #[test]
+    fn fit_cache_shrinks_to_capacity() {
+        // resident caches are sized prompt+max_new < T: keep the prefix
+        let kv = Tensor::from_vec(&[1, 2, 4, 1], (0..8).map(|x| x as f32).collect());
+        let s = fit_cache(&kv, 2);
+        assert_eq!(s.shape(), &[1, 2, 2, 1]);
+        assert_eq!(s.data(), &[0.0, 1.0, 4.0, 5.0]);
     }
 }

@@ -61,7 +61,8 @@ impl Bpe {
                     *counts.entry((pair[0], pair[1])).or_insert(0) += 1;
                 }
             }
-            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(p, &c)| (c, std::cmp::Reverse(**p))) else {
+            let best = counts.iter().max_by_key(|(p, &c)| (c, std::cmp::Reverse(**p)));
+            let Some((&pair, &cnt)) = best else {
                 break;
             };
             if cnt < 2 {

@@ -68,7 +68,10 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         ]),
     ];
     print_table("Table 5 — pruning cost", &headers, &rows);
-    info!("table4 constants (calibration sizes, seq 2048 in paper): NAEE=128, D2-MoE=512, Sub-MoE=128, HEAPr=128");
+    info!(
+        "table4 constants (calibration sizes, seq 2048 in paper): \
+         NAEE=128, D2-MoE=512, Sub-MoE=128, HEAPr=128"
+    );
 
     let body = rows
         .iter()

@@ -81,8 +81,9 @@ fn run() -> Result<()> {
             let ratio = args.f64("ratio", 0.25)?;
             let n_req = args.usize("requests", 16)?;
             let new_tokens = args.usize("new-tokens", 16)?;
+            let group_extent = args.flag("group-extent");
             args.finish()?;
-            cmd_serve(&artifact_dir, run, &out, ratio, n_req, new_tokens)
+            cmd_serve(&artifact_dir, run, &out, ratio, n_req, new_tokens, group_extent)
         }
         "experiment" => {
             let which = args.str("id", "all");
@@ -204,6 +205,7 @@ fn cmd_eval(artifact_dir: &str, run: RunConfig, out: &str, ratio: f64) -> Result
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn cmd_serve(
     artifact_dir: &str,
     run: RunConfig,
@@ -211,6 +213,7 @@ fn cmd_serve(
     ratio: f64,
     n_req: usize,
     new_tokens: usize,
+    group_extent: bool,
 ) -> Result<()> {
     let ctx = Ctx::prepare(artifact_dir, run, out)?;
     let cfg = ctx.engine.config().clone();
@@ -241,7 +244,8 @@ fn cmd_serve(
         rx,
         cfg.serve_batches.clone(),
         std::time::Duration::from_millis(2),
-    );
+    )
+    .group_by_extent(group_extent);
     let mut responses = Vec::new();
     while let Some(batch) = batcher.next_batch() {
         responses.extend(server.serve_batch(&batch)?);
@@ -251,12 +255,14 @@ fn cmd_serve(
     let m = &server.metrics;
     info!(
         "served {} requests: {} prompt tok, {} generated tok, {:.1} tok/s, \
-         p50 latency {:.0}ms",
+         p50 latency {:.0}ms, {:.0} upload B/step ({:?} residency)",
         m.requests,
         m.prompt_tokens,
         m.generated_tokens,
         m.throughput_tps(),
         heapr::util::stats::percentile(&m.latencies_ms, 50.0),
+        m.upload_bytes_per_step(),
+        server.residency(),
     );
     for r in responses.iter().take(2) {
         info!("  req {} -> {:?}", r.id, ByteTokenizer.decode(&r.tokens));

@@ -13,18 +13,26 @@
 //! * `quadform` and the serving sub-graphs (`attn_prefill_b*`,
 //!   `attn_decode_b*`, `moe_gate_n*`, `lm_head_n*`, `expert_n*_w*`).
 //!
-//! Heavy matmuls route through the pool-parallel `tensor::ops` kernels, so
+//! Heavy matmuls route through the pool-parallel `tensor::ops` kernels,
+//! and attention — prefill forward, training backward and the decode
+//! append+attend — fans (batch, head) pairs out over the pool, so
 //! `HEAPR_THREADS` scales the whole pipeline; results are bitwise
 //! identical for every thread count (row-disjoint writes only).
+//!
+//! [`HostBackend::run_s`] is the session entry point: resident buffers
+//! aliased to same-named outputs (the decode KV caches) are mutated in
+//! place instead of cloned and returned.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::ModelConfig;
+use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::value::Value;
 use crate::tensor::{matmul_at, matmul_nn, matmul_tn, rmsnorm, softmax, ITensor, Tensor};
 use crate::util::pool;
+use crate::util::pool::RowsPtr;
 
 const EPS: f32 = 1e-6;
 const NEG: f32 = -1e30;
@@ -44,6 +52,15 @@ pub struct HostBackend {
 
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
+}
+
+/// Fetch a non-resident input slot of a session call ([`HostBackend::run_s`]).
+fn req<'a>(inputs: &[Option<&'a Value>], i: usize) -> Result<&'a Value> {
+    inputs
+        .get(i)
+        .copied()
+        .flatten()
+        .ok_or_else(|| anyhow!("session call: missing input {i}"))
 }
 
 /// Copy sub-matrix `idx` (of `rows * cols` elements) out of a stacked
@@ -216,9 +233,15 @@ fn attention_forward(
     let scale = 1.0 / (hd as f32).sqrt();
     let mut attn = vec![0.0f32; b * h * t * t];
     let mut outs = vec![0.0f32; b * h * t * hd];
-    for bi in 0..b {
-        for hi in 0..h {
-            let bh = bi * h + hi;
+    {
+        // (batch, head) pairs are independent; fan them out over the pool
+        // with each lane writing only its own attn/outs block. Per-lane
+        // arithmetic is unchanged, so results are bitwise identical for
+        // every thread count.
+        let ap = RowsPtr::new(&mut attn);
+        let op = RowsPtr::new(&mut outs);
+        pool::par_for(b * h, |bh| {
+            let bi = bh / h;
             let qm = sub2(&q, bh, t, hd);
             let km = sub2(&k, bh, t, hd);
             let mut scores = matmul_tn(&qm, &km);
@@ -232,9 +255,9 @@ fn attention_forward(
             }
             let a = softmax(&scores);
             let o = matmul_nn(&a, &sub2(&v, bh, t, hd));
-            attn[bh * t * t..(bh + 1) * t * t].copy_from_slice(a.data());
-            outs[bh * t * hd..(bh + 1) * t * hd].copy_from_slice(o.data());
-        }
+            unsafe { ap.slice(bh * t * t, t * t) }.copy_from_slice(a.data());
+            unsafe { op.slice(bh * t * hd, t * hd) }.copy_from_slice(o.data());
+        });
     }
     let attn = Tensor::from_vec(&[b, h, t, t], attn);
     let outf = merge_heads(&Tensor::from_vec(&[b, h, t, hd], outs));
@@ -265,9 +288,13 @@ fn attention_backward(
     let mut dq = vec![0.0f32; b * h * t * hd];
     let mut dk = vec![0.0f32; b * h * t * hd];
     let mut dv = vec![0.0f32; b * h * t * hd];
-    for bi in 0..b {
-        for hi in 0..h {
-            let bh = bi * h + hi;
+    {
+        // same (batch, head) fan-out as the forward pass: disjoint
+        // dq/dk/dv blocks per lane, bitwise thread-count invariant.
+        let qp = RowsPtr::new(&mut dq);
+        let kp = RowsPtr::new(&mut dk);
+        let vp = RowsPtr::new(&mut dv);
+        pool::par_for(b * h, |bh| {
             let dout_m = sub2(&dout, bh, t, hd);
             let a = sub2(&cache.attn, bh, t, t);
             let vm = sub2(&cache.v, bh, t, hd);
@@ -279,10 +306,10 @@ fn attention_backward(
             }
             let dq_m = matmul_nn(&ds, &sub2(&cache.k, bh, t, hd));
             let dk_m = matmul_at(&ds, &sub2(&cache.q, bh, t, hd));
-            dq[bh * t * hd..(bh + 1) * t * hd].copy_from_slice(dq_m.data());
-            dk[bh * t * hd..(bh + 1) * t * hd].copy_from_slice(dk_m.data());
-            dv[bh * t * hd..(bh + 1) * t * hd].copy_from_slice(dv_m.data());
-        }
+            unsafe { qp.slice(bh * t * hd, t * hd) }.copy_from_slice(dq_m.data());
+            unsafe { kp.slice(bh * t * hd, t * hd) }.copy_from_slice(dk_m.data());
+            unsafe { vp.slice(bh * t * hd, t * hd) }.copy_from_slice(dv_m.data());
+        });
     }
     let dq = merge_heads(&Tensor::from_vec(&[b, h, t, hd], dq));
     let dk = merge_heads(&Tensor::from_vec(&[b, h, t, hd], dk));
@@ -1043,80 +1070,201 @@ impl HostBackend {
         ])
     }
 
-    fn attn_decode(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
-        let x = inputs[0].as_f32()?; // [b, 1, d]
+    /// Shared decode-attention core: project the new position, append it
+    /// into the caches at `pos[bi]`, and attend over the 0..=pos prefix.
+    /// The caches may have any capacity S > pos — the session path binds
+    /// right-sized residents, the stateless path the compiled maximum;
+    /// masked-out tail entries soften to exact 0.0 under the shifted
+    /// softmax, so logits are bitwise independent of S. (batch, head)
+    /// pairs fan out over the pool with each lane owning its cache block
+    /// and output slice, so results are also bitwise thread-invariant.
+    /// Mutates `kc`/`vc` in place; returns y = x + attn(x) as [b, 1, d].
+    #[allow(clippy::too_many_arguments)]
+    fn decode_attend(
+        &self,
+        x: &Tensor,
+        ln1: &Tensor,
+        wq: &Tensor,
+        wk: &Tensor,
+        wv: &Tensor,
+        wo: &Tensor,
+        kc: &mut Tensor,
+        vc: &mut Tensor,
+        pos: &ITensor,
+    ) -> Result<Tensor> {
         let &[b, one, d] = x.shape() else { bail!("attn_decode x must be [b,1,d]") };
         if one != 1 {
             bail!("attn_decode wants a single position, got {one}");
         }
         let (h, hd) = (self.cfg.n_heads, self.cfg.d_head);
-        let ln1 = inputs[1].as_f32()?;
-        let wq = inputs[2].as_f32()?;
-        let wk = inputs[3].as_f32()?;
-        let wv = inputs[4].as_f32()?;
-        let wo = inputs[5].as_f32()?;
-        let mut kc = inputs[6].as_f32()?.clone(); // [b,H,S,hd]
-        let mut vc = inputs[7].as_f32()?.clone();
-        let pos = inputs[8].as_i32()?;
-        let s = kc.shape()[2];
-
+        let &[bk, hk, s, hdk] = kc.shape() else { bail!("kcache must be [b,H,S,hd]") };
+        if bk != b || hk != h || hdk != hd || vc.shape() != kc.shape() {
+            bail!(
+                "decode caches must be [b={b}, h={h}, S, hd={hd}]; got k {:?} v {:?}",
+                kc.shape(),
+                vc.shape()
+            );
+        }
+        for bi in 0..b {
+            let p = pos.data()[bi];
+            if p < 0 || p as usize >= s {
+                bail!("decode position {p} outside cache capacity {s}");
+            }
+        }
         let xf = x.reshape(&[b, d])?;
         let xn = rmsnorm(&xf, ln1, EPS);
         let q = matmul_tn(&xn, wq); // [b, d] viewed as [b, H, hd]
         let kn = matmul_tn(&xn, wk);
         let vn = matmul_tn(&xn, wv);
-        for bi in 0..b {
-            let p = pos.data()[bi] as usize;
-            if p >= s {
-                bail!("decode position {p} >= cache size {s}");
-            }
-            for hi in 0..h {
-                let dst = ((bi * h + hi) * s + p) * hd;
-                let src = bi * d + hi * hd;
-                kc.data_mut()[dst..dst + hd].copy_from_slice(&kn.data()[src..src + hd]);
-                vc.data_mut()[dst..dst + hd].copy_from_slice(&vn.data()[src..src + hd]);
-            }
-        }
         let scale = 1.0 / (hd as f32).sqrt();
         let mut out = vec![0.0f32; b * d];
-        for bi in 0..b {
-            let pmax = pos.data()[bi] as usize;
-            for hi in 0..h {
-                let qrow = &q.data()[bi * d + hi * hd..bi * d + (hi + 1) * hd];
-                let cbase = (bi * h + hi) * s * hd;
+        {
+            let kp = RowsPtr::new(kc.data_mut());
+            let vp = RowsPtr::new(vc.data_mut());
+            let op = RowsPtr::new(&mut out);
+            pool::par_for(b * h, |bh| {
+                let (bi, hi) = (bh / h, bh % h);
+                let pmax = pos.data()[bi] as usize;
+                // this lane owns the whole (bi, hi) cache block: append
+                // the new position, then attend over the 0..=pmax prefix
+                let krows = unsafe { kp.slice(bh * s * hd, s * hd) };
+                let vrows = unsafe { vp.slice(bh * s * hd, s * hd) };
+                let src = bi * d + hi * hd;
+                krows[pmax * hd..(pmax + 1) * hd]
+                    .copy_from_slice(&kn.data()[src..src + hd]);
+                vrows[pmax * hd..(pmax + 1) * hd]
+                    .copy_from_slice(&vn.data()[src..src + hd]);
+                let qrow = &q.data()[src..src + hd];
                 let mut scores = vec![NEG; s];
-                for si in 0..=pmax {
-                    let krow = &kc.data()[cbase + si * hd..cbase + (si + 1) * hd];
-                    scores[si] =
-                        qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                for (si, sc) in scores.iter_mut().enumerate().take(pmax + 1) {
+                    let krow = &krows[si * hd..(si + 1) * hd];
+                    *sc = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
                 }
                 let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                 let mut z = 0.0f32;
                 let mut ex = vec![0.0f32; s];
-                for si in 0..s {
-                    ex[si] = (scores[si] - mx).exp();
-                    z += ex[si];
+                for (e, sc) in ex.iter_mut().zip(&scores) {
+                    *e = (sc - mx).exp();
+                    z += *e;
                 }
-                for si in 0..s {
-                    let a = ex[si] / z;
+                let orow = unsafe { op.slice(src, hd) };
+                for (si, &e) in ex.iter().enumerate() {
+                    let a = e / z;
                     if a == 0.0 {
                         continue;
                     }
-                    let vrow = &vc.data()[cbase + si * hd..cbase + (si + 1) * hd];
-                    for c in 0..hd {
-                        out[bi * d + hi * hd + c] += a * vrow[c];
+                    let vrow = &vrows[si * hd..(si + 1) * hd];
+                    for (o, &v) in orow.iter_mut().zip(vrow) {
+                        *o += a * v;
                     }
                 }
-            }
+            });
         }
         let y_att = matmul_tn(&Tensor::from_vec(&[b, d], out), wo);
         let mut y = xf;
         add_into(&mut y, &y_att);
-        Ok(vec![
-            Value::F32(y.reshape(&[b, 1, d])?),
-            Value::F32(kc),
-            Value::F32(vc),
-        ])
+        y.reshape(&[b, 1, d])
+    }
+
+    /// Stateless `attn_decode_b*` (legacy path): clones the caller's
+    /// caches, appends, and returns all three outputs per the manifest.
+    fn attn_decode(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let mut kc = inputs[6].as_f32()?.clone(); // [b,H,S,hd]
+        let mut vc = inputs[7].as_f32()?.clone();
+        let y = self.decode_attend(
+            inputs[0].as_f32()?,
+            inputs[1].as_f32()?,
+            inputs[2].as_f32()?,
+            inputs[3].as_f32()?,
+            inputs[4].as_f32()?,
+            inputs[5].as_f32()?,
+            &mut kc,
+            &mut vc,
+            inputs[8].as_i32()?,
+        )?;
+        Ok(vec![Value::F32(y), Value::F32(kc), Value::F32(vc)])
+    }
+
+    /// `attn_decode_b*` on engine-resident caches: positions 6/7
+    /// (kcache/vcache) must arrive as `inout` residents; they are appended
+    /// to in place — zero cache copies — and only `y` is returned.
+    fn attn_decode_inplace(
+        &self,
+        inputs: &[Option<&Value>],
+        inout: &mut [(usize, &mut Value)],
+    ) -> Result<Vec<Value>> {
+        let mut kc = None;
+        let mut vc = None;
+        for (i, v) in inout.iter_mut() {
+            match *i {
+                6 => kc = Some(v),
+                7 => vc = Some(v),
+                other => bail!("attn_decode: input {other} cannot be resident-aliased"),
+            }
+        }
+        let (Some(kc), Some(vc)) = (kc, vc) else {
+            bail!("attn_decode session call needs kcache+vcache residents")
+        };
+        let y = self.decode_attend(
+            req(inputs, 0)?.as_f32()?,
+            req(inputs, 1)?.as_f32()?,
+            req(inputs, 2)?.as_f32()?,
+            req(inputs, 3)?.as_f32()?,
+            req(inputs, 4)?.as_f32()?,
+            req(inputs, 5)?.as_f32()?,
+            kc.as_f32_mut()?,
+            vc.as_f32_mut()?,
+            req(inputs, 8)?.as_i32()?,
+        )?;
+        Ok(vec![Value::F32(y)])
+    }
+
+    /// Session entry point ([`crate::runtime::Session::run_s`]): execute
+    /// `name` with manifest-ordered `inputs`, where the positions listed
+    /// in `inout` are resident buffers aliased to the same-named output.
+    /// Aliased residents are updated in place and omitted from the
+    /// returned outputs. `attn_decode_b*` takes the no-copy append path;
+    /// every other artifact falls back to the stateless path plus a
+    /// write-back, so any artifact can run against residents.
+    pub fn run_s(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        inputs: &[Option<&Value>],
+        inout: &mut [(usize, &mut Value)],
+    ) -> Result<Vec<Value>> {
+        if name.starts_with("attn_decode_b") {
+            return self.attn_decode_inplace(inputs, inout);
+        }
+        let mut full: Vec<&Value> = Vec::with_capacity(inputs.len());
+        for (i, slot) in inputs.iter().enumerate() {
+            match slot {
+                Some(v) => full.push(v),
+                None => {
+                    let (_, v) = inout
+                        .iter()
+                        .find(|(j, _)| *j == i)
+                        .ok_or_else(|| anyhow!("{name}: input {i} neither given nor resident"))?;
+                    full.push(v);
+                }
+            }
+        }
+        let outs = self.run(name, &full)?;
+        drop(full);
+        let mut kept = Vec::new();
+        for (oi, out_val) in outs.into_iter().enumerate() {
+            let oname = &spec.outputs[oi].name;
+            let alias = spec
+                .inputs
+                .iter()
+                .position(|io| io.name == *oname)
+                .and_then(|pos| inout.iter_mut().find(|(j, _)| *j == pos));
+            match alias {
+                Some((_, v)) => **v = out_val,
+                None => kept.push(out_val),
+            }
+        }
+        Ok(kept)
     }
 
     fn moe_gate(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
@@ -1279,6 +1427,84 @@ mod tests {
                 dw.data()[i]
             );
         }
+    }
+
+    #[test]
+    fn decode_attend_is_capacity_invariant() {
+        // the session path binds right-sized KV residents (S = capacity)
+        // while the stateless path runs at the compiled maximum; y and the
+        // shared cache prefix must agree bitwise.
+        let be = backend(); // tiny: d=64, h=2, hd=32
+        let mut rng = Pcg64::new(7);
+        let (b, h, hd, d) = (1, 2, 32, 64);
+        let x = randt(&mut rng, &[b, 1, d]);
+        let ln1 = randt(&mut rng, &[d]);
+        let wq = randt(&mut rng, &[d, d]);
+        let wk = randt(&mut rng, &[d, d]);
+        let wv = randt(&mut rng, &[d, d]);
+        let wo = randt(&mut rng, &[d, d]);
+        let pos = ITensor::from_vec(&[b], vec![5]);
+        let big_k = randt(&mut rng, &[b, h, 96, hd]);
+        let big_v = randt(&mut rng, &[b, h, 96, hd]);
+        // small caches = first 8 rows of every (b, h) block; K and V stay
+        // distinct so a K/V mix-up in decode_attend cannot cancel out
+        let shrink = |big: &Tensor| {
+            let mut small = vec![0.0f32; b * h * 8 * hd];
+            for bh in 0..b * h {
+                small[bh * 8 * hd..(bh + 1) * 8 * hd]
+                    .copy_from_slice(&big.data()[bh * 96 * hd..bh * 96 * hd + 8 * hd]);
+            }
+            Tensor::from_vec(&[b, h, 8, hd], small)
+        };
+        let (small_k, small_v) = (shrink(&big_k), shrink(&big_v));
+        let run = |kc: &Tensor, vc: &Tensor| {
+            be.run(
+                "attn_decode_b1",
+                &[
+                    &Value::F32(x.clone()),
+                    &Value::F32(ln1.clone()),
+                    &Value::F32(wq.clone()),
+                    &Value::F32(wk.clone()),
+                    &Value::F32(wv.clone()),
+                    &Value::F32(wo.clone()),
+                    &Value::F32(kc.clone()),
+                    &Value::F32(vc.clone()),
+                    &Value::I32(pos.clone()),
+                ],
+            )
+            .unwrap()
+        };
+        let out_big = run(&big_k, &big_v);
+        let out_small = run(&small_k, &small_v);
+        let yb = out_big[0].clone().f32().unwrap();
+        let ys = out_small[0].clone().f32().unwrap();
+        assert_eq!(yb, ys, "logit path must not depend on cache capacity");
+        // appended row matches across capacities too
+        let kb = out_big[1].clone().f32().unwrap();
+        let ks = out_small[1].clone().f32().unwrap();
+        for bh in 0..b * h {
+            assert_eq!(
+                &kb.data()[(bh * 96 + 5) * hd..(bh * 96 + 6) * hd],
+                &ks.data()[(bh * 8 + 5) * hd..(bh * 8 + 6) * hd],
+            );
+        }
+        // a position outside the small capacity is rejected
+        let bad = ITensor::from_vec(&[b], vec![8]);
+        let r = be.run(
+            "attn_decode_b1",
+            &[
+                &Value::F32(x.clone()),
+                &Value::F32(ln1.clone()),
+                &Value::F32(wq.clone()),
+                &Value::F32(wk.clone()),
+                &Value::F32(wv.clone()),
+                &Value::F32(wo.clone()),
+                &Value::F32(small_k.clone()),
+                &Value::F32(small_v.clone()),
+                &Value::I32(bad),
+            ],
+        );
+        assert!(r.is_err(), "position >= capacity must error");
     }
 
     #[test]

@@ -117,6 +117,21 @@ impl Manifest {
     }
 }
 
+/// Capacity-axis contract for engine-resident state: some artifact IOs are
+/// ring-buffer-like caches whose compiled shape is a *maximum* — a session
+/// may bind a resident whose extent along this axis is smaller (the
+/// caller-chosen capacity), and the backends index it dynamically. Today
+/// that is the decode KV caches' sequence axis; the rule lives here (next
+/// to the shape contract) so `Session::run_s` validation and the backends
+/// agree on it.
+pub fn capacity_axis(artifact: &str, io_name: &str) -> Option<usize> {
+    if artifact.starts_with("attn_decode_b") && (io_name == "kcache" || io_name == "vcache") {
+        Some(2)
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +150,15 @@ mod tests {
           "outputs":[{"name":"q","shape":[32],"dtype":"f32"}]}
       }
     }"#;
+
+    #[test]
+    fn capacity_axis_names_the_decode_cache_seq_dim() {
+        assert_eq!(capacity_axis("attn_decode_b4", "kcache"), Some(2));
+        assert_eq!(capacity_axis("attn_decode_b1", "vcache"), Some(2));
+        assert_eq!(capacity_axis("attn_decode_b4", "x"), None);
+        assert_eq!(capacity_axis("attn_prefill_b4", "kcache"), None);
+        assert_eq!(capacity_axis("quadform", "wd"), None);
+    }
 
     #[test]
     fn parses_sample() {

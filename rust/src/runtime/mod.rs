@@ -51,6 +51,12 @@ pub struct Engine {
     backend: Backend,
     /// (artifact, calls) counters for the perf report.
     calls: Mutex<HashMap<String, usize>>,
+    /// (transfer events, bytes) of host->device traffic: `upload` pins,
+    /// per-call `run` literal marshalling, session `Val` args and resident
+    /// allocation. `run_b` consumes pre-uploaded buffers and adds nothing —
+    /// the delta between the two is exactly what the serving §Perf
+    /// before/after measures.
+    uploads: Mutex<(usize, u64)>,
 }
 
 impl Engine {
@@ -85,6 +91,7 @@ impl Engine {
             manifest,
             backend,
             calls: Mutex::new(HashMap::new()),
+            uploads: Mutex::new((0, 0)),
         })
     }
 
@@ -136,13 +143,31 @@ impl Engine {
         Ok(())
     }
 
-    fn dispatch(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+    fn count_call(&self, name: &str) {
         *self
             .calls
             .lock()
             .unwrap()
             .entry(name.to_string())
             .or_insert(0) += 1;
+    }
+
+    fn note_upload(&self, events: usize, bytes: u64) {
+        let mut u = self.uploads.lock().unwrap();
+        u.0 += events;
+        u.1 += bytes;
+    }
+
+    /// Cumulative host->device transfer accounting as (events, bytes).
+    /// This is the counter behind the serving upload metrics and the
+    /// zero-KV-upload decode test: `run` pays for every input each call,
+    /// `upload`/`alloc_resident` pay once, `run_b`/resident args are free.
+    pub fn upload_stats(&self) -> (usize, u64) {
+        *self.uploads.lock().unwrap()
+    }
+
+    fn dispatch(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        self.count_call(name);
         match &self.backend {
             Backend::Host(b) => b.run(name, inputs),
             #[cfg(feature = "pjrt")]
@@ -162,17 +187,12 @@ impl Engine {
             );
         }
         for (v, io) in inputs.iter().zip(&spec.inputs) {
-            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
-                bail!(
-                    "{name}: input {:?} got shape {:?} dtype {}, want {:?} {}",
-                    io.name,
-                    v.shape(),
-                    v.dtype(),
-                    io.shape,
-                    io.dtype
-                );
-            }
+            check_input(name, io, v, None)?;
         }
+        self.note_upload(
+            inputs.len(),
+            inputs.iter().map(|v| v.byte_len() as u64).sum(),
+        );
         let refs: Vec<&Value> = inputs.iter().collect();
         let out = self.dispatch(name, &refs)?;
         check_outputs(name, spec, &out)?;
@@ -205,12 +225,21 @@ impl Engine {
     /// the host backend pins it with zero copies (callers construct fresh
     /// `Value`s at every upload site).
     pub fn upload(&self, v: Value) -> Result<DeviceTensor> {
+        self.note_upload(1, v.byte_len() as u64);
         match &self.backend {
             Backend::Host(_) => Ok(DeviceTensor {
                 buf: DeviceBuffer { value: v },
             }),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(b) => b.upload(v),
+        }
+    }
+
+    /// Open a [`Session`] of named engine-resident buffers (decode state).
+    pub fn session(&self) -> Session<'_> {
+        Session {
+            engine: self,
+            residents: HashMap::new(),
         }
     }
 
@@ -228,17 +257,7 @@ impl Engine {
             );
         }
         for (b, io) in inputs.iter().zip(&spec.inputs) {
-            let v = &b.value;
-            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
-                bail!(
-                    "{name}: buffer {:?} got shape {:?} dtype {}, want {:?} {}",
-                    io.name,
-                    v.shape(),
-                    v.dtype(),
-                    io.shape,
-                    io.dtype
-                );
-            }
+            check_input(name, io, &b.value, None)?;
         }
         let refs: Vec<&Value> = inputs.iter().map(|b| &b.value).collect();
         let out = self.dispatch(name, &refs)?;
@@ -271,6 +290,303 @@ fn check_outputs(name: &str, spec: &ArtifactSpec, out: &[Value]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Validate one input against its manifest spec. `capacity_axis` (from
+/// [`manifest::capacity_axis`]) relaxes exactly one dimension for session
+/// residents: cache-like state may be allocated at any capacity up to the
+/// compiled maximum, and the backends index that axis dynamically.
+fn check_input(
+    name: &str,
+    io: &IoSpec,
+    v: &Value,
+    capacity_axis: Option<usize>,
+) -> Result<()> {
+    let shape_ok = match capacity_axis {
+        None => v.shape() == io.shape.as_slice(),
+        Some(ax) => {
+            v.shape().len() == io.shape.len()
+                && v.shape()
+                    .iter()
+                    .zip(&io.shape)
+                    .enumerate()
+                    .all(|(d, (&got, &want))| {
+                        if d == ax {
+                            got >= 1 && got <= want
+                        } else {
+                            got == want
+                        }
+                    })
+        }
+    };
+    if shape_ok && v.dtype() == io.dtype {
+        return Ok(());
+    }
+    match capacity_axis {
+        None => bail!(
+            "{name}: input {:?} got shape {:?} dtype {}, want {:?} {}",
+            io.name,
+            v.shape(),
+            v.dtype(),
+            io.shape,
+            io.dtype
+        ),
+        Some(ax) => bail!(
+            "{name}: resident {:?} got shape {:?} dtype {}, want {:?} {} \
+             (axis {ax} is capacity: 1..={} allowed)",
+            io.name,
+            v.shape(),
+            v.dtype(),
+            io.shape,
+            io.dtype,
+            io.shape[ax]
+        ),
+    }
+}
+
+/// Output contract for a session call: the outputs aliased to residents
+/// (names in `skip`) were written in place and are not returned; the rest
+/// must match the manifest exactly, like [`check_outputs`].
+fn check_session_outputs(
+    name: &str,
+    spec: &ArtifactSpec,
+    skip: &[&str],
+    out: &[Value],
+) -> Result<()> {
+    let expected: Vec<&IoSpec> = spec
+        .outputs
+        .iter()
+        .filter(|io| !skip.contains(&io.name.as_str()))
+        .collect();
+    if out.len() != expected.len() {
+        bail!(
+            "{name}: session call produced {} outputs, manifest wants {} \
+             ({} aliased to residents)",
+            out.len(),
+            expected.len(),
+            skip.len()
+        );
+    }
+    for (v, io) in out.iter().zip(expected) {
+        if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
+            bail!(
+                "{name}: output {:?} has shape {:?} dtype {}, manifest wants {:?} {}",
+                io.name,
+                v.shape(),
+                v.dtype(),
+                io.shape,
+                io.dtype
+            );
+        }
+    }
+    Ok(())
+}
+
+/// One argument to [`Session::run_s`]: a per-call host value (marshalled
+/// this call), a pinned [`DeviceBuffer`], or a named session resident.
+pub enum SArg<'a> {
+    Val(&'a Value),
+    Buf(&'a DeviceBuffer),
+    Res(&'a str),
+}
+
+/// Engine-resident mutable state for a decode sequence (or any loop that
+/// carries device state across calls): named buffers allocated once
+/// ([`Session::alloc_resident`]), read and written in place by
+/// [`Session::run_s`], copied back with [`Session::download`] — or simply
+/// dropped — at end of sequence.
+///
+/// A resident bound to an input whose name also appears among the
+/// artifact's outputs (e.g. `kcache`/`vcache` of `attn_decode_b*`) is
+/// *aliased*: the backend updates it in place and omits it from the
+/// returned outputs. On the host backend the decode KV append therefore
+/// costs one row write — never a cache copy or re-upload. The PJRT
+/// backend (feature `pjrt`) stubs `run_s` on the literal path; the trait
+/// boundary (named residents, capacity sizing, aliasing by manifest IO
+/// name) is exactly what PJRT buffer donation needs, so re-enabling real
+/// device residency is local to `runtime/pjrt.rs`.
+pub struct Session<'e> {
+    engine: &'e Engine,
+    residents: HashMap<String, Value>,
+}
+
+impl<'e> Session<'e> {
+    /// Allocate (or overwrite) a named resident from a host value — the
+    /// one host->device transfer of the resident's lifetime.
+    pub fn alloc_resident(&mut self, name: impl Into<String>, v: Value) {
+        self.engine.note_upload(1, v.byte_len() as u64);
+        self.residents.insert(name.into(), v);
+    }
+
+    pub fn has_resident(&self, name: &str) -> bool {
+        self.residents.contains_key(name)
+    }
+
+    pub fn resident_shape(&self, name: &str) -> Option<&[usize]> {
+        self.residents.get(name).map(|v| v.shape())
+    }
+
+    /// Total bytes held by residents (capacity accounting).
+    pub fn resident_bytes(&self) -> u64 {
+        self.residents.values().map(|v| v.byte_len() as u64).sum()
+    }
+
+    /// Copy a resident back to the host (end-of-sequence readback).
+    pub fn download(&self, name: &str) -> Result<Value> {
+        self.residents
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no resident {name:?} in session"))
+    }
+
+    /// Drop one resident; returns whether it existed.
+    pub fn free_resident(&mut self, name: &str) -> bool {
+        self.residents.remove(name).is_some()
+    }
+
+    /// Release every resident (the sequence is finished).
+    pub fn clear(&mut self) {
+        self.residents.clear();
+    }
+
+    /// Execute `name` against a mix of per-call values, pinned buffers and
+    /// residents (order per manifest). Inputs are shape-validated exactly
+    /// like [`Engine::run_b`], except that residents on a declared
+    /// capacity axis ([`manifest::capacity_axis`]) may be smaller than the
+    /// compiled maximum. Aliased residents (input name == an output name)
+    /// are updated in place and omitted from the returned outputs.
+    pub fn run_s(&mut self, name: &str, args: &[SArg]) -> Result<Vec<Value>> {
+        let spec = self.engine.manifest.artifact(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} args given, manifest wants {}",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut aliased: Vec<(usize, String)> = Vec::new();
+        let mut val_events = 0usize;
+        let mut val_bytes = 0u64;
+        for (i, (arg, io)) in args.iter().zip(&spec.inputs).enumerate() {
+            match arg {
+                SArg::Val(v) => {
+                    check_input(name, io, v, None)?;
+                    val_events += 1;
+                    val_bytes += v.byte_len() as u64;
+                }
+                SArg::Buf(b) => check_input(name, io, &b.value, None)?,
+                SArg::Res(n) => {
+                    let v = self
+                        .residents
+                        .get(*n)
+                        .ok_or_else(|| anyhow!("{name}: no resident {n:?} in session"))?;
+                    check_input(name, io, v, manifest::capacity_axis(name, &io.name))?;
+                    if spec.outputs.iter().any(|o| o.name == io.name) {
+                        aliased.push((i, (*n).to_string()));
+                    }
+                }
+            }
+        }
+        self.engine.note_upload(val_events, val_bytes);
+        self.engine.count_call(name);
+        let skip: Vec<&str> = aliased
+            .iter()
+            .map(|(i, _)| spec.inputs[*i].name.as_str())
+            .collect();
+        match &self.engine.backend {
+            Backend::Host(hb) => {
+                // take aliased residents out of the table for independent
+                // mutable access (Value moves — no copies)
+                let mut taken: Vec<(usize, String, Value)> = Vec::with_capacity(aliased.len());
+                for (i, n) in &aliased {
+                    let v = self.residents.remove(n).ok_or_else(|| {
+                        anyhow!("{name}: resident {n:?} bound to more than one in-place input")
+                    });
+                    match v {
+                        Ok(v) => taken.push((*i, n.clone(), v)),
+                        Err(e) => {
+                            // undo the removals before surfacing the error
+                            for (_, n, v) in taken {
+                                self.residents.insert(n, v);
+                            }
+                            return Err(e);
+                        }
+                    }
+                }
+                // a name used for BOTH an in-place and a read-only input
+                // would be absent from the table here; error, don't panic
+                let conflict = args.iter().enumerate().any(|(i, a)| {
+                    matches!(a, SArg::Res(n)
+                        if !taken.iter().any(|(j, _, _)| *j == i)
+                            && !self.residents.contains_key(*n))
+                });
+                if conflict {
+                    for (_, n, v) in taken {
+                        self.residents.insert(n, v);
+                    }
+                    bail!(
+                        "{name}: a resident is bound to both an in-place \
+                         and a read-only input"
+                    );
+                }
+                let inputs: Vec<Option<&Value>> = args
+                    .iter()
+                    .enumerate()
+                    .map(|(i, a)| match a {
+                        SArg::Val(v) => Some(*v),
+                        SArg::Buf(b) => Some(&b.value),
+                        SArg::Res(n) => {
+                            if taken.iter().any(|(j, _, _)| *j == i) {
+                                None
+                            } else {
+                                Some(&self.residents[*n])
+                            }
+                        }
+                    })
+                    .collect();
+                let mut inout: Vec<(usize, &mut Value)> =
+                    taken.iter_mut().map(|(i, _, v)| (*i, v)).collect();
+                let out = hb.run_s(name, spec, &inputs, &mut inout);
+                drop(inout);
+                drop(inputs);
+                // reinsert even on error so the session stays consistent
+                for (_, n, v) in taken {
+                    self.residents.insert(n, v);
+                }
+                let out = out?;
+                check_session_outputs(name, spec, &skip, &out)?;
+                Ok(out)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(pb) => {
+                let full: Vec<&Value> = args
+                    .iter()
+                    .map(|a| match a {
+                        SArg::Val(v) => *v,
+                        SArg::Buf(b) => &b.value,
+                        SArg::Res(n) => &self.residents[*n],
+                    })
+                    .collect();
+                let outs = pb.run_s(name, &full, spec)?;
+                drop(full);
+                let mut kept = Vec::new();
+                for (oi, v) in outs.into_iter().enumerate() {
+                    let oname = spec.outputs[oi].name.as_str();
+                    let alias = aliased
+                        .iter()
+                        .find(|(i, _)| spec.inputs[*i].name == oname);
+                    match alias {
+                        Some((_, n)) => {
+                            self.residents.insert(n.clone(), v);
+                        }
+                        None => kept.push(v),
+                    }
+                }
+                check_session_outputs(name, spec, &skip, &kept)?;
+                Ok(kept)
+            }
+        }
+    }
 }
 
 /// A pinned runtime buffer. Host backend: the value itself. PJRT backend:
@@ -371,5 +687,172 @@ mod tests {
         let e = Engine::open("artifacts/tiny").unwrap();
         assert!(e.warmup(&["quadform", "moe_gate_n8"]).is_ok());
         assert!(e.warmup(&["not_an_artifact"]).is_err());
+    }
+
+    fn randt(rng: &mut crate::util::rng::Pcg64, shape: &[usize]) -> crate::tensor::Tensor {
+        let n: usize = shape.iter().product();
+        crate::tensor::Tensor::from_vec(shape, (0..n).map(|_| rng.normal() * 0.1).collect())
+    }
+
+    /// Full arg list for `attn_decode_b1` (tiny preset): x, 5 weights,
+    /// kcache/vcache at capacity `s`, pos.
+    fn decode_args(s: usize, p: i32) -> Vec<Value> {
+        let mut rng = crate::util::rng::Pcg64::new(21);
+        let d = 64;
+        let mut v = vec![Value::F32(randt(&mut rng, &[1, 1, d]))];
+        v.push(Value::F32(randt(&mut rng, &[d])));
+        for _ in 0..4 {
+            v.push(Value::F32(randt(&mut rng, &[d, d])));
+        }
+        v.push(Value::F32(randt(&mut rng, &[1, 2, s, 32])));
+        v.push(Value::F32(randt(&mut rng, &[1, 2, s, 32])));
+        v.push(Value::I32(crate::tensor::ITensor::from_vec(&[1], vec![p])));
+        v
+    }
+
+    #[test]
+    fn session_inplace_decode_matches_stateless() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        let smax = e.config().max_decode_len; // 96
+        let full = decode_args(smax, 5);
+        let want = e.run("attn_decode_b1", &full).unwrap();
+
+        // session: capacity-8 residents whose prefix rows match the full
+        // caches (decode_args is deterministic, so slice the same data)
+        let (cap, hd) = (8usize, 32usize);
+        let shrink = |v: &Value| {
+            let t = v.as_f32().unwrap();
+            let mut small = vec![0.0f32; 2 * cap * hd];
+            for bh in 0..2 {
+                small[bh * cap * hd..(bh + 1) * cap * hd]
+                    .copy_from_slice(&t.data()[bh * smax * hd..bh * smax * hd + cap * hd]);
+            }
+            Value::F32(crate::tensor::Tensor::from_vec(&[1, 2, cap, hd], small))
+        };
+        let mut sess = e.session();
+        sess.alloc_resident("kc", shrink(&full[6]));
+        sess.alloc_resident("vc", shrink(&full[7]));
+        let before = e.upload_stats();
+        let out = sess
+            .run_s(
+                "attn_decode_b1",
+                &[
+                    SArg::Val(&full[0]),
+                    SArg::Val(&full[1]),
+                    SArg::Val(&full[2]),
+                    SArg::Val(&full[3]),
+                    SArg::Val(&full[4]),
+                    SArg::Val(&full[5]),
+                    SArg::Res("kc"),
+                    SArg::Res("vc"),
+                    SArg::Val(&full[8]),
+                ],
+            )
+            .unwrap();
+        // aliased residents are not returned; y matches bitwise
+        assert_eq!(out.len(), 1);
+        let y_s = out.into_iter().next().unwrap().f32().unwrap();
+        let y = want[0].clone().f32().unwrap();
+        assert_eq!(y, y_s, "in-place decode must match the stateless path bitwise");
+        // the append landed in the resident, matching the stateless cache
+        let kc = sess.download("kc").unwrap().f32().unwrap();
+        let kc_want = want[1].clone().f32().unwrap();
+        for bh in 0..2 {
+            assert_eq!(
+                &kc.data()[(bh * cap + 5) * hd..(bh * cap + 6) * hd],
+                &kc_want.data()[(bh * smax + 5) * hd..(bh * smax + 6) * hd],
+            );
+        }
+        // and the caches were never re-uploaded: only the 7 Val args moved
+        let after = e.upload_stats();
+        let val_bytes: u64 = [0, 1, 2, 3, 4, 5, 8]
+            .iter()
+            .map(|&i| full[i].byte_len() as u64)
+            .sum();
+        assert_eq!(after.1 - before.1, val_bytes, "KV bytes must not move");
+    }
+
+    #[test]
+    fn run_s_validates_residents_like_run_b() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        let smax = e.config().max_decode_len;
+        let full = decode_args(smax, 3);
+        let call = |sess: &mut Session<'_>| {
+            let a = [
+                SArg::Val(&full[0]),
+                SArg::Val(&full[1]),
+                SArg::Val(&full[2]),
+                SArg::Val(&full[3]),
+                SArg::Val(&full[4]),
+                SArg::Val(&full[5]),
+                SArg::Res("kc"),
+                SArg::Res("vc"),
+                SArg::Val(&full[8]),
+            ];
+            sess.run_s("attn_decode_b1", &a).map(|_| ())
+        };
+        // missing resident
+        let mut sess = e.session();
+        let err = call(&mut sess).unwrap_err().to_string();
+        assert!(err.contains("no resident"), "got: {err}");
+        // capacity above the compiled maximum is rejected
+        sess.alloc_resident("kc", Value::F32(crate::tensor::Tensor::zeros(&[1, 2, smax + 8, 32])));
+        sess.alloc_resident("vc", Value::F32(crate::tensor::Tensor::zeros(&[1, 2, smax + 8, 32])));
+        let err = call(&mut sess).unwrap_err().to_string();
+        assert!(err.contains("capacity"), "got: {err}");
+        // non-capacity dim mismatch is rejected (head dim 16 != 32)
+        sess.alloc_resident("kc", Value::F32(crate::tensor::Tensor::zeros(&[1, 2, 8, 16])));
+        sess.alloc_resident("vc", Value::F32(crate::tensor::Tensor::zeros(&[1, 2, 8, 16])));
+        assert!(call(&mut sess).is_err());
+        // wrong arity
+        let err = sess.run_s("attn_decode_b1", &[]).unwrap_err().to_string();
+        assert!(err.contains("manifest wants"), "got: {err}");
+        // capacity at or below the maximum passes (pos=3 < 8)
+        sess.alloc_resident("kc", Value::F32(crate::tensor::Tensor::zeros(&[1, 2, 8, 32])));
+        sess.alloc_resident("vc", Value::F32(crate::tensor::Tensor::zeros(&[1, 2, 8, 32])));
+        call(&mut sess).unwrap();
+    }
+
+    #[test]
+    fn run_s_without_aliasing_matches_run() {
+        // quadform has no input/output name overlap: residents are read
+        // in place and every output is returned, identical to `run`.
+        let e = Engine::open("artifacts/tiny").unwrap();
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        let wd = Value::F32(randt(&mut rng, &[64, 32]));
+        let a = randt(&mut rng, &[64, 64]);
+        let g = Value::F32(crate::tensor::matmul_tn(&a, &a));
+        let want = e.run("quadform", &[wd.clone(), g.clone()]).unwrap();
+        let mut sess = e.session();
+        sess.alloc_resident("wd", wd);
+        let out = sess.run_s("quadform", &[SArg::Res("wd"), SArg::Val(&g)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            want[0].clone().f32().unwrap(),
+            out[0].clone().f32().unwrap(),
+        );
+        // resident untouched by the non-aliased call
+        assert_eq!(sess.resident_shape("wd"), Some(&[64usize, 32][..]));
+        sess.clear();
+        assert!(!sess.has_resident("wd"));
+    }
+
+    #[test]
+    fn upload_stats_price_run_not_run_b() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        let wd = Value::F32(crate::tensor::Tensor::zeros(&[64, 32]));
+        let g = Value::F32(crate::tensor::Tensor::zeros(&[64, 64]));
+        let (e0, b0) = e.upload_stats();
+        e.run("quadform", &[wd.clone(), g.clone()]).unwrap();
+        let (e1, b1) = e.upload_stats();
+        assert_eq!(e1 - e0, 2);
+        assert_eq!(b1 - b0, ((64 * 32 + 64 * 64) * 4) as u64);
+        let wd_b = e.upload(wd).unwrap();
+        let g_b = e.upload(g).unwrap();
+        let (_, b2) = e.upload_stats();
+        assert_eq!(b2 - b1, ((64 * 32 + 64 * 64) * 4) as u64);
+        e.run_b("quadform", &[&wd_b.buf, &g_b.buf]).unwrap();
+        let (_, b3) = e.upload_stats();
+        assert_eq!(b3, b2, "run_b must move zero bytes");
     }
 }

@@ -101,6 +101,20 @@ impl PjrtBackend {
             .map(|(lit, io)| xla_literal_to_value(&lit, io))
             .collect()
     }
+
+    /// Session stub: execute a [`crate::runtime::Session::run_s`] call on
+    /// the literal path. A real PJRT session would keep one donated
+    /// `PjRtBuffer` per resident and declare input/output aliasing at
+    /// compile time (`HloInputOutputAliasConfig`) — that is what makes the
+    /// in-place KV append free on device, and the `Session` trait boundary
+    /// is already shaped for it: residents are named, capacity-sized, and
+    /// never round-trip through the caller. Until `DeviceBuffer` carries a
+    /// real `PjRtBuffer` (see module docs) this marshals every input per
+    /// call and returns every output; the engine-level session writes the
+    /// aliased outputs back into its resident table.
+    pub fn run_s(&self, name: &str, inputs: &[&Value], spec: &ArtifactSpec) -> Result<Vec<Value>> {
+        self.run(name, inputs, spec)
+    }
 }
 
 fn host_to_xla_literal(v: &Value) -> Result<xla::Literal> {

@@ -60,6 +60,21 @@ impl Value {
         }
     }
 
+    /// Mutably borrow the f32 tensor (the session in-place update path:
+    /// resident KV caches are appended to without a round trip).
+    pub fn as_f32_mut(&mut self) -> Result<&mut Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    /// Marshalled size in bytes (both dtypes are 4-byte scalars). Upload
+    /// accounting uses this to price host->device traffic.
+    pub fn byte_len(&self) -> usize {
+        self.shape().iter().product::<usize>() * 4
+    }
+
     pub fn scalar_f32(v: f32) -> Value {
         Value::F32(Tensor::scalar(v))
     }
@@ -202,6 +217,16 @@ mod tests {
         let io = IoSpec { name: "s".into(), shape: vec![], dtype: Dtype::F32 };
         let v = Value::from_literal(&lit, &io).unwrap().f32().unwrap();
         assert_eq!(v.item(), 2.5);
+    }
+
+    #[test]
+    fn byte_len_and_mut_borrow() {
+        let mut v = Value::F32(Tensor::zeros(&[2, 3]));
+        assert_eq!(v.byte_len(), 24);
+        assert_eq!(Value::scalar_i32(7).byte_len(), 4);
+        v.as_f32_mut().unwrap().data_mut()[0] = 5.0;
+        assert_eq!(v.as_f32().unwrap().data()[0], 5.0);
+        assert!(Value::scalar_i32(0).as_f32_mut().is_err());
     }
 
     #[test]

@@ -1,18 +1,21 @@
 //! Coordinator correctness: the per-layer serving composition (rust routing
 //! + width-bucketed expert executables) must reproduce the monolithic
-//! `forward_masked` artifact, unpruned and pruned; and pruned serving must
-//! equal masked evaluation.
+//! `forward_masked` artifact, unpruned and pruned; pruned serving must
+//! equal masked evaluation; and the engine-resident decode session must be
+//! bitwise identical to the legacy re-upload path — across thread counts —
+//! while moving zero KV-cache bytes per step.
 
 use std::sync::{Mutex, OnceLock};
 
-use heapr::coordinator::Server;
+use heapr::coordinator::{Residency, Server};
 use heapr::data::corpus::Grammar;
 use heapr::data::sampler::Split;
 use heapr::data::tokenizer::{ByteTokenizer, PAD};
-use heapr::heapr::{heapr_scores, PrunePlan, Scope};
+use heapr::heapr::{PrunePlan, Scope};
 use heapr::model::store::ParamStore;
 use heapr::runtime::{Engine, Value};
 use heapr::tensor::{ITensor, Tensor};
+use heapr::util::pool;
 
 const DIR: &str = "artifacts/tiny";
 
@@ -81,7 +84,8 @@ fn unpruned_prefill_matches_forward_masked() {
     let want = reference_logits(&ctx, &prompt, &ones);
 
     let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
-    let (logits, _caches) = server.prefill(&[prompt]).unwrap();
+    let (logits, state) = server.prefill(&[prompt], 1).unwrap();
+    state.release();
     assert_close(logits.data(), &want, 2e-3, "unpruned prefill");
 }
 
@@ -103,13 +107,14 @@ fn pruned_prefill_matches_masked_eval() {
     let want = reference_logits(&ctx, &prompt, &plan.mask());
 
     let mut server = Server::new(&ctx.engine, &ctx.params, Some(&plan)).unwrap();
-    let (logits, _caches) = server.prefill(&[prompt]).unwrap();
+    let (logits, _state) = server.prefill(&[prompt], 1).unwrap();
     assert_close(logits.data(), &want, 2e-3, "pruned prefill vs masked eval");
 }
 
 #[test]
 fn decode_extends_prefill_consistently() {
-    // prefill(T tokens) + decode(token T) must equal prefill(T+1 tokens)
+    // prefill(T tokens) + decode(token T) must equal prefill(T+1 tokens),
+    // on both decode residencies
     let ctx = shared().lock().unwrap();
     let cfg = ctx.engine.config().clone();
     let full = test_prompt(cfg.seq_len);
@@ -117,14 +122,207 @@ fn decode_extends_prefill_consistently() {
 
     let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
     // reference: prefill over t_half+1 tokens, logits at last position
-    let (want, _) = server.prefill(&[full[..t_half + 1].to_vec()]).unwrap();
+    let (want, _) = server.prefill(&[full[..t_half + 1].to_vec()], 1).unwrap();
 
-    // prefill t_half, then decode token at position t_half
-    let (_l, mut caches) = server.prefill(&[full[..t_half].to_vec()]).unwrap();
-    let got = server
-        .decode_step(&[full[t_half]], &[t_half], &mut caches, 1)
-        .unwrap();
-    assert_close(got.data(), want.data(), 2e-3, "decode vs prefill");
+    for residency in [Residency::Resident, Residency::Legacy] {
+        server.set_residency(residency);
+        // prefill t_half, then decode token at position t_half
+        let (_l, mut state) = server.prefill(&[full[..t_half].to_vec()], 4).unwrap();
+        let got = server
+            .decode_step(&[full[t_half]], &[t_half], &mut state)
+            .unwrap();
+        assert_close(
+            got.data(),
+            want.data(),
+            2e-3,
+            &format!("decode vs prefill ({residency:?})"),
+        );
+    }
+}
+
+#[test]
+fn resident_decode_is_bitwise_identical_to_legacy_across_threads() {
+    let ctx = shared().lock().unwrap();
+    let prompt = test_prompt(16);
+    let mk = |id| heapr::coordinator::Request::new(id, prompt.clone(), 8);
+    let reqs: Vec<_> = (0..3).map(mk).collect();
+
+    // reference: legacy caches on the serial pool
+    pool::set_threads(1);
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    server.set_residency(Residency::Legacy);
+    let want: Vec<Vec<i32>> = server
+        .serve_batch(&reqs)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.tokens)
+        .collect();
+
+    for threads in [1usize, 4, pool::default_threads()] {
+        pool::set_threads(threads);
+        for residency in [Residency::Resident, Residency::Legacy] {
+            let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+            server.set_residency(residency);
+            let got: Vec<Vec<i32>> = server
+                .serve_batch(&reqs)
+                .unwrap()
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect();
+            assert_eq!(
+                got, want,
+                "tokens diverged ({residency:?}, {threads} threads)"
+            );
+        }
+    }
+    pool::set_threads(pool::default_threads());
+
+    // logits too, stepwise and bitwise: run both residencies in lockstep
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    server.set_residency(Residency::Legacy);
+    let (l0, mut s0) = server.prefill(&[prompt.clone()], 6).unwrap();
+    server.set_residency(Residency::Resident);
+    let (l1, mut s1) = server.prefill(&[prompt.clone()], 6).unwrap();
+    assert_eq!(l0, l1, "prefill logits must match bitwise");
+    let mut next = vec![l0.data()[0..ctx.engine.config().vocab]
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as i32];
+    let mut pos = prompt.len();
+    for _ in 0..4 {
+        // decode_step dispatches on the state's residency, not the
+        // server's — the two states advance through the same server
+        let a = server.decode_step(&next, &[pos], &mut s0).unwrap();
+        let b = server.decode_step(&next, &[pos], &mut s1).unwrap();
+        assert_eq!(a, b, "decode logits must match bitwise at pos {pos}");
+        next = vec![a
+            .data()
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .unwrap()
+            .0 as i32];
+        pos += 1;
+    }
+}
+
+#[test]
+fn resident_decode_uploads_zero_kv_bytes() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let prompt = test_prompt(16);
+    let (h, hd, smax) = (cfg.n_heads, cfg.d_head, cfg.max_decode_len);
+
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    server.set_residency(Residency::Resident);
+    let (_l, mut state) = server.prefill(&[prompt.clone()], 4).unwrap();
+    // resident caches are right-sized: prompt + max_new, not max_decode_len
+    assert_eq!(state.capacity(), prompt.len() + 4);
+    let (kc, _vc) = state.kv_cache(0).unwrap();
+    assert_eq!(kc.shape(), &[1, h, prompt.len() + 4, hd]);
+
+    let before = ctx.engine.upload_stats().1;
+    server.decode_step(&[5], &[prompt.len()], &mut state).unwrap();
+    let session_delta = ctx.engine.upload_stats().1 - before;
+    assert_eq!(
+        server.metrics.decode_kv_upload_bytes, 0,
+        "session decode must never re-upload a KV cache"
+    );
+    state.release();
+
+    server.set_residency(Residency::Legacy);
+    let (_l, mut state) = server.prefill(&[prompt], 4).unwrap();
+    assert_eq!(state.capacity(), smax);
+    let before = ctx.engine.upload_stats().1;
+    server.decode_step(&[5], &[16], &mut state).unwrap();
+    let legacy_delta = ctx.engine.upload_stats().1 - before;
+    // per-step KV traffic of the legacy path: K and V at full capacity,
+    // every layer. The session step must (a) never touch it and (b) move
+    // less than even one step's worth of it in total.
+    let kv_bytes = (2 * cfg.n_layers * h * smax * hd * 4) as u64;
+    assert_eq!(server.metrics.decode_kv_upload_bytes, kv_bytes);
+    assert!(
+        legacy_delta >= kv_bytes,
+        "legacy step moved {legacy_delta} B < {kv_bytes} B of KV"
+    );
+    assert!(
+        session_delta < kv_bytes,
+        "session step moved {session_delta} B, more than the {kv_bytes} B \
+         of KV traffic it is supposed to eliminate"
+    );
+}
+
+#[test]
+fn full_window_prompt_batched_with_short_request_serves() {
+    // a prompt that fills the decode window is done after its first
+    // token, but its stale position (== capacity) must not sink the
+    // batch on the right-sized resident path — and must not perturb the
+    // short request's generations
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let long = test_prompt(cfg.seq_len); // len == seq_len == max_pos
+    let short = long[..8].to_vec();
+    let mk = |id, p: &[i32], n| heapr::coordinator::Request::new(id, p.to_vec(), n);
+
+    for residency in [Residency::Resident, Residency::Legacy] {
+        let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+        server.set_residency(residency);
+        let solo = server.serve_batch(&[mk(0, &short, 4)]).unwrap();
+        let mixed = server
+            .serve_batch(&[mk(1, &long, 2), mk(2, &short, 4)])
+            .unwrap();
+        assert_eq!(mixed.len(), 2, "{residency:?}");
+        assert!(!mixed[0].tokens.is_empty());
+        assert_eq!(
+            mixed[1].tokens, solo[0].tokens,
+            "short request diverged next to a full-window prompt ({residency:?})"
+        );
+    }
+}
+
+#[test]
+fn prefill_capacity_is_clamped_to_prompt_and_window() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let max_pos = cfg.seq_len.min(cfg.max_decode_len);
+    let prompt = test_prompt(16);
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    server.set_residency(Residency::Resident);
+    // explicit capacity honored
+    let (_, s) = server.prefill_with_capacity(&[prompt.clone()], 20).unwrap();
+    assert_eq!(s.capacity(), 20);
+    // never below the prompt (prefill rows must fit)
+    let (_, s) = server.prefill_with_capacity(&[prompt.clone()], 4).unwrap();
+    assert_eq!(s.capacity(), 16);
+    // never above the decode window
+    let (_, s) = server.prefill_with_capacity(&[prompt], 10_000).unwrap();
+    assert_eq!(s.capacity(), max_pos);
+}
+
+#[test]
+fn sessions_do_not_leak_state_between_requests() {
+    // one server serving two different batches back to back must produce
+    // the same generations as a fresh server per batch
+    let ctx = shared().lock().unwrap();
+    let long = test_prompt(16);
+    let mk = |id, p: &[i32], n| heapr::coordinator::Request::new(id, p.to_vec(), n);
+
+    let mut reused = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    reused.set_residency(Residency::Resident);
+    let first: Vec<_> = (0..4).map(|i| mk(i, &long, 6)).collect();
+    reused.serve_batch(&first).unwrap();
+    let second: Vec<_> = (0..2).map(|i| mk(10 + i, &long[4..12], 5)).collect();
+    let got = reused.serve_batch(&second).unwrap();
+
+    let mut fresh = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    fresh.set_residency(Residency::Resident);
+    let want = fresh.serve_batch(&second).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.tokens, w.tokens, "req {} saw stale session state", g.id);
+    }
 }
 
 #[test]
