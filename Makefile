@@ -37,6 +37,10 @@ verify: fmt clippy tier1
 artifacts:
 	cd python && python -m compile.aot --preset $(PRESET) --out-dir ../$(ARTIFACTS)
 
+# Perf sweeps. bench_runtime sweeps the GEMM `kernel` axis (naive vs
+# blocked) and refreshes the checked-in BENCH_kernels.json summary at the
+# repo root so the kernel-perf trajectory is tracked across PRs;
+# bench_serve adds the same axis to end-to-end decode throughput.
 bench:
 	cargo bench --bench bench_runtime
 	cargo bench --bench bench_serve

@@ -1,22 +1,80 @@
-//! Runtime micro-benchmarks: dispatch overhead, literal marshalling, and
-//! the quadform/gate artifacts across the `HEAPR_THREADS` axis. Establishes
-//! the per-call floor the coordinator's costs sit on (EXPERIMENTS.md §Perf).
+//! Runtime micro-benchmarks: the GEMM `kernel` axis (naive vs blocked) on
+//! the large matmul shapes the host backend is bound by, plus dispatch
+//! overhead, literal marshalling, and the quadform/gate artifacts across
+//! the `HEAPR_THREADS` axis. Establishes the per-call floor the
+//! coordinator's costs sit on (EXPERIMENTS.md §Perf) and writes the
+//! cross-PR `BENCH_kernels.json` summary at the repo root.
 
 use heapr::bench::Bench;
 use heapr::runtime::{Engine, Value};
+use heapr::tensor::gemm::{self, Layout};
 use heapr::tensor::Tensor;
+use heapr::util::json::Json;
 use heapr::util::pool;
 use heapr::util::rng::Pcg64;
 
 const THREAD_AXIS: &[usize] = &[1, 2, 4];
+
+/// Large GEMM shapes (label, layout, m, k, n) mirroring the host
+/// backend's hot calls: the expert FFN up-projection, the attention
+/// A·V product, and gradient accumulation.
+const GEMM_SHAPES: &[(&str, Layout, usize, usize, usize)] = &[
+    ("tn/expert-ffn", Layout::TN, 512, 256, 512),
+    ("nn/attn-av", Layout::NN, 512, 512, 64),
+    ("at/grad-accum", Layout::AT, 512, 256, 512),
+];
+
+type GemmFn = fn(Layout, &[f32], &[f32], &mut [f32], usize, usize, usize);
 
 fn main() {
     let engine = Engine::open("artifacts/tiny").expect("open tiny preset");
     let cfg = engine.config().clone();
     let (d, di) = (cfg.d_model, cfg.d_inter);
     let mut rng = Pcg64::new(1);
+    // default (not quick) floors: the kernel-axis means feed the
+    // checked-in BENCH_kernels.json that later PRs diff against, so
+    // run-to-run noise must stay below the deltas being tracked
     let mut bench = Bench::default();
 
+    // ---------------------------------------------------- kernel axis --
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    for &(label, layout, m, k, n) in GEMM_SHAPES {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+        for &threads in THREAD_AXIS {
+            pool::set_threads(threads);
+            let mut mean_us = [0.0f64; 2];
+            for (ki, (kname, kfn)) in
+                [("naive", gemm::naive as GemmFn), ("blocked", gemm::blocked as GemmFn)]
+                    .into_iter()
+                    .enumerate()
+            {
+                let mut out = vec![0.0f32; m * n];
+                let r = bench.run(
+                    &format!("gemm/{label} {m}x{k}x{n} kernel={kname} threads={threads}"),
+                    || {
+                        kfn(layout, &a, &b, &mut out, m, k, n);
+                        std::hint::black_box(&out);
+                    },
+                    Some((gflop, "GFLOP/s")),
+                );
+                mean_us[ki] = r.mean_us;
+            }
+            let speedup = mean_us[0] / mean_us[1];
+            println!("    blocked vs naive ({label}, threads={threads}): {speedup:.2}x");
+            kernel_rows.push(Json::obj(vec![
+                ("shape", Json::s(format!("{label} {m}x{k}x{n}"))),
+                ("threads", Json::n(threads as f64)),
+                ("naive_us", Json::n(mean_us[0])),
+                ("blocked_us", Json::n(mean_us[1])),
+                ("speedup", Json::n(speedup)),
+            ]));
+        }
+    }
+    pool::set_threads(pool::default_threads());
+
+    // ---------------------------------------- dispatch + artifact floor --
     // literal marshalling round-trip cost (thread-independent)
     let big = Tensor::from_vec(&[256, 256], (0..256 * 256).map(|_| rng.normal()).collect());
     bench.run("literal/to_literal 256x256", || {
@@ -59,4 +117,13 @@ fn main() {
     pool::set_threads(pool::default_threads());
 
     bench.save("runs/bench/runtime.json").unwrap();
+
+    // perf trajectory across PRs: the kernel-axis summary, checked in
+    let summary = Json::obj(vec![
+        ("generated_by", Json::s("cargo bench --bench bench_runtime")),
+        ("bench_mode", Json::s("default (min 10 iters / 0.5s / 3 warmup)")),
+        ("kernel_axis", Json::Arr(kernel_rows)),
+    ]);
+    std::fs::write("BENCH_kernels.json", summary.to_string()).unwrap();
+    println!("wrote BENCH_kernels.json");
 }

@@ -1,15 +1,18 @@
 //! End-to-end serving throughput, dense vs HEAPr-pruned (Appendix C shape)
-//! across the `HEAPR_THREADS` axis and the decode-residency axis: the
-//! headline "pruning buys real latency, threads buy real throughput, and
-//! engine-resident KV sessions stop paying the marshalling tax"
+//! across the `HEAPR_THREADS` axis, the decode-residency axis and the
+//! GEMM `kernel` axis: the headline "pruning buys real latency, threads
+//! buy real throughput, engine-resident KV sessions stop paying the
+//! marshalling tax, and the blocked kernels buy real decode steps/s"
 //! measurement.
 //!
-//! Per (threads, ratio, residency) cell one server is built and one batch
-//! is served to warm the executables, then `serve_batch` is timed and the
-//! per-decode-step upload traffic is reported next to tokens/s. The final
-//! lines report the dense-serving speedup of the widest thread count over
-//! the serial pool and of the session path over the legacy re-upload path
-//! — the §Perf acceptance numbers.
+//! Per (kernel, threads, ratio, residency) cell one server is built and
+//! one batch is served to warm the executables, then `serve_batch` is
+//! timed and the per-decode-step upload traffic is reported next to
+//! tokens/s. The naive kernel is only measured at the dense ratio — it
+//! exists as the before/after baseline, not as a full grid. The final
+//! lines report the dense-serving speedups: widest thread count over the
+//! serial pool, session over legacy, and blocked over naive — the §Perf
+//! acceptance numbers.
 
 use heapr::bench::Bench;
 use heapr::coordinator::{Request, Residency, Server};
@@ -20,6 +23,7 @@ use heapr::heapr::PrunePlan;
 use heapr::heapr::Scope;
 use heapr::model::store::ParamStore;
 use heapr::runtime::Engine;
+use heapr::tensor::gemm;
 use heapr::tensor::Tensor;
 use heapr::util::pool;
 
@@ -27,6 +31,8 @@ const THREAD_AXIS: &[usize] = &[1, 2, 4];
 const RATIOS: &[f64] = &[0.0, 0.25, 0.5, 0.75];
 const RESIDENCY_AXIS: &[(Residency, &str)] =
     &[(Residency::Resident, "session"), (Residency::Legacy, "legacy")];
+const KERNEL_AXIS: &[(gemm::Kernel, &str)] =
+    &[(gemm::Kernel::Blocked, "blocked"), (gemm::Kernel::Naive, "naive")];
 
 fn main() {
     let engine = Engine::open("artifacts/tiny").expect("open tiny preset");
@@ -51,59 +57,73 @@ fn main() {
     };
     let tok_per_run = (bb * new_tokens) as f64;
 
-    // (threads, tok/s) at ratio 0.0, per residency label
-    let mut dense_tps: Vec<(usize, &str, f64)> = Vec::new();
-    for &threads in THREAD_AXIS {
-        pool::set_threads(threads);
-        for &ratio in RATIOS {
-            let plan = if ratio == 0.0 {
-                None
-            } else {
-                Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
-                    .bucket_aligned(&scores, cfg.blk_i))
-            };
-            for &(residency, label) in RESIDENCY_AXIS {
-                let mut server = Server::new(&engine, &params, plan.as_ref()).unwrap();
-                server.set_residency(residency);
-                // warm the executables once
-                server.serve_batch(&mk_requests()).unwrap();
-                let r = bench.run(
-                    &format!(
-                        "serve b{bb} gen{new_tokens} ratio={ratio:.2} \
-                         threads={threads} {label}"
-                    ),
-                    || {
-                        let reqs = mk_requests();
-                        std::hint::black_box(server.serve_batch(&reqs).unwrap());
-                    },
-                    Some((tok_per_run, "tok/s")),
-                );
-                println!(
-                    "    upload {:>10.0} B/step over {} decode steps ({label})",
-                    server.metrics.upload_bytes_per_step(),
-                    server.metrics.decode_steps,
-                );
-                if ratio == 0.0 {
-                    dense_tps.push((threads, label, r.throughput.unwrap().0));
+    // (kernel, threads, tok/s) at ratio 0.0, per residency label
+    let mut dense_tps: Vec<(&str, usize, &str, f64)> = Vec::new();
+    for &(kernel, klabel) in KERNEL_AXIS {
+        gemm::set_kernel(kernel);
+        for &threads in THREAD_AXIS {
+            pool::set_threads(threads);
+            for &ratio in RATIOS {
+                // the naive baseline only runs the dense cells
+                if kernel == gemm::Kernel::Naive && ratio != 0.0 {
+                    continue;
+                }
+                let plan = if ratio == 0.0 {
+                    None
+                } else {
+                    Some(PrunePlan::from_scores(&scores, ratio, Scope::Global)
+                        .bucket_aligned(&scores, cfg.blk_i))
+                };
+                for &(residency, label) in RESIDENCY_AXIS {
+                    let mut server = Server::new(&engine, &params, plan.as_ref()).unwrap();
+                    server.set_residency(residency);
+                    // warm the executables once
+                    server.serve_batch(&mk_requests()).unwrap();
+                    let r = bench.run(
+                        &format!(
+                            "serve b{bb} gen{new_tokens} ratio={ratio:.2} \
+                             threads={threads} {label} kernel={klabel}"
+                        ),
+                        || {
+                            let reqs = mk_requests();
+                            std::hint::black_box(server.serve_batch(&reqs).unwrap());
+                        },
+                        Some((tok_per_run, "tok/s")),
+                    );
+                    println!(
+                        "    upload {:>10.0} B/step over {} decode steps ({label})",
+                        server.metrics.upload_bytes_per_step(),
+                        server.metrics.decode_steps,
+                    );
+                    if ratio == 0.0 {
+                        dense_tps.push((klabel, threads, label, r.throughput.unwrap().0));
+                    }
                 }
             }
+            let _ = ByteTokenizer; // keep import for doc symmetry
         }
-        let _ = ByteTokenizer; // keep import for doc symmetry
     }
     pool::set_threads(pool::default_threads());
+    gemm::set_kernel(gemm::Kernel::Blocked); // documented default
 
-    let find = |threads: usize, label: &str| {
+    let find = |kernel: &str, threads: usize, label: &str| {
         dense_tps
             .iter()
-            .find(|(t, l, _)| *t == threads && *l == label)
-            .map(|(_, _, tps)| *tps)
+            .find(|(kl, t, l, _)| *kl == kernel && *t == threads && *l == label)
+            .map(|(_, _, _, tps)| *tps)
     };
     let (t0, t1) = (THREAD_AXIS[0], *THREAD_AXIS.last().unwrap());
-    if let (Some(a), Some(b)) = (find(t0, "session"), find(t1, "session")) {
+    if let (Some(a), Some(b)) = (find("blocked", t0, "session"), find("blocked", t1, "session")) {
         println!("serve speedup (dense, session): threads={t1} vs threads={t0} -> {:.2}x", b / a);
     }
-    if let (Some(l), Some(s)) = (find(t1, "legacy"), find(t1, "session")) {
+    if let (Some(l), Some(s)) = (find("blocked", t1, "legacy"), find("blocked", t1, "session")) {
         println!("serve speedup (dense, threads={t1}): session vs legacy -> {:.2}x", s / l);
+    }
+    if let (Some(nv), Some(bl)) = (find("naive", t1, "session"), find("blocked", t1, "session")) {
+        println!(
+            "serve speedup (dense, session, threads={t1}): blocked vs naive -> {:.2}x",
+            bl / nv
+        );
     }
     bench.save("runs/bench/serve.json").unwrap();
 }

@@ -796,12 +796,15 @@ impl<'e> Server<'e> {
     }
 }
 
+/// Greedy token pick. Total and panic-free on NaN logits: a NaN never
+/// beats a finite logit, so one poisoned lane cannot take down the
+/// serving process (regression-tested below).
 fn argmax_row(logits: &Tensor, row: usize) -> i32 {
     let v = logits.shape()[1];
     let xs = &logits.data()[row * v..(row + 1) * v];
     xs.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| crate::util::cmp::f32_nan_first(*a.1, *b.1))
         .unwrap()
         .0 as i32
 }
@@ -834,6 +837,15 @@ mod tests {
         let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0]);
         assert_eq!(argmax_row(&t, 0), 1);
         assert_eq!(argmax_row(&t, 1), 0);
+    }
+
+    #[test]
+    fn argmax_row_survives_nan_logits() {
+        // regression: a single NaN logit used to panic the serving loop
+        let t = Tensor::from_vec(&[2, 3], vec![f32::NAN, 0.9, 0.2, f32::NAN, f32::NAN, f32::NAN]);
+        assert_eq!(argmax_row(&t, 0), 1, "NaN must not beat a number");
+        let all_nan = argmax_row(&t, 1); // still a valid index, no panic
+        assert!((0..3).contains(&all_nan));
     }
 
     #[test]

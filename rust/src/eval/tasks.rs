@@ -98,10 +98,12 @@ pub fn eval_task(
     let mut correct = 0usize;
     for (i, it) in items.iter().enumerate() {
         let s = &scores[i * it.choices.len()..(i + 1) * it.choices.len()];
+        // NaN-safe: a NaN likelihood never wins the argmax and never
+        // panics the experiment process
         let best = s
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| crate::util::cmp::f64_nan_first(*a.1, *b.1))
             .unwrap()
             .0;
         if best == it.correct {

@@ -5,6 +5,7 @@ use anyhow::Result;
 use crate::model::store::ParamStore;
 use crate::model::WidthProfile;
 use crate::tensor::{argsort, gather0, gather_cols, Tensor};
+use crate::util::cmp::f32_nan_last_desc;
 
 /// Ranking scope (Table 2 ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -141,8 +142,10 @@ impl PrunePlan {
                 let kept: std::collections::HashSet<usize> = k.iter().copied().collect();
                 let mut cand: Vec<usize> =
                     (0..di).filter(|x| !kept.contains(x)).collect();
+                // best score first; NaN scores order last (never re-added
+                // ahead of a real score) and cannot panic the ranking
                 cand.sort_by(|&a, &b| {
-                    scores.at(&[li, ei, b]).partial_cmp(&scores.at(&[li, ei, a])).unwrap()
+                    f32_nan_last_desc(scores.at(&[li, ei, a]), scores.at(&[li, ei, b]))
                 });
                 k.extend(cand.into_iter().take(target - k.len()));
                 k.sort_unstable();
@@ -275,6 +278,26 @@ mod tests {
         for k in &plan2.keep[0][0] {
             assert!(aligned2.keep[0][0].contains(k));
         }
+    }
+
+    #[test]
+    fn nan_scores_rank_last_and_never_panic() {
+        // a NaN importance score (upstream numerical accident) used to
+        // panic the ranking via partial_cmp().unwrap(); now it orders
+        // last everywhere: sorted after every number in the prune order
+        // (so it is never pruned ahead of a real low score) and never
+        // re-added by bucket alignment ahead of a real score
+        let mut s = scores(1, 2, 8, 9);
+        s.set(&[0, 0, 3], f32::NAN);
+        s.set(&[0, 1, 5], f32::NAN);
+        for scope in [Scope::Global, Scope::Layerwise] {
+            let plan = PrunePlan::from_scores(&s, 0.25, scope);
+            assert!(plan.keep[0][0].contains(&3), "NaN ordered last => kept");
+            assert!(plan.keep[0][1].contains(&5), "NaN ordered last => kept");
+        }
+        let plan = PrunePlan::from_scores(&s, 0.5, Scope::Global);
+        let aligned = plan.bucket_aligned(&s, 4); // must not panic
+        assert!(aligned.pruned_ratio() <= plan.pruned_ratio());
     }
 
     #[test]

@@ -13,11 +13,16 @@
 //! * `quadform` and the serving sub-graphs (`attn_prefill_b*`,
 //!   `attn_decode_b*`, `moe_gate_n*`, `lm_head_n*`, `expert_n*_w*`).
 //!
-//! Heavy matmuls route through the pool-parallel `tensor::ops` kernels,
-//! and attention — prefill forward, training backward and the decode
-//! append+attend — fans (batch, head) pairs out over the pool, so
-//! `HEAPR_THREADS` scales the whole pipeline; results are bitwise
-//! identical for every thread count (row-disjoint writes only).
+//! Heavy matmuls route through the [`crate::tensor::gemm`] microkernel
+//! subsystem (cache-blocked + packed by default; `HEAPR_KERNEL=naive`
+//! restores the historical triple loops), and attention — prefill
+//! forward, training backward and the decode append+attend — fans
+//! (batch, head) pairs out over the pool; the GEMMs nested under those
+//! worker lanes subdivide further via the pool's caller-helps scheduler.
+//! `HEAPR_THREADS` scales the whole pipeline and results are bitwise
+//! identical for every thread count (row-disjoint writes only). The
+//! decode score loop shares the GEMM kernel dispatch via
+//! [`crate::tensor::gemm::dot_k`].
 //!
 //! [`HostBackend::run_s`] is the session entry point: resident buffers
 //! aliased to same-named outputs (the decode KV caches) are mutated in
@@ -30,7 +35,9 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::ModelConfig;
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::value::Value;
-use crate::tensor::{matmul_at, matmul_nn, matmul_tn, rmsnorm, softmax, ITensor, Tensor};
+use crate::tensor::{
+    gather0, gemm, matmul_at, matmul_nn, matmul_tn, rmsnorm, softmax, ITensor, Tensor,
+};
 use crate::util::pool;
 use crate::util::pool::RowsPtr;
 
@@ -647,45 +654,72 @@ impl HostBackend {
 
             // per-expert backward, fanned out over the pool; each returns
             // (dxn2 contribution, dgate column, optional [dwg,dwu,dwd]).
+            // Only routed tokens (gate > 0) carry gradient through an
+            // expert — every unrouted row of dout_e is an exact zero and
+            // the GEMM layer no longer skips zeros — so the whole chain
+            // runs on gathered [routed, ·] matrices and the dxn2/dgate
+            // results scatter back (same pattern as calib_pass1). Entries
+            // of dgate for unrouted rows are only ever read multiplied by
+            // a zero routing weight, so zeroing them is grad-equivalent.
+            // NaN gates count as routed: a poisoned routing weight must
+            // keep poisoning its gradients, not be filtered into silent
+            // zeros (the same no-silencing contract the kernels pin).
             let parts: Vec<(Tensor, Vec<f32>, Option<[Tensor; 3]>)> =
                 pool::par_map(e, |ei| {
                     let me = &mask_l[ei * di..(ei + 1) * di];
-                    let gate_col: Vec<f32> =
-                        (0..n).map(|r| lc.gates.data()[r * e + ei]).collect();
-                    let dout_e = row_scale(&dy, &gate_col);
-                    let out_e = &lc.out_e[ei];
-                    let dgate: Vec<f32> = (0..n)
-                        .map(|r| {
-                            let a = &dy.data()[r * d..(r + 1) * d];
-                            let o = &out_e.data()[r * d..(r + 1) * d];
-                            a.iter().zip(o).map(|(x, y)| x * y).sum()
+                    let routed: Vec<usize> = (0..n)
+                        .filter(|&r| {
+                            let g = lc.gates.data()[r * e + ei];
+                            g > 0.0 || g.is_nan()
                         })
                         .collect();
+                    let nr = routed.len();
+                    if nr == 0 {
+                        let dws = need_pg.then(|| {
+                            [
+                                Tensor::zeros(&[di, d]),
+                                Tensor::zeros(&[di, d]),
+                                Tensor::zeros(&[d, di]),
+                            ]
+                        });
+                        return (Tensor::zeros(&[n, d]), vec![0.0f32; n], dws);
+                    }
+                    let w: Vec<f32> =
+                        routed.iter().map(|&r| lc.gates.data()[r * e + ei]).collect();
+                    let dy_sub = gather0(&dy, &routed);
+                    let dout_e = row_scale(&dy_sub, &w);
+                    let out_e = &lc.out_e[ei];
+                    let mut dgate = vec![0.0f32; n];
+                    for (s, &r) in routed.iter().enumerate() {
+                        let a = &dy_sub.data()[s * d..(s + 1) * d];
+                        let o = &out_e.data()[r * d..(r + 1) * d];
+                        dgate[r] = a.iter().zip(o).map(|(x, y)| x * y).sum();
+                    }
                     let wd = sub2(wd_all, ei, d, di);
-                    let hmat = &lc.h[ei];
+                    let hmat = gather0(&lc.h[ei], &routed);
                     let dwd = need_pg.then(|| {
                         // dwd wants hm = h*mask as its right factor
                         let mut hm = hmat.data().to_vec();
-                        for r in 0..n {
+                        for r in 0..nr {
                             for c in 0..di {
                                 hm[r * di + c] *= me[c];
                             }
                         }
-                        matmul_at(&dout_e, &Tensor::from_vec(&[n, di], hm))
+                        matmul_at(&dout_e, &Tensor::from_vec(&[nr, di], hm))
                     });
                     let dhm = matmul_nn(&dout_e, &wd);
                     let mut dh = dhm.data().to_vec();
-                    for r in 0..n {
+                    for r in 0..nr {
                         for c in 0..di {
                             dh[r * di + c] *= me[c];
                         }
                     }
-                    let upre = &lc.pre[ei];
-                    let uu = &lc.u[ei];
-                    let mut dact = vec![0.0f32; n * di];
-                    let mut du = vec![0.0f32; n * di];
-                    let mut dpre = vec![0.0f32; n * di];
-                    for i in 0..n * di {
+                    let upre = gather0(&lc.pre[ei], &routed);
+                    let uu = gather0(&lc.u[ei], &routed);
+                    let mut dact = vec![0.0f32; nr * di];
+                    let mut du = vec![0.0f32; nr * di];
+                    let mut dpre = vec![0.0f32; nr * di];
+                    for i in 0..nr * di {
                         let pg = upre.data()[i];
                         let s = sigmoid(pg);
                         let silu = pg * s;
@@ -693,15 +727,21 @@ impl HostBackend {
                         du[i] = dh[i] * silu;
                         dpre[i] = dact[i] * (s * (1.0 + pg * (1.0 - s)));
                     }
-                    let du = Tensor::from_vec(&[n, di], du);
-                    let dpre = Tensor::from_vec(&[n, di], dpre);
-                    let mut dxn2 = matmul_nn(&du, &sub2(wu_all, ei, di, d));
-                    add_into(&mut dxn2, &matmul_nn(&dpre, &sub2(wg_all, ei, di, d)));
+                    let du = Tensor::from_vec(&[nr, di], du);
+                    let dpre = Tensor::from_vec(&[nr, di], dpre);
+                    let mut dxn2_sub = matmul_nn(&du, &sub2(wu_all, ei, di, d));
+                    add_into(&mut dxn2_sub, &matmul_nn(&dpre, &sub2(wg_all, ei, di, d)));
+                    let mut dxn2 = Tensor::zeros(&[n, d]);
+                    for (s, &r) in routed.iter().enumerate() {
+                        dxn2.data_mut()[r * d..(r + 1) * d]
+                            .copy_from_slice(&dxn2_sub.data()[s * d..(s + 1) * d]);
+                    }
                     let dws = need_pg.then(|| {
+                        let xn2_sub = gather0(&lc.xn2, &routed);
                         [
-                            matmul_at(&dpre, &lc.xn2), // dwg
-                            matmul_at(&du, &lc.xn2),   // dwu
-                            dwd.unwrap(),              // dwd
+                            matmul_at(&dpre, &xn2_sub), // dwg
+                            matmul_at(&du, &xn2_sub),   // dwu
+                            dwd.unwrap(),               // dwd
                         ]
                     });
                     (dxn2, dgate, dws)
@@ -960,15 +1000,29 @@ impl HostBackend {
         let mut gsum = Tensor::zeros(&[l, e, d, d]);
         let mut counts = Tensor::zeros(&[l, e]);
         // (layer, expert) pairs are independent: compute each Ḡ_{l,e} on
-        // the pool, then copy into the stacked output.
+        // the pool, then copy into the stacked output. Only routed tokens
+        // (gate > 0) contribute — gather them first so the GEMM runs on a
+        // dense [routed, d] matrix instead of a mostly-zero [n, d] one
+        // (the GEMM layer itself never skips zeros; see tensor::gemm).
+        // NaN gates count as routed so a poisoned routing weight keeps
+        // poisoning the covariance instead of vanishing into zeros.
         let covs: Vec<(Tensor, f32)> = pool::par_map(l * e, |pair| {
             let (li, ei) = (pair / e, pair % e);
             let lc = &cache.layers[li];
-            let w: Vec<f32> = (0..n).map(|r| lc.gates.data()[r * e + ei]).collect();
-            let a = row_scale(&dtaps[li], &w);
+            let routed: Vec<usize> = (0..n)
+                .filter(|&r| {
+                    let g = lc.gates.data()[r * e + ei];
+                    g > 0.0 || g.is_nan()
+                })
+                .collect();
+            if routed.is_empty() {
+                return (Tensor::zeros(&[d, d]), 0.0);
+            }
+            let w: Vec<f32> =
+                routed.iter().map(|&r| lc.gates.data()[r * e + ei]).collect();
+            let a = row_scale(&gather0(&dtaps[li], &routed), &w);
             let cov = matmul_at(&a, &a);
-            let cnt = w.iter().filter(|&&x| x > 0.0).count() as f32;
-            (cov, cnt)
+            (cov, routed.len() as f32)
         });
         for (pair, (cov, cnt)) in covs.into_iter().enumerate() {
             gsum.data_mut()[pair * d * d..(pair + 1) * d * d].copy_from_slice(cov.data());
@@ -1138,7 +1192,7 @@ impl HostBackend {
                 let mut scores = vec![NEG; s];
                 for (si, sc) in scores.iter_mut().enumerate().take(pmax + 1) {
                     let krow = &krows[si * hd..(si + 1) * hd];
-                    *sc = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    *sc = gemm::dot_k(qrow, krow) * scale;
                 }
                 let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                 let mut z = 0.0f32;

@@ -1,0 +1,629 @@
+//! Shared GEMM microkernel subsystem for the host backend.
+//!
+//! Every heavy matmul in the tree — router scores, attention, the expert
+//! FFN fan-out, gradient accumulation, `quadform` — reduces to one of
+//! three layouts of `C[m,n] = Σ_t A(i,t)·B(t,j)` (see [`Layout`]). This
+//! module supplies two interchangeable kernels for all three:
+//!
+//! * [`naive`] — the historical row-blocked triple loops, kept as the
+//!   measured baseline for the bench `kernel` axis.
+//! * [`blocked`] — a cache-blocked kernel: `MC×KC×NC` tiling into
+//!   L1/L2-sized panels, the strided B panel packed once per `(KC, NC)`
+//!   block, and an 8-wide-unrolled [`dot8`] inner kernel whose
+//!   `f32::mul_add` accumulators autovectorize to FMA lanes.
+//!
+//! [`gemm`] dispatches on the process-wide kernel selection
+//! (`HEAPR_KERNEL=naive|blocked`, default `blocked`; [`set_kernel`] is
+//! the programmatic override the benches sweep).
+//!
+//! # Accumulation contract
+//!
+//! Both the blocked kernel and the [`reference`] mirror compute every
+//! output element by the exact same arithmetic, independent of packing,
+//! tile sizes over `m`/`n`, and thread count:
+//!
+//! 1. the reduction axis is split into `KC`-sized blocks, in order;
+//! 2. within a block, eight interleaved `f32::mul_add` accumulators
+//!    (lane `l` takes elements `8u + l`; a remainder of `r` elements
+//!    lands on lanes `0..r`), reduced pairwise —
+//!    `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`;
+//! 3. block results are added into the output in block order.
+//!
+//! `mul_add` is exactly rounded on every target, so `blocked` is bitwise
+//! identical to `reference` everywhere, and bitwise thread-count
+//! invariant: parallelism only splits `m` into row-disjoint blocks (at
+//! most `MC` rows, shrinking for small `m` so decode-shaped GEMMs still
+//! fan out) over [`pool`] (same [`RowsPtr`] contract as the row-wise
+//! tensor ops), and row blocking never enters the contract.
+//!
+//! # Non-finite inputs
+//!
+//! No kernel skips zero operands: `0.0 · NaN` and `0.0 · ∞` contribute
+//! NaN, identically in all three layouts (the historical `matmul_at`
+//! zero-skip shortcut silently dropped them; that shortcut is gone, and
+//! the shared policy is pinned by tests).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::pool;
+use crate::util::pool::RowsPtr;
+
+/// Row-block height: C/A rows per parallel work item (L2-sized A slab).
+pub const MC: usize = 64;
+/// Reduction-axis block: one `KC` slice of an A row (1 KiB) stays in L1
+/// while the packed B panel streams against it.
+pub const KC: usize = 256;
+/// Column-panel width: `KC × NC` packed B panel = 64 KiB, L2-resident.
+pub const NC: usize = 64;
+
+/// Below this many scalar multiply-adds a kernel stays on the caller
+/// thread — pool dispatch would cost more than it saves. (Shared with the
+/// row-wise ops in `tensor::ops`.)
+pub(crate) const PAR_MIN_WORK: usize = 1 << 14;
+
+/// Operand layouts, named after the historical `tensor::ops` entry points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// `C[m,n] = A[m,k] · B[n,k]ᵀ` — `A(i,t) = a[i·k+t]`, `B(t,j) = b[j·k+t]`.
+    TN,
+    /// `C[m,n] = A[m,k] · B[k,n]` — `A(i,t) = a[i·k+t]`, `B(t,j) = b[t·n+j]`.
+    NN,
+    /// `C[m,n] = A[k,m]ᵀ · B[k,n]` — `A(i,t) = a[t·m+i]`, `B(t,j) = b[t·n+j]`
+    /// (the gradient-accumulation shape; `k` is the historical `p`).
+    AT,
+}
+
+/// Kernel selection for the dispatching [`gemm`] entry point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Historical row-blocked triple loops (bench baseline).
+    Naive = 0,
+    /// Cache-blocked + packed + 8-wide FMA microkernel (default).
+    Blocked = 1,
+}
+
+fn kernel_cell() -> &'static AtomicU8 {
+    static CELL: OnceLock<AtomicU8> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let k = match std::env::var("HEAPR_KERNEL") {
+            Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "naive" => Kernel::Naive,
+                "blocked" => Kernel::Blocked,
+                other => {
+                    crate::warn!(
+                        "HEAPR_KERNEL={other:?} is not naive|blocked; using blocked"
+                    );
+                    Kernel::Blocked
+                }
+            },
+            Err(_) => Kernel::Blocked,
+        };
+        AtomicU8::new(k as u8)
+    })
+}
+
+/// Current process-wide kernel selection.
+pub fn kernel() -> Kernel {
+    if kernel_cell().load(Ordering::Relaxed) == Kernel::Naive as u8 {
+        Kernel::Naive
+    } else {
+        Kernel::Blocked
+    }
+}
+
+/// Swap the process-wide kernel (benchmark `kernel` axis; library code
+/// never calls this). Tests that call it must hold
+/// [`pool::test_serial_lock`].
+pub fn set_kernel(k: Kernel) {
+    kernel_cell().store(k as u8, Ordering::Relaxed);
+}
+
+/// `C[m,n] = op_A(A) · op_B(B)` per `layout`, into `out` (overwritten),
+/// with the process-selected kernel.
+pub fn gemm(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    match kernel() {
+        Kernel::Naive => naive(layout, a, b, out, m, k, n),
+        Kernel::Blocked => blocked(layout, a, b, out, m, k, n),
+    }
+}
+
+// ------------------------------------------------------------ microkernel
+
+/// The inner kernel of the accumulation contract: eight interleaved
+/// `mul_add` lanes over two equal-length contiguous slices, reduced
+/// pairwise. Remainder elements (len % 8) land on lanes `0..r`.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xs, ys) in (&mut ca).zip(&mut cb) {
+        for l in 0..8 {
+            acc[l] = xs[l].mul_add(ys[l], acc[l]);
+        }
+    }
+    for (l, (x, y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        acc[l] = x.mul_add(*y, acc[l]);
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Kernel-dispatched dot product for non-GEMM call sites (the host
+/// backend's decode-attention score loop): the contract [`dot`] under
+/// `Blocked`, the historical single-accumulator serial sum under
+/// `Naive` — so the bench `kernel` axis compares the true pre-blocked
+/// arithmetic end to end, not a hybrid.
+#[inline]
+pub fn dot_k(a: &[f32], b: &[f32]) -> f32 {
+    match kernel() {
+        Kernel::Naive => a.iter().zip(b).map(|(x, y)| x * y).sum(),
+        Kernel::Blocked => dot(a, b),
+    }
+}
+
+/// Contract dot product over arbitrary length: `KC`-sized blocks, each
+/// reduced by [`dot8`], summed in block order — exactly the per-element
+/// accumulation every blocked GEMM here performs.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut c = 0.0f32;
+    let mut pc = 0;
+    while pc < a.len() {
+        let kc = KC.min(a.len() - pc);
+        c += dot8(&a[pc..pc + kc], &b[pc..pc + kc]);
+        pc += kc;
+    }
+    c
+}
+
+// --------------------------------------------------------------- blocked
+
+/// Gather the `(pc, jc)` panel of `op_B` into `packb`: `nc` contiguous
+/// columns of length `kc`, so the microkernel streams both operands.
+/// Only the `[k, n]`-layout operands (NN/AT) need the transposing copy;
+/// TN's B rows are already contract-shaped slices and skip packing.
+fn pack_b(b: &[f32], packb: &mut [f32], pc: usize, kc: usize, jc: usize, nc: usize, n: usize) {
+    for j in 0..nc {
+        let dst = &mut packb[j * kc..(j + 1) * kc];
+        for (t, d) in dst.iter_mut().enumerate() {
+            *d = b[(pc + t) * n + jc + j];
+        }
+    }
+}
+
+/// Transpose the full `kc`-deep A slab of the AT layout (`A(i,t) =
+/// a[t·m+i]`) into row-major `packa[i·kc+t]`, once per `pc` block, so the
+/// microkernel sees contiguous rows for every column panel and row block.
+fn pack_a_slab(a: &[f32], packa: &mut [f32], pc: usize, kc: usize, m: usize) {
+    for t in 0..kc {
+        let arow = &a[(pc + t) * m..(pc + t) * m + m];
+        for (i, &v) in arow.iter().enumerate() {
+            packa[i * kc + t] = v;
+        }
+    }
+}
+
+/// One row-block × `NC` output tile for the current `(pc, jc)` block:
+/// `out_rows` is the caller's row range `[i0, i0+ic)` (full `n`-wide
+/// rows); only columns `[jc, jc+nc)` are touched. `packa` is the
+/// AT-layout slab from [`pack_a_slab`] (empty for TN/NN, whose A rows
+/// are already contiguous along the reduction axis).
+#[allow(clippy::too_many_arguments)]
+fn mc_block(
+    layout: Layout,
+    a: &[f32],
+    packa: &[f32],
+    packb: &[f32],
+    b: &[f32],
+    out_rows: &mut [f32],
+    i0: usize,
+    ic: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..ic {
+        let arow: &[f32] = match layout {
+            Layout::AT => &packa[(i0 + i) * kc..(i0 + i + 1) * kc],
+            _ => &a[(i0 + i) * k + pc..(i0 + i) * k + pc + kc],
+        };
+        let orow = &mut out_rows[i * n + jc..i * n + jc + nc];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let bcol: &[f32] = match layout {
+                Layout::TN => &b[(jc + j) * k + pc..(jc + j) * k + pc + kc],
+                _ => &packb[j * kc..(j + 1) * kc],
+            };
+            *o += dot8(arow, bcol);
+        }
+    }
+}
+
+/// Cache-blocked GEMM (see the module docs for the tiling and the
+/// accumulation contract). Row-blocks fan out over the pool when the
+/// work is large enough; results are bitwise identical to [`reference`]
+/// for every thread count.
+pub fn blocked(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // Row blocks are the parallel work items. MC keeps the A slab
+    // L2-friendly, but when m is small the blocks shrink — down to single
+    // rows — so decode-shaped GEMMs (m = batch) still fan out. Row/column
+    // blocking never affects the accumulation contract; only KC does.
+    let threads = pool::threads();
+    let rb = MC.min(m.div_ceil(threads * 4)).max(1);
+    let rblocks = m.div_ceil(rb);
+    let parallel = m * n * k >= PAR_MIN_WORK && rblocks > 1 && threads > 1;
+    // TN's B rows double as the packed panel; NN/AT gather one. AT also
+    // transposes its column-strided A into a full slab, once per KC block
+    // (it depends only on pc, hence the pc-outer loop order — per-element
+    // accumulation is over pc in ascending order either way, so the
+    // contract is untouched).
+    let mut packb = match layout {
+        Layout::TN => Vec::new(),
+        _ => vec![0.0f32; KC.min(k) * NC.min(n)],
+    };
+    let mut packa = match layout {
+        Layout::AT => vec![0.0f32; m * KC.min(k)],
+        _ => Vec::new(),
+    };
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        if layout == Layout::AT {
+            pack_a_slab(a, &mut packa, pc, kc, m);
+        }
+        let pa = &packa[..];
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            if layout != Layout::TN {
+                pack_b(b, &mut packb, pc, kc, jc, nc, n);
+            }
+            let pb = &packb[..];
+            // One fork-join per (pc, jc) tile, with the B panel packed
+            // serially between joins: for this tree's shapes (n, k up to
+            // ~1k) that is tens of dispatches against >=1 ms of tile
+            // compute — <1% overhead, in exchange for packing each panel
+            // exactly once. Revisit (per-lane panels, row-major outer
+            // loop) if shapes ever grow past that.
+            if parallel {
+                let ptr = RowsPtr::new(out);
+                pool::par_for(rblocks, |ib| {
+                    let i0 = ib * rb;
+                    let ic = rb.min(m - i0);
+                    // SAFETY: row blocks are disjoint across lanes and the
+                    // buffer outlives the par_for (RowsPtr contract).
+                    let rows = unsafe { ptr.slice(i0 * n, ic * n) };
+                    mc_block(layout, a, pa, pb, b, rows, i0, ic, pc, kc, jc, nc, k, n);
+                });
+            } else {
+                for ib in 0..rblocks {
+                    let i0 = ib * rb;
+                    let ic = rb.min(m - i0);
+                    let rows = &mut out[i0 * n..(i0 + ic) * n];
+                    mc_block(layout, a, pa, pb, b, rows, i0, ic, pc, kc, jc, nc, k, n);
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- reference
+
+/// Naive mirror of the accumulation contract: plain loops, no packing,
+/// no tiling over `m`/`n`, no parallelism — but the identical per-element
+/// reduction ([`dot`]). The bitwise ground truth the property tests hold
+/// [`blocked`] to, across every shape and thread count.
+pub fn reference(
+    layout: Layout,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    let mut arowbuf = vec![0.0f32; k];
+    let mut bcolbuf = vec![0.0f32; k];
+    for i in 0..m {
+        let arow: &[f32] = match layout {
+            Layout::AT => {
+                for (t, v) in arowbuf.iter_mut().enumerate() {
+                    *v = a[t * m + i];
+                }
+                &arowbuf
+            }
+            _ => &a[i * k..(i + 1) * k],
+        };
+        for j in 0..n {
+            let bcol: &[f32] = match layout {
+                Layout::TN => &b[j * k..(j + 1) * k],
+                _ => {
+                    for (t, v) in bcolbuf.iter_mut().enumerate() {
+                        *v = b[t * n + j];
+                    }
+                    &bcolbuf
+                }
+            };
+            out[i * n + j] = dot(arow, bcol);
+        }
+    }
+}
+
+// ----------------------------------------------------------------- naive
+
+/// Fill `rows` disjoint rows of `out` (each `len` wide) with `f(i, row_i)`,
+/// in parallel when `work` (scalar ops) crosses [`PAR_MIN_WORK`]. The single
+/// audited unsafe site behind the naive GEMMs and the row-wise tensor ops.
+pub(crate) fn par_rows<F: Fn(usize, &mut [f32]) + Sync>(
+    out: &mut [f32],
+    rows: usize,
+    len: usize,
+    work: usize,
+    f: F,
+) {
+    debug_assert_eq!(out.len(), rows * len);
+    if work < PAR_MIN_WORK {
+        for i in 0..rows {
+            f(i, &mut out[i * len..(i + 1) * len]);
+        }
+    } else {
+        let ptr = RowsPtr::new(out);
+        pool::par_for(rows, |i| f(i, unsafe { ptr.slice(i * len, len) }));
+    }
+}
+
+/// The historical kernels: row-parallel triple loops with a single
+/// serial accumulator (TN) or a broadcast row update (NN/AT). Kept as
+/// the bench baseline the blocked kernel's speedup is measured against.
+pub fn naive(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let fill_row = |i: usize, crow: &mut [f32]| match layout {
+        Layout::TN => {
+            let arow = &a[i * k..(i + 1) * k];
+            for (j, c) in crow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                *c = acc;
+            }
+        }
+        Layout::NN => {
+            let arow = &a[i * k..(i + 1) * k];
+            for (t, &av) in arow.iter().enumerate() {
+                let brow = &b[t * n..(t + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow) {
+                    *c += av * bv;
+                }
+            }
+        }
+        Layout::AT => {
+            for t in 0..k {
+                let av = a[t * m + i];
+                let brow = &b[t * n..(t + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow) {
+                    *c += av * bv;
+                }
+            }
+        }
+    };
+    par_rows(out, m, n, m * n * k, fill_row);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg64;
+
+    fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    const LAYOUTS: [Layout; 3] = [Layout::TN, Layout::NN, Layout::AT];
+
+    #[test]
+    fn dot8_matches_exact_integer_sum() {
+        // integer values < 2^24: every order of summation is exact, so
+        // dot8 must equal the plain sum bitwise
+        let a: Vec<f32> = (1..=21).map(|x| x as f32).collect();
+        let b: Vec<f32> = (1..=21).map(|x| (x % 5) as f32).collect();
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot8(&a, &b), want);
+        assert_eq!(dot(&a, &b), want);
+        assert_eq!(dot8(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn blocked_hand_case_exact() {
+        // small integers: blocked, naive and reference all exact
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // [2,2]
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]; // [3,2] rows
+        let mut out = vec![0.0f32; 6];
+        blocked(Layout::TN, &a, &b, &mut out, 2, 2, 3);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
+        let bb = vec![5.0, 6.0, 7.0, 8.0]; // [2,2]
+        let mut out = vec![0.0f32; 4];
+        blocked(Layout::NN, &a, &bb, &mut out, 2, 2, 2);
+        assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0]);
+        let mut out = vec![0.0f32; 4];
+        blocked(Layout::AT, &a, &bb, &mut out, 2, 2, 2);
+        assert_eq!(out, vec![26.0, 30.0, 38.0, 44.0]);
+    }
+
+    #[test]
+    fn prop_blocked_matches_reference_bitwise() {
+        // ragged shapes straddling MC/NC (64) and KC (256) boundaries
+        check(
+            "gemm-blocked-vs-reference",
+            24,
+            |g: &mut Gen| {
+                let m = g.usize_in(1, 66);
+                let n = g.usize_in(1, 66);
+                let k = if g.usize_in(0, 4) == 0 {
+                    254 + g.usize_in(0, 5) // cross the KC block boundary
+                } else {
+                    g.usize_in(1, 40)
+                };
+                let mut rng = Pcg64::new(g.rng.next_u64());
+                (m, k, n, randv(&mut rng, m * k), randv(&mut rng, n * k))
+            },
+            |(m, k, n, a, b)| {
+                for layout in LAYOUTS {
+                    let mut got = vec![0.0f32; m * n];
+                    let mut want = vec![0.0f32; m * n];
+                    blocked(layout, a, b, &mut got, *m, *k, *n);
+                    reference(layout, a, b, &mut want, *m, *k, *n);
+                    if got != want {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn prop_blocked_matches_naive_within_tolerance() {
+        check(
+            "gemm-blocked-vs-naive",
+            20,
+            |g: &mut Gen| {
+                let m = g.usize_in(1, 32);
+                let k = g.usize_in(1, 48);
+                let n = g.usize_in(1, 32);
+                let mut rng = Pcg64::new(g.rng.next_u64());
+                (m, k, n, randv(&mut rng, m * k), randv(&mut rng, n * k))
+            },
+            |(m, k, n, a, b)| {
+                for layout in LAYOUTS {
+                    let mut x = vec![0.0f32; m * n];
+                    let mut y = vec![0.0f32; m * n];
+                    blocked(layout, a, b, &mut x, *m, *k, *n);
+                    naive(layout, a, b, &mut y, *m, *k, *n);
+                    let ok = x.iter().zip(&y).all(|(p, q)| {
+                        (p - q).abs() <= 1e-4 * p.abs().max(q.abs()).max(1.0)
+                    });
+                    if !ok {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_is_bitwise_thread_count_invariant() {
+        let _guard = pool::test_serial_lock();
+        // drop-guard: an unwinding assert must not leak a resized pool
+        struct Restore;
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                pool::set_threads(pool::default_threads());
+            }
+        }
+        let _restore = Restore;
+        let mut rng = Pcg64::new(9);
+        // big enough that the row blocks really fan out (mblocks > 1,
+        // work >> PAR_MIN_WORK)
+        let (m, k, n) = (130, 96, 70);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k);
+        for layout in LAYOUTS {
+            let mut want = vec![0.0f32; m * n];
+            pool::set_threads(1);
+            blocked(layout, &a, &b, &mut want, m, k, n);
+            for threads in [2usize, 4, 8] {
+                pool::set_threads(threads);
+                let mut got = vec![0.0f32; m * n];
+                blocked(layout, &a, &b, &mut got, m, k, n);
+                assert_eq!(got, want, "{layout:?} diverged at {threads} threads");
+            }
+            let mut reference_out = vec![0.0f32; m * n];
+            reference(layout, &a, &b, &mut reference_out, m, k, n);
+            assert_eq!(want, reference_out, "{layout:?} diverged from reference");
+        }
+        // _restore resets the pool on drop
+    }
+
+    #[test]
+    fn nested_blocked_gemm_matches_toplevel() {
+        // a gemm issued from inside a pool worker (the attention / expert
+        // fan-out pattern) takes the caller-helps path; results must be
+        // bitwise identical to the top-level call
+        let mut rng = Pcg64::new(12);
+        let (m, k, n) = (128, 64, 64); // mblocks = 2, work >> PAR_MIN_WORK
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k);
+        let mut want = vec![0.0f32; m * n];
+        blocked(Layout::TN, &a, &b, &mut want, m, k, n);
+        pool::par_for(4, |_| {
+            let mut got = vec![0.0f32; m * n];
+            blocked(Layout::TN, &a, &b, &mut got, m, k, n);
+            assert_eq!(got, want, "nested gemm diverged");
+        });
+    }
+
+    #[test]
+    fn zero_times_nonfinite_contributes_nan_in_every_layout() {
+        // the shared no-skip contract: a zero operand does not silence a
+        // NaN/inf partner (regression for the old matmul_at shortcut)
+        for layout in LAYOUTS {
+            let a = vec![0.0f32; 4]; // [2,2] of zeros
+            let b = vec![f32::NAN, 1.0, 2.0, 3.0]; // [2,2], NaN at (0,0)
+            for kernel in [naive as fn(Layout, &[f32], &[f32], &mut [f32], usize, usize, usize),
+                           blocked as _] {
+                let mut out = vec![0.0f32; 4];
+                kernel(layout, &a, &b, &mut out, 2, 2, 2);
+                assert!(
+                    out.iter().any(|v| v.is_nan()),
+                    "{layout:?}: 0·NaN must propagate, got {out:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_dispatch_roundtrip() {
+        let _guard = pool::test_serial_lock();
+        let prev = kernel();
+        set_kernel(Kernel::Naive);
+        assert_eq!(kernel(), Kernel::Naive);
+        set_kernel(Kernel::Blocked);
+        assert_eq!(kernel(), Kernel::Blocked);
+        set_kernel(prev);
+    }
+
+    #[test]
+    fn degenerate_shapes_are_fine() {
+        for layout in LAYOUTS {
+            let mut out = vec![0.0f32; 0];
+            blocked(layout, &[], &[], &mut out, 0, 3, 0);
+            let mut out = vec![1.0f32; 4];
+            blocked(layout, &[], &[], &mut out, 2, 0, 2);
+            assert_eq!(out, vec![0.0; 4], "k=0 must zero the output");
+        }
+    }
+}

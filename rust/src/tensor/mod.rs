@@ -6,6 +6,7 @@
 //! this type exists so rust can slice, pack, score and route without a
 //! numerics crate.
 
+pub mod gemm;
 mod ops;
 
 pub use ops::*;

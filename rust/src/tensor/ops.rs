@@ -4,39 +4,21 @@
 //! `rmsnorm`; weight surgery uses the gather ops; experiments use the
 //! reductions; the host runtime backend leans on all of them.
 //!
-//! The row-wise ops (`matmul_tn`, `rmsnorm`, `softmax`) are row-blocked
-//! over the [`crate::util::pool`] when the work is large enough: each
-//! output row is produced by the same serial arithmetic regardless of the
-//! thread count, so results are bitwise identical for any `HEAPR_THREADS`.
+//! The matmuls dispatch into the [`super::gemm`] microkernel subsystem
+//! (cache-blocked + packed by default, `HEAPR_KERNEL=naive` for the
+//! historical triple loops); the remaining row-wise ops (`rmsnorm`,
+//! `softmax`) are row-blocked over the [`crate::util::pool`] when the
+//! work is large enough. Each output row/element is produced by the same
+//! serial arithmetic regardless of the thread count, so results are
+//! bitwise identical for any `HEAPR_THREADS`.
+//!
+//! Non-finite contract (shared across all three matmuls, pinned by tests
+//! in `gemm`): zero operands never skip their partner, so `0·NaN` and
+//! `0·∞` propagate NaN identically in every layout.
 
+use super::gemm::{self, par_rows, Layout};
 use super::Tensor;
-use crate::util::pool;
-use crate::util::pool::RowsPtr;
-
-/// Below this many scalar multiply-adds a row-wise op stays on the caller
-/// thread — pool dispatch would cost more than it saves.
-const PAR_MIN_WORK: usize = 1 << 14;
-
-/// Fill `rows` disjoint rows of `out` (each `len` wide) with `f(i, row_i)`,
-/// in parallel when `work` (scalar ops) crosses [`PAR_MIN_WORK`]. The single
-/// audited unsafe site behind every row-wise op here.
-fn par_rows<F: Fn(usize, &mut [f32]) + Sync>(
-    out: &mut [f32],
-    rows: usize,
-    len: usize,
-    work: usize,
-    f: F,
-) {
-    debug_assert_eq!(out.len(), rows * len);
-    if work < PAR_MIN_WORK {
-        for i in 0..rows {
-            f(i, &mut out[i * len..(i + 1) * len]);
-        }
-    } else {
-        let ptr = RowsPtr::new(out);
-        pool::par_for(rows, |i| f(i, unsafe { ptr.slice(i * len, len) }));
-    }
-}
+use crate::util::cmp::{f32_nan_last, f32_nan_last_desc};
 
 /// C[m,n] = A[m,k] @ B[n,k]^T  (B stored row-major as [n,k] — matches the
 /// `router: [E, d]`, `w*: [di, d]` layouts coming from the checkpoints).
@@ -45,20 +27,7 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, kb) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, kb, "matmul_tn inner dim {k} vs {kb}");
     let mut out = vec![0.0f32; m * n];
-    let ad = a.data();
-    let bd = b.data();
-    let fill_row = |i: usize, crow: &mut [f32]| {
-        let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for t in 0..k {
-                acc += arow[t] * brow[t];
-            }
-            crow[j] = acc;
-        }
-    };
-    par_rows(&mut out, m, n, m * n * k, fill_row);
+    gemm::gemm(Layout::TN, a.data(), b.data(), &mut out, m, k, n);
     Tensor::from_vec(&[m, n], out)
 }
 
@@ -67,44 +36,19 @@ pub fn matmul_nn(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (kb, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, kb, "matmul_nn inner dim {k} vs {kb}");
-    let ad = a.data();
-    let bd = b.data();
     let mut out = vec![0.0f32; m * n];
-    let fill_row = |i: usize, crow: &mut [f32]| {
-        let arow = &ad[i * k..(i + 1) * k];
-        for (t, &av) in arow.iter().enumerate() {
-            let brow = &bd[t * n..(t + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    };
-    par_rows(&mut out, m, n, m * n * k, fill_row);
+    gemm::gemm(Layout::NN, a.data(), b.data(), &mut out, m, k, n);
     Tensor::from_vec(&[m, n], out)
 }
 
 /// C[m,n] = A[p,m]^T @ B[p,n] — the gradient-accumulation shape
-/// (dW = dOut^T @ X). Parallel over output rows.
+/// (dW = dOut^T @ X).
 pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
     let (p, m) = (a.shape()[0], a.shape()[1]);
     let (pb, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(p, pb, "matmul_at outer dim {p} vs {pb}");
-    let ad = a.data();
-    let bd = b.data();
     let mut out = vec![0.0f32; m * n];
-    let fill_row = |i: usize, crow: &mut [f32]| {
-        for t in 0..p {
-            let av = ad[t * m + i];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &bd[t * n..(t + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    };
-    par_rows(&mut out, m, n, m * n * p, fill_row);
+    gemm::gemm(Layout::AT, a.data(), b.data(), &mut out, m, p, n);
     Tensor::from_vec(&[m, n], out)
 }
 
@@ -150,6 +94,15 @@ pub fn scale(a: &mut Tensor, s: f32) {
 }
 
 /// Softmax along the last axis.
+///
+/// A row that is entirely `-inf` has no well-defined distribution; the
+/// historical code divided by `z = 0` there and emitted a row of NaN
+/// that silently poisoned downstream logits. Such rows now come back
+/// all-zero instead. (In-tree attention masks at the finite `-1e30`, so
+/// today this guard protects external callers / true `-inf` masks, not
+/// the prefill/decode path — which yields a uniform row when fully
+/// masked, as before.) Rows that merely *contain* `-inf` entries soften
+/// those to exact `0.0` as before, and NaN inputs still propagate NaN.
 pub fn softmax(x: &Tensor) -> Tensor {
     let d = *x.shape().last().unwrap();
     let rows = x.len() / d;
@@ -157,6 +110,13 @@ pub fn softmax(x: &Tensor) -> Tensor {
     let fill_row = |r: usize, orow: &mut [f32]| {
         let xs = &x.data()[r * d..(r + 1) * d];
         let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        // f32::max ignores NaN, so mx == -inf means every entry is -inf
+        // (fully masked -> well-defined zero row) or NaN (fall through so
+        // the poison stays visible instead of being laundered to zeros).
+        if mx == f32::NEG_INFINITY && xs.iter().all(|&v| v == f32::NEG_INFINITY) {
+            orow.fill(0.0);
+            return;
+        }
         let mut z = 0.0f32;
         for i in 0..d {
             let e = (xs[i] - mx).exp();
@@ -171,7 +131,9 @@ pub fn softmax(x: &Tensor) -> Tensor {
     Tensor::from_vec(x.shape(), out)
 }
 
-/// Top-k (values, indices) along the last axis, descending.
+/// Top-k (values, indices) along the last axis, descending. Total and
+/// panic-free on NaN: NaN scores order last (never selected over a
+/// number).
 pub fn topk(x: &Tensor, k: usize) -> (Tensor, Vec<Vec<usize>>) {
     let d = *x.shape().last().unwrap();
     assert!(k <= d);
@@ -181,7 +143,7 @@ pub fn topk(x: &Tensor, k: usize) -> (Tensor, Vec<Vec<usize>>) {
     for r in 0..rows {
         let xs = &x.data()[r * d..(r + 1) * d];
         let mut order: Vec<usize> = (0..d).collect();
-        order.sort_by(|&i, &j| xs[j].partial_cmp(&xs[i]).unwrap().then(i.cmp(&j)));
+        order.sort_by(|&i, &j| f32_nan_last_desc(xs[i], xs[j]).then(i.cmp(&j)));
         order.truncate(k);
         for (t, &i) in order.iter().enumerate() {
             vals[r * k + t] = xs[i];
@@ -236,10 +198,11 @@ pub fn norm2(x: &Tensor) -> f32 {
     x.data().iter().map(|v| v * v).sum::<f32>().sqrt()
 }
 
-/// Argsort (ascending) of a flat slice, stable on ties.
+/// Argsort (ascending) of a flat slice, stable on ties. Total and
+/// panic-free on NaN: NaN entries sort to the end.
 pub fn argsort(xs: &[f32]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..xs.len()).collect();
-    order.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap().then(i.cmp(&j)));
+    order.sort_by(|&i, &j| f32_nan_last(xs[i], xs[j]).then(i.cmp(&j)));
     order
 }
 
@@ -330,24 +293,34 @@ mod tests {
     #[test]
     fn parallel_rowwise_ops_bitwise_match_serial() {
         // Shapes big enough to cross PAR_MIN_WORK; the pool is forced wide
-        // so the parallel path actually runs, then compared against a
-        // hand-rolled serial computation of the same arithmetic.
+        // so the parallel path actually runs, then compared against the
+        // serial gemm reference / a serial pool. Mutating the process-wide
+        // pool is racy against other tests' in-flight par_fors, so every
+        // pool-mutating test serializes behind the shared test lock. The
+        // kernel is pinned too: under HEAPR_KERNEL=naive the dispatching
+        // matmul is only tolerance-equal to the contract reference.
+        let _guard = crate::util::pool::test_serial_lock();
+        // drop-guard: restore the pool and kernel even when an assert
+        // unwinds mid-test, so a failure cannot leak a 4-thread pool or a
+        // pinned kernel into the rest of the run (declared after the lock
+        // guard, so it restores while the lock is still held)
+        struct Restore(crate::tensor::gemm::Kernel);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                crate::util::pool::set_threads(crate::util::pool::default_threads());
+                crate::tensor::gemm::set_kernel(self.0);
+            }
+        }
+        let _restore = Restore(gemm::kernel());
+        gemm::set_kernel(gemm::Kernel::Blocked);
         let mut rng = Pcg64::new(11);
-        let m = 64;
+        let m = 130; // > 2 row blocks so the blocked kernel really fans out
         let k = 48;
         let n = 40;
         let a = randt(&mut rng, &[m, k]);
         let b = randt(&mut rng, &[n, k]);
         let mut want = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                let mut acc = 0.0f32;
-                for t in 0..k {
-                    acc += a.data()[i * k + t] * b.data()[j * k + t];
-                }
-                want[i * n + j] = acc;
-            }
-        }
+        gemm::reference(Layout::TN, a.data(), b.data(), &mut want, m, k, n);
         crate::util::pool::set_threads(4);
         let c = matmul_tn(&a, &b);
         assert_eq!(c.data(), &want[..], "parallel matmul_tn must be bitwise serial");
@@ -359,9 +332,39 @@ mod tests {
         crate::util::pool::set_threads(1);
         let y_ser = rmsnorm(&x, &w, 1e-6);
         let s_ser = softmax(&x);
-        crate::util::pool::set_threads(crate::util::pool::default_threads());
         assert_eq!(y_par.data(), y_ser.data(), "rmsnorm thread-count invariant");
         assert_eq!(s_par.data(), s_ser.data(), "softmax thread-count invariant");
+        // _restore resets threads + kernel on drop
+    }
+
+    #[test]
+    fn softmax_fully_masked_row_is_zero_not_nan() {
+        let ninf = f32::NEG_INFINITY;
+        let x = Tensor::from_vec(&[2, 3], vec![ninf, ninf, ninf, 0.0, 0.0, ninf]);
+        let s = softmax(&x);
+        assert_eq!(&s.data()[..3], &[0.0, 0.0, 0.0], "masked row must be zeros");
+        assert!((s.data()[3] - 0.5).abs() < 1e-6);
+        assert!((s.data()[4] - 0.5).abs() < 1e-6);
+        assert_eq!(s.data()[5], 0.0);
+        assert!(s.data().iter().all(|v| !v.is_nan()));
+        // NaN rows are NOT laundered into zeros: the poison stays visible
+        let bad = Tensor::from_vec(&[1, 3], vec![f32::NAN, f32::NAN, f32::NAN]);
+        assert!(softmax(&bad).data().iter().all(|v| v.is_nan()));
+        let mixed = Tensor::from_vec(&[1, 3], vec![f32::NEG_INFINITY, f32::NAN, 1.0]);
+        assert!(softmax(&mixed).data().iter().any(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn topk_and_argsort_order_nan_last_without_panicking() {
+        let x = Tensor::from_vec(&[1, 5], vec![0.1, f32::NAN, 0.9, f32::NAN, 0.5]);
+        let (vals, idx) = topk(&x, 3);
+        assert_eq!(idx[0], vec![2, 4, 0], "NaN must never beat a number");
+        assert_eq!(vals.data(), &[0.9, 0.5, 0.1]);
+        let (_, idx_all) = topk(&x, 5);
+        assert_eq!(&idx_all[0][3..], &[1, 3], "NaNs order last, index-stable");
+
+        let ord = argsort(&[f32::NAN, 2.0, 1.0, f32::NAN]);
+        assert_eq!(ord, vec![2, 1, 0, 3], "ascending with NaNs at the end");
     }
 
     #[test]

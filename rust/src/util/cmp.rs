@@ -1,0 +1,111 @@
+//! Total, panic-free float comparators for the ordering hot paths.
+//!
+//! The historical pattern `partial_cmp().unwrap()` panics the whole
+//! serving / experiment process on a single NaN score. These helpers are
+//! built on `total_cmp` with one shared policy — **NaN orders last**:
+//!
+//! * in an ascending or descending sort, every NaN lands at the end of
+//!   the order (tie-broken by the caller's index, so sorts stay stable);
+//! * in a max-selection (`max_by`), a NaN candidate never beats a number
+//!   (use the `*_nan_first` variants, which rank NaN below everything).
+//!
+//! For non-NaN inputs `total_cmp` agrees with `partial_cmp` except that
+//! `-0.0 < 0.0`, which only re-orders exact-zero ties.
+
+use std::cmp::Ordering;
+
+macro_rules! nan_cmp {
+    ($nan_last:ident, $nan_last_desc:ident, $nan_first:ident, $t:ty) => {
+        /// Ascending total order; every NaN after every non-NaN.
+        pub fn $nan_last(a: $t, b: $t) -> Ordering {
+            match (a.is_nan(), b.is_nan()) {
+                (true, true) => Ordering::Equal,
+                (true, false) => Ordering::Greater,
+                (false, true) => Ordering::Less,
+                (false, false) => a.total_cmp(&b),
+            }
+        }
+
+        /// Descending total order; every NaN after every non-NaN.
+        pub fn $nan_last_desc(a: $t, b: $t) -> Ordering {
+            match (a.is_nan(), b.is_nan()) {
+                (true, true) => Ordering::Equal,
+                (true, false) => Ordering::Greater,
+                (false, true) => Ordering::Less,
+                (false, false) => b.total_cmp(&a),
+            }
+        }
+
+        /// Ascending total order; every NaN *before* every non-NaN — the
+        /// `max_by` comparator under which a NaN score never wins an
+        /// argmax (and an all-NaN slice still yields a winner instead of
+        /// a panic).
+        pub fn $nan_first(a: $t, b: $t) -> Ordering {
+            match (a.is_nan(), b.is_nan()) {
+                (true, true) => Ordering::Equal,
+                (true, false) => Ordering::Less,
+                (false, true) => Ordering::Greater,
+                (false, false) => a.total_cmp(&b),
+            }
+        }
+    };
+}
+
+nan_cmp!(f32_nan_last, f32_nan_last_desc, f32_nan_first, f32);
+nan_cmp!(f64_nan_last, f64_nan_last_desc, f64_nan_first, f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascending_sorts_nan_to_the_end() {
+        let mut v = vec![2.0f32, f32::NAN, -1.0, f32::INFINITY, f32::NAN, 0.0];
+        v.sort_by(|a, b| f32_nan_last(*a, *b));
+        assert_eq!(&v[..4], &[-1.0, 0.0, 2.0, f32::INFINITY]);
+        assert!(v[4].is_nan() && v[5].is_nan());
+
+        let mut w = vec![f64::NAN, 1.0, 3.0];
+        w.sort_by(|a, b| f64_nan_last(*a, *b));
+        assert_eq!(&w[..2], &[1.0, 3.0]);
+        assert!(w[2].is_nan());
+    }
+
+    #[test]
+    fn descending_sorts_nan_to_the_end_too() {
+        let mut v = vec![f32::NAN, 2.0, -1.0, 0.0];
+        v.sort_by(|a, b| f32_nan_last_desc(*a, *b));
+        assert_eq!(&v[..3], &[2.0, 0.0, -1.0]);
+        assert!(v[3].is_nan());
+    }
+
+    #[test]
+    fn max_by_with_nan_first_never_picks_nan_over_a_number() {
+        let xs = [f32::NAN, 0.3, f32::NAN, 0.7, 0.1];
+        let best = xs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| f32_nan_first(*a.1, *b.1))
+            .unwrap()
+            .0;
+        assert_eq!(best, 3);
+        // all-NaN still yields a winner instead of panicking
+        let all = [f64::NAN, f64::NAN];
+        let i = all
+            .iter()
+            .enumerate()
+            .max_by(|a, b| f64_nan_first(*a.1, *b.1))
+            .unwrap()
+            .0;
+        assert!(i < 2);
+    }
+
+    #[test]
+    fn non_nan_agrees_with_partial_cmp() {
+        for (a, b) in [(1.0f32, 2.0), (2.0, 1.0), (1.5, 1.5), (-3.0, 3.0)] {
+            assert_eq!(f32_nan_last(a, b), a.partial_cmp(&b).unwrap());
+            assert_eq!(f32_nan_first(a, b), a.partial_cmp(&b).unwrap());
+            assert_eq!(f32_nan_last_desc(a, b), b.partial_cmp(&a).unwrap());
+        }
+    }
+}

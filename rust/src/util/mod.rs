@@ -5,6 +5,7 @@
 pub mod rng;
 pub mod json;
 pub mod args;
+pub mod cmp;
 pub mod logging;
 pub mod pool;
 pub mod prop;

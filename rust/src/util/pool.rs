@@ -15,10 +15,15 @@
 //! Determinism: each index is processed exactly once and writes only its
 //! own outputs, so results are bitwise identical for every thread count.
 //!
-//! Nesting: a `par_for` issued from inside a worker runs serially in that
-//! worker (a thread-local marks worker context). This both avoids
-//! oversubscription and makes the pool deadlock-free: only non-worker
-//! callers ever block on helper completion.
+//! Nesting (caller-helps): a `par_for` issued from inside a worker (a
+//! thread-local marks worker context) queues helper jobs like any other
+//! task, so idle lanes subdivide the nested index space — but instead of
+//! blocking on completion, the nested caller *helps*: it drains queued
+//! jobs (its own or other tasks') and yields until its helpers have all
+//! run. A worker therefore never blocks on the pool it is part of, which
+//! keeps the scheduler deadlock-free while recovering the parallelism
+//! the old run-inline policy threw away (the attention fan-out nests
+//! GEMM `par_for`s under pool workers).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -40,6 +45,11 @@ impl Queue {
         s.0.push_back(job);
         drop(s);
         self.cv.notify_one();
+    }
+
+    /// Non-blocking pop (the caller-helps drain loop).
+    fn try_pop(&self) -> Option<Job> {
+        self.state.lock().unwrap().0.pop_front()
     }
 
     /// Pop a job, blocking; None once shut down and drained.
@@ -101,16 +111,21 @@ impl ThreadPool {
         self.threads
     }
 
-    /// Run `f(0..n)`, distributing chunks over the pool. Blocks until every
-    /// index is done; re-raises the first panic observed in `f`.
+    /// Run `f(0..n)`, distributing chunks over the pool. Returns once every
+    /// index is done; re-raises the first panic observed in `f`. From a
+    /// non-worker thread the caller participates and then blocks; from
+    /// inside a worker it participates and then *helps* (drains queued
+    /// jobs) instead of blocking, so nested `par_for`s subdivide across
+    /// idle lanes without ever deadlocking the pool.
     pub fn par_for<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
         let helpers = self.threads.saturating_sub(1).min(n.saturating_sub(1));
-        if helpers == 0 || IN_WORKER.with(|w| w.get()) {
+        if helpers == 0 {
             for i in 0..n {
                 f(i);
             }
             return;
         }
+        let nested = IN_WORKER.with(|w| w.get());
 
         let chunk = (n / (self.threads * 4)).max(1);
         let ctx = TaskCtx {
@@ -122,9 +137,11 @@ impl ThreadPool {
             remaining: Mutex::new(helpers),
             done_cv: Condvar::new(),
         };
-        // SAFETY: helper jobs only dereference `ctx` before they decrement
-        // `remaining`; the caller blocks below until `remaining == 0`, so
-        // `ctx` (and the borrow of `f`) strictly outlives every access.
+        // SAFETY: helper jobs only dereference `ctx` before they release
+        // the `remaining` lock after decrementing it; the caller below
+        // (blocking or help-draining) returns only after observing
+        // `remaining == 0` under that same lock, so `ctx` (and the borrow
+        // of `f`) strictly outlives every access.
         let ptr = SendPtr(&ctx as *const TaskCtx as *const ());
         for _ in 0..helpers {
             let p = ptr;
@@ -138,11 +155,48 @@ impl ThreadPool {
             }));
         }
         ctx.run_lane(); // caller participates
-        let mut rem = ctx.remaining.lock().unwrap();
-        while *rem > 0 {
-            rem = ctx.done_cv.wait(rem).unwrap();
+        if nested {
+            // Caller-helps: a worker must never block on the pool — it IS
+            // a pool lane. Drain whatever is queued (this task's helpers
+            // or another task's jobs; either way progress) while the last
+            // helper jobs finish elsewhere. Helper jobs never unwind
+            // (run_lane parks panics), so `job()` is safe to run on this
+            // lane. Empty polls back off from yield to a short timed
+            // done_cv wait so idle spinners stop hammering the shared
+            // queue mutex; the timeout keeps the drain loop live for jobs
+            // pushed while parked, preserving deadlock-freedom.
+            let mut idle_polls = 0u32;
+            loop {
+                if *ctx.remaining.lock().unwrap() == 0 {
+                    break;
+                }
+                match self.queue.try_pop() {
+                    Some(job) => {
+                        idle_polls = 0;
+                        job();
+                    }
+                    None if idle_polls < 64 => {
+                        idle_polls += 1;
+                        thread::yield_now();
+                    }
+                    None => {
+                        let rem = ctx.remaining.lock().unwrap();
+                        if *rem > 0 {
+                            let _ = ctx
+                                .done_cv
+                                .wait_timeout(rem, std::time::Duration::from_micros(100))
+                                .unwrap();
+                        }
+                    }
+                }
+            }
+        } else {
+            let mut rem = ctx.remaining.lock().unwrap();
+            while *rem > 0 {
+                rem = ctx.done_cv.wait(rem).unwrap();
+            }
+            drop(rem);
         }
-        drop(rem);
         if let Some(payload) = ctx.panic.lock().unwrap().take() {
             resume_unwind(payload);
         }
@@ -283,6 +337,19 @@ pub fn set_threads(n: usize) {
     *global().write().unwrap() = Arc::new(ThreadPool::new(n));
 }
 
+/// Serializes tests that reconfigure process-global execution state —
+/// the global pool via [`set_threads`], the GEMM kernel selection via
+/// `tensor::gemm::set_kernel`. `cargo test` runs tests on parallel
+/// threads, and swapping the pool while another test is mid-`par_for`
+/// (or flipping the kernel under a bitwise-equality assertion) makes
+/// such tests flaky. Poison is ignored: one panicked test must not
+/// cascade into every later lock holder.
+#[doc(hidden)]
+pub fn test_serial_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// `f(i)` for `i in 0..n` on the global pool.
 pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
     pool().par_for(n, f)
@@ -357,17 +424,70 @@ mod tests {
     }
 
     #[test]
-    fn nested_par_for_runs_serial_not_deadlocked() {
+    fn nested_par_for_completes_without_deadlock() {
+        // every lane of a 2-thread pool is busy with an outer chunk; the
+        // nested par_fors must still drain via caller-helps
         let p = Arc::new(ThreadPool::new(2));
         let q = Arc::clone(&p);
         let total = AtomicUsize::new(0);
         p.par_for(4, |_| {
-            // nested: must run inline in the worker, not deadlock
             q.par_for(4, |_| {
                 total.fetch_add(1, Ordering::Relaxed);
             });
         });
         assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn nested_par_for_subdivides_across_idle_lanes() {
+        // outer uses 2 of 4 lanes; the nested loops' helper jobs must be
+        // picked up by the idle ones instead of running inline
+        let p = Arc::new(ThreadPool::new(4));
+        let q = Arc::clone(&p);
+        let ids = Mutex::new(std::collections::HashSet::new());
+        p.par_for(2, |_| {
+            q.par_for(8, |_| {
+                ids.lock().unwrap().insert(thread::current().id());
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            });
+        });
+        let ids = ids.into_inner().unwrap();
+        assert!(ids.len() >= 3, "nested work stayed on {} lane(s)", ids.len());
+    }
+
+    #[test]
+    fn nested_indices_run_exactly_once() {
+        let p = Arc::new(ThreadPool::new(4));
+        let q = Arc::clone(&p);
+        let hits: Vec<AtomicUsize> = (0..4 * 64).map(|_| AtomicUsize::new(0)).collect();
+        p.par_for(4, |o| {
+            q.par_for(64, |i| {
+                hits[o * 64 + i].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn panic_in_nested_par_for_propagates() {
+        let p = Arc::new(ThreadPool::new(4));
+        let q = Arc::clone(&p);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            p.par_for(4, |o| {
+                q.par_for(8, |i| {
+                    if o == 1 && i == 5 {
+                        panic!("inner boom");
+                    }
+                });
+            });
+        }));
+        assert!(r.is_err(), "nested panic must reach the outer caller");
+        // pool remains usable afterwards
+        let sum = AtomicU64::new(0);
+        p.par_for(10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
     }
 
     #[test]

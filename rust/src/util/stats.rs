@@ -23,20 +23,27 @@ pub fn std(xs: &[f64]) -> f64 {
 /// the smallest value with at least p% of the sample at or below it —
 /// `sorted[ceil(p/100 · n) - 1]`, rank clamped to [1, n]. Always returns
 /// an element of `xs` (p=0 → minimum, p=100 → maximum); 0.0 when empty.
+/// NaN samples sort last (high percentiles of a NaN-bearing sample may
+/// be NaN, but the call never panics).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| crate::util::cmp::f64_nan_last(*a, *b));
     let n = v.len();
     let rank = ((p / 100.0) * n as f64).ceil() as usize;
     v[rank.clamp(1, n) - 1]
 }
 
 /// Spearman rank correlation (ties broken by index; inputs same length).
+/// NaN samples propagate: any NaN input yields NaN, never a finite
+/// correlation fabricated from a rank the NaN does not deserve.
 pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
+    if a.iter().chain(b).any(|v| v.is_nan()) {
+        return f64::NAN;
+    }
     let ra = ranks(a);
     let rb = ranks(b);
     pearson(&ra, &rb)
@@ -61,7 +68,7 @@ pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
 
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap().then(i.cmp(&j)));
+    idx.sort_by(|&i, &j| crate::util::cmp::f64_nan_last(xs[i], xs[j]).then(i.cmp(&j)));
     let mut r = vec![0.0; xs.len()];
     for (rank, &i) in idx.iter().enumerate() {
         r[i] = rank as f64;
@@ -117,6 +124,21 @@ mod tests {
         assert_eq!(percentile(&[2.5], 0.0), 2.5);
         assert_eq!(percentile(&[2.5], 99.0), 2.5);
         assert_eq!(percentile(&[2.5], 100.0), 2.5);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_and_order_last() {
+        // regression: partial_cmp().unwrap() used to panic here
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0); // rank ceil(2.0)=2 of [1,2,3,NaN]
+        assert!(percentile(&xs, 100.0).is_nan()); // NaN sorts last
+        let r = ranks(&xs);
+        assert_eq!(r[1], 3.0, "NaN must take the final rank");
+        // spearman must surface the NaN, not a correlation computed from
+        // a fabricated ranking
+        assert!(spearman(&xs, &[1.0, 2.0, 3.0, 4.0]).is_nan());
+        assert!(spearman(&[1.0, 2.0], &[3.0, f64::NAN]).is_nan());
     }
 
     #[test]

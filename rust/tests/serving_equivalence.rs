@@ -187,7 +187,7 @@ fn resident_decode_is_bitwise_identical_to_legacy_across_threads() {
     let mut next = vec![l0.data()[0..ctx.engine.config().vocab]
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| heapr::util::cmp::f32_nan_first(*a.1, *b.1))
         .unwrap()
         .0 as i32];
     let mut pos = prompt.len();
@@ -201,7 +201,7 @@ fn resident_decode_is_bitwise_identical_to_legacy_across_threads() {
             .data()
             .iter()
             .enumerate()
-            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .max_by(|x, y| heapr::util::cmp::f32_nan_first(*x.1, *y.1))
             .unwrap()
             .0 as i32];
         pos += 1;
