@@ -10,7 +10,7 @@
 PRESET ?= tiny
 ARTIFACTS := artifacts/$(PRESET)
 
-.PHONY: all build test tier1 fmt clippy verify artifacts bench clean
+.PHONY: all build test tier1 fmt clippy verify artifacts bench bench-native clean
 
 all: build
 
@@ -38,12 +38,22 @@ artifacts:
 	cd python && python -m compile.aot --preset $(PRESET) --out-dir ../$(ARTIFACTS)
 
 # Perf sweeps. bench_runtime sweeps the GEMM `kernel` axis (naive vs
-# blocked) and refreshes the checked-in BENCH_kernels.json summary at the
-# repo root so the kernel-perf trajectory is tracked across PRs;
+# blocked vs simd — the simd leg only where runtime CPU detection finds
+# avx2+fma) and refreshes the checked-in BENCH_kernels.json summary at
+# the repo root so the kernel-perf trajectory is tracked across PRs;
 # bench_serve adds the same axis to end-to-end decode throughput.
 bench:
 	cargo bench --bench bench_runtime
 	cargo bench --bench bench_serve
+
+# Same sweeps under -C target-cpu=native codegen. Opt-in and bench-only:
+# the produced binaries are NOT portable (SIGILL on any older CPU — the
+# exact trap the runtime-dispatched kernels removed from the default
+# build). Useful to measure how close runtime dispatch comes to a
+# native-tuned build on the same machine.
+bench-native:
+	RUSTFLAGS="-C target-cpu=native" cargo bench --bench bench_runtime
+	RUSTFLAGS="-C target-cpu=native" cargo bench --bench bench_serve
 
 clean:
 	cargo clean

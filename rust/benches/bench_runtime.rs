@@ -1,5 +1,6 @@
-//! Runtime micro-benchmarks: the GEMM `kernel` axis (naive vs blocked) on
-//! the large matmul shapes the host backend is bound by, plus dispatch
+//! Runtime micro-benchmarks: the GEMM `kernel` axis (naive vs blocked vs
+//! simd — the last one only where runtime CPU detection finds avx2+fma)
+//! on the large matmul shapes the host backend is bound by, plus dispatch
 //! overhead, literal marshalling, and the quadform/gate artifacts across
 //! the `HEAPR_THREADS` axis. Establishes the per-call floor the
 //! coordinator's costs sit on (EXPERIMENTS.md §Perf) and writes the
@@ -37,6 +38,16 @@ fn main() {
     let mut bench = Bench::default();
 
     // ---------------------------------------------------- kernel axis --
+    // the simd leg only runs (and is only recorded) where the CPU
+    // actually has avx2+fma — on other hosts gemm::simd would silently
+    // measure the blocked fallback and pollute the cross-PR JSON
+    let mut kernels: Vec<(&str, GemmFn)> =
+        vec![("naive", gemm::naive as GemmFn), ("blocked", gemm::blocked as GemmFn)];
+    if gemm::simd_available() {
+        kernels.push(("simd", gemm::simd as GemmFn));
+    } else {
+        println!("  [kernel axis] avx2+fma not detected: simd leg skipped");
+    }
     let mut kernel_rows: Vec<Json> = Vec::new();
     for &(label, layout, m, k, n) in GEMM_SHAPES {
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
@@ -44,12 +55,8 @@ fn main() {
         let gflop = 2.0 * (m * k * n) as f64 / 1e9;
         for &threads in THREAD_AXIS {
             pool::set_threads(threads);
-            let mut mean_us = [0.0f64; 2];
-            for (ki, (kname, kfn)) in
-                [("naive", gemm::naive as GemmFn), ("blocked", gemm::blocked as GemmFn)]
-                    .into_iter()
-                    .enumerate()
-            {
+            let mut mean_us = vec![0.0f64; kernels.len()];
+            for (ki, &(kname, kfn)) in kernels.iter().enumerate() {
                 let mut out = vec![0.0f32; m * n];
                 let r = bench.run(
                     &format!("gemm/{label} {m}x{k}x{n} kernel={kname} threads={threads}"),
@@ -63,13 +70,24 @@ fn main() {
             }
             let speedup = mean_us[0] / mean_us[1];
             println!("    blocked vs naive ({label}, threads={threads}): {speedup:.2}x");
-            kernel_rows.push(Json::obj(vec![
+            let mut row = vec![
                 ("shape", Json::s(format!("{label} {m}x{k}x{n}"))),
                 ("threads", Json::n(threads as f64)),
                 ("naive_us", Json::n(mean_us[0])),
                 ("blocked_us", Json::n(mean_us[1])),
                 ("speedup", Json::n(speedup)),
-            ]));
+            ];
+            if let Some(simd_us) = mean_us.get(2).copied() {
+                println!(
+                    "    simd vs blocked ({label}, threads={threads}): {:.2}x \
+                     (vs naive: {:.2}x)",
+                    mean_us[1] / simd_us,
+                    mean_us[0] / simd_us,
+                );
+                row.push(("simd_us", Json::n(simd_us)));
+                row.push(("simd_speedup", Json::n(mean_us[0] / simd_us)));
+            }
+            kernel_rows.push(Json::obj(row));
         }
     }
     pool::set_threads(pool::default_threads());
@@ -122,6 +140,7 @@ fn main() {
     let summary = Json::obj(vec![
         ("generated_by", Json::s("cargo bench --bench bench_runtime")),
         ("bench_mode", Json::s("default (min 10 iters / 0.5s / 3 warmup)")),
+        ("simd_available", Json::Bool(gemm::simd_available())),
         ("kernel_axis", Json::Arr(kernel_rows)),
     ]);
     std::fs::write("BENCH_kernels.json", summary.to_string()).unwrap();

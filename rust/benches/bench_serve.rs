@@ -8,11 +8,13 @@
 //! Per (kernel, threads, ratio, residency) cell one server is built and
 //! one batch is served to warm the executables, then `serve_batch` is
 //! timed and the per-decode-step upload traffic is reported next to
-//! tokens/s. The naive kernel is only measured at the dense ratio — it
-//! exists as the before/after baseline, not as a full grid. The final
-//! lines report the dense-serving speedups: widest thread count over the
-//! serial pool, session over legacy, and blocked over naive — the §Perf
-//! acceptance numbers.
+//! tokens/s. Only the default kernel tier (simd where runtime detection
+//! finds avx2+fma, else blocked) runs the full ratio grid — the other
+//! tiers are before/after baselines and only measure the dense cells.
+//! The final lines report the dense-serving speedups: widest thread
+//! count over the serial pool, session over legacy, blocked over naive,
+//! and (where detected) simd over blocked — the §Perf acceptance
+//! numbers.
 
 use heapr::bench::Bench;
 use heapr::coordinator::{Request, Residency, Server};
@@ -31,8 +33,6 @@ const THREAD_AXIS: &[usize] = &[1, 2, 4];
 const RATIOS: &[f64] = &[0.0, 0.25, 0.5, 0.75];
 const RESIDENCY_AXIS: &[(Residency, &str)] =
     &[(Residency::Resident, "session"), (Residency::Legacy, "legacy")];
-const KERNEL_AXIS: &[(gemm::Kernel, &str)] =
-    &[(gemm::Kernel::Blocked, "blocked"), (gemm::Kernel::Naive, "naive")];
 
 fn main() {
     let engine = Engine::open("artifacts/tiny").expect("open tiny preset");
@@ -57,15 +57,29 @@ fn main() {
     };
     let tok_per_run = (bb * new_tokens) as f64;
 
+    // the default tier runs the full grid; the others are baselines and
+    // only measure the dense cells. The simd leg only exists where the
+    // CPU really has avx2+fma — elsewhere it would just re-measure the
+    // blocked fallback under a misleading label.
+    let default_kernel = gemm::default_kernel();
+    let mut kernel_axis: Vec<(gemm::Kernel, &str)> = Vec::new();
+    if gemm::simd_available() {
+        kernel_axis.push((gemm::Kernel::Simd, "simd"));
+    } else {
+        println!("[kernel axis] avx2+fma not detected: simd leg skipped");
+    }
+    kernel_axis.push((gemm::Kernel::Blocked, "blocked"));
+    kernel_axis.push((gemm::Kernel::Naive, "naive"));
+
     // (kernel, threads, tok/s) at ratio 0.0, per residency label
     let mut dense_tps: Vec<(&str, usize, &str, f64)> = Vec::new();
-    for &(kernel, klabel) in KERNEL_AXIS {
+    for &(kernel, klabel) in &kernel_axis {
         gemm::set_kernel(kernel);
         for &threads in THREAD_AXIS {
             pool::set_threads(threads);
             for &ratio in RATIOS {
-                // the naive baseline only runs the dense cells
-                if kernel == gemm::Kernel::Naive && ratio != 0.0 {
+                // baseline tiers only run the dense cells
+                if kernel != default_kernel && ratio != 0.0 {
                     continue;
                 }
                 let plan = if ratio == 0.0 {
@@ -104,7 +118,7 @@ fn main() {
         }
     }
     pool::set_threads(pool::default_threads());
-    gemm::set_kernel(gemm::Kernel::Blocked); // documented default
+    gemm::set_kernel(default_kernel); // back to the documented default
 
     let find = |kernel: &str, threads: usize, label: &str| {
         dense_tps
@@ -112,17 +126,24 @@ fn main() {
             .find(|(kl, t, l, _)| *kl == kernel && *t == threads && *l == label)
             .map(|(_, _, _, tps)| *tps)
     };
+    let dk = default_kernel.name();
     let (t0, t1) = (THREAD_AXIS[0], *THREAD_AXIS.last().unwrap());
-    if let (Some(a), Some(b)) = (find("blocked", t0, "session"), find("blocked", t1, "session")) {
+    if let (Some(a), Some(b)) = (find(dk, t0, "session"), find(dk, t1, "session")) {
         println!("serve speedup (dense, session): threads={t1} vs threads={t0} -> {:.2}x", b / a);
     }
-    if let (Some(l), Some(s)) = (find("blocked", t1, "legacy"), find("blocked", t1, "session")) {
+    if let (Some(l), Some(s)) = (find(dk, t1, "legacy"), find(dk, t1, "session")) {
         println!("serve speedup (dense, threads={t1}): session vs legacy -> {:.2}x", s / l);
     }
     if let (Some(nv), Some(bl)) = (find("naive", t1, "session"), find("blocked", t1, "session")) {
         println!(
             "serve speedup (dense, session, threads={t1}): blocked vs naive -> {:.2}x",
             bl / nv
+        );
+    }
+    if let (Some(bl), Some(sd)) = (find("blocked", t1, "session"), find("simd", t1, "session")) {
+        println!(
+            "serve speedup (dense, session, threads={t1}): simd vs blocked -> {:.2}x",
+            sd / bl
         );
     }
     bench.save("runs/bench/serve.json").unwrap();

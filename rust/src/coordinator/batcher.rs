@@ -42,9 +42,18 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// A misconfigured empty bucket list is *defaulted* to `[1]` (with a
+    /// warning) rather than asserted on: the failure used to surface as
+    /// a `buckets.last().unwrap()` panic in the middle of
+    /// [`Batcher::next_batch`], taking the serving loop down long after
+    /// the bad config was accepted. Serving degraded (batch size 1)
+    /// beats serving down.
     pub fn new(rx: Receiver<Request>, mut buckets: Vec<usize>, max_wait: Duration) -> Batcher {
         buckets.sort_unstable();
-        assert!(!buckets.is_empty());
+        if buckets.is_empty() {
+            crate::warn!("Batcher built with an empty bucket list; defaulting to [1]");
+            buckets.push(1);
+        }
         Batcher {
             rx,
             pending: VecDeque::new(),
@@ -97,9 +106,11 @@ impl Batcher {
             }
             self.drain_channel();
         }
-        // wait briefly for a fuller bucket
+        // wait briefly for a fuller bucket (buckets is non-empty by
+        // construction — see `new` — so `last` cannot fail mid-serve)
+        let largest = self.buckets.last().copied().unwrap_or(1);
         let deadline = Instant::now() + self.max_wait;
-        while self.pending.len() < *self.buckets.last().unwrap() {
+        while self.pending.len() < largest {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -180,6 +191,26 @@ mod tests {
             seen.extend(batch.iter().map(|r| r.id));
         }
         assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_bucket_list_defaults_instead_of_panicking() {
+        // regression: an empty bucket config used to blow up in
+        // next_batch (buckets.last().unwrap()) mid-serve; it now degrades
+        // to batch-size-1 service at construction
+        let (tx, mut b) = mk(vec![]);
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(100), 1);
+        for i in 0..3 {
+            tx.send(Request::new(i, vec![1], 1)).unwrap();
+        }
+        drop(tx);
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert_eq!(batch.len(), 1);
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(seen, vec![0, 1, 2]);
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!   corpus      print corpus statistics (substrate sanity)
 //!
 //! Common flags: --preset tiny|small|base (default small), --out DIR,
-//! --steps N, --lr F, --calib N, --ratio F, --seed N, --verbose.
+//! --steps N, --lr F, --calib N, --ratio F, --seed N, --verbose,
+//! --kernel auto|naive|blocked|simd (GEMM kernel; auto = runtime CPU
+//! detection, same values as HEAPR_KERNEL).
 
 use anyhow::{bail, Result};
 
@@ -25,6 +27,7 @@ use heapr::heapr::{heapr_scores, surgery, PrunePlan, Scope};
 use heapr::info;
 use heapr::model::checkpoint::Checkpoint;
 use heapr::model::flops::flops_reduction;
+use heapr::tensor::gemm;
 use heapr::util::args::Args;
 use heapr::util::json::Json;
 use heapr::util::logging::{set_level, Level};
@@ -42,6 +45,26 @@ fn run() -> Result<()> {
     if args.flag("verbose") {
         set_level(Level::Debug);
     }
+    // --kernel overrides HEAPR_KERNEL; `auto` is runtime CPU detection:
+    // simd where avx2+fma exist, blocked elsewhere. An *explicit*
+    // `--kernel auto` overrides a HEAPR_KERNEL still exported in the
+    // environment; with no flag at all the env var keeps its say.
+    let explicit = args.opt_str("kernel").is_some();
+    let kernel = args.choice("kernel", "auto", &["auto", "naive", "blocked", "simd"])?;
+    match gemm::Kernel::parse(&kernel) {
+        // same degradation rule as HEAPR_KERNEL=simd: warn, don't let the
+        // logs attribute blocked-kernel numbers to a simd label
+        Some(gemm::Kernel::Simd) if !gemm::simd_available() => {
+            heapr::warn!("--kernel simd but this CPU lacks avx2+fma; using blocked");
+            gemm::set_kernel(gemm::Kernel::Blocked);
+        }
+        Some(k) => gemm::set_kernel(k),
+        None if explicit => gemm::set_kernel(gemm::default_kernel()),
+        None => {}
+    }
+    // first use emits the startup "gemm kernel tier" line — after any
+    // override, so it always names the tier that will actually run
+    gemm::kernel();
     let preset = args.str("preset", "small");
     let artifact_dir = args.str("artifacts", &format!("artifacts/{preset}"));
     let out = args.str("out", &format!("runs/{preset}"));

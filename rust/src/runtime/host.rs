@@ -14,8 +14,10 @@
 //!   `attn_decode_b*`, `moe_gate_n*`, `lm_head_n*`, `expert_n*_w*`).
 //!
 //! Heavy matmuls route through the [`crate::tensor::gemm`] microkernel
-//! subsystem (cache-blocked + packed by default; `HEAPR_KERNEL=naive`
-//! restores the historical triple loops), and attention — prefill
+//! subsystem (three tiers: runtime-detected f32x8 `simd` where the CPU
+//! has avx2+fma, cache-blocked `blocked` as the guaranteed fallback,
+//! `HEAPR_KERNEL=naive` for the historical triple loops), and attention
+//! — prefill
 //! forward, training backward and the decode append+attend — fans
 //! (batch, head) pairs out over the pool; the GEMMs nested under those
 //! worker lanes subdivide further via the pool's caller-helps scheduler.

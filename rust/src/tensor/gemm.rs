@@ -3,45 +3,63 @@
 //! Every heavy matmul in the tree — router scores, attention, the expert
 //! FFN fan-out, gradient accumulation, `quadform` — reduces to one of
 //! three layouts of `C[m,n] = Σ_t A(i,t)·B(t,j)` (see [`Layout`]). This
-//! module supplies two interchangeable kernels for all three:
+//! module supplies three interchangeable kernels for all three:
 //!
 //! * [`naive`] — the historical row-blocked triple loops, kept as the
 //!   measured baseline for the bench `kernel` axis.
 //! * [`blocked`] — a cache-blocked kernel: `MC×KC×NC` tiling into
 //!   L1/L2-sized panels, the strided B panel packed once per `(KC, NC)`
 //!   block, and an 8-wide-unrolled [`dot8`] inner kernel whose
-//!   `f32::mul_add` accumulators autovectorize to FMA lanes.
+//!   `f32::mul_add` accumulators the compiler may (but on a baseline
+//!   target need not) vectorize. Correct on every target — the
+//!   guaranteed fallback. Known cost of that guarantee: on a CPU with
+//!   no FMA hardware at all (pre-2013 x86), `mul_add` is a correct but
+//!   slow libm call, so on such hosts `blocked` trades speed for the
+//!   accumulation contract; `HEAPR_KERNEL=naive` is the faster
+//!   non-contract escape hatch there.
+//! * [`simd`] — the same cache-blocked driver on an explicit
+//!   `core::arch::x86_64` f32x8 microkernel (`_mm256_fmadd_ps`,
+//!   register-tiled two A rows × four packed B columns), selected only
+//!   after **runtime** CPU feature detection
+//!   (`is_x86_feature_detected!("avx2")` + `("fma")`). On every other
+//!   CPU or architecture it *is* [`blocked`] — no compile-time
+//!   `target-cpu` assumption, no SIGILL on older hosts.
 //!
 //! [`gemm`] dispatches on the process-wide kernel selection
-//! (`HEAPR_KERNEL=naive|blocked`, default `blocked`; [`set_kernel`] is
-//! the programmatic override the benches sweep).
+//! (`HEAPR_KERNEL=naive|blocked|simd`; the default is
+//! [`default_kernel`]: `simd` where detected, else `blocked`).
+//! [`set_kernel`] is the programmatic override the benches sweep. The
+//! first resolution logs the tier the CPU resolved to.
 //!
 //! # Accumulation contract
 //!
-//! Both the blocked kernel and the [`reference`] mirror compute every
-//! output element by the exact same arithmetic, independent of packing,
-//! tile sizes over `m`/`n`, and thread count:
+//! The blocked and simd kernels and the [`reference`] mirror compute
+//! every output element by the exact same arithmetic, independent of
+//! packing, tile sizes over `m`/`n`, and thread count:
 //!
 //! 1. the reduction axis is split into `KC`-sized blocks, in order;
-//! 2. within a block, eight interleaved `f32::mul_add` accumulators
+//! 2. within a block, eight interleaved fused-multiply-add accumulators
 //!    (lane `l` takes elements `8u + l`; a remainder of `r` elements
 //!    lands on lanes `0..r`), reduced pairwise —
 //!    `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`;
 //! 3. block results are added into the output in block order.
 //!
-//! `mul_add` is exactly rounded on every target, so `blocked` is bitwise
-//! identical to `reference` everywhere, and bitwise thread-count
-//! invariant: parallelism only splits `m` into row-disjoint blocks (at
-//! most `MC` rows, shrinking for small `m` so decode-shaped GEMMs still
-//! fan out) over [`pool`] (same [`RowsPtr`] contract as the row-wise
-//! tensor ops), and row blocking never enters the contract.
+//! The contract was designed so that one f32x8 vector register *is* the
+//! eight lanes: `_mm256_fmadd_ps` performs per lane the same exactly
+//! rounded fused multiply-add that `f32::mul_add` performs, so `simd` is
+//! bitwise identical to `reference` (and to `blocked`) everywhere, and
+//! all contract kernels are bitwise thread-count invariant: parallelism
+//! only splits `m` into row-disjoint blocks ([`pool::row_block`],
+//! shrinking below [`MC`] for small `m` so decode-shaped GEMMs still fan
+//! out) over [`pool`], and row blocking never enters the contract.
 //!
 //! # Non-finite inputs
 //!
 //! No kernel skips zero operands: `0.0 · NaN` and `0.0 · ∞` contribute
 //! NaN, identically in all three layouts (the historical `matmul_at`
 //! zero-skip shortcut silently dropped them; that shortcut is gone, and
-//! the shared policy is pinned by tests).
+//! the shared policy is pinned by tests, bit-for-bit across kernels for
+//! canonical NaN payloads, denormals included).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -49,7 +67,8 @@ use std::sync::OnceLock;
 use crate::util::pool;
 use crate::util::pool::RowsPtr;
 
-/// Row-block height: C/A rows per parallel work item (L2-sized A slab).
+/// Row-block height cap: C/A rows per parallel work item (L2-sized A
+/// slab); [`pool::row_block`] shrinks below it for small `m`.
 pub const MC: usize = 64;
 /// Reduction-axis block: one `KC` slice of an A row (1 KiB) stays in L1
 /// while the packed B panel streams against it.
@@ -79,44 +98,125 @@ pub enum Layout {
 pub enum Kernel {
     /// Historical row-blocked triple loops (bench baseline).
     Naive = 0,
-    /// Cache-blocked + packed + 8-wide FMA microkernel (default).
+    /// Cache-blocked + packed + 8-lane `mul_add` microkernel; the
+    /// guaranteed fallback on every target.
     Blocked = 1,
+    /// Cache-blocked driver on the explicit f32x8 avx2+fma microkernel;
+    /// requires runtime detection and degrades to `Blocked` without it.
+    Simd = 2,
 }
 
-fn kernel_cell() -> &'static AtomicU8 {
-    static CELL: OnceLock<AtomicU8> = OnceLock::new();
-    CELL.get_or_init(|| {
-        let k = match std::env::var("HEAPR_KERNEL") {
-            Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
-                "naive" => Kernel::Naive,
-                "blocked" => Kernel::Blocked,
-                other => {
-                    crate::warn!(
-                        "HEAPR_KERNEL={other:?} is not naive|blocked; using blocked"
-                    );
-                    Kernel::Blocked
-                }
-            },
-            Err(_) => Kernel::Blocked,
-        };
-        AtomicU8::new(k as u8)
-    })
+impl Kernel {
+    /// Parse a `HEAPR_KERNEL` / `--kernel` value (case/space tolerant).
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "naive" => Some(Kernel::Naive),
+            "blocked" => Some(Kernel::Blocked),
+            "simd" => Some(Kernel::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Naive => "naive",
+            Kernel::Blocked => "blocked",
+            Kernel::Simd => "simd",
+        }
+    }
 }
 
-/// Current process-wide kernel selection.
-pub fn kernel() -> Kernel {
-    if kernel_cell().load(Ordering::Relaxed) == Kernel::Naive as u8 {
-        Kernel::Naive
+/// True when this CPU supports the [`simd`] kernel: x86-64 with avx2 and
+/// fma, detected at **runtime** — never a compile-time `target-cpu`
+/// assumption. Cached after the first probe.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVAIL: OnceLock<bool> = OnceLock::new();
+        *AVAIL.get_or_init(|| {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The kernel tier this CPU resolves to absent any `HEAPR_KERNEL` /
+/// [`set_kernel`] override: `simd` where detection finds avx2+fma,
+/// `blocked` everywhere else.
+pub fn default_kernel() -> Kernel {
+    if simd_available() {
+        Kernel::Simd
     } else {
         Kernel::Blocked
     }
 }
 
-/// Swap the process-wide kernel (benchmark `kernel` axis; library code
-/// never calls this). Tests that call it must hold
-/// [`pool::test_serial_lock`].
+static KERNEL_CELL: OnceLock<AtomicU8> = OnceLock::new();
+
+/// The selection cell, lazily initialized from `HEAPR_KERNEL` (with
+/// warnings for values that cannot apply). [`set_kernel`] bypasses this
+/// resolution on purpose — see there.
+fn kernel_cell() -> &'static AtomicU8 {
+    KERNEL_CELL.get_or_init(|| {
+        let auto = default_kernel();
+        let k = match std::env::var("HEAPR_KERNEL") {
+            Ok(v) => match Kernel::parse(&v) {
+                Some(Kernel::Simd) if !simd_available() => {
+                    crate::warn!(
+                        "HEAPR_KERNEL=simd but this CPU lacks avx2+fma; using blocked"
+                    );
+                    Kernel::Blocked
+                }
+                Some(k) => k,
+                None => {
+                    crate::warn!(
+                        "HEAPR_KERNEL={v:?} is not naive|blocked|simd; using {}",
+                        auto.name()
+                    );
+                    auto
+                }
+            },
+            Err(_) => auto,
+        };
+        AtomicU8::new(k as u8)
+    })
+}
+
+/// Current process-wide kernel selection. The first call emits the
+/// startup log line reporting the tier that will *actually* execute —
+/// deliberately here rather than in the env resolution, so a
+/// `set_kernel` override applied before first use (the `--kernel` flag)
+/// can never leave a stale tier in the logs.
+pub fn kernel() -> Kernel {
+    let k = match kernel_cell().load(Ordering::Relaxed) {
+        0 => Kernel::Naive,
+        1 => Kernel::Blocked,
+        _ => Kernel::Simd,
+    };
+    static STARTUP_LOG: std::sync::Once = std::sync::Once::new();
+    STARTUP_LOG.call_once(|| {
+        crate::info!(
+            "gemm kernel tier: {} (runtime detection: avx2+fma {})",
+            k.name(),
+            if simd_available() { "present" } else { "absent" }
+        );
+    });
+    k
+}
+
+/// Swap the process-wide kernel (the `--kernel` flag and the benches'
+/// `kernel` axis; library code never calls this). Selecting `Simd` on a
+/// CPU without avx2+fma is safe: every `Simd` entry point re-checks
+/// detection and degrades to the blocked kernel. If the cell is not yet
+/// initialized this seeds it with the override directly instead of
+/// running the `HEAPR_KERNEL` resolution first — an overridden env value
+/// must not emit warnings about a tier that will never run. Tests that
+/// call this must hold [`pool::test_serial_lock`].
 pub fn set_kernel(k: Kernel) {
-    kernel_cell().store(k as u8, Ordering::Relaxed);
+    KERNEL_CELL.get_or_init(|| AtomicU8::new(k as u8)).store(k as u8, Ordering::Relaxed);
 }
 
 /// `C[m,n] = op_A(A) · op_B(B)` per `layout`, into `out` (overwritten),
@@ -125,10 +225,20 @@ pub fn gemm(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: 
     match kernel() {
         Kernel::Naive => naive(layout, a, b, out, m, k, n),
         Kernel::Blocked => blocked(layout, a, b, out, m, k, n),
+        Kernel::Simd => simd(layout, a, b, out, m, k, n),
     }
 }
 
 // ------------------------------------------------------------ microkernel
+
+/// The contract's pairwise lane reduction —
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — shared by every kernel tier
+/// (the avx2 tier spills its register to lanes and reduces through this
+/// same function, so the reduce cannot drift between tiers).
+#[inline]
+fn reduce8(acc: &[f32; 8]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
 
 /// The inner kernel of the accumulation contract: eight interleaved
 /// `mul_add` lanes over two equal-length contiguous slices, reduced
@@ -147,25 +257,27 @@ pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     for (l, (x, y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
         acc[l] = x.mul_add(*y, acc[l]);
     }
-    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+    reduce8(&acc)
 }
 
 /// Kernel-dispatched dot product for non-GEMM call sites (the host
 /// backend's decode-attention score loop): the contract [`dot`] under
-/// `Blocked`, the historical single-accumulator serial sum under
-/// `Naive` — so the bench `kernel` axis compares the true pre-blocked
-/// arithmetic end to end, not a hybrid.
+/// `Blocked`, its intrinsics twin under `Simd`, and the historical
+/// single-accumulator serial sum under `Naive` — so the bench `kernel`
+/// axis compares the true pre-blocked arithmetic end to end, not a
+/// hybrid.
 #[inline]
 pub fn dot_k(a: &[f32], b: &[f32]) -> f32 {
     match kernel() {
         Kernel::Naive => a.iter().zip(b).map(|(x, y)| x * y).sum(),
         Kernel::Blocked => dot(a, b),
+        Kernel::Simd => dot_simd(a, b),
     }
 }
 
 /// Contract dot product over arbitrary length: `KC`-sized blocks, each
 /// reduced by [`dot8`], summed in block order — exactly the per-element
-/// accumulation every blocked GEMM here performs.
+/// accumulation every contract GEMM here performs.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -179,7 +291,32 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     c
 }
 
+/// [`dot`] on the avx2 f32x8 microkernel: identical `KC` blocking, lane
+/// assignment and reduction, so it is bitwise equal to [`dot`] on every
+/// input. Falls back to [`dot`] itself when the CPU lacks avx2+fma.
+#[inline]
+pub fn dot_simd(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: avx2+fma presence was just checked at runtime.
+        return unsafe { avx2::dot(a, b) };
+    }
+    dot(a, b)
+}
+
 // --------------------------------------------------------------- blocked
+
+/// Micro-kernel tier for the shared cache-blocked [`driver`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Micro {
+    /// [`dot8`] scalar lanes — compiles on (and is correct for) every
+    /// target.
+    Scalar,
+    /// Explicit f32x8 intrinsics — only constructed behind
+    /// [`simd_available`].
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
 
 /// Gather the `(pc, jc)` panel of `op_B` into `packb`: `nc` contiguous
 /// columns of length `kc`, so the microkernel streams both operands.
@@ -244,11 +381,53 @@ fn mc_block(
     }
 }
 
-/// Cache-blocked GEMM (see the module docs for the tiling and the
-/// accumulation contract). Row-blocks fan out over the pool when the
-/// work is large enough; results are bitwise identical to [`reference`]
-/// for every thread count.
-pub fn blocked(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+/// Run one row-block on the selected micro-kernel tier. The avx2 arm is
+/// the only unsafe call in the driver.
+#[allow(clippy::too_many_arguments)]
+fn run_block(
+    micro: Micro,
+    layout: Layout,
+    a: &[f32],
+    packa: &[f32],
+    packb: &[f32],
+    b: &[f32],
+    out_rows: &mut [f32],
+    i0: usize,
+    ic: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    k: usize,
+    n: usize,
+) {
+    match micro {
+        Micro::Scalar => {
+            mc_block(layout, a, packa, packb, b, out_rows, i0, ic, pc, kc, jc, nc, k, n)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Micro::Avx2 is only constructed behind simd_available().
+        Micro::Avx2 => unsafe {
+            avx2::mc_block(layout, a, packa, packb, b, out_rows, i0, ic, pc, kc, jc, nc, k, n)
+        },
+    }
+}
+
+/// The shared cache-blocked GEMM driver (see the module docs for the
+/// tiling and the accumulation contract). Row-blocks fan out over the
+/// pool when the work is large enough; results are bitwise identical to
+/// [`reference`] for every micro-kernel tier and thread count.
+#[allow(clippy::too_many_arguments)]
+fn driver(
+    micro: Micro,
+    layout: Layout,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
@@ -256,12 +435,13 @@ pub fn blocked(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, 
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    // Row blocks are the parallel work items. MC keeps the A slab
-    // L2-friendly, but when m is small the blocks shrink — down to single
-    // rows — so decode-shaped GEMMs (m = batch) still fan out. Row/column
-    // blocking never affects the accumulation contract; only KC does.
+    // Row blocks are the parallel work items; pool::row_block keeps them
+    // L2-friendly (<= MC rows) but shrinks them — down to single rows —
+    // for small m, so decode-shaped GEMMs (m = batch) still fan out.
+    // Row/column blocking never affects the accumulation contract; only
+    // KC does.
     let threads = pool::threads();
-    let rb = MC.min(m.div_ceil(threads * 4)).max(1);
+    let rb = pool::row_block(m, MC, threads);
     let rblocks = m.div_ceil(rb);
     let parallel = m * n * k >= PAR_MIN_WORK && rblocks > 1 && threads > 1;
     // TN's B rows double as the packed panel; NN/AT gather one. AT also
@@ -303,15 +483,211 @@ pub fn blocked(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, 
                     // SAFETY: row blocks are disjoint across lanes and the
                     // buffer outlives the par_for (RowsPtr contract).
                     let rows = unsafe { ptr.slice(i0 * n, ic * n) };
-                    mc_block(layout, a, pa, pb, b, rows, i0, ic, pc, kc, jc, nc, k, n);
+                    run_block(micro, layout, a, pa, pb, b, rows, i0, ic, pc, kc, jc, nc, k, n);
                 });
             } else {
                 for ib in 0..rblocks {
                     let i0 = ib * rb;
                     let ic = rb.min(m - i0);
                     let rows = &mut out[i0 * n..(i0 + ic) * n];
-                    mc_block(layout, a, pa, pb, b, rows, i0, ic, pc, kc, jc, nc, k, n);
+                    run_block(micro, layout, a, pa, pb, b, rows, i0, ic, pc, kc, jc, nc, k, n);
                 }
+            }
+        }
+    }
+}
+
+/// Cache-blocked GEMM on the scalar-lane microkernel — the guaranteed
+/// fallback tier: compiles and runs correctly on a baseline build of any
+/// target. Bitwise identical to [`reference`] for every thread count.
+pub fn blocked(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    driver(Micro::Scalar, layout, a, b, out, m, k, n);
+}
+
+/// Cache-blocked GEMM on the explicit f32x8 avx2+fma microkernel when
+/// runtime detection finds the features, else exactly [`blocked`] — the
+/// guaranteed fallback that keeps a baseline x86-64 (or non-x86) binary
+/// correct without `-C target-cpu=native`. Bitwise identical to
+/// [`reference`] (and [`blocked`]) on every input, shape and thread
+/// count.
+pub fn simd(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        return driver(Micro::Avx2, layout, a, b, out, m, k, n);
+    }
+    driver(Micro::Scalar, layout, a, b, out, m, k, n);
+}
+
+// ------------------------------------------------------------------ avx2
+//
+// The `simd` tier. One _mm256 register IS the contract's eight
+// interleaved lanes: `_mm256_fmadd_ps` performs, per lane, the same
+// exactly rounded fused multiply-add over elements `8u + l` that dot8's
+// scalar `mul_add` lanes perform; the kc % 8 tail is finished with
+// scalar `mul_add` on lanes 0..r after spilling the register (compiled
+// to an inline vfmadd here — `fma` is enabled on these functions); and
+// the reduction is the shared `reduce8`. Bitwise identity with
+// `reference` is therefore structural, not approximate, and the
+// property tests pin it. (NaN *payloads* beyond the canonical quiet NaN
+// are the one soft spot — both tiers run on x86 FMA hardware whenever
+// this module is reachable, so payloads agree in practice and the
+// non-finite tests assert them for canonical inputs.)
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{reduce8, Layout, KC};
+    use core::arch::x86_64::{
+        _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+
+    /// [`super::dot8`] on f32x8 registers: same lanes, same tail, same
+    /// reduction.
+    ///
+    /// # Safety
+    /// Requires avx2 + fma (callers check [`super::simd_available`]).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        // Bound every access by the shorter slice: a caller's length
+        // mismatch is a contract violation (caught by the debug_assert),
+        // but it must degrade to a wrong *value* — like the scalar
+        // tier's truncating zip — never to an out-of-bounds read in a
+        // release build. Equal lengths (every in-tree caller) are
+        // untouched.
+        let len = a.len().min(b.len());
+        let chunks = len / 8;
+        let mut acc = _mm256_setzero_ps();
+        for u in 0..chunks {
+            let av = _mm256_loadu_ps(a.as_ptr().add(8 * u));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(8 * u));
+            acc = _mm256_fmadd_ps(av, bv, acc);
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * 8..len).enumerate() {
+            lanes[l] = a[t].mul_add(b[t], lanes[l]);
+        }
+        reduce8(&lanes)
+    }
+
+    /// [`super::dot`] (the KC-blocked contract dot) on [`dot8`].
+    ///
+    /// # Safety
+    /// Requires avx2 + fma (callers check [`super::simd_available`]).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut c = 0.0f32;
+        let mut pc = 0;
+        while pc < a.len() {
+            let kc = KC.min(a.len() - pc);
+            c += dot8(&a[pc..pc + kc], &b[pc..pc + kc]);
+            pc += kc;
+        }
+        c
+    }
+
+    /// Register tile: two A rows × eight f32 lanes per accumulator (one
+    /// ymm register — the ROADMAP's "2×8" register tile), unrolled over
+    /// four packed B columns, so the eight outputs own eight independent
+    /// FMA chains — enough to cover the ~4-cycle FMA latency on two
+    /// issue ports — while each B load is shared by two rows and each A
+    /// load by four columns. Per-element arithmetic is exactly
+    /// [`dot8`]'s.
+    ///
+    /// # Safety
+    /// Requires avx2 + fma; all four B slices and both A slices must
+    /// share one length.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tile_2x4(a0: &[f32], a1: &[f32], b: [&[f32]; 4]) -> [[f32; 4]; 2] {
+        let kc = a0.len();
+        let chunks = kc / 8;
+        let mut acc = [[_mm256_setzero_ps(); 4]; 2];
+        for u in 0..chunks {
+            let off = 8 * u;
+            let av0 = _mm256_loadu_ps(a0.as_ptr().add(off));
+            let av1 = _mm256_loadu_ps(a1.as_ptr().add(off));
+            for (j, bj) in b.iter().enumerate() {
+                let bv = _mm256_loadu_ps(bj.as_ptr().add(off));
+                acc[0][j] = _mm256_fmadd_ps(av0, bv, acc[0][j]);
+                acc[1][j] = _mm256_fmadd_ps(av1, bv, acc[1][j]);
+            }
+        }
+        let mut out = [[0.0f32; 4]; 2];
+        for (r, arow) in [a0, a1].into_iter().enumerate() {
+            for (j, bj) in b.iter().enumerate() {
+                let mut lanes = [0.0f32; 8];
+                _mm256_storeu_ps(lanes.as_mut_ptr(), acc[r][j]);
+                for (l, t) in (chunks * 8..kc).enumerate() {
+                    lanes[l] = arow[t].mul_add(bj[t], lanes[l]);
+                }
+                out[r][j] = reduce8(&lanes);
+            }
+        }
+        out
+    }
+
+    /// The avx2 mirror of [`super::mc_block`]: identical row/column
+    /// ranges and per-element arithmetic, with 2×4 register tiles in the
+    /// interior and [`dot8`] singles on the ragged edges (nc % 4 columns,
+    /// the odd last row).
+    ///
+    /// # Safety
+    /// Requires avx2 + fma (callers check [`super::simd_available`]).
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn mc_block(
+        layout: Layout,
+        a: &[f32],
+        packa: &[f32],
+        packb: &[f32],
+        b: &[f32],
+        out_rows: &mut [f32],
+        i0: usize,
+        ic: usize,
+        pc: usize,
+        kc: usize,
+        jc: usize,
+        nc: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let arow = |i: usize| -> &[f32] {
+            match layout {
+                Layout::AT => &packa[(i0 + i) * kc..(i0 + i + 1) * kc],
+                _ => &a[(i0 + i) * k + pc..(i0 + i) * k + pc + kc],
+            }
+        };
+        let bcol = |j: usize| -> &[f32] {
+            match layout {
+                Layout::TN => &b[(jc + j) * k + pc..(jc + j) * k + pc + kc],
+                _ => &packb[j * kc..(j + 1) * kc],
+            }
+        };
+        let mut i = 0;
+        while i + 2 <= ic {
+            let (a0, a1) = (arow(i), arow(i + 1));
+            let mut j = 0;
+            while j + 4 <= nc {
+                let tile = tile_2x4(a0, a1, [bcol(j), bcol(j + 1), bcol(j + 2), bcol(j + 3)]);
+                for (r, row) in tile.iter().enumerate() {
+                    for (jj, v) in row.iter().enumerate() {
+                        out_rows[(i + r) * n + jc + j + jj] += v;
+                    }
+                }
+                j += 4;
+            }
+            while j < nc {
+                let bc = bcol(j);
+                out_rows[i * n + jc + j] += dot8(a0, bc);
+                out_rows[(i + 1) * n + jc + j] += dot8(a1, bc);
+                j += 1;
+            }
+            i += 2;
+        }
+        if i < ic {
+            let a0 = arow(i);
+            for j in 0..nc {
+                out_rows[i * n + jc + j] += dot8(a0, bcol(j));
             }
         }
     }
@@ -322,7 +698,7 @@ pub fn blocked(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, 
 /// Naive mirror of the accumulation contract: plain loops, no packing,
 /// no tiling over `m`/`n`, no parallelism — but the identical per-element
 /// reduction ([`dot`]). The bitwise ground truth the property tests hold
-/// [`blocked`] to, across every shape and thread count.
+/// [`blocked`] and [`simd`] to, across every shape and thread count.
 pub fn reference(
     layout: Layout,
     a: &[f32],
@@ -388,7 +764,7 @@ pub(crate) fn par_rows<F: Fn(usize, &mut [f32]) + Sync>(
 
 /// The historical kernels: row-parallel triple loops with a single
 /// serial accumulator (TN) or a broadcast row update (NN/AT). Kept as
-/// the bench baseline the blocked kernel's speedup is measured against.
+/// the bench baseline the contract kernels' speedup is measured against.
 pub fn naive(layout: Layout, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
@@ -443,6 +819,13 @@ mod tests {
 
     const LAYOUTS: [Layout; 3] = [Layout::TN, Layout::NN, Layout::AT];
 
+    type KernelFn = fn(Layout, &[f32], &[f32], &mut [f32], usize, usize, usize);
+    /// The two contract kernels the bitwise claims cover. On hosts
+    /// without avx2+fma `simd` degrades to `blocked`, so the pair stays
+    /// meaningful (if redundant) everywhere — and CI additionally runs
+    /// the whole suite under each HEAPR_KERNEL value.
+    const CONTRACT_KERNELS: [(KernelFn, &str); 2] = [(blocked, "blocked"), (simd, "simd")];
+
     #[test]
     fn dot8_matches_exact_integer_sum() {
         // integer values < 2^24: every order of summation is exact, so
@@ -452,31 +835,51 @@ mod tests {
         let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert_eq!(dot8(&a, &b), want);
         assert_eq!(dot(&a, &b), want);
+        assert_eq!(dot_simd(&a, &b), want);
         assert_eq!(dot8(&[], &[]), 0.0);
+        assert_eq!(dot_simd(&[], &[]), 0.0);
     }
 
     #[test]
-    fn blocked_hand_case_exact() {
-        // small integers: blocked, naive and reference all exact
-        let a = vec![1.0, 2.0, 3.0, 4.0]; // [2,2]
-        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]; // [3,2] rows
-        let mut out = vec![0.0f32; 6];
-        blocked(Layout::TN, &a, &b, &mut out, 2, 2, 3);
-        assert_eq!(out, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0]);
-        let bb = vec![5.0, 6.0, 7.0, 8.0]; // [2,2]
-        let mut out = vec![0.0f32; 4];
-        blocked(Layout::NN, &a, &bb, &mut out, 2, 2, 2);
-        assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0]);
-        let mut out = vec![0.0f32; 4];
-        blocked(Layout::AT, &a, &bb, &mut out, 2, 2, 2);
-        assert_eq!(out, vec![26.0, 30.0, 38.0, 44.0]);
+    fn dot_tiers_are_bitwise_identical() {
+        // lengths straddling the 8-lane chunks and the KC block boundary
+        let mut rng = Pcg64::new(5);
+        for len in [0usize, 1, 7, 8, 9, 63, 255, 256, 257, 515] {
+            let a = randv(&mut rng, len);
+            let b = randv(&mut rng, len);
+            assert_eq!(
+                dot_simd(&a, &b).to_bits(),
+                dot(&a, &b).to_bits(),
+                "dot tiers diverged at len {len}"
+            );
+        }
     }
 
     #[test]
-    fn prop_blocked_matches_reference_bitwise() {
-        // ragged shapes straddling MC/NC (64) and KC (256) boundaries
+    fn hand_cases_exact_in_every_contract_kernel() {
+        // small integers: every kernel is exact
+        for (kfn, name) in CONTRACT_KERNELS {
+            let a = vec![1.0, 2.0, 3.0, 4.0]; // [2,2]
+            let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]; // [3,2] rows
+            let mut out = vec![0.0f32; 6];
+            kfn(Layout::TN, &a, &b, &mut out, 2, 2, 3);
+            assert_eq!(out, vec![1.0, 2.0, 3.0, 3.0, 4.0, 7.0], "{name}");
+            let bb = vec![5.0, 6.0, 7.0, 8.0]; // [2,2]
+            let mut out = vec![0.0f32; 4];
+            kfn(Layout::NN, &a, &bb, &mut out, 2, 2, 2);
+            assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0], "{name}");
+            let mut out = vec![0.0f32; 4];
+            kfn(Layout::AT, &a, &bb, &mut out, 2, 2, 2);
+            assert_eq!(out, vec![26.0, 30.0, 38.0, 44.0], "{name}");
+        }
+    }
+
+    #[test]
+    fn prop_contract_kernels_match_reference_bitwise() {
+        // ragged shapes straddling MC/NC (64) and KC (256) boundaries —
+        // and the simd tile edges (m % 2, n % 4)
         check(
-            "gemm-blocked-vs-reference",
+            "gemm-contract-vs-reference",
             24,
             |g: &mut Gen| {
                 let m = g.usize_in(1, 66);
@@ -491,12 +894,14 @@ mod tests {
             },
             |(m, k, n, a, b)| {
                 for layout in LAYOUTS {
-                    let mut got = vec![0.0f32; m * n];
                     let mut want = vec![0.0f32; m * n];
-                    blocked(layout, a, b, &mut got, *m, *k, *n);
                     reference(layout, a, b, &mut want, *m, *k, *n);
-                    if got != want {
-                        return false;
+                    for (kfn, _name) in CONTRACT_KERNELS {
+                        let mut got = vec![0.0f32; m * n];
+                        kfn(layout, a, b, &mut got, *m, *k, *n);
+                        if got != want {
+                            return false;
+                        }
                     }
                 }
                 true
@@ -505,9 +910,9 @@ mod tests {
     }
 
     #[test]
-    fn prop_blocked_matches_naive_within_tolerance() {
+    fn prop_contract_kernels_match_naive_within_tolerance() {
         check(
-            "gemm-blocked-vs-naive",
+            "gemm-contract-vs-naive",
             20,
             |g: &mut Gen| {
                 let m = g.usize_in(1, 32);
@@ -518,15 +923,17 @@ mod tests {
             },
             |(m, k, n, a, b)| {
                 for layout in LAYOUTS {
-                    let mut x = vec![0.0f32; m * n];
                     let mut y = vec![0.0f32; m * n];
-                    blocked(layout, a, b, &mut x, *m, *k, *n);
                     naive(layout, a, b, &mut y, *m, *k, *n);
-                    let ok = x.iter().zip(&y).all(|(p, q)| {
-                        (p - q).abs() <= 1e-4 * p.abs().max(q.abs()).max(1.0)
-                    });
-                    if !ok {
-                        return false;
+                    for (kfn, _name) in CONTRACT_KERNELS {
+                        let mut x = vec![0.0f32; m * n];
+                        kfn(layout, a, b, &mut x, *m, *k, *n);
+                        let ok = x.iter().zip(&y).all(|(p, q)| {
+                            (p - q).abs() <= 1e-4 * p.abs().max(q.abs()).max(1.0)
+                        });
+                        if !ok {
+                            return false;
+                        }
                     }
                 }
                 true
@@ -535,7 +942,7 @@ mod tests {
     }
 
     #[test]
-    fn blocked_is_bitwise_thread_count_invariant() {
+    fn contract_kernels_are_bitwise_thread_count_invariant() {
         let _guard = pool::test_serial_lock();
         // drop-guard: an unwinding assert must not leak a resized pool
         struct Restore;
@@ -551,25 +958,27 @@ mod tests {
         let (m, k, n) = (130, 96, 70);
         let a = randv(&mut rng, m * k);
         let b = randv(&mut rng, n * k);
-        for layout in LAYOUTS {
-            let mut want = vec![0.0f32; m * n];
-            pool::set_threads(1);
-            blocked(layout, &a, &b, &mut want, m, k, n);
-            for threads in [2usize, 4, 8] {
-                pool::set_threads(threads);
-                let mut got = vec![0.0f32; m * n];
-                blocked(layout, &a, &b, &mut got, m, k, n);
-                assert_eq!(got, want, "{layout:?} diverged at {threads} threads");
+        for (kfn, name) in CONTRACT_KERNELS {
+            for layout in LAYOUTS {
+                let mut want = vec![0.0f32; m * n];
+                pool::set_threads(1);
+                kfn(layout, &a, &b, &mut want, m, k, n);
+                for threads in [2usize, 4, 8] {
+                    pool::set_threads(threads);
+                    let mut got = vec![0.0f32; m * n];
+                    kfn(layout, &a, &b, &mut got, m, k, n);
+                    assert_eq!(got, want, "{name}/{layout:?} diverged at {threads} threads");
+                }
+                let mut reference_out = vec![0.0f32; m * n];
+                reference(layout, &a, &b, &mut reference_out, m, k, n);
+                assert_eq!(want, reference_out, "{name}/{layout:?} diverged from reference");
             }
-            let mut reference_out = vec![0.0f32; m * n];
-            reference(layout, &a, &b, &mut reference_out, m, k, n);
-            assert_eq!(want, reference_out, "{layout:?} diverged from reference");
         }
         // _restore resets the pool on drop
     }
 
     #[test]
-    fn nested_blocked_gemm_matches_toplevel() {
+    fn nested_contract_gemm_matches_toplevel() {
         // a gemm issued from inside a pool worker (the attention / expert
         // fan-out pattern) takes the caller-helps path; results must be
         // bitwise identical to the top-level call
@@ -577,13 +986,15 @@ mod tests {
         let (m, k, n) = (128, 64, 64); // mblocks = 2, work >> PAR_MIN_WORK
         let a = randv(&mut rng, m * k);
         let b = randv(&mut rng, n * k);
-        let mut want = vec![0.0f32; m * n];
-        blocked(Layout::TN, &a, &b, &mut want, m, k, n);
-        pool::par_for(4, |_| {
-            let mut got = vec![0.0f32; m * n];
-            blocked(Layout::TN, &a, &b, &mut got, m, k, n);
-            assert_eq!(got, want, "nested gemm diverged");
-        });
+        for (kfn, name) in CONTRACT_KERNELS {
+            let mut want = vec![0.0f32; m * n];
+            kfn(Layout::TN, &a, &b, &mut want, m, k, n);
+            pool::par_for(4, |_| {
+                let mut got = vec![0.0f32; m * n];
+                kfn(Layout::TN, &a, &b, &mut got, m, k, n);
+                assert_eq!(got, want, "nested {name} gemm diverged");
+            });
+        }
     }
 
     #[test]
@@ -593,8 +1004,7 @@ mod tests {
         for layout in LAYOUTS {
             let a = vec![0.0f32; 4]; // [2,2] of zeros
             let b = vec![f32::NAN, 1.0, 2.0, 3.0]; // [2,2], NaN at (0,0)
-            for kernel in [naive as fn(Layout, &[f32], &[f32], &mut [f32], usize, usize, usize),
-                           blocked as _] {
+            for kernel in [naive as KernelFn, blocked as KernelFn, simd as KernelFn] {
                 let mut out = vec![0.0f32; 4];
                 kernel(layout, &a, &b, &mut out, 2, 2, 2);
                 assert!(
@@ -606,24 +1016,117 @@ mod tests {
     }
 
     #[test]
+    fn nonfinite_and_denormal_inputs_bitwise_match_reference() {
+        // The simd kernel's non-finite policy, pinned bit-for-bit: 0·NaN
+        // and 0·∞ products (canonical payloads), ±inf operands, negative
+        // zeros, and denormal operands (no FTZ/DAZ assumption), with k
+        // crossing the KC boundary so both full f32x8 chunks and the
+        // scalar tail run. Outputs are compared via to_bits against the
+        // contract reference in all three layouts, for both contract
+        // kernels. (Exotic NaN payloads are out of scope: all inputs use
+        // the canonical quiet NaN, which every tier propagates
+        // identically.)
+        let mut rng = Pcg64::new(21);
+        let (m, k, n) = (5, 259, 6);
+        let mut a = randv(&mut rng, m * k);
+        let mut b = randv(&mut rng, n * k);
+        let denorm = f32::from_bits(1); // smallest positive subnormal
+        for t in 0..k {
+            match t % 7 {
+                0 => a[t] = 0.0,
+                1 => a[t] = denorm,
+                2 => a[t] = -0.0,
+                3 => a[t] = f32::MIN_POSITIVE / 2.0,
+                _ => {}
+            }
+            match t % 5 {
+                0 => b[t] = f32::NAN,
+                1 => b[t] = f32::INFINITY,
+                2 => b[t] = f32::NEG_INFINITY,
+                3 => b[t] = -denorm,
+                _ => {}
+            }
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        for layout in LAYOUTS {
+            let mut want = vec![0.0f32; m * n];
+            reference(layout, &a, &b, &mut want, m, k, n);
+            assert!(
+                want.iter().any(|v| v.is_nan()),
+                "{layout:?}: the fixture must actually exercise NaN outputs"
+            );
+            for (kfn, name) in CONTRACT_KERNELS {
+                let mut got = vec![0.0f32; m * n];
+                kfn(layout, &a, &b, &mut got, m, k, n);
+                assert_eq!(bits(&got), bits(&want), "{name}/{layout:?} non-finite policy");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_fallback_dispatch_matches_reference() {
+        // HEAPR_KERNEL=blocked semantics, in-process: pin each contract
+        // tier and push it through the dispatching gemm()/dot_k() entry
+        // points — so CI runners without avx2 exercise the same suite the
+        // simd tier does, and a Simd selection on such a runner provably
+        // degrades to the blocked kernel instead of faulting.
+        let _guard = pool::test_serial_lock();
+        struct Restore(Kernel);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                set_kernel(self.0);
+            }
+        }
+        let _restore = Restore(kernel());
+        let mut rng = Pcg64::new(33);
+        let (m, k, n) = (20, 70, 18);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k);
+        for sel in [Kernel::Blocked, Kernel::Simd] {
+            set_kernel(sel);
+            for layout in LAYOUTS {
+                let mut want = vec![0.0f32; m * n];
+                reference(layout, &a, &b, &mut want, m, k, n);
+                let mut got = vec![0.0f32; m * n];
+                gemm(layout, &a, &b, &mut got, m, k, n);
+                assert_eq!(got, want, "{layout:?} dispatch under {sel:?}");
+            }
+            assert_eq!(
+                dot_k(&a[..k], &b[..k]).to_bits(),
+                dot(&a[..k], &b[..k]).to_bits(),
+                "dot_k under {sel:?} must be the contract dot"
+            );
+        }
+    }
+
+    #[test]
     fn kernel_dispatch_roundtrip() {
         let _guard = pool::test_serial_lock();
         let prev = kernel();
-        set_kernel(Kernel::Naive);
-        assert_eq!(kernel(), Kernel::Naive);
-        set_kernel(Kernel::Blocked);
-        assert_eq!(kernel(), Kernel::Blocked);
+        for sel in [Kernel::Naive, Kernel::Blocked, Kernel::Simd] {
+            set_kernel(sel);
+            assert_eq!(kernel(), sel);
+        }
         set_kernel(prev);
+        assert_eq!(Kernel::parse(" SIMD "), Some(Kernel::Simd));
+        assert_eq!(Kernel::parse("blocked"), Some(Kernel::Blocked));
+        assert_eq!(Kernel::parse("naive"), Some(Kernel::Naive));
+        assert_eq!(Kernel::parse("avx512"), None);
+        // the auto default never assumes features the CPU lacks
+        let auto = default_kernel();
+        assert!(auto == Kernel::Simd && simd_available() || auto == Kernel::Blocked);
     }
 
     #[test]
     fn degenerate_shapes_are_fine() {
-        for layout in LAYOUTS {
-            let mut out = vec![0.0f32; 0];
-            blocked(layout, &[], &[], &mut out, 0, 3, 0);
-            let mut out = vec![1.0f32; 4];
-            blocked(layout, &[], &[], &mut out, 2, 0, 2);
-            assert_eq!(out, vec![0.0; 4], "k=0 must zero the output");
+        for (kfn, name) in CONTRACT_KERNELS {
+            for layout in LAYOUTS {
+                let mut out = vec![0.0f32; 0];
+                kfn(layout, &[], &[], &mut out, 0, 3, 0);
+                let mut out = vec![1.0f32; 4];
+                kfn(layout, &[], &[], &mut out, 2, 0, 2);
+                assert_eq!(out, vec![0.0; 4], "{name}: k=0 must zero the output");
+            }
         }
     }
 }

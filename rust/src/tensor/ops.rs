@@ -5,8 +5,9 @@
 //! reductions; the host runtime backend leans on all of them.
 //!
 //! The matmuls dispatch into the [`super::gemm`] microkernel subsystem
-//! (cache-blocked + packed by default, `HEAPR_KERNEL=naive` for the
-//! historical triple loops); the remaining row-wise ops (`rmsnorm`,
+//! (`HEAPR_KERNEL=naive|blocked|simd`; by default the f32x8 `simd`
+//! kernel where runtime CPU detection finds avx2+fma, the cache-blocked
+//! `blocked` kernel everywhere else); the remaining row-wise ops (`rmsnorm`,
 //! `softmax`) are row-blocked over the [`crate::util::pool`] when the
 //! work is large enough. Each output row/element is produced by the same
 //! serial arithmetic regardless of the thread count, so results are
@@ -298,7 +299,8 @@ mod tests {
         // pool is racy against other tests' in-flight par_fors, so every
         // pool-mutating test serializes behind the shared test lock. The
         // kernel is pinned too: under HEAPR_KERNEL=naive the dispatching
-        // matmul is only tolerance-equal to the contract reference.
+        // matmul is only tolerance-equal to the contract reference
+        // (blocked and simd are both contract-bitwise; naive is not).
         let _guard = crate::util::pool::test_serial_lock();
         // drop-guard: restore the pool and kernel even when an assert
         // unwinds mid-test, so a failure cannot leak a 4-thread pool or a

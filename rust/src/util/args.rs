@@ -53,6 +53,18 @@ impl Args {
         self.kv.get(key).cloned()
     }
 
+    /// String option constrained to an allowed set; a value outside it is
+    /// an error listing the choices (typo-proofing for enum-like flags
+    /// such as `--kernel`).
+    pub fn choice(&mut self, key: &str, default: &str, allowed: &[&str]) -> Result<String> {
+        debug_assert!(allowed.contains(&default));
+        let v = self.str(key, default);
+        if !allowed.contains(&v.as_str()) {
+            bail!("--{key} must be one of {allowed:?}, got {v:?}");
+        }
+        Ok(v)
+    }
+
     pub fn usize(&mut self, key: &str, default: usize) -> Result<usize> {
         self.known.push(key.to_string());
         match self.kv.get(key) {
@@ -113,6 +125,18 @@ mod tests {
         assert_eq!(a.str("preset", "small"), "small");
         assert_eq!(a.f64("ratio", 0.25).unwrap(), 0.25);
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn choice_accepts_allowed_and_rejects_others() {
+        let allowed = ["auto", "naive", "blocked", "simd"];
+        let mut a = Args::parse(&sv(&["x", "--kernel", "simd"])).unwrap();
+        assert_eq!(a.choice("kernel", "auto", &allowed).unwrap(), "simd");
+        a.finish().unwrap();
+        let mut b = Args::parse(&sv(&["x", "--kernel", "avx512"])).unwrap();
+        assert!(b.choice("kernel", "auto", &allowed).is_err());
+        let mut c = Args::parse(&sv(&["x"])).unwrap();
+        assert_eq!(c.choice("kernel", "auto", &allowed).unwrap(), "auto");
     }
 
     #[test]

@@ -330,6 +330,18 @@ pub fn threads() -> usize {
     pool().threads()
 }
 
+/// Row-block height for row-partitioned parallel kernels (the GEMM
+/// drivers): at most `cap` rows per work item, shrinking — down to
+/// single rows — until there are about four blocks per lane, so
+/// small-`m` work (decode-shaped GEMMs, `m` = batch) still fans out.
+/// `threads` is passed in (not re-read) so one kernel invocation sees
+/// one consistent lane count. Row blocking sits outside the GEMM
+/// accumulation contract: any block height yields bitwise-identical
+/// results.
+pub fn row_block(m: usize, cap: usize, threads: usize) -> usize {
+    cap.min(m.div_ceil(threads.max(1) * 4)).max(1)
+}
+
 /// Swap the global pool for one with `n` lanes (benchmark threads axis;
 /// library code never calls this). In-flight `par_for`s on the old pool
 /// finish normally — its workers drain and exit once unreferenced.
@@ -488,6 +500,19 @@ mod tests {
             sum.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn row_block_shrinks_for_small_m_and_caps_at_cap() {
+        // plenty of rows: capped at `cap`
+        assert_eq!(row_block(1000, 64, 4), 63); // ceil(1000/16)=63 < 64
+        assert_eq!(row_block(4096, 64, 4), 64);
+        // small m: single-row blocks so every lane gets work
+        assert_eq!(row_block(4, 64, 4), 1);
+        assert_eq!(row_block(1, 64, 8), 1);
+        // serial pool: still sized, never zero
+        assert_eq!(row_block(10, 64, 1), 3);
+        assert!(row_block(1, 64, 0) >= 1);
     }
 
     #[test]

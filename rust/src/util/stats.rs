@@ -19,16 +19,29 @@ pub fn std(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// p-th percentile (0..=100) via the nearest-rank method on a sorted copy:
-/// the smallest value with at least p% of the sample at or below it —
+/// p-th percentile via the nearest-rank method on a sorted copy: the
+/// smallest value with at least p% of the sample at or below it —
 /// `sorted[ceil(p/100 · n) - 1]`, rank clamped to [1, n]. Always returns
 /// an element of `xs` (p=0 → minimum, p=100 → maximum); 0.0 when empty.
-/// NaN samples sort last (high percentiles of a NaN-bearing sample may
+///
+/// Out-of-domain `p` is clamped *before* the rank cast, explicitly:
+/// negative `p` means the minimum, `p > 100` the maximum, and a NaN `p`
+/// returns NaN (an undefined percentile is surfaced, not laundered into
+/// some fabricated element). The old code leaned on the f64→usize `as`
+/// cast saturating the wrapped rank — correct on today's rustc by the
+/// saturating-cast rules, but an implicit contract this function has no
+/// business depending on.
+///
+/// NaN *samples* sort last (high percentiles of a NaN-bearing sample may
 /// be NaN, but the call never panics).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
+    if p.is_nan() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 100.0);
     let mut v = xs.to_vec();
     v.sort_by(|a, b| crate::util::cmp::f64_nan_last(*a, *b));
     let n = v.len();
@@ -124,6 +137,23 @@ mod tests {
         assert_eq!(percentile(&[2.5], 0.0), 2.5);
         assert_eq!(percentile(&[2.5], 99.0), 2.5);
         assert_eq!(percentile(&[2.5], 100.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_out_of_domain_p_is_clamped() {
+        let xs = [5.0, 1.0, 9.0, 3.0, 7.0];
+        // negative p -> minimum, p > 100 -> maximum, never a wrapped or
+        // saturated index
+        assert_eq!(percentile(&xs, -0.001), 1.0);
+        assert_eq!(percentile(&xs, -1e18), 1.0);
+        assert_eq!(percentile(&xs, 100.001), 9.0);
+        assert_eq!(percentile(&xs, 1e18), 9.0);
+        assert_eq!(percentile(&xs, f64::NEG_INFINITY), 1.0);
+        assert_eq!(percentile(&xs, f64::INFINITY), 9.0);
+        // NaN p is undefined -> NaN out, not a fabricated element
+        assert!(percentile(&xs, f64::NAN).is_nan());
+        // empty input still wins over a NaN p (documented: 0.0 when empty)
+        assert_eq!(percentile(&[], f64::NAN), 0.0);
     }
 
     #[test]
