@@ -1,16 +1,16 @@
 # HEAPr build / verify entry points.
 #
 # `make verify` is the one-stop gate: gating lints (fmt, clippy -D
-# warnings) followed by tier-1 (release build + full test suite). The
-# toolchain — including rustfmt and clippy — is pinned by
-# rust-toolchain.toml, so lint drift is a real signal, not toolchain skew.
-# Use `make tier1` alone when iterating on a machine without the lint
-# components.
+# warnings), the documentation gate (rustdoc with warnings denied),
+# then tier-1 (release build + full test suite). The toolchain —
+# including rustfmt and clippy — is pinned by rust-toolchain.toml, so
+# lint drift is a real signal, not toolchain skew. Use `make tier1`
+# alone when iterating on a machine without the lint components.
 
 PRESET ?= tiny
 ARTIFACTS := artifacts/$(PRESET)
 
-.PHONY: all build test tier1 fmt clippy verify artifacts bench bench-native clean
+.PHONY: all build test tier1 fmt clippy docs verify artifacts bench bench-native clean
 
 all: build
 
@@ -29,7 +29,15 @@ fmt:
 clippy:
 	cargo clippy --all-targets -- -D warnings
 
-verify: fmt clippy tier1
+# Documentation gate: rustdoc over the public API with warnings denied,
+# so broken intra-doc links, links to private items, bad code fences and
+# malformed HTML in doc comments fail the build instead of rotting.
+# docs/ARCHITECTURE.md is the prose system map; this keeps the API
+# reference honest next to it.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+verify: fmt clippy docs tier1
 
 # Export AOT HLO artifacts + manifest.json (requires the python/JAX
 # toolchain). Optional: the rust host backend synthesizes the manifest for

@@ -15,9 +15,14 @@
 //! count over the serial pool, session over legacy, blocked over naive,
 //! and (where detected) simd over blocked — the §Perf acceptance
 //! numbers.
+//!
+//! A final admission-policy axis serves one mixed-extent request stream
+//! batch-at-once vs continuously (lane scheduler, in-flight admission)
+//! and reports per-request p50/p99 latency — submission to completion,
+//! queue wait included — alongside tok/s for both.
 
 use heapr::bench::Bench;
-use heapr::coordinator::{Request, Residency, Server};
+use heapr::coordinator::{serve_continuous, Batcher, Request, Residency, SchedulerOpts, Server};
 use heapr::data::corpus::Grammar;
 use heapr::data::sampler::Split;
 use heapr::data::tokenizer::ByteTokenizer;
@@ -28,6 +33,7 @@ use heapr::runtime::Engine;
 use heapr::tensor::gemm;
 use heapr::tensor::Tensor;
 use heapr::util::pool;
+use heapr::util::stats::percentile;
 
 const THREAD_AXIS: &[usize] = &[1, 2, 4];
 const RATIOS: &[f64] = &[0.0, 0.25, 0.5, 0.75];
@@ -146,5 +152,70 @@ fn main() {
             sd / bl
         );
     }
+
+    // ---- admission-policy axis: batch-at-once vs continuous ------------
+    // A mixed-extent request stream (staggered prompts and budgets) is
+    // queued up front and served to drain both ways. Per-request latency
+    // is submission -> completion for both modes — queue wait included,
+    // which is exactly what batch-at-once pays when a closed batch pins
+    // its lanes to the slowest straggler and continuous admission does
+    // not. Reported next to tok/s as p50/p99.
+    let stream_reqs = || -> Vec<Request> {
+        (0..4 * bb)
+            .map(|i| {
+                let plen = 12 + 8 * (i % 3); // 12/20/28-token prompts
+                let budget = 4 + 8 * (i % 4); // 4..28 generated tokens
+                Request::new(i as u64, split.chunks[0][..plen].to_vec(), budget)
+            })
+            .collect()
+    };
+    let mk_batcher = |reqs: Vec<Request>| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for r in reqs {
+            tx.send(r).unwrap();
+        }
+        drop(tx); // pre-queued stream: the serve loop runs to drain
+        Batcher::new(rx, cfg.serve_batches.clone(), std::time::Duration::from_millis(1))
+    };
+    let mut admission_tps: Vec<(&str, f64, f64, f64)> = Vec::new();
+    for mode in ["batch-at-once", "continuous"] {
+        let mut server = Server::new(&engine, &params, None).unwrap();
+        server.serve_batch(&mk_requests()).unwrap(); // warm the executables
+        let reqs = stream_reqs();
+        let total_tokens: f64 = reqs.iter().map(|r| r.max_new_tokens as f64).sum();
+        let mut batcher = mk_batcher(reqs);
+        let t0 = std::time::Instant::now();
+        let mut lats_ms: Vec<f64> = Vec::new();
+        if mode == "continuous" {
+            let responses =
+                serve_continuous(&mut server, &mut batcher, SchedulerOpts::default()).unwrap();
+            lats_ms.extend(responses.iter().map(|r| r.latency_ms));
+        } else {
+            while let Some(batch) = batcher.next_batch() {
+                server.serve_batch(&batch).unwrap();
+                // the whole batch completes together: each request's
+                // latency runs from its submission to this instant
+                lats_ms.extend(
+                    batch.iter().map(|r| r.submitted.elapsed().as_secs_f64() * 1000.0),
+                );
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tps = total_tokens / wall;
+        let (p50, p99) = (percentile(&lats_ms, 50.0), percentile(&lats_ms, 99.0));
+        println!(
+            "admission {mode:>13}: {tps:8.1} tok/s, per-request latency \
+             p50 {p50:7.1} ms, p99 {p99:7.1} ms ({} requests)",
+            lats_ms.len()
+        );
+        admission_tps.push((mode, tps, p50, p99));
+    }
+    if let [(_, _, _, p99_b), (_, _, _, p99_c)] = admission_tps[..] {
+        println!(
+            "admission p99 latency: batch-at-once vs continuous -> {:.2}x",
+            p99_b / p99_c
+        );
+    }
+
     bench.save("runs/bench/serve.json").unwrap();
 }

@@ -1,5 +1,5 @@
 //! Baseline pruning criteria spanning the design space the paper compares
-//! against (DESIGN.md §2 maps each to its published counterpart):
+//! against (docs/ARCHITECTURE.md maps each to its published counterpart):
 //!
 //! * [`random_scores`] — random atomic pruning (sanity floor).
 //! * [`magnitude_scores`] — calibration-free weight-norm criterion.

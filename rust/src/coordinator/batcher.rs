@@ -1,12 +1,29 @@
-//! Request queue + continuous batcher.
+//! Request queue + admission policy.
 //!
-//! Producer threads submit [`Request`]s over an mpsc channel; the serving
-//! loop drains the queue into the largest serve-batch bucket that fits,
-//! waiting up to `max_wait` for stragglers — the standard continuous-
-//! batching trade-off between latency and occupancy.
+//! Producer threads submit [`Request`]s over an mpsc channel. Two serve
+//! loops consume the queue:
+//!
+//! * **batch-at-once** ([`Batcher::next_batch`]) — drain into the
+//!   largest serve-batch bucket that fits, waiting up to `max_wait` for
+//!   stragglers, and hand the closed batch to `Server::serve_batch`.
+//! * **continuous** ([`Batcher::take_ready`] / [`Batcher::wait_ready`])
+//!   — the scheduler asks for "up to `k` requests for the lanes that
+//!   just freed", non-blocking while other lanes are mid-decode so the
+//!   queue can never stall a running step.
+//!
+//! Both paths pick requests through one [`AdmissionPolicy`]: strict
+//! FIFO, or extent grouping (pack requests of similar
+//! `prompt + max_new_tokens` so a batch's resident KV capacity wastes
+//! the least memory). Extent grouping is bounded by an anti-starvation
+//! override: the request at the head of the queue can be passed over at
+//! most [`Batcher::max_skip_rounds`] consecutive picks before admission
+//! falls back to strict FIFO — so a lone large-extent request cannot be
+//! deferred indefinitely by a stream of small ones (regression-tested
+//! below). Since every starving request eventually reaches the head as
+//! the requests ahead of it drain, its total wait is bounded too.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 pub type RequestId = u64;
@@ -32,13 +49,39 @@ impl Request {
     }
 }
 
+/// How pending requests are picked when more are queued than fit the
+/// batch (or the free lanes) at hand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Strict arrival order, across batches and within them.
+    Fifo,
+    /// Pick the window of most-similar [`Request::extent`]s, so the
+    /// resident KV capacity (the batch's max extent) wastes the least
+    /// memory and stragglers don't pin short requests to long decode
+    /// loops. Arrival order is preserved *within* a pick, and the
+    /// anti-starvation override (see the module docs) bounds how long
+    /// the queue head can be passed over.
+    GroupExtent,
+}
+
 pub struct Batcher {
     rx: Receiver<Request>,
     pending: VecDeque<Request>,
     /// serve-batch buckets, ascending (from the manifest preset).
     buckets: Vec<usize>,
     pub max_wait: Duration,
-    group_by_extent: bool,
+    policy: AdmissionPolicy,
+    /// True once the producer channel disconnected (observed by any
+    /// receive); with `pending` empty this means the queue is drained
+    /// for good.
+    closed: bool,
+    /// Anti-starvation bound: how many consecutive picks may pass over
+    /// the request at the head of the queue before admission falls back
+    /// to strict FIFO. Only consulted under
+    /// [`AdmissionPolicy::GroupExtent`].
+    pub max_skip_rounds: usize,
+    /// (head request id, times passed over) for the starvation bound.
+    starve: Option<(RequestId, usize)>,
 }
 
 impl Batcher {
@@ -59,20 +102,30 @@ impl Batcher {
             pending: VecDeque::new(),
             buckets,
             max_wait,
-            group_by_extent: false,
+            policy: AdmissionPolicy::Fifo,
+            closed: false,
+            max_skip_rounds: 4,
+            starve: None,
         }
     }
 
-    /// Opt into extent grouping: when more requests are pending than fit
-    /// one bucket, pick the window of most-similar [`Request::extent`]s
-    /// instead of strict FIFO, so the batch's resident KV capacity (its
-    /// max extent) wastes the least memory and stragglers don't pin short
-    /// requests to long decode loops. Trades global FIFO order (still
-    /// lossless, still FIFO within a batch) for occupancy; leave off when
-    /// arrival order must be preserved across batches.
-    pub fn group_by_extent(mut self, on: bool) -> Batcher {
-        self.group_by_extent = on;
+    /// Select the admission policy (builder-style).
+    pub fn admission(mut self, policy: AdmissionPolicy) -> Batcher {
+        self.policy = policy;
         self
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// Opt into extent grouping — sugar for
+    /// [`Batcher::admission`]`(`[`AdmissionPolicy::GroupExtent`]`)`.
+    /// Trades global FIFO order (still lossless, still FIFO within a
+    /// batch, starvation-bounded — see the module docs) for occupancy;
+    /// leave off when arrival order must be preserved across batches.
+    pub fn group_by_extent(self, on: bool) -> Batcher {
+        self.admission(if on { AdmissionPolicy::GroupExtent } else { AdmissionPolicy::Fifo })
     }
 
     /// Largest bucket <= n, or the smallest bucket when n > 0 (padding).
@@ -87,30 +140,50 @@ impl Batcher {
     }
 
     fn drain_channel(&mut self) {
-        while let Ok(r) = self.rx.try_recv() {
-            self.pending.push_back(r);
+        loop {
+            match self.rx.try_recv() {
+                Ok(r) => self.pending.push_back(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.closed = true;
+                    break;
+                }
+            }
         }
     }
 
     /// Block for the next batch; returns None when the channel closed and
     /// the queue is empty. Never drops or duplicates a request; order is
-    /// FIFO within the queue (globally FIFO unless
-    /// [`Batcher::group_by_extent`] is on, in which case only the order
-    /// within a batch is arrival order).
+    /// FIFO within the queue (globally FIFO under
+    /// [`AdmissionPolicy::Fifo`]; under [`AdmissionPolicy::GroupExtent`]
+    /// only the order within a batch is arrival order).
     pub fn next_batch(&mut self) -> Option<Vec<Request>> {
         self.drain_channel();
         if self.pending.is_empty() {
+            if self.closed {
+                return None;
+            }
             match self.rx.recv() {
                 Ok(r) => self.pending.push_back(r),
-                Err(_) => return None,
+                Err(_) => {
+                    self.closed = true;
+                    return None;
+                }
             }
             self.drain_channel();
         }
         // wait briefly for a fuller bucket (buckets is non-empty by
         // construction — see `new` — so `last` cannot fail mid-serve)
         let largest = self.buckets.last().copied().unwrap_or(1);
+        self.fill_until(largest);
+        let take = self.bucket_for(self.pending.len()).min(self.pending.len());
+        Some(self.pick(take))
+    }
+
+    /// Linger up to `max_wait` for the queue to reach `want` requests.
+    fn fill_until(&mut self, want: usize) {
         let deadline = Instant::now() + self.max_wait;
-        while self.pending.len() < largest {
+        while self.pending.len() < want && !self.closed {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -118,18 +191,87 @@ impl Batcher {
             match self.rx.recv_timeout(deadline - now) {
                 Ok(r) => self.pending.push_back(r),
                 Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.closed = true;
+                    break;
+                }
             }
             self.drain_channel();
         }
-        let take = self.bucket_for(self.pending.len()).min(self.pending.len());
-        if !self.group_by_extent || take == self.pending.len() {
-            return Some(self.pending.drain(..take).collect());
+    }
+
+    /// Non-blocking admission feed: up to `max` requests per the
+    /// admission policy, empty when nothing is pending. The continuous
+    /// scheduler calls this while other lanes are mid-decode, so it must
+    /// never wait on the channel.
+    pub fn take_ready(&mut self, max: usize) -> Vec<Request> {
+        self.drain_channel();
+        let take = max.min(self.pending.len());
+        self.pick(take)
+    }
+
+    /// Blocking admission feed for an idle scheduler: wait for at least
+    /// one pending request (or channel close), linger up to `max_wait`
+    /// for up to `max` of them (the same latency/occupancy trade-off as
+    /// [`Batcher::next_batch`]), then pick per the admission policy.
+    /// An empty result means the queue is drained for good.
+    pub fn wait_ready(&mut self, max: usize) -> Vec<Request> {
+        self.drain_channel();
+        if self.pending.is_empty() {
+            if self.closed {
+                return Vec::new();
+            }
+            match self.rx.recv() {
+                Ok(r) => self.pending.push_back(r),
+                Err(_) => {
+                    self.closed = true;
+                    return Vec::new();
+                }
+            }
+            self.drain_channel();
         }
-        // extent grouping: scan extent-sorted windows of width `take` for
-        // the smallest extent spread; ties keep the lowest-extent window
-        // (short requests drain first). Within a window, the stable sort
-        // preserves arrival order among equal extents.
+        self.fill_until(max);
+        let take = max.min(self.pending.len());
+        self.pick(take)
+    }
+
+    /// True once the producer channel closed and every request was taken.
+    pub fn drained(&mut self) -> bool {
+        self.drain_channel();
+        self.closed && self.pending.is_empty()
+    }
+
+    /// Take `take` pending requests per the admission policy. FIFO (and
+    /// extent grouping asked for the whole queue) drain in arrival
+    /// order; extent grouping scans extent-sorted windows of width
+    /// `take` for the smallest extent spread — ties keep the
+    /// lowest-extent window (short requests drain first), the stable
+    /// sort preserves arrival order among equal extents, and the pick is
+    /// returned in arrival order. The anti-starvation override forces a
+    /// strict-FIFO pick once the queue head has been passed over
+    /// [`Batcher::max_skip_rounds`] times in a row.
+    fn pick(&mut self, take: usize) -> Vec<Request> {
+        let take = take.min(self.pending.len());
+        if take == 0 {
+            return Vec::new();
+        }
+        if self.policy == AdmissionPolicy::Fifo || take == self.pending.len() {
+            self.starve = None;
+            return self.pending.drain(..take).collect();
+        }
+        let head_id = self.pending[0].id;
+        let skipped = match self.starve {
+            Some((id, rounds)) if id == head_id => rounds,
+            _ => 0,
+        };
+        if skipped >= self.max_skip_rounds {
+            // age-based override: the head request has been passed over
+            // its full allowance (`max_skip_rounds = 0` disables
+            // grouping past the head entirely) — this pick is strict
+            // FIFO, grouping resumes after
+            self.starve = None;
+            return self.pending.drain(..take).collect();
+        }
         let mut order: Vec<usize> = (0..self.pending.len()).collect();
         order.sort_by_key(|&i| self.pending[i].extent());
         let mut best = 0usize;
@@ -144,12 +286,20 @@ impl Batcher {
         }
         let mut picked: Vec<usize> = order[best..best + take].to_vec();
         picked.sort_unstable(); // arrival order within the batch
+        self.starve = if picked[0] == 0 {
+            None // the head request is served; nothing is starving
+        } else {
+            Some(match self.starve {
+                Some((id, rounds)) if id == head_id => (id, rounds + 1),
+                _ => (head_id, 1),
+            })
+        };
         let mut batch = Vec::with_capacity(take);
         for &i in picked.iter().rev() {
             batch.push(self.pending.remove(i).unwrap());
         }
         batch.reverse();
-        Some(batch)
+        batch
     }
 
     pub fn queue_len(&self) -> usize {
@@ -298,6 +448,110 @@ mod tests {
     #[test]
     fn request_extent_is_prompt_plus_budget() {
         assert_eq!(Request::new(0, vec![1; 7], 5).extent(), 12);
+    }
+
+    #[test]
+    fn extent_grouping_cannot_starve_the_queue_head() {
+        // regression: a lone large-extent request at the head of the
+        // queue, facing an endless stream of similar small requests,
+        // used to be passed over on every pick (the small pairs always
+        // have the smaller spread). The anti-starvation override bounds
+        // the head's wait to max_skip_rounds consecutive picks.
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, vec![2], Duration::from_millis(0))
+            .admission(AdmissionPolicy::GroupExtent);
+        tx.send(Request::new(0, vec![1; 60], 60)).unwrap(); // extent 120, head
+        for i in 1..=20 {
+            tx.send(Request::new(i, vec![1; 4], 4)).unwrap(); // extent 8
+        }
+        drop(tx);
+        let mut batches_until_served = None;
+        for round in 1..=10 {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 2);
+            if batch.iter().any(|r| r.id == 0) {
+                batches_until_served = Some(round);
+                break;
+            }
+        }
+        let served = batches_until_served.expect("request 0 starved for 10 batches");
+        // skipped exactly max_skip_rounds times, forced on the next pick
+        assert_eq!(served, b.max_skip_rounds + 1, "override must fire at the bound");
+    }
+
+    #[test]
+    fn starvation_override_resets_once_head_is_served() {
+        // after a forced FIFO pick the policy returns to extent grouping
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, vec![2], Duration::from_millis(0))
+            .admission(AdmissionPolicy::GroupExtent);
+        b.max_skip_rounds = 1;
+        tx.send(Request::new(0, vec![1; 60], 60)).unwrap();
+        for i in 1..=6 {
+            tx.send(Request::new(i, vec![1; 4], 4)).unwrap();
+        }
+        drop(tx);
+        let first = b.next_batch().unwrap(); // grouping skips the head once
+        assert!(!first.iter().any(|r| r.id == 0));
+        let second = b.next_batch().unwrap(); // forced FIFO: head + next
+        assert!(second.iter().any(|r| r.id == 0), "override did not fire");
+        let third = b.next_batch().unwrap(); // grouping again, no head left
+        assert_eq!(third.len(), 2);
+    }
+
+    #[test]
+    fn take_ready_is_nonblocking_and_policy_driven() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, vec![1, 4], Duration::from_millis(50));
+        // nothing pending: immediately empty, no blocking on the channel
+        assert!(b.take_ready(4).is_empty());
+        for i in 0..3 {
+            tx.send(Request::new(i, vec![1], 1)).unwrap();
+        }
+        // partial feed: two free lanes take the two oldest
+        let got = b.take_ready(2);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.queue_len(), 1);
+        assert!(!b.drained());
+        drop(tx);
+        let got = b.take_ready(2);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert!(b.drained());
+        assert!(b.take_ready(2).is_empty());
+    }
+
+    #[test]
+    fn wait_ready_blocks_for_work_and_ends_on_close() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, vec![1, 4], Duration::from_millis(1));
+        let feeder = std::thread::spawn(move || {
+            tx.send(Request::new(7, vec![1], 1)).unwrap();
+            // tx drops here: channel closes after one request
+        });
+        let got = b.wait_ready(4);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 7);
+        feeder.join().unwrap();
+        // drained queue + closed channel: empty result, not a hang
+        assert!(b.wait_ready(4).is_empty());
+        assert!(b.drained());
+    }
+
+    #[test]
+    fn take_ready_groups_by_extent_under_pressure() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(rx, vec![8], Duration::from_millis(0))
+            .admission(AdmissionPolicy::GroupExtent);
+        tx.send(Request::new(0, vec![1; 40], 40)).unwrap(); // extent 80
+        tx.send(Request::new(1, vec![1; 4], 4)).unwrap(); // extent 8
+        tx.send(Request::new(2, vec![1; 42], 40)).unwrap(); // extent 82
+        tx.send(Request::new(3, vec![1; 6], 4)).unwrap(); // extent 10
+        drop(tx);
+        // two free lanes: the similar-extent small pair goes first
+        let got = b.take_ready(2);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let rest = b.take_ready(4);
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
     }
 
     #[test]

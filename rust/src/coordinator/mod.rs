@@ -1,9 +1,15 @@
-//! Serving coordinator (filled in by `engine.rs`/`batcher.rs`/`router.rs`).
+//! Serving coordinator: request queue + admission policy ([`batcher`]),
+//! rust-side routing ([`router`]), the per-layer serving composition and
+//! the batch-synchronous reference loop ([`serve`]), and the
+//! continuous-batching scheduler with in-flight admission
+//! ([`scheduler`]).
 
 pub mod batcher;
 pub mod router;
+pub mod scheduler;
 pub mod serve;
 
-pub use batcher::{Batcher, Request, RequestId};
+pub use batcher::{AdmissionPolicy, Batcher, Request, RequestId};
 pub use router::Router;
-pub use serve::{DecodeState, Residency, ServeMetrics, Server};
+pub use scheduler::{serve_continuous, Scheduler, SchedulerOpts, StreamEvent};
+pub use serve::{DecodeState, Residency, Response, ServeMetrics, Server};

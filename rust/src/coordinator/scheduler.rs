@@ -1,0 +1,359 @@
+//! Continuous-batching scheduler: lane-granular decode with in-flight
+//! admission.
+//!
+//! [`Server::serve_batch`] is batch-synchronous — one closed batch runs
+//! to completion, so one long request holds every lane in its batch
+//! hostage while queued requests wait for the slowest straggler. This
+//! module replaces that loop for online serving: the scheduler owns a
+//! set of decode **lanes** (one serve-batch bucket's worth of KV cache,
+//! allocated once via [`Server::empty_state`]) and drives one decode
+//! step across all occupied lanes at a time. When a lane's sequence
+//! finishes — EOS, budget, or window — the lane is **retired**
+//! individually ([`DecodeState::zero_lane`]) and refilled from the
+//! queue **mid-decode**: the new request is prefilled solo, its KV rows
+//! seated into the freed lane ([`DecodeState::write_lane`]), and the
+//! next step advances old and new sequences together.
+//!
+//! ```text
+//!  step:      1 2 3 4 5 6 7 8 9 …
+//!  lane 0:    A A A A A A A A A     (long request, never blocked)
+//!  lane 1:    B B B·C C C C·D D     (B retires at 3, C admitted in
+//!  lane 2:    E E·F F F F F F·G      flight at 4; · = solo prefill)
+//! ```
+//!
+//! # Equivalence
+//!
+//! Per-request token streams are **bitwise identical** to
+//! [`Server::serve_batch`]'s, whatever the admission order, lane count,
+//! thread count or residency — every per-row computation in the serving
+//! composition (rmsnorm, gating, attention per (batch, head), the GEMM
+//! accumulation contract, greedy argmax) depends only on that row, so a
+//! sequence's logits do not care which lane it occupies or who its
+//! neighbours are. The tier-1 `continuous_scheduler` tests assert this.
+//!
+//! # Streaming
+//!
+//! Tokens are emitted per request as they land ([`StreamEvent`] over an
+//! mpsc sender) — index-ordered within a request, with `done` marking
+//! the final token. [`Response`]s carry true per-request latency
+//! (submission to retirement, queue wait included), which is what
+//! `bench_serve`'s admission-policy axis reports as p50/p99.
+//!
+//! # Compaction
+//!
+//! Once the queue has drained for good, a wide state serving few
+//! survivors wastes per-step work on empty lanes. The scheduler then
+//! *compacts*: survivors' KV lanes are copied into a fresh state at the
+//! smallest serve-batch bucket that fits them and decode continues
+//! there — bitwise unchanged (lane values are lane-position and
+//! bucket independent), just cheaper per step.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batcher, Request, RequestId};
+use crate::coordinator::serve::{argmax_row, DecodeState, Response, Server};
+use crate::data::tokenizer::{EOS, PAD};
+use crate::debug;
+
+/// One token landing in one request's stream, emitted by the scheduler
+/// the moment the token is committed (not when the request completes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamEvent {
+    pub id: RequestId,
+    /// 0-based index of this token within the request's generation.
+    pub index: usize,
+    pub token: i32,
+    /// True on the request's final token.
+    pub done: bool,
+}
+
+/// Continuous scheduler knobs. `Default` serves with the preset's widest
+/// serve-batch bucket, no streaming sink, compaction on.
+pub struct SchedulerOpts {
+    /// Lane count; rounded up to a serve-batch bucket, clamped to the
+    /// widest. `None` = the preset's widest bucket.
+    pub lanes: Option<usize>,
+    /// Per-token streaming sink. Send failures (a dropped receiver) are
+    /// ignored — streaming is observability, not control flow.
+    pub stream: Option<Sender<StreamEvent>>,
+    /// Compact to a smaller bucket once the queue has drained for good.
+    pub compact: bool,
+}
+
+impl Default for SchedulerOpts {
+    fn default() -> Self {
+        SchedulerOpts { lanes: None, stream: None, compact: true }
+    }
+}
+
+/// One occupied decode lane: the request plus exactly the per-sequence
+/// state `serve_batch` keeps per batch row.
+struct Lane {
+    req: Request,
+    /// Uncommitted next token (argmax of the latest logits).
+    next: i32,
+    /// Decode position of the next append = prompt len + committed
+    /// tokens (mirrors `serve_batch`'s `positions[i]`).
+    pos: usize,
+    generated: Vec<i32>,
+}
+
+/// Continuous-batching serve loop over a [`Server`]. See the module
+/// docs; most callers want [`serve_continuous`].
+pub struct Scheduler<'s, 'e> {
+    server: &'s mut Server<'e>,
+    opts: SchedulerOpts,
+}
+
+/// Serve the batcher's queue to drain with continuous admission;
+/// returns one [`Response`] per request, in completion order.
+pub fn serve_continuous(
+    server: &mut Server<'_>,
+    batcher: &mut Batcher,
+    opts: SchedulerOpts,
+) -> Result<Vec<Response>> {
+    Scheduler::new(server, opts).run(batcher)
+}
+
+impl<'s, 'e> Scheduler<'s, 'e> {
+    pub fn new(server: &'s mut Server<'e>, opts: SchedulerOpts) -> Scheduler<'s, 'e> {
+        Scheduler { server, opts }
+    }
+
+    /// Run the serve loop until the queue is drained (producer channel
+    /// closed and every admitted request retired).
+    pub fn run(&mut self, batcher: &mut Batcher) -> Result<Vec<Response>> {
+        let cfg = self.server.engine().config().clone();
+        let max_pos = cfg.seq_len.min(cfg.max_decode_len);
+        let widest = *cfg.serve_batches.last().unwrap_or(&1);
+        let want = self.opts.lanes.unwrap_or(widest).clamp(1, widest);
+        let bb = cfg.serve_batches.iter().find(|&&b| b >= want).copied().unwrap_or(widest);
+
+        // busy-time clock: paused across blocking waits for work, so
+        // wall_s (and tok/s) measures serving, not producer idle, and
+        // stays comparable with serve_batch's
+        let mut t0 = Instant::now();
+        let mut lanes: Vec<Option<Lane>> = (0..bb).map(|_| None).collect();
+        // allocated lazily at first admission so an empty queue costs
+        // nothing; released (or compacted + released) on the way out
+        let mut state: Option<DecodeState<'e>> = None;
+        let mut responses: Vec<Response> = Vec::new();
+
+        loop {
+            // -- admission: refill freed lanes from the queue. Each
+            // admission commits its first (prefill) token right here, so
+            // an instant-done request (EOS or budget on token one)
+            // retires without ever occupying a decode step and its lane
+            // is offered to the next queued request immediately — hence
+            // the inner loop.
+            loop {
+                let n_free = lanes.iter().filter(|l| l.is_none()).count();
+                if n_free == 0 {
+                    break;
+                }
+                let idle = n_free == lanes.len();
+                let ready = if idle {
+                    // nothing mid-decode: block for work (or for the
+                    // producer channel to close) with the busy clock
+                    // paused — this wait is the producer's idle time
+                    self.server.metrics.wall_s += t0.elapsed().as_secs_f64();
+                    let ready = batcher.wait_ready(n_free);
+                    t0 = Instant::now();
+                    ready
+                } else {
+                    // lanes mid-decode: admission must never stall them
+                    batcher.take_ready(n_free)
+                };
+                if ready.is_empty() {
+                    break;
+                }
+                if state.is_none() {
+                    state = Some(self.server.empty_state(lanes.len(), max_pos)?);
+                }
+                let mut ready = ready.into_iter();
+                for slot in 0..lanes.len() {
+                    if lanes[slot].is_some() {
+                        continue;
+                    }
+                    let Some(req) = ready.next() else { break };
+                    let lane = self.admit(req, slot, state.as_mut().expect("state exists"))?;
+                    lanes[slot] = Some(lane);
+                    self.commit(&mut lanes, slot, max_pos, state.as_mut(), &mut responses)?;
+                }
+            }
+            if lanes.iter().all(|l| l.is_none()) {
+                if batcher.drained() {
+                    break; // queue drained for good
+                }
+                continue; // back to (blocking) admission
+            }
+
+            // -- compaction: shrink the drain tail ---------------------
+            if self.opts.compact && batcher.drained() {
+                self.compact(&mut lanes, &mut state)?;
+            }
+
+            // -- one decode step across all lanes ----------------------
+            let st = state.as_mut().expect("occupied lanes have a state");
+            let mut next = vec![PAD; lanes.len()];
+            let mut poss = vec![0usize; lanes.len()];
+            for (i, lane) in lanes.iter().enumerate() {
+                if let Some(lane) = lane {
+                    next[i] = lane.next;
+                    poss[i] = lane.pos;
+                }
+            }
+            let u0 = self.server.engine().upload_stats().1;
+            let logits = self.server.decode_step(&next, &poss, st)?;
+            let step_bytes = self.server.engine().upload_stats().1 - u0;
+            self.server.metrics.decode_steps += 1;
+            self.server.metrics.decode_upload_bytes += step_bytes;
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                if let Some(lane) = lane {
+                    lane.next = argmax_row(&logits, i);
+                    lane.pos += 1;
+                }
+            }
+
+            // -- commit: land every stepped lane's token. Lanes retired
+            // here are refilled by the next iteration's admission pass
+            // *before* the next decode step — no one-step bubble.
+            for slot in 0..lanes.len() {
+                if lanes[slot].is_some() {
+                    self.commit(&mut lanes, slot, max_pos, state.as_mut(), &mut responses)?;
+                }
+            }
+        }
+
+        if let Some(st) = state.take() {
+            st.release();
+        }
+        self.server.metrics.wall_s += t0.elapsed().as_secs_f64();
+        Ok(responses)
+    }
+
+    /// Land lane `slot`'s pending token: push it, emit the stream event,
+    /// and — under exactly `serve_batch`'s completion conditions —
+    /// retire the lane.
+    fn commit(
+        &mut self,
+        lanes: &mut [Option<Lane>],
+        slot: usize,
+        max_pos: usize,
+        state: Option<&mut DecodeState<'e>>,
+        responses: &mut Vec<Response>,
+    ) -> Result<()> {
+        let Some(lane) = &mut lanes[slot] else { return Ok(()) };
+        lane.generated.push(lane.next);
+        // exact mirror of serve_batch's completion conditions
+        let done = lane.next == EOS
+            || lane.generated.len() >= lane.req.max_new_tokens
+            || lane.pos + 1 >= max_pos;
+        if let Some(tx) = &self.opts.stream {
+            let _ = tx.send(StreamEvent {
+                id: lane.req.id,
+                index: lane.generated.len() - 1,
+                token: lane.next,
+                done,
+            });
+        }
+        if done {
+            self.retire(lanes, slot, state, responses)?;
+        }
+        Ok(())
+    }
+
+    /// In-flight admission: prefill `req` solo, seat its KV rows into
+    /// the freed lane, and return the lane carrying the first
+    /// (uncommitted) token — exactly the state `serve_batch` holds for
+    /// a batch row after its batched prefill.
+    fn admit(&mut self, req: Request, slot: usize, state: &mut DecodeState<'e>) -> Result<Lane> {
+        // Solo prefill at the shared state's capacity: row values are
+        // batch-composition independent, so the prompt's K/V rows land
+        // exactly as a batched prefill would have placed them. Only the
+        // prompt's rows are seated (see `DecodeState::admit_lane`).
+        let (logits, solo) =
+            self.server.prefill_with_capacity(&[req.prompt.clone()], state.capacity())?;
+        state.admit_lane(slot, &solo, req.prompt.len())?;
+        solo.release();
+        let next = argmax_row(&logits, 0);
+        debug!("admitted request {} into lane {slot}", req.id);
+        let pos = req.prompt.len();
+        Ok(Lane { req, next, pos, generated: Vec::new() })
+    }
+
+    /// Retire one finished lane: zero its KV rows (the next occupant —
+    /// and any introspection — can never observe them), record the
+    /// response with true per-request latency, free the slot.
+    fn retire(
+        &mut self,
+        lanes: &mut [Option<Lane>],
+        slot: usize,
+        state: Option<&mut DecodeState<'e>>,
+        responses: &mut Vec<Response>,
+    ) -> Result<()> {
+        let lane = lanes[slot].take().expect("retiring an empty lane");
+        if let Some(state) = state {
+            state.zero_lane(slot)?;
+        }
+        let latency_ms = lane.req.submitted.elapsed().as_secs_f64() * 1000.0;
+        let m = &mut self.server.metrics;
+        m.requests += 1;
+        m.prompt_tokens += lane.req.prompt.len();
+        m.generated_tokens += lane.generated.len();
+        m.latencies_ms.push(latency_ms);
+        debug!(
+            "retired request {} from lane {slot} after {} tokens",
+            lane.req.id,
+            lane.generated.len()
+        );
+        responses.push(Response { id: lane.req.id, tokens: lane.generated, latency_ms });
+        Ok(())
+    }
+
+    /// Drain-tail compaction: move the survivors into a state at the
+    /// smallest serve-batch bucket that fits them. KV lane values are
+    /// lane-position and bucket independent, so tokens are bitwise
+    /// unchanged; each step just stops paying for empty lanes.
+    fn compact(
+        &mut self,
+        lanes: &mut Vec<Option<Lane>>,
+        state: &mut Option<DecodeState<'e>>,
+    ) -> Result<()> {
+        let Some(old) = state.as_mut() else { return Ok(()) };
+        let active: Vec<usize> = (0..lanes.len()).filter(|&i| lanes[i].is_some()).collect();
+        if active.is_empty() {
+            return Ok(());
+        }
+        let cfg = self.server.engine().config().clone();
+        let target = cfg
+            .serve_batches
+            .iter()
+            .find(|&&b| b >= active.len())
+            .copied()
+            .unwrap_or(old.bucket());
+        if target >= old.bucket() {
+            return Ok(());
+        }
+        debug!("compacting {} survivors from b{} to b{}", active.len(), old.bucket(), target);
+        let mut fresh = self.server.empty_state(active.len(), old.capacity())?;
+        for l in 0..old.n_layers() {
+            let (k, v) = old.kv_cache(l)?;
+            for (ni, &oi) in active.iter().enumerate() {
+                fresh.write_lane(l, ni, &k.slice0(oi, oi + 1), &v.slice0(oi, oi + 1))?;
+            }
+        }
+        let mut packed: Vec<Option<Lane>> = (0..fresh.bucket()).map(|_| None).collect();
+        for (ni, &oi) in active.iter().enumerate() {
+            packed[ni] = lanes[oi].take();
+        }
+        *lanes = packed;
+        if let Some(old) = state.replace(fresh) {
+            old.release();
+        }
+        Ok(())
+    }
+}

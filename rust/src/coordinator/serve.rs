@@ -10,6 +10,20 @@
 //!   embed+pos (rust) → [attn_prefill | attn_decode] → moe_gate →
 //!   router groups (rust) → expert_n{N}_w{W} per routed expert →
 //!   weighted scatter-add + residual (rust) → … → lm_head → greedy sample.
+//!
+//! Two serve loops share this machinery:
+//!
+//! * [`Server::serve_batch`] — batch-synchronous: one closed batch is
+//!   prefetched, decoded to completion, released. The reference loop:
+//!   every per-request token stream is defined by it.
+//! * [`crate::coordinator::scheduler`] — continuous batching over the
+//!   same [`DecodeState`], made lane-granular here: [`Server::empty_state`]
+//!   allocates KV lanes without a prefill, [`DecodeState::write_lane`]
+//!   admits a new sequence into a freed lane mid-decode, and
+//!   [`DecodeState::zero_lane`] retires lanes one at a time. Per-request
+//!   outputs are bitwise identical between the two loops (tier-1
+//!   `continuous_scheduler` tests) because every per-row computation in
+//!   the layer composition is independent of batch composition.
 
 use std::time::Instant;
 
@@ -101,6 +115,8 @@ pub struct DecodeState<'e> {
     capacity: usize,
     /// Batch bucket the state was allocated for.
     bb: usize,
+    /// KV layer count (fixed at construction).
+    layers: usize,
 }
 
 enum StateKind<'e> {
@@ -135,6 +151,80 @@ impl DecodeState<'_> {
                 .get(l)
                 .cloned()
                 .ok_or_else(|| anyhow!("no cache for layer {l}")),
+        }
+    }
+
+    /// KV layer count held by this state.
+    pub fn n_layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Re-seat batch lane `lane` of layer `l`'s caches with a solo
+    /// sequence's `[1, h, s, hd]` caches — the admission half of lane
+    /// recycling. The lane is zeroed before the copy (the previous
+    /// occupant's rows can never survive) and a source at a different
+    /// capacity is truncated / zero-extended like `fit_cache` re-seats
+    /// a prefill cache.
+    pub fn write_lane(&mut self, l: usize, lane: usize, k: &Tensor, v: &Tensor) -> Result<()> {
+        match &mut self.kind {
+            StateKind::Resident(sess) => {
+                sess.write_lane(&format!("kc{l}"), lane, k)?;
+                sess.write_lane(&format!("vc{l}"), lane, v)
+            }
+            StateKind::Legacy(caches) => {
+                let (kc, vc) =
+                    caches.get_mut(l).ok_or_else(|| anyhow!("no cache for layer {l}"))?;
+                crate::runtime::write_lane_f32(kc, lane, k)?;
+                crate::runtime::write_lane_f32(vc, lane, v)
+            }
+        }
+    }
+
+    /// Seat a solo-prefilled sequence into batch lane `lane`: for every
+    /// layer, the first `rows` cache rows of `solo` are copied in and
+    /// the rest of the lane is zeroed.
+    ///
+    /// `rows` is the prompt length: a prefill computes K/V for the full
+    /// compiled window, so rows past the prompt hold PAD-derived values
+    /// a decode never reads (position `p` attends to rows `0..=p`, and
+    /// rows from the prompt upward are appended by decode steps before
+    /// they are ever attended). Dropping them costs nothing bitwise and
+    /// is what makes the no-leak guarantee total: after admission the
+    /// lane holds the new occupant's prompt rows and zeros — nothing of
+    /// the previous occupant, and nothing of the solo state's padding.
+    pub fn admit_lane(&mut self, lane: usize, solo: &DecodeState<'_>, rows: usize) -> Result<()> {
+        let rows = rows.clamp(1, self.capacity());
+        for l in 0..self.n_layers() {
+            let (k, v) = solo.kv_cache(l)?;
+            // a 1-prompt prefill still pads to the smallest serve-batch
+            // bucket, which nothing guarantees is 1: take its lane 0,
+            // trimmed to the prompt's rows, in one pass
+            self.write_lane(l, lane, &lane_rows(&k, 0, rows), &lane_rows(&v, 0, rows))?;
+        }
+        Ok(())
+    }
+
+    /// Zero batch lane `lane` in every layer's caches — the retirement
+    /// half of lane recycling: the sequence is finished, the lane is
+    /// free, and whatever it held is gone *now*, not when the whole
+    /// batch drains.
+    pub fn zero_lane(&mut self, lane: usize) -> Result<()> {
+        let n = self.n_layers();
+        match &mut self.kind {
+            StateKind::Resident(sess) => {
+                for l in 0..n {
+                    sess.zero_lane(&format!("kc{l}"), lane)?;
+                    sess.zero_lane(&format!("vc{l}"), lane)?;
+                }
+                Ok(())
+            }
+            StateKind::Legacy(caches) => {
+                for (kc, vc) in caches.iter_mut() {
+                    crate::runtime::zero_lane_f32(kc, lane)?;
+                    crate::runtime::zero_lane_f32(vc, lane)?;
+                }
+                Ok(())
+            }
         }
     }
 
@@ -193,6 +283,22 @@ pub struct Server<'e> {
 impl<'e> Server<'e> {
     /// Build from a full checkpoint and an optional (bucket-aligned!)
     /// pruning plan. With a plan, expert weights are physically sliced.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use heapr::coordinator::{Request, Server};
+    /// use heapr::model::store::ParamStore;
+    /// use heapr::runtime::Engine;
+    ///
+    /// let engine = Engine::open("artifacts/tiny").unwrap();
+    /// let params = ParamStore::init(&engine.manifest, 0);
+    /// let mut server = Server::new(&engine, &params, None).unwrap();
+    /// let responses = server
+    ///     .serve_batch(&[Request::new(0, vec![7, 8, 9], 4)])
+    ///     .unwrap();
+    /// assert_eq!(responses[0].id, 0);
+    /// ```
     pub fn new(
         engine: &'e Engine,
         store: &ParamStore,
@@ -290,6 +396,11 @@ impl<'e> Server<'e> {
     /// Override the env-selected decode residency (tests, benchmarks).
     pub fn set_residency(&mut self, r: Residency) {
         self.residency = r;
+    }
+
+    /// The engine this server executes on (upload accounting, config).
+    pub fn engine(&self) -> &'e Engine {
+        self.engine
     }
 
     pub fn residency(&self) -> Residency {
@@ -524,11 +635,13 @@ impl<'e> Server<'e> {
                 kind: StateKind::Resident(self.engine.session()),
                 capacity,
                 bb,
+                layers: cfg.n_layers,
             },
             Residency::Legacy => DecodeState {
                 kind: StateKind::Legacy(Vec::with_capacity(cfg.n_layers)),
                 capacity: cfg.max_decode_len,
                 bb,
+                layers: cfg.n_layers,
             },
         };
 
@@ -609,6 +722,68 @@ impl<'e> Server<'e> {
         }
         let logits = self.lm_head(Tensor::from_vec(&[prompts.len(), d], states))?;
         Ok((logits, state))
+    }
+
+    /// Allocate a decode state of `lanes` zeroed KV lanes (rounded up to
+    /// a serve-batch bucket) at sequence capacity `capacity` (clamped to
+    /// the decode window), without running a prefill pass.
+    ///
+    /// This is the continuous scheduler's entry point: where
+    /// [`Server::prefill`] sizes one state for one closed batch, an
+    /// empty state outlives any single request — lanes are populated at
+    /// admission ([`DecodeState::write_lane`]) and cleared at retirement
+    /// ([`DecodeState::zero_lane`]) while the other lanes keep decoding.
+    /// On the [`Residency::Legacy`] path capacity is pinned to the
+    /// compiled `max_decode_len`, matching the artifact shapes that path
+    /// re-uploads each step.
+    pub fn empty_state(&mut self, lanes: usize, capacity: usize) -> Result<DecodeState<'e>> {
+        let cfg = self.cfg();
+        let bb = cfg
+            .serve_batches
+            .iter()
+            .find(|&&b| b >= lanes)
+            .copied()
+            .ok_or_else(|| anyhow!("batch {} exceeds buckets", lanes))?;
+        let max_pos = cfg.seq_len.min(cfg.max_decode_len);
+        let capacity = capacity.clamp(1, max_pos);
+        let (h, hd) = (cfg.n_heads, cfg.d_head);
+        match self.residency {
+            Residency::Resident => {
+                let mut sess = self.engine.session();
+                for l in 0..cfg.n_layers {
+                    sess.alloc_resident(
+                        format!("kc{l}"),
+                        Value::F32(Tensor::zeros(&[bb, h, capacity, hd])),
+                    );
+                    sess.alloc_resident(
+                        format!("vc{l}"),
+                        Value::F32(Tensor::zeros(&[bb, h, capacity, hd])),
+                    );
+                }
+                Ok(DecodeState {
+                    kind: StateKind::Resident(sess),
+                    capacity,
+                    bb,
+                    layers: cfg.n_layers,
+                })
+            }
+            Residency::Legacy => {
+                let caches = (0..cfg.n_layers)
+                    .map(|_| {
+                        (
+                            Tensor::zeros(&[bb, h, cfg.max_decode_len, hd]),
+                            Tensor::zeros(&[bb, h, cfg.max_decode_len, hd]),
+                        )
+                    })
+                    .collect();
+                Ok(DecodeState {
+                    kind: StateKind::Legacy(caches),
+                    capacity: cfg.max_decode_len,
+                    bb,
+                    layers: cfg.n_layers,
+                })
+            }
+        }
     }
 
     /// One greedy decode step for `batch` sequences at `positions`
@@ -798,8 +973,9 @@ impl<'e> Server<'e> {
 
 /// Greedy token pick. Total and panic-free on NaN logits: a NaN never
 /// beats a finite logit, so one poisoned lane cannot take down the
-/// serving process (regression-tested below).
-fn argmax_row(logits: &Tensor, row: usize) -> i32 {
+/// serving process (regression-tested below). Shared with the continuous
+/// scheduler so both serve loops sample identically.
+pub(crate) fn argmax_row(logits: &Tensor, row: usize) -> i32 {
     let v = logits.shape()[1];
     let xs = &logits.data()[row * v..(row + 1) * v];
     xs.iter()
@@ -824,6 +1000,22 @@ fn fit_cache(kv: &Tensor, s: usize) -> Tensor {
             out.data_mut()[dst..dst + keep * hd]
                 .copy_from_slice(&kv.data()[src..src + keep * hd]);
         }
+    }
+    out
+}
+
+/// Extract one batch lane of a `[b, h, t, hd]` cache as `[1, h, rows, hd]`,
+/// trimming (or zero-extending) the sequence axis to `rows` — the
+/// admission copy, in a single pass.
+fn lane_rows(kv: &Tensor, lane: usize, rows: usize) -> Tensor {
+    let &[_b, h, t, hd] = kv.shape() else { panic!("bad cache shape") };
+    let keep = t.min(rows);
+    let mut out = Tensor::zeros(&[1, h, rows, hd]);
+    for hi in 0..h {
+        let src = ((lane * h) + hi) * t * hd;
+        let dst = hi * rows * hd;
+        out.data_mut()[dst..dst + keep * hd]
+            .copy_from_slice(&kv.data()[src..src + keep * hd]);
     }
     out
 }
@@ -856,6 +1048,19 @@ mod tests {
         assert_eq!(g.at(&[0, 0, 1, 1]), 3.0);
         assert_eq!(g.at(&[0, 1, 0, 0]), 4.0);
         assert_eq!(g.at(&[0, 0, 2, 0]), 0.0); // grown region zeroed
+    }
+
+    #[test]
+    fn lane_rows_extracts_one_trimmed_lane() {
+        // kv [2, 2, 2, 1]: lane 1 holds heads [[4, 5], [6, 7]]
+        let kv = Tensor::from_vec(&[2, 2, 2, 1], (0..8).map(|x| x as f32).collect());
+        let r = lane_rows(&kv, 1, 3);
+        assert_eq!(r.shape(), &[1, 2, 3, 1]);
+        assert_eq!(r.data(), &[4.0, 5.0, 0.0, 6.0, 7.0, 0.0]);
+        // trimming below the source keeps the prefix
+        let r = lane_rows(&kv, 0, 1);
+        assert_eq!(r.shape(), &[1, 2, 1, 1]);
+        assert_eq!(r.data(), &[0.0, 2.0]);
     }
 
     #[test]

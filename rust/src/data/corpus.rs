@@ -63,7 +63,7 @@ pub struct Grammar {
     pub topics: Vec<Topic>,
 }
 
-/// Zero-shot task kinds (the 7 synthetic benchmarks of DESIGN.md §2).
+/// Zero-shot task kinds (the 7 synthetic benchmarks; see docs/ARCHITECTURE.md).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TaskKind {
     TopicCloze,

@@ -2,7 +2,7 @@
 //!
 //! The paper calibrates on WikiText-2/C4 and evaluates on LM-Eval zero-shot
 //! tasks; neither is available offline, so we build the closest synthetic
-//! equivalent (DESIGN.md §2): a deterministic *topic grammar* whose
+//! equivalent (see docs/ARCHITECTURE.md): a deterministic *topic grammar* whose
 //! documents carry (a) topic-clustered vocabulary — which drives MoE expert
 //! specialisation, the statistical structure HEAPr's routed-token
 //! calibration depends on — and (b) recurring linguistic patterns

@@ -1,4 +1,4 @@
-//! One module per paper table/figure (DESIGN.md §6 experiment index).
+//! One module per paper table/figure (index in docs/ARCHITECTURE.md).
 
 pub mod common;
 pub mod table1;

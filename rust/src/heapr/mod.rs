@@ -6,7 +6,7 @@
 //!    `calib_pass1` (fwd+bwd) and `calib_pass2` (fwd) artifacts,
 //!    accumulating per-expert gradient covariances Ḡ_{l,e} (eq. 15) and
 //!    routed atomic-activation second moments (the sufficient statistic for
-//!    eq. 16 under the rank-1 factorisation, DESIGN.md §1) — two forward
+//!    eq. 16 under the rank-1 factorisation; see docs/ARCHITECTURE.md) — two forward
 //!    passes + one backward pass total, O(d²) memory per expert.
 //! 2. [`importance::importance_scores`] combines them through the Pallas
 //!    `quadform` artifact: s̄_{l,e,k} = ½ · (w_down_k^T Ḡ w_down_k) ·

@@ -2,26 +2,36 @@
 //!
 //! Full-system reproduction of the paper as a three-layer Rust + JAX +
 //! Pallas stack. This crate is Layer 3: it owns the event loop, training
-//! loop, pruning pipeline, evaluation harness and serving coordinator, and
-//! executes AOT-compiled HLO artifacts through the PJRT C API (`xla` crate).
-//! Python never runs at request time.
+//! loop, pruning pipeline, evaluation harness and serving coordinator,
+//! and executes the AOT artifact contract behind [`runtime::Engine`] —
+//! by default on the pure-rust host backend, optionally (feature `pjrt`)
+//! through the PJRT C API. Python never runs at request time.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! The system document is `docs/ARCHITECTURE.md`: the L1/L2/L3 layer
+//! map, the artifact/manifest contract, the serving lifecycle (prefill →
+//! decode → admission → release), the GEMM kernel tiers with their
+//! accumulation contract, and the thread-pool scheduler. Start there;
+//! the module docs below carry the local invariants.
+//!
+//! Module map:
 //! * [`util`] — substrates the offline image lacks crates for: PCG64 rng,
-//!   JSON, CLI args, logging, property-test helper.
-//! * [`tensor`] — host-side f32/i32 tensors + the ops the pipeline needs.
+//!   JSON, CLI args, logging, property-test helper, the thread pool.
+//! * [`tensor`] — host-side f32/i32 tensors, ops, and the
+//!   [`tensor::gemm`] microkernel subsystem.
 //! * [`config`] — model/run presets mirrored from `python/compile/configs.py`.
 //! * [`data`] — synthetic topic-grammar corpus, tokenizers, calibration
 //!   sampler (paper Appendix B sampling strategy).
-//! * [`runtime`] — PJRT client wrapper, artifact manifest, executable cache.
+//! * [`runtime`] — backends, artifact manifest, engine-resident sessions.
 //! * [`model`] — parameter store, checkpoint IO, width profiles, FLOPs.
 //! * [`train`] — training-loop driver over the `train_step` artifact.
-//! * [`heapr`] — the paper's contribution: calibration accumulators,
+//! * [`crate::heapr`] — the paper's contribution: calibration accumulators,
 //!   atomic-expert importance, global/layerwise ranking, weight surgery.
 //! * [`baselines`] — expert-drop / frequency / random / magnitude /
 //!   CAMERA-P / expert-level-HEAPr comparison methods.
 //! * [`eval`] — perplexity + 7 synthetic zero-shot tasks + FLOPs accounting.
-//! * [`coordinator`] — serving engine with width-bucketed expert dispatch.
+//! * [`coordinator`] — serving: request queue + admission policy, routing,
+//!   the batch-synchronous reference loop and the continuous-batching
+//!   lane scheduler.
 //! * [`experiments`] — one module per paper table/figure.
 //! * [`bench`] — criterion-substitute micro-benchmark harness.
 

@@ -6,6 +6,10 @@
 //!   prune       calibrate + prune at a ratio, save pruned checkpoint
 //!   eval        evaluate a (possibly masked) checkpoint on the suite
 //!   serve       serving demo: batched requests through the coordinator
+//!               (--continuous for the in-flight-admission lane
+//!               scheduler, --stream to print tokens as they land,
+//!               --lanes N to cap the lane count, --group-extent for
+//!               extent-grouped admission)
 //!   experiment  regenerate a paper table/figure: table1|table2|table3|
 //!               table5|fig2|fig3|fig4|fig56|all
 //!   corpus      print corpus statistics (substrate sanity)
@@ -18,7 +22,7 @@
 use anyhow::{bail, Result};
 
 use heapr::config::RunConfig;
-use heapr::coordinator::{Batcher, Request, Server};
+use heapr::coordinator::{serve_continuous, Batcher, Request, SchedulerOpts, Server, StreamEvent};
 use heapr::data::corpus::Grammar;
 use heapr::data::sampler::Split;
 use heapr::data::tokenizer::ByteTokenizer;
@@ -105,8 +109,19 @@ fn run() -> Result<()> {
             let n_req = args.usize("requests", 16)?;
             let new_tokens = args.usize("new-tokens", 16)?;
             let group_extent = args.flag("group-extent");
+            let continuous = args.flag("continuous");
+            let stream = args.flag("stream");
+            let lanes = args.usize("lanes", 0)?; // 0 = widest bucket
             args.finish()?;
-            cmd_serve(&artifact_dir, run, &out, ratio, n_req, new_tokens, group_extent)
+            cmd_serve(
+                &artifact_dir,
+                run,
+                &out,
+                ratio,
+                n_req,
+                new_tokens,
+                ServeMode { group_extent, continuous, stream, lanes },
+            )
         }
         "experiment" => {
             let which = args.str("id", "all");
@@ -228,7 +243,19 @@ fn cmd_eval(artifact_dir: &str, run: RunConfig, out: &str, ratio: f64) -> Result
     Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
+/// `serve` subcommand switches beyond the shared run knobs.
+struct ServeMode {
+    /// Extent-grouped admission (`AdmissionPolicy::GroupExtent`).
+    group_extent: bool,
+    /// Continuous batching (`--continuous`): in-flight admission through
+    /// the lane scheduler instead of closed batch-at-once batches.
+    continuous: bool,
+    /// Print tokens as they land (`--stream`, continuous mode only).
+    stream: bool,
+    /// Lane count for continuous mode (`--lanes N`); 0 = widest bucket.
+    lanes: usize,
+}
+
 fn cmd_serve(
     artifact_dir: &str,
     run: RunConfig,
@@ -236,7 +263,7 @@ fn cmd_serve(
     ratio: f64,
     n_req: usize,
     new_tokens: usize,
-    group_extent: bool,
+    mode: ServeMode,
 ) -> Result<()> {
     let ctx = Ctx::prepare(artifact_dir, run, out)?;
     let cfg = ctx.engine.config().clone();
@@ -268,22 +295,64 @@ fn cmd_serve(
         cfg.serve_batches.clone(),
         std::time::Duration::from_millis(2),
     )
-    .group_by_extent(group_extent);
-    let mut responses = Vec::new();
-    while let Some(batch) = batcher.next_batch() {
-        responses.extend(server.serve_batch(&batch)?);
-    }
+    .group_by_extent(mode.group_extent);
+
+    // per-request latency, submission -> completion, measured the same
+    // way in both modes (queue wait included) so the printed p50/p99 are
+    // comparable; serve_batch's own latencies_ms excludes queue wait
+    let mut request_lats_ms: Vec<f64> = Vec::new();
+    let responses = if mode.continuous {
+        // streaming consumer: print tokens the moment they land
+        let (ev_tx, ev_rx) = std::sync::mpsc::channel::<StreamEvent>();
+        let printer = mode.stream.then(|| {
+            std::thread::spawn(move || {
+                for ev in ev_rx {
+                    info!(
+                        "  stream req {} #{}: token {}{}",
+                        ev.id,
+                        ev.index,
+                        ev.token,
+                        if ev.done { " (done)" } else { "" }
+                    );
+                }
+            })
+        });
+        let opts = SchedulerOpts {
+            lanes: (mode.lanes > 0).then_some(mode.lanes),
+            stream: mode.stream.then_some(ev_tx),
+            compact: true,
+        };
+        let responses = serve_continuous(&mut server, &mut batcher, opts)?;
+        if let Some(p) = printer {
+            p.join().unwrap(); // sender dropped with opts; printer drains
+        }
+        // scheduler latencies are already submission -> retirement
+        request_lats_ms.extend(responses.iter().map(|r| r.latency_ms));
+        responses
+    } else {
+        let mut responses = Vec::new();
+        while let Some(batch) = batcher.next_batch() {
+            responses.extend(server.serve_batch(&batch)?);
+            // the whole batch completes together, here
+            request_lats_ms
+                .extend(batch.iter().map(|r| r.submitted.elapsed().as_secs_f64() * 1000.0));
+        }
+        responses
+    };
     producer.join().unwrap();
 
     let m = &server.metrics;
     info!(
-        "served {} requests: {} prompt tok, {} generated tok, {:.1} tok/s, \
-         p50 latency {:.0}ms, {:.0} upload B/step ({:?} residency)",
+        "served {} requests ({}): {} prompt tok, {} generated tok, {:.1} tok/s, \
+         request latency (submit→done) p50 {:.0}ms p99 {:.0}ms, \
+         {:.0} upload B/step ({:?} residency)",
         m.requests,
+        if mode.continuous { "continuous" } else { "batch-at-once" },
         m.prompt_tokens,
         m.generated_tokens,
         m.throughput_tps(),
-        heapr::util::stats::percentile(&m.latencies_ms, 50.0),
+        heapr::util::stats::percentile(&request_lats_ms, 50.0),
+        heapr::util::stats::percentile(&request_lats_ms, 99.0),
         m.upload_bytes_per_step(),
         server.residency(),
     );

@@ -17,6 +17,26 @@
 //! what lets `heapr::importance_scores` fan `quadform` calls across the
 //! thread pool. The PJRT engine is neither (raw FFI pointers) — callers
 //! that share an engine across threads only compile in host builds.
+//!
+//! # Calling conventions, in increasing residency
+//!
+//! 1. [`Engine::run`] — every input marshalled host->device per call;
+//! 2. [`Engine::upload`] + [`Engine::run_b`] — constants pinned once,
+//!    per-call inputs only;
+//! 3. [`Engine::session`] + [`Session::run_s`] — named *mutable*
+//!    residents that artifacts read and write in place (an input whose
+//!    manifest name matches an output is aliased — the decode KV append).
+//!
+//! Residents are additionally **lane-addressable**: index `i` of a
+//! resident's leading (batch) axis can be overwritten
+//! ([`Session::write_lane`]) or cleared ([`Session::zero_lane`])
+//! without touching the other lanes — the primitive the continuous
+//! scheduler uses to admit a new sequence into a decode lane freed
+//! mid-flight, and to retire lanes one by one instead of per batch.
+//! [`Engine::upload_stats`] prices every convention so the serving
+//! metrics can prove what moved: `run` pays per call, `upload` /
+//! `alloc_resident` / `write_lane` pay once, `run_b` and resident args
+//! are free.
 
 pub mod host;
 pub mod manifest;
@@ -37,6 +57,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::debug;
+use crate::tensor::Tensor;
 
 enum Backend {
     Host(host::HostBackend),
@@ -382,6 +403,66 @@ fn check_session_outputs(
     Ok(())
 }
 
+/// Copy the overlapping hyper-rectangle of `src` into `dst` (same rank;
+/// per-axis extent `min(src, dst)`), leaving the rest of `dst` untouched.
+/// The last axis copies as one contiguous row.
+fn copy_rect(dst: &mut [f32], dshape: &[usize], src: &[f32], sshape: &[usize]) {
+    debug_assert_eq!(dshape.len(), sshape.len());
+    if dshape.is_empty() {
+        dst[0] = src[0]; // rank exhausted: a single scalar remains
+        return;
+    }
+    let take = dshape[0].min(sshape[0]);
+    if dshape.len() == 1 {
+        dst[..take].copy_from_slice(&src[..take]);
+        return;
+    }
+    let drow: usize = dshape[1..].iter().product();
+    let srow: usize = sshape[1..].iter().product();
+    for i in 0..take {
+        copy_rect(
+            &mut dst[i * drow..(i + 1) * drow],
+            &dshape[1..],
+            &src[i * srow..(i + 1) * srow],
+            &sshape[1..],
+        );
+    }
+}
+
+/// Overwrite index `lane` of `dst`'s leading (batch/lane) axis with the
+/// single-lane tensor `src` (`src.shape()[0] == 1`, same rank).
+///
+/// The whole destination lane is zeroed first, then the overlapping
+/// hyper-rectangle of `src` is copied in — so a lane recycled for a new
+/// occupant can never expose the previous occupant's rows, and a source
+/// allocated at a different capacity is truncated or zero-extended
+/// exactly like `fit_cache` re-seats a prefill cache.
+pub fn write_lane_f32(dst: &mut Tensor, lane: usize, src: &Tensor) -> Result<()> {
+    let (ds, ss) = (dst.shape().to_vec(), src.shape().to_vec());
+    if ss.len() != ds.len() || ss.is_empty() || ss[0] != 1 {
+        bail!("write_lane: src shape {ss:?} is not a single lane of {ds:?}");
+    }
+    if lane >= ds[0] {
+        bail!("write_lane: lane {lane} out of range for {ds:?}");
+    }
+    let row: usize = ds[1..].iter().product();
+    let slab = &mut dst.data_mut()[lane * row..(lane + 1) * row];
+    slab.fill(0.0);
+    copy_rect(slab, &ds[1..], src.data(), &ss[1..]);
+    Ok(())
+}
+
+/// Zero index `lane` of `dst`'s leading axis (lane retirement).
+pub fn zero_lane_f32(dst: &mut Tensor, lane: usize) -> Result<()> {
+    let ds = dst.shape().to_vec();
+    if ds.is_empty() || lane >= ds[0] {
+        bail!("zero_lane: lane {lane} out of range for {ds:?}");
+    }
+    let row: usize = ds[1..].iter().product();
+    dst.data_mut()[lane * row..(lane + 1) * row].fill(0.0);
+    Ok(())
+}
+
 /// One argument to [`Session::run_s`]: a per-call host value (marshalled
 /// this call), a pinned [`DeviceBuffer`], or a named session resident.
 pub enum SArg<'a> {
@@ -405,6 +486,24 @@ pub enum SArg<'a> {
 /// boundary (named residents, capacity sizing, aliasing by manifest IO
 /// name) is exactly what PJRT buffer donation needs, so re-enabling real
 /// device residency is local to `runtime/pjrt.rs`.
+///
+/// # Example
+///
+/// ```no_run
+/// use heapr::runtime::{Engine, SArg, Value};
+/// use heapr::tensor::Tensor;
+///
+/// let engine = Engine::open("artifacts/tiny").unwrap();
+/// let mut sess = engine.session();
+/// // pin a weight as a named resident once…
+/// sess.alloc_resident("wd", Value::F32(Tensor::zeros(&[64, 32])));
+/// // …then execute against it; per-call inputs ride along as SArg::Val
+/// let g = Value::F32(Tensor::zeros(&[64, 64]));
+/// let out = sess
+///     .run_s("quadform", &[SArg::Res("wd"), SArg::Val(&g)])
+///     .unwrap();
+/// assert_eq!(out[0].shape(), &[32]);
+/// ```
 pub struct Session<'e> {
     engine: &'e Engine,
     residents: HashMap<String, Value>,
@@ -447,6 +546,40 @@ impl<'e> Session<'e> {
     /// Release every resident (the sequence is finished).
     pub fn clear(&mut self) {
         self.residents.clear();
+    }
+
+    /// Overwrite one index of resident `name`'s leading (batch/lane) axis
+    /// with the single-lane tensor `src` — the continuous scheduler's
+    /// admission primitive: a freed decode lane is re-seated with a new
+    /// sequence's KV rows without reallocating (or even touching) the
+    /// other lanes of the resident.
+    ///
+    /// The destination lane is zeroed before the copy (see
+    /// [`write_lane_f32`]), so a recycled lane can never expose its
+    /// previous occupant's rows. Counts as one host->device transfer of
+    /// `src`'s bytes in [`Engine::upload_stats`] — per-lane admission
+    /// traffic, not per-step decode traffic. On a device backend this
+    /// maps to a strided host->device copy into an existing buffer.
+    pub fn write_lane(&mut self, name: &str, lane: usize, src: &Tensor) -> Result<()> {
+        let v = self
+            .residents
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("write_lane: no resident {name:?} in session"))?;
+        let dst = v.as_f32_mut()?;
+        write_lane_f32(dst, lane, src)?;
+        self.engine.note_upload(1, (src.data().len() * 4) as u64);
+        Ok(())
+    }
+
+    /// Zero one index of resident `name`'s leading axis (lane
+    /// retirement). Moves no host->device bytes on the host backend; a
+    /// device backend would issue a device-side fill.
+    pub fn zero_lane(&mut self, name: &str, lane: usize) -> Result<()> {
+        let v = self
+            .residents
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("zero_lane: no resident {name:?} in session"))?;
+        zero_lane_f32(v.as_f32_mut()?, lane)
     }
 
     /// Execute `name` against a mix of per-call values, pinned buffers and
@@ -835,6 +968,65 @@ mod tests {
         assert_eq!(sess.resident_shape("wd"), Some(&[64usize, 32][..]));
         sess.clear();
         assert!(!sess.has_resident("wd"));
+    }
+
+    #[test]
+    fn write_lane_zeroes_then_copies_and_truncates() {
+        // dst [3, 2, 4]: lanes 0..3, each a [2, 4] slab
+        let mut dst = Tensor::from_vec(&[3, 2, 4], (0..24).map(|x| x as f32 + 1.0).collect());
+        // src smaller on the middle axis (capacity): [1, 2, 2]
+        let src = Tensor::from_vec(&[1, 2, 2], vec![10.0, 11.0, 12.0, 13.0]);
+        write_lane_f32(&mut dst, 1, &src).unwrap();
+        // lane 1 rows: src rect copied, tail zeroed (old values 9..16 gone)
+        assert_eq!(&dst.data()[8..16], &[10.0, 11.0, 0.0, 0.0, 12.0, 13.0, 0.0, 0.0]);
+        // lanes 0 and 2 untouched
+        assert_eq!(dst.data()[0], 1.0);
+        assert_eq!(dst.data()[16], 17.0);
+        // src larger than dst on an axis truncates (fit_cache semantics)
+        let big = Tensor::from_vec(&[1, 2, 8], (0..16).map(|x| x as f32 + 50.0).collect());
+        write_lane_f32(&mut dst, 0, &big).unwrap();
+        assert_eq!(&dst.data()[0..4], &[50.0, 51.0, 52.0, 53.0]);
+        assert_eq!(&dst.data()[4..8], &[58.0, 59.0, 60.0, 61.0]);
+        // shape misuse is an error, not a panic
+        assert!(write_lane_f32(&mut dst, 3, &src).is_err());
+        let wrong_rank = Tensor::from_vec(&[1, 4], vec![0.0; 4]);
+        assert!(write_lane_f32(&mut dst, 0, &wrong_rank).is_err());
+        let two_lanes = Tensor::from_vec(&[2, 2, 4], vec![0.0; 16]);
+        assert!(write_lane_f32(&mut dst, 0, &two_lanes).is_err());
+    }
+
+    #[test]
+    fn zero_lane_clears_exactly_one_lane() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1.0; 6]);
+        zero_lane_f32(&mut t, 0).unwrap();
+        assert_eq!(t.data(), &[0.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        assert!(zero_lane_f32(&mut t, 2).is_err());
+    }
+
+    #[test]
+    fn session_write_lane_counts_upload_and_validates() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        let mut sess = e.session();
+        sess.alloc_resident("kc", Value::F32(Tensor::zeros(&[4, 2, 8, 32])));
+        let (_, b0) = e.upload_stats();
+        let src = Tensor::from_vec(&[1, 2, 4, 32], vec![1.0; 2 * 4 * 32]);
+        sess.write_lane("kc", 2, &src).unwrap();
+        let (_, b1) = e.upload_stats();
+        assert_eq!(b1 - b0, (2 * 4 * 32 * 4) as u64, "admission pays src bytes");
+        let kc = sess.download("kc").unwrap().f32().unwrap();
+        // lane 2 holds the src rows (head 0, rows 0..4), lane 1 untouched
+        assert_eq!(kc.at(&[2, 0, 0, 0]), 1.0);
+        assert_eq!(kc.at(&[2, 0, 4, 0]), 0.0); // zero-extended tail
+        assert_eq!(kc.at(&[1, 0, 0, 0]), 0.0);
+        // zero_lane retires it without an upload event
+        let (_, b2) = e.upload_stats();
+        sess.zero_lane("kc", 2).unwrap();
+        assert_eq!(e.upload_stats().1, b2, "zero_lane moves no bytes");
+        let kc = sess.download("kc").unwrap().f32().unwrap();
+        assert_eq!(kc.at(&[2, 0, 0, 0]), 0.0);
+        // unknown resident errors
+        assert!(sess.write_lane("nope", 0, &src).is_err());
+        assert!(sess.zero_lane("nope", 0).is_err());
     }
 
     #[test]

@@ -1,4 +1,7 @@
 //! Shared GEMM microkernel subsystem for the host backend.
+//! (System-level context: `docs/ARCHITECTURE.md` §4; the serving
+//! equivalence argument in §3 leans on the per-row independence pinned
+//! down here.)
 //!
 //! Every heavy matmul in the tree — router scores, attention, the expert
 //! FFN fan-out, gradient accumulation, `quadform` — reduces to one of

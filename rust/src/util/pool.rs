@@ -1,4 +1,6 @@
 //! Home-grown fixed-worker thread pool with scoped `par_for` / `par_map`.
+//! (System-level context: `docs/ARCHITECTURE.md` §5 — disjoint writes
+//! only, caller-helps nesting.)
 //!
 //! The offline image has no rayon; this module supplies the minimal
 //! data-parallel substrate the serving and calibration hot paths need:

@@ -1,0 +1,254 @@
+//! Continuous-scheduler correctness: per-request token streams under
+//! in-flight admission must be **bitwise identical** to the
+//! batch-synchronous `serve_batch` reference — whatever the admission
+//! policy, lane count, thread count, residency or compaction setting —
+//! and a recycled lane must never expose its previous occupant's KV
+//! rows.
+
+use std::sync::mpsc::channel;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use heapr::coordinator::{
+    serve_continuous, AdmissionPolicy, Batcher, Request, Residency, SchedulerOpts, Server,
+    StreamEvent,
+};
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::model::store::ParamStore;
+use heapr::runtime::Engine;
+use heapr::util::pool;
+
+const DIR: &str = "artifacts/tiny";
+
+struct Shared {
+    engine: Engine,
+    params: ParamStore,
+}
+
+// SAFETY: access is serialized through the Mutex (see integration.rs).
+unsafe impl Send for Shared {}
+
+fn shared() -> &'static Mutex<Shared> {
+    static CTX: OnceLock<Mutex<Shared>> = OnceLock::new();
+    CTX.get_or_init(|| {
+        let engine = Engine::open(DIR).expect("open tiny preset");
+        let params = ParamStore::init(&engine.manifest, 11);
+        Mutex::new(Shared { engine, params })
+    })
+}
+
+fn base_prompt() -> Vec<i32> {
+    let g = Grammar::standard();
+    let docs = g.corpus("wiki", 3, 4000);
+    Split::from_docs(&docs, 64).chunks[0].clone()
+}
+
+/// A mixed-extent request stream: staggered prompt lengths and budgets
+/// so lanes free at different steps and admission happens mid-decode.
+fn mixed_requests() -> Vec<Request> {
+    let base = base_prompt();
+    (0..6u64)
+        .map(|i| {
+            let plen = 8 + 8 * (i as usize % 3); // 8 / 16 / 24
+            let budget = 2 + (i as usize % 4) * 2; // 2 / 4 / 6 / 8
+            Request::new(i, base[..plen].to_vec(), budget)
+        })
+        .collect()
+}
+
+fn queue(reqs: &[Request], policy: AdmissionPolicy) -> Batcher {
+    let (tx, rx) = channel();
+    for r in reqs {
+        tx.send(r.clone()).unwrap();
+    }
+    drop(tx);
+    Batcher::new(rx, vec![1, 4], Duration::from_millis(1)).admission(policy)
+}
+
+/// Reference: each request served alone through `serve_batch` (solo and
+/// batched serving are already proven identical by the
+/// serving_equivalence suite). Keyed by request id.
+fn solo_reference(ctx: &Shared, reqs: &[Request]) -> Vec<(u64, Vec<i32>)> {
+    pool::set_threads(1);
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let out = reqs
+        .iter()
+        .map(|r| {
+            let resp = server.serve_batch(std::slice::from_ref(r)).unwrap();
+            (r.id, resp.into_iter().next().unwrap().tokens)
+        })
+        .collect();
+    pool::set_threads(pool::default_threads());
+    out
+}
+
+fn tokens_by_id(mut resp: Vec<heapr::coordinator::Response>) -> Vec<(u64, Vec<i32>)> {
+    resp.sort_by_key(|r| r.id);
+    resp.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+#[test]
+fn continuous_matches_serve_batch_across_threads_and_residency() {
+    let ctx = shared().lock().unwrap();
+    let reqs = mixed_requests();
+    let want = solo_reference(&ctx, &reqs);
+
+    for threads in [1usize, 4] {
+        pool::set_threads(threads);
+        for residency in [Residency::Resident, Residency::Legacy] {
+            let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+            server.set_residency(residency);
+            let mut batcher = queue(&reqs, AdmissionPolicy::Fifo);
+            let got = serve_continuous(&mut server, &mut batcher, SchedulerOpts::default())
+                .unwrap();
+            assert_eq!(got.len(), reqs.len(), "every request must complete");
+            assert_eq!(
+                tokens_by_id(got),
+                want,
+                "continuous tokens diverged ({residency:?}, {threads} threads)"
+            );
+            if residency == Residency::Resident {
+                assert_eq!(
+                    server.metrics.decode_kv_upload_bytes, 0,
+                    "continuous resident decode must never re-upload a KV cache"
+                );
+            }
+            assert_eq!(server.metrics.requests, reqs.len());
+            assert!(server.metrics.latencies_ms.iter().all(|&l| l >= 0.0));
+        }
+    }
+    pool::set_threads(pool::default_threads());
+}
+
+#[test]
+fn admission_order_lanes_and_compaction_do_not_change_tokens() {
+    let ctx = shared().lock().unwrap();
+    let reqs = mixed_requests();
+    let want = solo_reference(&ctx, &reqs);
+
+    for policy in [AdmissionPolicy::Fifo, AdmissionPolicy::GroupExtent] {
+        for lanes in [Some(1), Some(4), None] {
+            for compact in [true, false] {
+                let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+                let mut batcher = queue(&reqs, policy);
+                let opts = SchedulerOpts { lanes, stream: None, compact };
+                let got = serve_continuous(&mut server, &mut batcher, opts).unwrap();
+                assert_eq!(
+                    tokens_by_id(got),
+                    want,
+                    "tokens diverged (policy {policy:?}, lanes {lanes:?}, \
+                     compact {compact})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_events_reassemble_every_response() {
+    let ctx = shared().lock().unwrap();
+    let reqs = mixed_requests();
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let mut batcher = queue(&reqs, AdmissionPolicy::Fifo);
+    let (tx, rx) = channel::<StreamEvent>();
+    let opts = SchedulerOpts { lanes: None, stream: Some(tx), compact: true };
+    let responses = serve_continuous(&mut server, &mut batcher, opts).unwrap();
+    let events: Vec<StreamEvent> = rx.into_iter().collect();
+
+    for resp in &responses {
+        let mine: Vec<&StreamEvent> =
+            events.iter().filter(|e| e.id == resp.id).collect();
+        assert_eq!(mine.len(), resp.tokens.len(), "req {}", resp.id);
+        for (i, ev) in mine.iter().enumerate() {
+            // events land in index order, tokens match the response, and
+            // `done` fires exactly on the final token
+            assert_eq!(ev.index, i, "req {}", resp.id);
+            assert_eq!(ev.token, resp.tokens[i], "req {}", resp.id);
+            assert_eq!(ev.done, i + 1 == resp.tokens.len(), "req {}", resp.id);
+        }
+    }
+    let total: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(events.len(), total, "no stray events");
+}
+
+#[test]
+fn recycled_lane_never_observes_previous_occupants_kv() {
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let base = base_prompt();
+
+    for residency in [Residency::Resident, Residency::Legacy] {
+        let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+        server.set_residency(residency);
+        let max_pos = cfg.seq_len.min(cfg.max_decode_len);
+        let mut state = server.empty_state(4, max_pos).unwrap();
+
+        // occupant A: a long prompt fills many rows of lane 1
+        let (_l, a) = server
+            .prefill_with_capacity(&[base[..32].to_vec()], state.capacity())
+            .unwrap();
+        state.admit_lane(1, &a, 32).unwrap();
+        a.release();
+        let (k, _v) = state.kv_cache(0).unwrap();
+        let row = |t: &heapr::tensor::Tensor, lane: usize, pos: usize| -> Vec<f32> {
+            let hd = cfg.d_head;
+            let s = t.shape()[2];
+            let start = ((lane * cfg.n_heads) * s + pos) * hd;
+            t.data()[start..start + hd].to_vec()
+        };
+        assert!(
+            row(&k, 1, 31).iter().any(|&x| x != 0.0),
+            "occupant A's rows must actually be there ({residency:?})"
+        );
+
+        // retire A: the lane is zeroed immediately
+        state.zero_lane(1).unwrap();
+        let (k, v) = state.kv_cache(0).unwrap();
+        for pos in 0..32 {
+            assert!(
+                row(&k, 1, pos).iter().all(|&x| x == 0.0)
+                    && row(&v, 1, pos).iter().all(|&x| x == 0.0),
+                "row {pos} survived retirement ({residency:?})"
+            );
+        }
+
+        // occupant B: a short prompt re-seats the lane; rows beyond B's
+        // prompt must be zero, not A's leftovers
+        let (_l, b) = server
+            .prefill_with_capacity(&[base[..8].to_vec()], state.capacity())
+            .unwrap();
+        state.admit_lane(1, &b, 8).unwrap();
+        b.release();
+        let (k, v) = state.kv_cache(0).unwrap();
+        assert!(row(&k, 1, 7).iter().any(|&x| x != 0.0), "B's rows seated");
+        for pos in 8..32 {
+            assert!(
+                row(&k, 1, pos).iter().all(|&x| x == 0.0)
+                    && row(&v, 1, pos).iter().all(|&x| x == 0.0),
+                "recycled lane leaked occupant A at row {pos} ({residency:?})"
+            );
+        }
+        // neighbouring lane 0 was never touched by any of it
+        assert!(row(&k, 0, 0).iter().all(|&x| x == 0.0));
+        state.release();
+    }
+}
+
+#[test]
+fn continuous_reports_true_per_request_latency() {
+    // batch-at-once gives every request in a batch the same latency; the
+    // scheduler must report per-request submission->retirement times
+    let ctx = shared().lock().unwrap();
+    let reqs = mixed_requests();
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let mut batcher = queue(&reqs, AdmissionPolicy::Fifo);
+    let responses =
+        serve_continuous(&mut server, &mut batcher, SchedulerOpts::default()).unwrap();
+    assert_eq!(responses.len(), reqs.len());
+    assert!(responses.iter().all(|r| r.latency_ms > 0.0));
+    // lossless: every id comes back exactly once
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..reqs.len() as u64).collect::<Vec<_>>());
+}
