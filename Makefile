@@ -2,6 +2,7 @@
 #
 # `make verify` is the one-stop gate: gating lints (fmt, clippy -D
 # warnings), the documentation gate (rustdoc with warnings denied),
+# the repo linter (heapr-lint: SAFETY-comment audit + repo rules),
 # then tier-1 (release build + full test suite). The toolchain —
 # including rustfmt and clippy — is pinned by rust-toolchain.toml, so
 # lint drift is a real signal, not toolchain skew. Use `make tier1`
@@ -10,7 +11,7 @@
 PRESET ?= tiny
 ARTIFACTS := artifacts/$(PRESET)
 
-.PHONY: all build test tier1 fmt clippy docs verify artifacts bench bench-native clean
+.PHONY: all build test tier1 fmt clippy docs lint miri verify artifacts bench bench-native clean
 
 all: build
 
@@ -37,7 +38,24 @@ clippy:
 docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
-verify: fmt clippy docs tier1
+# Repo linter (rust/src/lint): dependency-free static analysis enforcing
+# the SAFETY-comment convention on every unsafe site, the NaN-ordering
+# ban (no partial_cmp().unwrap() outside util::cmp), the single-spawn-path
+# policy (util::pool::spawn_named), the HEAPR_* env-var registry against
+# README's table, and rust/tests ⇄ Cargo.toml test registration. Exits
+# nonzero with clickable file:line:col diagnostics; escape hatch is a
+# span-anchored `// lint:allow(<rule>)` comment (see README).
+lint:
+	cargo run -q --release --bin heapr-lint -- --root .
+
+# Nightly-only: run the cfg(miri)-shrunk unsafe-substrate subset under
+# Miri (pool fan-out, RowsPtr disjoint slicing, lane writes). Needs
+# `rustup +nightly component add miri`. Mirrored by the non-blocking
+# CI job in .github/workflows/verify.yml.
+miri:
+	cargo +nightly miri test --test miri_subset
+
+verify: fmt clippy docs lint tier1
 
 # Export AOT HLO artifacts + manifest.json (requires the python/JAX
 # toolchain). Optional: the rust host backend synthesizes the manifest for

@@ -1,0 +1,53 @@
+//! `heapr-lint` — the repo's dependency-free static-analysis gate.
+//!
+//! Usage: `heapr-lint [--root <repo-root>]` (default: the current
+//! directory). Prints one clickable `file:line:col: [rule] message` per
+//! finding and exits nonzero when anything fires. `make lint` runs it
+//! as part of `make verify`; the engine and rule catalogue live in
+//! `heapr::lint` (see `docs/ARCHITECTURE.md` §7).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use heapr::lint;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("heapr-lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                println!("usage: heapr-lint [--root <repo-root>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("heapr-lint: unknown argument `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    match lint::lint_repo(&root) {
+        Ok(diags) if diags.is_empty() => {
+            println!("heapr-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            eprintln!("heapr-lint: {} finding(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("heapr-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -310,6 +310,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::pool;
     use std::sync::mpsc::channel;
 
     fn mk(buckets: Vec<usize>) -> (std::sync::mpsc::Sender<Request>, Batcher) {
@@ -383,7 +384,7 @@ mod tests {
         let mut handles = Vec::new();
         for p in 0..PRODUCERS {
             let tx = tx.clone();
-            handles.push(std::thread::spawn(move || {
+            handles.push(pool::spawn_named("producer", move || {
                 for j in 0..PER_PRODUCER {
                     tx.send(Request::new(p * 1000 + j, vec![1], 1)).unwrap();
                 }
@@ -524,7 +525,7 @@ mod tests {
     fn wait_ready_blocks_for_work_and_ends_on_close() {
         let (tx, rx) = channel();
         let mut b = Batcher::new(rx, vec![1, 4], Duration::from_millis(1));
-        let feeder = std::thread::spawn(move || {
+        let feeder = pool::spawn_named("feeder", move || {
             tx.send(Request::new(7, vec![1], 1)).unwrap();
             // tx drops here: channel closes after one request
         });

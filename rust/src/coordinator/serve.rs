@@ -500,6 +500,10 @@ impl<'e> Server<'e> {
                         // parallel gather: lane i fills row i only
                         let ptr = RowsPtr::new(&mut xs);
                         pool::par_for(gtake, |i| {
+                            // SAFETY: lane i writes only row i of xs —
+                            // [i*d, (i+1)*d) ranges are disjoint across
+                            // lanes, in bounds (xs is gb*d, gtake <= gb),
+                            // and xs outlives the par_for.
                             gather(i, unsafe { ptr.slice(i * d, d) });
                         });
                     }
@@ -541,6 +545,10 @@ impl<'e> Server<'e> {
                         let ptr = RowsPtr::new(y.data_mut());
                         pool::par_for(gtake, |i| {
                             let (t, _) = pairs[gstart + i];
+                            // SAFETY: token indices t are unique within
+                            // the group, so lanes update disjoint rows
+                            // [(start+t)*d, (start+t+1)*d) of y, all in
+                            // bounds; y outlives the par_for.
                             scatter(i, unsafe { ptr.slice((start + t) * d, d) });
                         });
                     }

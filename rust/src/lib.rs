@@ -34,6 +34,9 @@
 //!   lane scheduler.
 //! * [`experiments`] — one module per paper table/figure.
 //! * [`bench`] — criterion-substitute micro-benchmark harness.
+//! * [`lint`] — the `heapr-lint` static-analysis engine: a Rust surface
+//!   lexer plus the five repo rules behind `make lint` (SAFETY-comment
+//!   audit, NaN-ordering ban, spawn policy, env/test registries).
 
 pub mod util;
 pub mod tensor;
@@ -48,3 +51,4 @@ pub mod eval;
 pub mod coordinator;
 pub mod experiments;
 pub mod bench;
+pub mod lint;

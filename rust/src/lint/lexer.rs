@@ -1,0 +1,468 @@
+//! Surface lexer for the lint engine.
+//!
+//! This is *not* a Rust parser: it is a token scanner whose one job is to
+//! classify every byte of a source file as comment, string/char literal,
+//! identifier, number or punctuation — with file positions — so the lint
+//! rules in [`super::rules`] can match token sequences without ever being
+//! fooled by the word `unsafe` inside a string, a `//` inside a string,
+//! or a quote inside a comment. The hard cases it gets right:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments
+//!   (`/* a /* b */ c */` is one token — Rust block comments nest);
+//! * string literals with escapes (`"\\"`, `"\""`), byte strings
+//!   (`b"…"`), and raw strings with any hash depth (`r"…"`, `r#"…"#`,
+//!   `br##"…"##`) — a raw string containing `unsafe` or `*/` stays one
+//!   [`TokKind::Str`] token;
+//! * raw identifiers: `r#match` is an identifier, not the start of a raw
+//!   string;
+//! * char literals vs lifetimes: `'a'` is a char, `'a` in `&'a str` is a
+//!   lifetime, `'\''` and `'\u{1F600}'` are chars.
+//!
+//! The lexer never panics on malformed input: an unterminated literal or
+//! comment simply extends to end of file. Positions are 1-based; `col`
+//! is a byte offset into the line (all delimiters are ASCII, so slicing
+//! at token boundaries is always UTF-8 safe).
+
+/// Token classification — just enough structure for the lint rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (including raw identifiers like `r#match`).
+    Ident,
+    /// `// …` to end of line (including `///` and `//!` doc comments).
+    LineComment,
+    /// `/* … */`, nesting honoured (including `/** … */` doc comments).
+    BlockComment,
+    /// String literal: plain, byte, or raw with any hash depth.
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'x'` yields `b` + `'x'`).
+    Char,
+    /// Lifetime (`'a`, `'static`) — distinct from [`TokKind::Char`].
+    Lifetime,
+    /// Numeric literal (integer or float, any base; suffix included).
+    Num,
+    /// Single punctuation byte (`::` is two `:` tokens).
+    Punct,
+}
+
+impl TokKind {
+    /// True for both comment kinds.
+    pub fn is_comment(self) -> bool {
+        matches!(self, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// One lexed token with its source span.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// The exact source text, delimiters included.
+    pub text: String,
+    /// 1-based line of the token's first byte.
+    pub line: u32,
+    /// 1-based line of the token's last byte (multi-line comments and
+    /// strings span lines; everything else has `end_line == line`).
+    pub end_line: u32,
+    /// 1-based byte column of the token's first byte within its line.
+    pub col: u32,
+}
+
+impl Tok {
+    /// For [`TokKind::Str`] tokens: the content between the quotes, with
+    /// any `b`/`r` prefix and raw-string hashes stripped (escapes are
+    /// *not* decoded). Returns the raw text unchanged for other kinds.
+    pub fn str_content(&self) -> &str {
+        if self.kind != TokKind::Str {
+            return &self.text;
+        }
+        let s = self.text.trim_start_matches(['b', 'r']).trim_matches('#');
+        s.strip_prefix('"').and_then(|s| s.strip_suffix('"')).unwrap_or(s)
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lexer state: a byte cursor plus line/column bookkeeping.
+struct Cursor<'a> {
+    src: &'a [u8],
+    i: usize,
+    line: u32,
+    line_start: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(src: &'a str) -> Cursor<'a> {
+        Cursor { src: src.as_bytes(), i: 0, line: 1, line_start: 0 }
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.i + ahead).copied()
+    }
+
+    /// Advance one byte, tracking newlines.
+    fn bump(&mut self) {
+        if self.src.get(self.i) == Some(&b'\n') {
+            self.line += 1;
+            self.line_start = self.i + 1;
+        }
+        self.i += 1;
+    }
+
+    fn bump_n(&mut self, n: usize) {
+        for _ in 0..n {
+            self.bump();
+        }
+    }
+
+    fn col(&self, at: usize) -> u32 {
+        (at - self.line_start + 1) as u32
+    }
+}
+
+/// Lex `src` into a token stream (whitespace dropped, everything else —
+/// comments included — kept in source order).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut cur = Cursor::new(src);
+    while let Some(b) = cur.peek(0) {
+        if b.is_ascii_whitespace() {
+            cur.bump();
+            continue;
+        }
+        let start = cur.i;
+        let (line, col) = (cur.line, cur.col(start));
+        let kind = scan_token(&mut cur, b);
+        let text = String::from_utf8_lossy(&cur.src[start..cur.i]).into_owned();
+        toks.push(Tok { kind, text, line, end_line: cur.line, col });
+    }
+    toks
+}
+
+/// Scan one token starting at byte `b`; advances the cursor past it and
+/// returns its kind.
+fn scan_token(cur: &mut Cursor, b: u8) -> TokKind {
+    // comments
+    if b == b'/' && cur.peek(1) == Some(b'/') {
+        while cur.peek(0).is_some_and(|c| c != b'\n') {
+            cur.bump();
+        }
+        return TokKind::LineComment;
+    }
+    if b == b'/' && cur.peek(1) == Some(b'*') {
+        cur.bump_n(2);
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (cur.peek(0), cur.peek(1)) {
+                (Some(b'/'), Some(b'*')) => {
+                    depth += 1;
+                    cur.bump_n(2);
+                }
+                (Some(b'*'), Some(b'/')) => {
+                    depth -= 1;
+                    cur.bump_n(2);
+                }
+                (Some(_), _) => cur.bump(),
+                (None, _) => break, // unterminated: extend to EOF
+            }
+        }
+        return TokKind::BlockComment;
+    }
+    // string-ish prefixes: r"…", r#"…"#, b"…", br#"…"#, and the raw
+    // *identifier* escape r#ident (which is NOT a string)
+    if b == b'r' || b == b'b' {
+        let after_b = if b == b'b' && cur.peek(1) == Some(b'r') { 2 } else { 1 };
+        let mut hashes = 0usize;
+        while cur.peek(after_b + hashes) == Some(b'#') {
+            hashes += 1;
+        }
+        let raw_marker = b == b'r' || after_b == 2;
+        if raw_marker && cur.peek(after_b + hashes) == Some(b'"') {
+            cur.bump_n(after_b + hashes + 1);
+            scan_raw_string_body(cur, hashes);
+            return TokKind::Str;
+        }
+        if b == b'r' && hashes >= 1 && cur.peek(2).is_some_and(is_ident_start) {
+            // raw identifier r#ident
+            cur.bump_n(2);
+            while cur.peek(0).is_some_and(is_ident_cont) {
+                cur.bump();
+            }
+            return TokKind::Ident;
+        }
+        if hashes == 0 && cur.peek(after_b) == Some(b'"') {
+            // b"…" (after_b == 1 only: br"…" was handled above)
+            cur.bump_n(after_b);
+            return scan_quoted(cur, b'"');
+        }
+        if b == b'b' && cur.peek(1) == Some(b'\'') {
+            cur.bump(); // the `b`; the char literal lexes next round
+            return TokKind::Ident;
+        }
+        // plain identifier starting with r/b
+        while cur.peek(0).is_some_and(is_ident_cont) {
+            cur.bump();
+        }
+        return TokKind::Ident;
+    }
+    if b == b'"' {
+        return scan_quoted(cur, b'"');
+    }
+    if b == b'\'' {
+        return scan_quote_or_lifetime(cur);
+    }
+    if is_ident_start(b) {
+        while cur.peek(0).is_some_and(is_ident_cont) {
+            cur.bump();
+        }
+        return TokKind::Ident;
+    }
+    if b.is_ascii_digit() {
+        scan_number(cur);
+        return TokKind::Num;
+    }
+    cur.bump();
+    TokKind::Punct
+}
+
+/// Scan a plain (escaped) quoted literal; the cursor sits on the opening
+/// quote. Consumes through the closing quote (or EOF).
+fn scan_quoted(cur: &mut Cursor, quote: u8) -> TokKind {
+    cur.bump(); // opening quote
+    while let Some(c) = cur.peek(0) {
+        if c == b'\\' {
+            cur.bump_n(2);
+            continue;
+        }
+        cur.bump();
+        if c == quote {
+            break;
+        }
+    }
+    if quote == b'"' {
+        TokKind::Str
+    } else {
+        TokKind::Char
+    }
+}
+
+/// Raw-string body after the opening quote: runs to `"` followed by
+/// `hashes` `#` bytes (no escapes exist in raw strings).
+fn scan_raw_string_body(cur: &mut Cursor, hashes: usize) {
+    while let Some(c) = cur.peek(0) {
+        if c == b'"' && (0..hashes).all(|h| cur.peek(1 + h) == Some(b'#')) {
+            cur.bump_n(1 + hashes);
+            return;
+        }
+        cur.bump();
+    }
+}
+
+/// Disambiguate `'a'` (char) from `'a` (lifetime); the cursor sits on
+/// the opening quote.
+fn scan_quote_or_lifetime(cur: &mut Cursor) -> TokKind {
+    match cur.peek(1) {
+        Some(b'\\') => {
+            // escaped char literal: consume to the closing quote
+            cur.bump_n(2); // ' and backslash
+            cur.bump(); // the escaped byte itself (n, ', u, x, …)
+            while cur.peek(0).is_some_and(|c| c != b'\'') {
+                cur.bump();
+            }
+            cur.bump(); // closing quote (no-op at EOF)
+            TokKind::Char
+        }
+        Some(c) if is_ident_start(c) => {
+            // 'a' is a char, 'a / 'static are lifetimes: scan the ident
+            // run, then look for an immediate closing quote
+            let mut n = 1;
+            while cur.peek(1 + n).is_some_and(is_ident_cont) {
+                n += 1;
+            }
+            if cur.peek(1 + n) == Some(b'\'') {
+                cur.bump_n(n + 2);
+                TokKind::Char
+            } else {
+                cur.bump_n(n + 1);
+                TokKind::Lifetime
+            }
+        }
+        Some(_) => {
+            // non-alphabetic single char: '0', '%', ' ' …
+            cur.bump_n(2);
+            if cur.peek(0) == Some(b'\'') {
+                cur.bump();
+            }
+            TokKind::Char
+        }
+        None => {
+            cur.bump();
+            TokKind::Punct // stray quote at EOF
+        }
+    }
+}
+
+/// Numeric literal: digits, `_`, alphanumeric suffixes/bases, and a `.`
+/// only when a digit follows (so `0..n` lexes as `0` `.` `.` `n`).
+fn scan_number(cur: &mut Cursor) {
+    while let Some(c) = cur.peek(0) {
+        if c.is_ascii_alphanumeric() || c == b'_' {
+            cur.bump();
+        } else if c == b'.' && cur.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let t = kinds("let x = foo(1, 2.5);");
+        assert_eq!(t[0], (TokKind::Ident, "let".into()));
+        assert_eq!(t[1], (TokKind::Ident, "x".into()));
+        assert_eq!(t[2], (TokKind::Punct, "=".into()));
+        assert_eq!(t[3], (TokKind::Ident, "foo".into()));
+        assert_eq!(t[5], (TokKind::Num, "1".into()));
+        assert_eq!(t[7], (TokKind::Num, "2.5".into()));
+    }
+
+    #[test]
+    fn range_does_not_eat_dots() {
+        let t = kinds("0..n");
+        assert_eq!(t[0], (TokKind::Num, "0".into()));
+        assert_eq!(t[1], (TokKind::Punct, ".".into()));
+        assert_eq!(t[2], (TokKind::Punct, ".".into()));
+        assert_eq!(t[3], (TokKind::Ident, "n".into()));
+    }
+
+    #[test]
+    fn unsafe_in_plain_string_is_not_an_ident() {
+        let t = lex(r#"let s = "unsafe { boom() }";"#);
+        assert!(t.iter().all(|t| !(t.kind == TokKind::Ident && t.text == "unsafe")));
+        assert!(t.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn unsafe_in_raw_string_is_one_token() {
+        // the fixture case from the issue: a raw string containing the
+        // word unsafe (and a fake comment-closer) must stay one Str token
+        let src = "let s = r##\"unsafe */ \"# still \"## ; unsafe";
+        let t = lex(src);
+        let strs: Vec<&Tok> = t.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].text.contains("unsafe"));
+        assert!(strs[0].str_content().starts_with("unsafe"));
+        // the trailing real `unsafe` ident survives
+        let last = t.last().unwrap();
+        assert_eq!((last.kind, last.text.as_str()), (TokKind::Ident, "unsafe"));
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let t = kinds(r##"(b"ab", br#"c"d"#)"##);
+        let strs: Vec<_> = t.iter().filter(|(k, _)| *k == TokKind::Str).collect();
+        assert_eq!(strs.len(), 2);
+        assert_eq!(strs[0].1, "b\"ab\"");
+        assert_eq!(strs[1].1, "br#\"c\"d\"#");
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_string() {
+        let t = kinds("let r#match = r#fn;");
+        assert_eq!(t[1], (TokKind::Ident, "r#match".into()));
+        assert_eq!(t[3], (TokKind::Ident, "r#fn".into()));
+    }
+
+    #[test]
+    fn nested_block_comment_is_one_token() {
+        let src = "a /* outer /* inner */ still outer */ b";
+        let t = kinds(src);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0], (TokKind::Ident, "a".into()));
+        assert_eq!(t[1].0, TokKind::BlockComment);
+        assert!(t[1].1.contains("inner"));
+        assert!(t[1].1.ends_with("*/"));
+        assert_eq!(t[2], (TokKind::Ident, "b".into()));
+    }
+
+    #[test]
+    fn line_comment_stops_at_newline() {
+        let t = kinds("x // unsafe here\ny");
+        assert_eq!(t[0], (TokKind::Ident, "x".into()));
+        assert_eq!(t[1].0, TokKind::LineComment);
+        assert_eq!(t[2], (TokKind::Ident, "y".into()));
+    }
+
+    #[test]
+    fn quote_in_comment_does_not_open_a_string() {
+        let t = kinds("// it's fine\nx");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[1], (TokKind::Ident, "x".into()));
+    }
+
+    #[test]
+    fn comment_markers_inside_strings_are_inert() {
+        let t = kinds(r#"let s = "// not a comment /* nope"; y"#);
+        assert!(t.iter().all(|(k, _)| !k.is_comment()));
+        assert_eq!(t.last().unwrap(), &(TokKind::Ident, "y".into()));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let t = kinds("fn f<'a>(x: &'a str) { let c = 'a'; let n = '\\n'; let q = '\\''; }");
+        let lifes: Vec<_> = t.iter().filter(|(k, _)| *k == TokKind::Lifetime).collect();
+        let chars: Vec<_> = t.iter().filter(|(k, _)| *k == TokKind::Char).collect();
+        assert_eq!(lifes.len(), 2, "two 'a lifetimes: {t:?}");
+        assert_eq!(chars.len(), 3, "'a', newline and quote chars: {t:?}");
+        assert_eq!(chars[0].1, "'a'");
+        assert_eq!(chars[2].1, "'\\''");
+    }
+
+    #[test]
+    fn static_lifetime_and_unicode_escape() {
+        let t = kinds("&'static str; '\\u{1F600}'");
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Lifetime && s == "'static"));
+        assert!(t.iter().any(|(k, s)| *k == TokKind::Char && s == "'\\u{1F600}'"));
+    }
+
+    #[test]
+    fn spans_track_lines_and_cols() {
+        let t = lex("ab\n  cd /* x\ny */ ef");
+        assert_eq!((t[0].line, t[0].col), (1, 1));
+        assert_eq!((t[1].line, t[1].col), (2, 3)); // cd
+        assert_eq!((t[2].line, t[2].end_line), (2, 3)); // multi-line comment
+        assert_eq!((t[3].line, t[3].col), (3, 6)); // ef
+    }
+
+    #[test]
+    fn unterminated_literals_extend_to_eof_without_panic() {
+        for src in ["\"never closed", "/* never closed", "r#\"never closed", "'"] {
+            let t = lex(src);
+            assert!(!t.is_empty(), "{src:?} must still lex");
+        }
+    }
+
+    #[test]
+    fn str_content_strips_prefixes() {
+        let t = lex(r###"("HEAPR_X", r#"raw"#, b"by")"###);
+        let c: Vec<&str> = t
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.str_content())
+            .collect();
+        assert_eq!(c, vec!["HEAPR_X", "raw", "by"]);
+    }
+}

@@ -1,0 +1,309 @@
+//! `heapr-lint` — dependency-free static analysis for this repo.
+//!
+//! The offline build image has no crates.io access, so the linter is
+//! hand-rolled like the vendored `anyhow`: [`lexer`] is a small but
+//! correct Rust *surface* lexer (line and nested block comments,
+//! strings, raw/byte strings, char-vs-lifetime disambiguation, spans),
+//! and [`rules`] holds the five repo rules it drives:
+//!
+//! | rule | enforces |
+//! |---|---|
+//! | `unsafe-needs-safety-comment` | every `unsafe` carries an adjacent `// SAFETY:` argument |
+//! | `no-partial-cmp-unwrap` | NaN-safe ordering (PR 3) outside `util::cmp` |
+//! | `no-raw-thread-spawn` | one spawn path: `util::pool::spawn_named` |
+//! | `env-var-registry` | `HEAPR_*` reads ⇄ README env table, both directions |
+//! | `test-registration` | `rust/tests/*.rs` ⇄ `Cargo.toml` test targets |
+//!
+//! [`lint_repo`] walks `rust/src` + `rust/tests` (sorted, so output is
+//! deterministic), applies `// lint:allow(<rule>)` escapes, and returns
+//! sorted diagnostics; the `heapr-lint` binary (`rust/src/bin/lint.rs`)
+//! prints them as clickable `file:line:col` lines and exits nonzero on
+//! any finding. Run it via `make lint` (part of `make verify`).
+//!
+//! `docs/ARCHITECTURE.md` §7 documents the SAFETY-comment convention,
+//! the escape-hatch policy, and how to add a rule.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One lint finding, anchored to a repo-relative `file:line:col`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Rule name (one of [`rules::RULES`], or `unknown-rule`).
+    pub rule: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line of the offending token.
+    pub line: u32,
+    /// 1-based column (bytes) of the offending token.
+    pub col: u32,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}: [{}] {}", self.file, self.line, self.col, self.rule, self.message)
+    }
+}
+
+/// Lint the repo rooted at `root`: every `.rs` file under `rust/src`
+/// and `rust/tests`, plus the `README.md` env table and the `Cargo.toml`
+/// test-target registry. Returns diagnostics sorted by
+/// `(file, line, col, rule)` after `lint:allow` suppression; empty
+/// means clean. Errors only on I/O problems (unreadable tree), never on
+/// findings.
+pub fn lint_repo(root: &Path) -> Result<Vec<Diagnostic>> {
+    let src_dir = root.join("rust").join("src");
+    let tests_dir = root.join("rust").join("tests");
+    if !src_dir.is_dir() {
+        bail!("{} is not a repo root (no rust/src)", root.display());
+    }
+    let mut files = Vec::new();
+    collect_rs(&src_dir, &mut files)?;
+    if tests_dir.is_dir() {
+        collect_rs(&tests_dir, &mut files)?;
+    }
+    files.sort();
+
+    let readme = fs::read_to_string(root.join("README.md")).context("reading README.md")?;
+    let cargo = fs::read_to_string(root.join("Cargo.toml")).context("reading Cargo.toml")?;
+
+    let mut diags = Vec::new();
+    let mut env_reads: Vec<(String, String, u32, u32)> = Vec::new();
+    let mut allows: Vec<(String, rules::Allow)> = Vec::new();
+
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = rel_path(root, path);
+        let f = rules::SourceFile::parse(&rel, &src);
+        let (file_allows, unknown) = rules::allows(&f);
+        allows.extend(file_allows.into_iter().map(|a| (rel.clone(), a)));
+        diags.extend(unknown);
+        diags.extend(rules::unsafe_needs_safety(&f));
+        diags.extend(rules::no_partial_cmp_unwrap(&f));
+        diags.extend(rules::no_raw_thread_spawn(&f));
+        for (name, line, col) in rules::env_reads(&f) {
+            env_reads.push((rel.clone(), name, line, col));
+        }
+    }
+    diags.extend(rules::env_registry(&env_reads, &readme, "README.md"));
+
+    let mut test_files: Vec<String> = Vec::new();
+    if tests_dir.is_dir() {
+        for entry in fs::read_dir(&tests_dir).context("listing rust/tests")? {
+            let p = entry.context("listing rust/tests")?.path();
+            if p.is_file() && p.extension().is_some_and(|e| e == "rs") {
+                if let Some(name) = p.file_name() {
+                    test_files.push(name.to_string_lossy().into_owned());
+                }
+            }
+        }
+    }
+    test_files.sort();
+    diags.extend(rules::test_registration(&test_files, &cargo));
+
+    // A `lint:allow(rule)` silences that rule on the comment's own lines
+    // and the line directly below it, in the same file only.
+    diags.retain(|d| {
+        !allows.iter().any(|(file, a)| {
+            *file == d.file && a.rule == d.rule && d.line >= a.from && d.line <= a.to
+        })
+    });
+    diags.sort_by(|x, y| {
+        (x.file.as_str(), x.line, x.col, x.rule).cmp(&(y.file.as_str(), y.line, y.col, y.rule))
+    });
+    Ok(diags)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for e in fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        entries.push(e.with_context(|| format!("listing {}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<_> = rel.components().map(|c| c.as_os_str().to_string_lossy()).collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A throwaway on-disk repo skeleton under the system temp dir, so
+    /// the fixture tree exercises the real walker (sorted recursion,
+    /// README/Cargo registry reads) and not just in-memory parsing.
+    struct FixtureRepo {
+        root: PathBuf,
+    }
+
+    impl FixtureRepo {
+        fn new(tag: &str) -> FixtureRepo {
+            let name = format!("heapr-lint-{tag}-{}", std::process::id());
+            let root = std::env::temp_dir().join(name);
+            let _ = fs::remove_dir_all(&root);
+            fs::create_dir_all(root.join("rust").join("src")).unwrap();
+            fs::create_dir_all(root.join("rust").join("tests")).unwrap();
+            FixtureRepo { root }
+        }
+
+        fn write(&self, rel: &str, contents: &str) {
+            let path = self.root.join(rel);
+            if let Some(parent) = path.parent() {
+                fs::create_dir_all(parent).unwrap();
+            }
+            fs::write(path, contents).unwrap();
+        }
+
+        fn lint(&self) -> Vec<Diagnostic> {
+            lint_repo(&self.root).unwrap()
+        }
+    }
+
+    impl Drop for FixtureRepo {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+
+    const README_FIXTURE: &str = "# fixture\n\n| Variable | Default | Effect |\n|---|---|---|\n\
+        | `HEAPR_DOCUMENTED` | off | a documented switch |\n";
+
+    const CARGO_FIXTURE: &str = "[package]\nname = \"fixture\"\n\n[[test]]\nname = \"missing\"\n\
+        path = \"rust/tests/missing.rs\"\n";
+
+    /// Every rule fires on its seeded violation, with diagnostics
+    /// anchored where the violation lives.
+    #[test]
+    fn seeded_violations_fire_every_rule() {
+        let repo = FixtureRepo::new("bad");
+        repo.write("README.md", README_FIXTURE);
+        repo.write("Cargo.toml", CARGO_FIXTURE);
+        repo.write(
+            "rust/src/bad.rs",
+            "pub fn f(a: f32, b: f32) {\n\
+             \x20   let x = unsafe { g() };\n\
+             \x20   let o = a.partial_cmp(&b).unwrap();\n\
+             \x20   let h = std::thread::spawn(work);\n\
+             \x20   let t = std::env::var(\"HEAPR_MYSTERY\");\n\
+             }\n",
+        );
+        repo.write("rust/tests/orphan.rs", "#[test]\nfn t() {}\n");
+
+        let diags = repo.lint();
+        let fired: Vec<(&str, &str, u32)> =
+            diags.iter().map(|d| (d.rule, d.file.as_str(), d.line)).collect();
+        assert_eq!(
+            fired,
+            vec![
+                (rules::TEST_REG, "Cargo.toml", 6),
+                (rules::ENV_REGISTRY, "README.md", 5),
+                (rules::UNSAFE_SAFETY, "rust/src/bad.rs", 2),
+                (rules::PARTIAL_CMP, "rust/src/bad.rs", 3),
+                (rules::THREAD_SPAWN, "rust/src/bad.rs", 4),
+                (rules::ENV_REGISTRY, "rust/src/bad.rs", 5),
+                (rules::TEST_REG, "rust/tests/orphan.rs", 1),
+            ],
+            "{diags:#?}"
+        );
+    }
+
+    /// The fixed forms of the same tree lint clean.
+    #[test]
+    fn fixed_tree_is_clean() {
+        let repo = FixtureRepo::new("good");
+        repo.write("README.md", README_FIXTURE);
+        repo.write(
+            "Cargo.toml",
+            "[package]\nname = \"fixture\"\n\n[[test]]\nname = \"orphan\"\n\
+             path = \"rust/tests/orphan.rs\"\n",
+        );
+        repo.write(
+            "rust/src/good.rs",
+            "pub fn f(a: f32, b: f32) {\n\
+             \x20   // SAFETY: g has no preconditions in this fixture\n\
+             \x20   let x = unsafe { g() };\n\
+             \x20   let o = a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal);\n\
+             \x20   let h = pool::spawn_named(\"worker\", work);\n\
+             \x20   let t = std::env::var(\"HEAPR_DOCUMENTED\");\n\
+             }\n",
+        );
+        repo.write("rust/tests/orphan.rs", "#[test]\nfn t() {}\n");
+        assert_eq!(repo.lint(), Vec::new(), "expected a clean fixture tree");
+    }
+
+    /// `lint:allow` suppresses exactly its own span (the comment's lines
+    /// plus the next line) for exactly the named rule; a typoed rule
+    /// name surfaces as `unknown-rule` instead of silently allowing.
+    #[test]
+    fn allow_escape_is_span_and_rule_scoped() {
+        let repo = FixtureRepo::new("allow");
+        repo.write("README.md", "# fixture\n");
+        repo.write("Cargo.toml", "[package]\nname = \"fixture\"\n");
+        repo.write(
+            "rust/src/a.rs",
+            "// lint:allow(no-raw-thread-spawn) fixture needs a raw thread\n\
+             let h = std::thread::spawn(work);\n\
+             let j = std::thread::spawn(work);\n\
+             // lint:allow(no-partial-cmp-unwrap) wrong rule for the next line\n\
+             let k = std::thread::spawn(work);\n\
+             // lint:allow(not-a-rule)\n",
+        );
+        let diags = repo.lint();
+        let fired: Vec<(&str, u32)> = diags.iter().map(|d| (d.rule, d.line)).collect();
+        assert_eq!(
+            fired,
+            vec![
+                (rules::THREAD_SPAWN, 3),
+                (rules::THREAD_SPAWN, 5),
+                (rules::UNKNOWN_RULE, 6),
+            ],
+            "{diags:#?}"
+        );
+    }
+
+    #[test]
+    fn diagnostics_render_clickable_file_line_col() {
+        let d = Diagnostic {
+            rule: rules::THREAD_SPAWN,
+            file: "rust/src/main.rs".to_string(),
+            line: 285,
+            col: 13,
+            message: "raw spawn".to_string(),
+        };
+        assert_eq!(d.to_string(), "rust/src/main.rs:285:13: [no-raw-thread-spawn] raw spawn");
+    }
+
+    /// The linter holds on the real repo: `cargo test` fails if an
+    /// undocumented `unsafe`, a raw spawn, an unregistered test file or
+    /// a stale env row lands. Same check as `make lint`, kept in the
+    /// tier-1 suite so it cannot be skipped.
+    #[test]
+    fn real_repo_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let diags = lint_repo(root).unwrap();
+        assert!(
+            diags.is_empty(),
+            "repo has lint findings (run `make lint` for the same list):\n{}",
+            diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -1,0 +1,649 @@
+//! The repo-specific lint rules, driven by the token stream of
+//! [`super::lexer`]. Each rule is a pure function from a parsed
+//! [`SourceFile`] (or the registry inputs: `Cargo.toml`, `README.md`,
+//! the `rust/tests/` listing) to diagnostics; [`super::lint_repo`] wires
+//! them over the repo and applies `lint:allow` escapes afterwards.
+//!
+//! See `docs/ARCHITECTURE.md` §7 for the rule catalogue and the
+//! procedure for adding a rule.
+
+use super::Diagnostic;
+use crate::lint::lexer::{lex, Tok, TokKind};
+
+/// Every `unsafe` block/fn/impl must be immediately preceded by a
+/// `// SAFETY:` comment (or a `# Safety` doc section).
+pub const UNSAFE_SAFETY: &str = "unsafe-needs-safety-comment";
+/// `partial_cmp(..).unwrap()/.expect(..)` is banned outside `util::cmp`
+/// (NaN ordering must go through `total_cmp`-based helpers).
+pub const PARTIAL_CMP: &str = "no-partial-cmp-unwrap";
+/// `std::thread::spawn` is allowed only inside `util::pool`.
+pub const THREAD_SPAWN: &str = "no-raw-thread-spawn";
+/// Every `HEAPR_*` env read must have a row in README's env table, and
+/// every row must correspond to a read.
+pub const ENV_REGISTRY: &str = "env-var-registry";
+/// Every file under `rust/tests/` must be a `Cargo.toml` test target.
+pub const TEST_REG: &str = "test-registration";
+/// Meta-diagnostic: a `lint:allow` naming a rule that does not exist.
+pub const UNKNOWN_RULE: &str = "unknown-rule";
+
+/// The enforced rule set (the valid names for `lint:allow`).
+pub const RULES: [&str; 5] = [UNSAFE_SAFETY, PARTIAL_CMP, THREAD_SPAWN, ENV_REGISTRY, TEST_REG];
+
+/// One lexed source file plus a line → covering-tokens index (multi-line
+/// comments and strings cover every line they span).
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators (used for rule exemptions
+    /// and diagnostics).
+    pub path: String,
+    pub toks: Vec<Tok>,
+    cover: Vec<Vec<usize>>,
+}
+
+/// Classification of one source line, for the SAFETY-adjacency walk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LineKind {
+    /// No tokens at all (or only whitespace).
+    Blank,
+    /// Only comment tokens.
+    Comment,
+    /// First code token is `#` — an attribute between the comment and
+    /// the item it documents.
+    Attr,
+    Code,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let toks = lex(src);
+        let nlines = toks.iter().map(|t| t.end_line).max().unwrap_or(0) as usize;
+        let mut cover: Vec<Vec<usize>> = vec![Vec::new(); nlines];
+        for (i, t) in toks.iter().enumerate() {
+            for ln in t.line..=t.end_line {
+                cover[ln as usize - 1].push(i);
+            }
+        }
+        SourceFile { path: path.to_string(), toks, cover }
+    }
+
+    /// Tokens whose span covers line `ln` (1-based).
+    fn line_toks(&self, ln: u32) -> impl Iterator<Item = &Tok> {
+        let idx: &[usize] = self.cover.get(ln as usize - 1).map_or(&[], |v| v.as_slice());
+        idx.iter().map(move |&i| &self.toks[i])
+    }
+
+    fn line_kind(&self, ln: u32) -> LineKind {
+        let mut any = false;
+        let mut all_comments = true;
+        let mut first_code: Option<&Tok> = None;
+        for t in self.line_toks(ln) {
+            any = true;
+            if t.kind.is_comment() {
+                continue;
+            }
+            all_comments = false;
+            if t.line < ln {
+                return LineKind::Code; // continuation of a multi-line literal
+            }
+            match first_code {
+                Some(f) if f.col <= t.col => {}
+                _ => first_code = Some(t),
+            }
+        }
+        if !any {
+            return LineKind::Blank;
+        }
+        if all_comments {
+            return LineKind::Comment;
+        }
+        match first_code {
+            Some(t) if t.kind == TokKind::Punct && t.text == "#" => LineKind::Attr,
+            _ => LineKind::Code,
+        }
+    }
+
+    /// The non-comment token stream, for sequence matching.
+    fn code(&self) -> Vec<&Tok> {
+        self.toks.iter().filter(|t| !t.kind.is_comment()).collect()
+    }
+}
+
+fn diag(rule: &'static str, file: &str, t: &Tok, message: String) -> Diagnostic {
+    Diagnostic { rule, file: file.to_string(), line: t.line, col: t.col, message }
+}
+
+// ------------------------------------------------ unsafe-needs-safety --
+
+/// True when a comment with the given marker sits next to the token:
+/// on the same line, or on the contiguous comment block directly above
+/// it (attribute lines like `#[target_feature(..)]` may sit in between;
+/// a blank or code line breaks adjacency).
+fn has_adjacent_marker(f: &SourceFile, t: &Tok, markers: &[&str]) -> bool {
+    let hit = |text: &str| markers.iter().any(|m| text.contains(m));
+    if f.line_toks(t.line).any(|c| c.kind.is_comment() && hit(&c.text)) {
+        return true;
+    }
+    let mut ln = t.line;
+    while ln > 1 {
+        ln -= 1;
+        match f.line_kind(ln) {
+            LineKind::Comment => {
+                if f.line_toks(ln).any(|c| c.kind.is_comment() && hit(&c.text)) {
+                    return true;
+                }
+            }
+            LineKind::Attr => {}
+            LineKind::Blank | LineKind::Code => return false,
+        }
+    }
+    false
+}
+
+/// Rule `unsafe-needs-safety-comment`: every `unsafe` token must carry
+/// an adjacent `// SAFETY:` comment or `# Safety` doc section.
+pub fn unsafe_needs_safety(f: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for t in &f.toks {
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if has_adjacent_marker(f, t, &["SAFETY:", "# Safety"]) {
+            continue;
+        }
+        out.push(diag(
+            UNSAFE_SAFETY,
+            &f.path,
+            t,
+            "`unsafe` without an immediately preceding `// SAFETY:` comment \
+             (or `# Safety` doc section)"
+                .to_string(),
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------ no-partial-cmp-unwrap --
+
+/// Rule `no-partial-cmp-unwrap`: ban `partial_cmp(..).unwrap()` and
+/// `partial_cmp(..).expect(..)` outside `util::cmp` — a NaN anywhere in
+/// the compared data panics the process; ordering goes through the
+/// `total_cmp`-based helpers instead (PR 3's NaN sweep, kept enforced).
+pub fn no_partial_cmp_unwrap(f: &SourceFile) -> Vec<Diagnostic> {
+    if f.path.ends_with("util/cmp.rs") {
+        return Vec::new();
+    }
+    let code = f.code();
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        if !(code[i].kind == TokKind::Ident && code[i].text == "partial_cmp") {
+            continue;
+        }
+        let Some(open) = code.get(i + 1) else { continue };
+        if !(open.kind == TokKind::Punct && open.text == "(") {
+            continue;
+        }
+        // find the matching close paren
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        let close = loop {
+            let Some(t) = code.get(j) else { break None };
+            if t.kind == TokKind::Punct && t.text == "(" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == ")" {
+                depth -= 1;
+                if depth == 0 {
+                    break Some(j);
+                }
+            }
+            j += 1;
+        };
+        let Some(close) = close else { continue };
+        let dot = code.get(close + 1);
+        let method = code.get(close + 2);
+        let unwraps = matches!(
+            (dot, method),
+            (Some(d), Some(m))
+                if d.kind == TokKind::Punct && d.text == "."
+                    && m.kind == TokKind::Ident
+                    && (m.text == "unwrap" || m.text == "expect")
+        );
+        if unwraps {
+            out.push(diag(
+                PARTIAL_CMP,
+                &f.path,
+                code[i],
+                "`partial_cmp(..).unwrap()/.expect(..)` panics on NaN; use the \
+                 `util::cmp` total-order helpers"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ------------------------------------------------- no-raw-thread-spawn --
+
+/// Rule `no-raw-thread-spawn`: `std::thread::spawn` only inside
+/// `util::pool` — everything else goes through `util::pool::spawn_named`
+/// so every OS thread in the process carries a `heapr-` name.
+pub fn no_raw_thread_spawn(f: &SourceFile) -> Vec<Diagnostic> {
+    if f.path.ends_with("util/pool.rs") {
+        return Vec::new();
+    }
+    let code = f.code();
+    let mut out = Vec::new();
+    for w in code.windows(4) {
+        let [a, b, c, d] = w else { continue };
+        if a.kind == TokKind::Ident
+            && a.text == "thread"
+            && b.text == ":"
+            && c.text == ":"
+            && d.kind == TokKind::Ident
+            && d.text == "spawn"
+        {
+            out.push(diag(
+                THREAD_SPAWN,
+                &f.path,
+                a,
+                "raw `std::thread::spawn` outside `util::pool`; use \
+                 `util::pool::spawn_named` (named threads, one spawn path)"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// --------------------------------------------------- env-var-registry --
+
+fn is_env_name(s: &str) -> bool {
+    s.strip_prefix("HEAPR_").is_some_and(|rest| {
+        !rest.is_empty()
+            && rest.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+    })
+}
+
+/// `HEAPR_*` env reads in this file: `var("HEAPR_X")` / `var_os(..)`
+/// call sites, returned as `(name, line, col)`.
+pub fn env_reads(f: &SourceFile) -> Vec<(String, u32, u32)> {
+    let code = f.code();
+    let mut out = Vec::new();
+    for w in code.windows(3) {
+        let [call, open, arg] = w else { continue };
+        if call.kind == TokKind::Ident
+            && (call.text == "var" || call.text == "var_os")
+            && open.text == "("
+            && arg.kind == TokKind::Str
+            && is_env_name(arg.str_content())
+        {
+            out.push((arg.str_content().to_string(), arg.line, arg.col));
+        }
+    }
+    out
+}
+
+/// `HEAPR_*` rows of README's env table: table lines (`| \`HEAPR_X\` |…`)
+/// whose first backtick span is exactly an env name.
+pub fn readme_env_rows(readme: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (i, line) in readme.lines().enumerate() {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        let Some(start) = line.find('`') else { continue };
+        let rest = &line[start + 1..];
+        let Some(end) = rest.find('`') else { continue };
+        let name = &rest[..end];
+        if is_env_name(name) {
+            out.push((name.to_string(), i as u32 + 1));
+        }
+    }
+    out
+}
+
+/// Rule `env-var-registry`: every read has a README row, every README
+/// row has a read. `reads` is `(file, name, line, col)` over the whole
+/// scan; `readme_path` is the display path for README-side diagnostics.
+pub fn env_registry(
+    reads: &[(String, String, u32, u32)],
+    readme: &str,
+    readme_path: &str,
+) -> Vec<Diagnostic> {
+    let rows = readme_env_rows(readme);
+    let mut out = Vec::new();
+    for (file, name, line, col) in reads {
+        if !rows.iter().any(|(n, _)| n == name) {
+            out.push(Diagnostic {
+                rule: ENV_REGISTRY,
+                file: file.clone(),
+                line: *line,
+                col: *col,
+                message: format!(
+                    "env var `{name}` is read here but has no row in \
+                     {readme_path} §Runtime switches"
+                ),
+            });
+        }
+    }
+    for (name, line) in &rows {
+        if !reads.iter().any(|(_, n, _, _)| n == name) {
+            out.push(Diagnostic {
+                rule: ENV_REGISTRY,
+                file: readme_path.to_string(),
+                line: *line,
+                col: 1,
+                message: format!(
+                    "documented env var `{name}` is never read in rust/src or rust/tests"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// -------------------------------------------------- test-registration --
+
+/// Rule `test-registration`: every top-level `rust/tests/*.rs` file must
+/// be declared as a test target in `Cargo.toml` (this workspace disables
+/// target auto-discovery by living outside `src/`), and every declared
+/// `rust/tests/` path must exist. `test_files` are bare file names.
+pub fn test_registration(test_files: &[String], cargo: &str) -> Vec<Diagnostic> {
+    let mut registered: Vec<(String, u32)> = Vec::new();
+    for (i, line) in cargo.lines().enumerate() {
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix("path = \"") else { continue };
+        let Some(path) = rest.strip_suffix('"') else { continue };
+        if let Some(name) = path.strip_prefix("rust/tests/") {
+            registered.push((name.to_string(), i as u32 + 1));
+        }
+    }
+    let mut out = Vec::new();
+    for f in test_files {
+        if !registered.iter().any(|(n, _)| n == f) {
+            out.push(Diagnostic {
+                rule: TEST_REG,
+                file: format!("rust/tests/{f}"),
+                line: 1,
+                col: 1,
+                message: format!(
+                    "rust/tests/{f} is not declared as a test target in Cargo.toml \
+                     (it would silently never run)"
+                ),
+            });
+        }
+    }
+    for (name, line) in &registered {
+        if !test_files.iter().any(|f| f == name) {
+            out.push(Diagnostic {
+                rule: TEST_REG,
+                file: "Cargo.toml".to_string(),
+                line: *line,
+                col: 1,
+                message: format!("Cargo.toml declares rust/tests/{name}, which does not exist"),
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------- lint:allow --
+
+/// A span-anchored rule suppression parsed from an allow directive
+/// (a comment whose body starts with `lint:allow` plus a parenthesized
+/// rule list): it silences diagnostics of `rule` anchored on the
+/// comment's own lines or the line directly below it.
+pub struct Allow {
+    pub rule: &'static str,
+    pub from: u32,
+    pub to: u32,
+}
+
+/// Parse every allow directive in the file — a comment whose body
+/// *starts* with `lint:allow(` (after the `//`/`/*` leader), so prose
+/// that merely mentions the syntax is not a directive. Unknown rule
+/// names come back as diagnostics (a typoed allow must not silently
+/// suppress nothing).
+pub fn allows(f: &SourceFile) -> (Vec<Allow>, Vec<Diagnostic>) {
+    let mut out = Vec::new();
+    let mut unknown = Vec::new();
+    for t in &f.toks {
+        if !t.kind.is_comment() {
+            continue;
+        }
+        let body = t.text.trim_start_matches(['/', '*', '!']).trim_start();
+        let Some(args) = body.strip_prefix("lint:allow(") else { continue };
+        let Some(end) = args.find(')') else { continue };
+        for name in args[..end].split(',') {
+            let name = name.trim();
+            match RULES.iter().find(|r| **r == name) {
+                Some(rule) => out.push(Allow { rule, from: t.line, to: t.end_line + 1 }),
+                None => unknown.push(diag(
+                    UNKNOWN_RULE,
+                    &f.path,
+                    t,
+                    format!("lint:allow names unknown rule `{name}` (known: {RULES:?})"),
+                )),
+            }
+        }
+    }
+    (out, unknown)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, src: &str) -> SourceFile {
+        SourceFile::parse(path, src)
+    }
+
+    fn rules_fired(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    // ---------------------------------------- unsafe-needs-safety-comment
+
+    #[test]
+    fn unsafe_without_comment_fires() {
+        let f = sf("rust/src/x.rs", "fn f() {\n    unsafe { g(); }\n}\n");
+        let d = unsafe_needs_safety(&f);
+        assert_eq!(rules_fired(&d), vec![UNSAFE_SAFETY]);
+        assert_eq!((d[0].line, d[0].file.as_str()), (2, "rust/src/x.rs"));
+    }
+
+    #[test]
+    fn safety_comment_directly_above_clears() {
+        let src = "fn f() {\n    // SAFETY: g has no preconditions here\n    unsafe { g(); }\n}\n";
+        assert!(unsafe_needs_safety(&sf("rust/src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn safety_doc_section_clears_unsafe_fn() {
+        let src = "/// Does a thing.\n///\n/// # Safety\n/// Caller upholds X.\n\
+                   #[inline]\npub unsafe fn f() {}\n";
+        assert!(unsafe_needs_safety(&sf("rust/src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn attribute_between_comment_and_unsafe_is_transparent() {
+        let src = "// SAFETY: checked at runtime\n#[cfg(target_arch = \"x86_64\")]\n\
+                   unsafe fn f() {}\n";
+        assert!(unsafe_needs_safety(&sf("rust/src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn blank_line_breaks_safety_adjacency() {
+        let src = "// SAFETY: too far away\n\nunsafe fn f() {}\n";
+        let d = unsafe_needs_safety(&sf("rust/src/x.rs", src));
+        assert_eq!(rules_fired(&d), vec![UNSAFE_SAFETY]);
+    }
+
+    #[test]
+    fn trailing_same_line_safety_clears() {
+        let src = "let x = unsafe { y() }; // SAFETY: y is infallible here\n";
+        assert!(unsafe_needs_safety(&sf("rust/src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_string_or_comment_is_ignored() {
+        let src = "let s = r#\"unsafe { nope }\"#;\n// an unsafe-sounding comment\n\
+                   let t = \"unsafe\";\n";
+        assert!(unsafe_needs_safety(&sf("rust/src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn two_adjacent_unsafe_impls_each_need_a_comment() {
+        let src = "// SAFETY: A is fine\nunsafe impl Send for A {}\nunsafe impl Sync for A {}\n";
+        let d = unsafe_needs_safety(&sf("rust/src/x.rs", src));
+        assert_eq!(d.len(), 1, "the Sync impl lacks its own comment: {d:?}");
+        assert_eq!(d[0].line, 3);
+    }
+
+    // ------------------------------------------------ no-partial-cmp-unwrap
+
+    #[test]
+    fn partial_cmp_unwrap_fires() {
+        let f = sf("rust/src/x.rs", "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n");
+        assert_eq!(rules_fired(&no_partial_cmp_unwrap(&f)), vec![PARTIAL_CMP]);
+    }
+
+    #[test]
+    fn partial_cmp_expect_fires_across_lines() {
+        let src = "let o = a\n    .partial_cmp(&b)\n    .expect(\"ordered\");\n";
+        let d = no_partial_cmp_unwrap(&sf("rust/src/x.rs", src));
+        assert_eq!(rules_fired(&d), vec![PARTIAL_CMP]);
+        assert_eq!(d[0].line, 2, "anchored at the partial_cmp call");
+    }
+
+    #[test]
+    fn partial_cmp_with_fallback_or_total_cmp_clears() {
+        let src = "let o = a.partial_cmp(&b).unwrap_or(Ordering::Equal);\n\
+                   v.sort_by(|a, b| a.total_cmp(b));\n";
+        assert!(no_partial_cmp_unwrap(&sf("rust/src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn util_cmp_is_exempt() {
+        let src = "assert_eq!(f(a, b), a.partial_cmp(&b).unwrap());\n";
+        assert!(no_partial_cmp_unwrap(&sf("rust/src/util/cmp.rs", src)).is_empty());
+        assert!(!no_partial_cmp_unwrap(&sf("rust/src/util/stats.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_mention_in_comment_is_ignored() {
+        let src = "// regression: partial_cmp().unwrap() used to panic here\nlet x = 1;\n";
+        assert!(no_partial_cmp_unwrap(&sf("rust/src/x.rs", src)).is_empty());
+    }
+
+    // -------------------------------------------------- no-raw-thread-spawn
+
+    #[test]
+    fn raw_thread_spawn_fires() {
+        for src in [
+            "let h = std::thread::spawn(move || work());\n",
+            "use std::thread;\nlet h = thread::spawn(f);\n",
+        ] {
+            let d = no_raw_thread_spawn(&sf("rust/src/x.rs", src));
+            assert_eq!(rules_fired(&d), vec![THREAD_SPAWN], "{src}");
+        }
+    }
+
+    #[test]
+    fn pool_spawn_named_and_builder_clear() {
+        let src = "let h = pool::spawn_named(\"producer\", move || work());\n\
+                   let b = thread::Builder::new().name(n).spawn(f);\n";
+        assert!(no_raw_thread_spawn(&sf("rust/src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn util_pool_is_exempt_from_spawn_rule() {
+        let src = "let h = std::thread::spawn(f);\n";
+        assert!(no_raw_thread_spawn(&sf("rust/src/util/pool.rs", src)).is_empty());
+    }
+
+    // ---------------------------------------------------- env-var-registry
+
+    const README_OK: &str = "## Runtime switches\n\n| Variable | Default | Effect |\n\
+        |---|---|---|\n| `HEAPR_THREADS` | auto | pool lanes (`HEAPR_THREADS=1` inline) |\n";
+
+    #[test]
+    fn env_read_detection_finds_var_calls_only() {
+        let src = "let a = std::env::var(\"HEAPR_THREADS\");\n\
+                   crate::warn!(\"HEAPR_THREADS={v} bad\");\nlet s = \"HEAPR_THREADS\";\n";
+        let reads = env_reads(&sf("rust/src/x.rs", src));
+        assert_eq!(reads, vec![("HEAPR_THREADS".to_string(), 1, 23)]);
+    }
+
+    #[test]
+    fn undocumented_env_read_fires() {
+        let reads = vec![("rust/src/x.rs".to_string(), "HEAPR_NEW_KNOB".to_string(), 3, 5)];
+        let d = env_registry(&reads, README_OK, "README.md");
+        assert_eq!(rules_fired(&d), vec![ENV_REGISTRY]);
+        assert_eq!(d[0].file, "rust/src/x.rs");
+    }
+
+    #[test]
+    fn stale_readme_row_fires_on_readme_side() {
+        let d = env_registry(&[], README_OK, "README.md");
+        assert_eq!(rules_fired(&d), vec![ENV_REGISTRY]);
+        assert_eq!((d[0].file.as_str(), d[0].line), ("README.md", 5));
+    }
+
+    #[test]
+    fn matching_read_and_row_clears() {
+        let reads = vec![("rust/src/x.rs".to_string(), "HEAPR_THREADS".to_string(), 1, 1)];
+        assert!(env_registry(&reads, README_OK, "README.md").is_empty());
+    }
+
+    #[test]
+    fn readme_rows_ignore_non_table_mentions_and_assignments() {
+        let readme = "`HEAPR_KERNEL=naive` is the escape hatch (prose, not a row)\n\
+            | `--continuous` | off | not an env var |\n\
+            | `HEAPR_KERNEL` | auto | the real row |\n";
+        assert_eq!(readme_env_rows(readme), vec![("HEAPR_KERNEL".to_string(), 3)]);
+    }
+
+    // --------------------------------------------------- test-registration
+
+    const CARGO_FIXTURE: &str = "[package]\nname = \"heapr\"\n\n[[test]]\n\
+        name = \"integration\"\npath = \"rust/tests/integration.rs\"\n";
+
+    #[test]
+    fn unregistered_test_file_fires() {
+        let files = vec!["integration.rs".to_string(), "orphan.rs".to_string()];
+        let d = test_registration(&files, CARGO_FIXTURE);
+        assert_eq!(rules_fired(&d), vec![TEST_REG]);
+        assert_eq!(d[0].file, "rust/tests/orphan.rs");
+    }
+
+    #[test]
+    fn registered_but_missing_file_fires_on_cargo_side() {
+        let d = test_registration(&[], CARGO_FIXTURE);
+        assert_eq!(rules_fired(&d), vec![TEST_REG]);
+        assert_eq!((d[0].file.as_str(), d[0].line), ("Cargo.toml", 6));
+    }
+
+    #[test]
+    fn registered_files_clear() {
+        let files = vec!["integration.rs".to_string()];
+        assert!(test_registration(&files, CARGO_FIXTURE).is_empty());
+    }
+
+    // ---------------------------------------------------------- lint:allow
+
+    #[test]
+    fn allow_parses_and_flags_unknown_rules() {
+        let src = "// lint:allow(no-raw-thread-spawn, not-a-rule)\nlet x = 1;\n";
+        let (a, unknown) = allows(&sf("rust/src/x.rs", src));
+        assert_eq!(a.len(), 1);
+        assert_eq!((a[0].rule, a[0].from, a[0].to), (THREAD_SPAWN, 1, 2));
+        assert_eq!(rules_fired(&unknown), vec![UNKNOWN_RULE]);
+    }
+
+    #[test]
+    fn allow_inside_a_string_is_not_an_allow() {
+        let src = "let s = \"lint:allow(no-raw-thread-spawn)\";\n";
+        let (a, unknown) = allows(&sf("rust/src/x.rs", src));
+        assert!(a.is_empty());
+        assert!(unknown.is_empty());
+    }
+}

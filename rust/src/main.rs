@@ -35,6 +35,7 @@ use heapr::tensor::gemm;
 use heapr::util::args::Args;
 use heapr::util::json::Json;
 use heapr::util::logging::{set_level, Level};
+use heapr::util::pool;
 
 fn main() {
     if let Err(e) = run() {
@@ -282,7 +283,7 @@ fn cmd_serve(
     let (tx, rx) = std::sync::mpsc::channel();
     let grammar = Grammar::standard();
     let tok = ByteTokenizer;
-    let producer = std::thread::spawn(move || {
+    let producer = pool::spawn_named("producer", move || {
         let mut rng = heapr::util::rng::Pcg64::new(1);
         for i in 0..n_req {
             let doc = grammar.document(&mut rng, &[1.0; 6]);
@@ -305,7 +306,7 @@ fn cmd_serve(
         // streaming consumer: print tokens the moment they land
         let (ev_tx, ev_rx) = std::sync::mpsc::channel::<StreamEvent>();
         let printer = mode.stream.then(|| {
-            std::thread::spawn(move || {
+            pool::spawn_named("stream-printer", move || {
                 for ev in ev_rx {
                     info!(
                         "  stream req {} #{}: token {}{}",

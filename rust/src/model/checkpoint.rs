@@ -18,6 +18,11 @@ use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"HEAPRCK1";
 
+/// f32s per serialization chunk in [`Checkpoint::save`] (64 KiB of
+/// payload): large enough to amortize the `write_all` calls, small
+/// enough that the staging buffer stays cache-friendly.
+const CHUNK_FLOATS: usize = 16 * 1024;
+
 pub struct Checkpoint {
     pub store: ParamStore,
     pub widths: Option<WidthProfile>,
@@ -60,11 +65,20 @@ impl Checkpoint {
         f.write_all(MAGIC)?;
         f.write_all(&(header.len() as u32).to_le_bytes())?;
         f.write_all(header.as_bytes())?;
+        // Safe chunked serialization (replaced a raw byte transmute of the
+        // f32 buffer): explicit to_le_bytes per value makes the payload
+        // little-endian by construction on every host, with no alignment
+        // or provenance hazards. One reused chunk buffer keeps it at a
+        // handful of large write_all calls instead of 4-byte writes.
+        let mut bytes = Vec::with_capacity(CHUNK_FLOATS * 4);
         for (_, t) in self.store.iter() {
-            let bytes = unsafe {
-                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
-            };
-            f.write_all(bytes)?;
+            for chunk in t.data().chunks(CHUNK_FLOATS) {
+                bytes.clear();
+                for v in chunk {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                f.write_all(&bytes)?;
+            }
         }
         Ok(())
     }

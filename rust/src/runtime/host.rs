@@ -264,7 +264,13 @@ fn attention_forward(
             }
             let a = softmax(&scores);
             let o = matmul_nn(&a, &sub2(&v, bh, t, hd));
+            // SAFETY: lane bh writes only its own attn block — the ranges
+            // [bh*t*t, (bh+1)*t*t) are disjoint across lanes and in
+            // bounds (attn has b*h*t*t elements), and attn outlives the
+            // par_for.
             unsafe { ap.slice(bh * t * t, t * t) }.copy_from_slice(a.data());
+            // SAFETY: same argument for the outs buffer (b*h*t*hd
+            // elements, lane-disjoint blocks of t*hd).
             unsafe { op.slice(bh * t * hd, t * hd) }.copy_from_slice(o.data());
         });
     }
@@ -315,8 +321,13 @@ fn attention_backward(
             }
             let dq_m = matmul_nn(&ds, &sub2(&cache.k, bh, t, hd));
             let dk_m = matmul_at(&ds, &sub2(&cache.q, bh, t, hd));
+            // SAFETY: lane bh writes only its own t*hd block of dq —
+            // disjoint across lanes, in bounds (b*h*t*hd elements), and
+            // dq outlives the par_for.
             unsafe { qp.slice(bh * t * hd, t * hd) }.copy_from_slice(dq_m.data());
+            // SAFETY: same argument for dk (separate buffer, same layout).
             unsafe { kp.slice(bh * t * hd, t * hd) }.copy_from_slice(dk_m.data());
+            // SAFETY: same argument for dv (separate buffer, same layout).
             unsafe { vp.slice(bh * t * hd, t * hd) }.copy_from_slice(dv_m.data());
         });
     }
@@ -1182,8 +1193,12 @@ impl HostBackend {
                 let (bi, hi) = (bh / h, bh % h);
                 let pmax = pos.data()[bi] as usize;
                 // this lane owns the whole (bi, hi) cache block: append
-                // the new position, then attend over the 0..=pmax prefix
+                // the new position, then attend over the 0..=pmax prefix.
+                // SAFETY: the s*hd k-cache blocks at bh*s*hd are disjoint
+                // across lanes, in bounds (kc is b*h*s*hd), and kc
+                // outlives the par_for.
                 let krows = unsafe { kp.slice(bh * s * hd, s * hd) };
+                // SAFETY: same argument for the v-cache (same layout).
                 let vrows = unsafe { vp.slice(bh * s * hd, s * hd) };
                 let src = bi * d + hi * hd;
                 krows[pmax * hd..(pmax + 1) * hd]
@@ -1203,6 +1218,10 @@ impl HostBackend {
                     *e = (sc - mx).exp();
                     z += *e;
                 }
+                // SAFETY: lane bh writes only its own hd-wide block of
+                // out at src = bi*d + hi*hd — disjoint per (bi, hi), in
+                // bounds (out is b*d = b*h*hd), and out outlives the
+                // par_for.
                 let orow = unsafe { op.slice(src, hd) };
                 for (si, &e) in ex.iter().enumerate() {
                     let a = e / z;

@@ -761,6 +761,9 @@ pub(crate) fn par_rows<F: Fn(usize, &mut [f32]) + Sync>(
         }
     } else {
         let ptr = RowsPtr::new(out);
+        // SAFETY: lane i writes only its own row — the ranges
+        // [i*len, (i+1)*len) are disjoint across lanes and in bounds
+        // (out.len() == rows * len), and `out` outlives the par_for.
         pool::par_for(rows, |i| f(i, unsafe { ptr.slice(i * len, len) }));
     }
 }

@@ -82,6 +82,7 @@ thread_local! {
 pub struct ThreadPool {
     queue: Arc<Queue>,
     threads: usize,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
@@ -93,9 +94,10 @@ impl ThreadPool {
             state: Mutex::new((VecDeque::new(), false)),
             cv: Condvar::new(),
         });
+        let mut workers = Vec::new();
         for w in 0..threads.saturating_sub(1) {
             let q = Arc::clone(&queue);
-            thread::Builder::new()
+            let h = thread::Builder::new()
                 .name(format!("heapr-pool-{w}"))
                 .spawn(move || {
                     IN_WORKER.with(|f| f.set(true));
@@ -104,8 +106,9 @@ impl ThreadPool {
                     }
                 })
                 .expect("spawn pool worker");
+            workers.push(h);
         }
-        ThreadPool { queue, threads }
+        ThreadPool { queue, threads, workers }
     }
 
     /// Total parallel lanes (workers + caller).
@@ -148,6 +151,10 @@ impl ThreadPool {
         for _ in 0..helpers {
             let p = ptr;
             self.queue.push(Box::new(move || {
+                // SAFETY: `p` came from `&ctx` above and the caller only
+                // returns after `remaining == 0`, which this job signals
+                // as its very last `ctx` access — so the reference is
+                // valid for this job's whole lifetime (argument above).
                 let ctx = unsafe { &*(p.0 as *const TaskCtx) };
                 ctx.run_lane();
                 let mut rem = ctx.remaining.lock().unwrap();
@@ -219,14 +226,29 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        // Workers drain queued jobs, then exit; nothing to join (they hold
-        // their own Arc<Queue> clones).
+        // Workers drain queued jobs, then exit on the shutdown flag.
         self.queue.shutdown();
+        // Join them so a dropped pool leaves no stray threads (what the
+        // Miri tier checks) — except from a thread that is itself one of
+        // these workers: a nested `pool()` clone can make a worker the
+        // last Arc holder during a `set_threads` swap, and joining
+        // yourself deadlocks. An unjoined worker exits on its own right
+        // after the drain.
+        let me = thread::current().id();
+        for h in self.workers.drain(..) {
+            if h.thread().id() != me {
+                let _ = h.join();
+            }
+        }
     }
 }
 
 #[derive(Clone, Copy)]
 struct SendPtr(*const ());
+// SAFETY: only ever wraps a `TaskCtx` that outlives the helper jobs it
+// is sent to (see the lifetime argument in `par_for`); `TaskCtx` itself
+// is `Sync` (its `f` is `Sync`, the rest is atomics/locks), so sharing
+// the pointee across worker threads is sound.
 unsafe impl Send for SendPtr {}
 
 struct TaskCtx<'a> {
@@ -272,25 +294,98 @@ impl TaskCtx<'_> {
 /// Write handle for `par_for` lanes that fill disjoint row ranges of one
 /// f32 buffer (the shared unsafe substrate for row-blocked tensor ops and
 /// the serving gather/scatter paths).
+///
+/// Create a fresh `RowsPtr` per parallel fan-out: in debug builds each
+/// handle starts a new disjointness *generation* for its buffer — every
+/// [`RowsPtr::slice`] is recorded in a claim ledger and checked against
+/// the generation's other claims, so an overlapping lane panics at the
+/// claim (before any aliasing slice exists, which also makes the check
+/// Miri-clean) instead of silently racing. Release builds compile the
+/// ledger out; the comment-and-review contract is all that remains, so
+/// keep the per-call `// SAFETY:` arguments honest.
 #[derive(Clone, Copy)]
-pub struct RowsPtr(*mut f32);
+pub struct RowsPtr {
+    ptr: *mut f32,
+    len: usize,
+}
 // SAFETY: lanes write only the ranges they own (callers guarantee
-// disjointness) and the buffer outlives the par_for call.
+// disjointness; debug builds enforce it dynamically) and the buffer
+// outlives the par_for call.
 unsafe impl Send for RowsPtr {}
+// SAFETY: same argument as Send — a shared `RowsPtr` only hands out
+// caller-disjoint ranges, so concurrent `slice` calls never alias.
 unsafe impl Sync for RowsPtr {}
 
 impl RowsPtr {
+    /// Wrap `buf` for one parallel fan-out (debug builds reset the
+    /// buffer's claim ledger here — see the type docs).
     pub fn new(buf: &mut [f32]) -> RowsPtr {
-        RowsPtr(buf.as_mut_ptr())
+        #[cfg(debug_assertions)]
+        claims::reset(buf.as_mut_ptr() as usize);
+        RowsPtr { ptr: buf.as_mut_ptr(), len: buf.len() }
     }
 
     /// The `len`-element range starting at `offset`.
     ///
     /// # Safety
-    /// `offset + len` must be in bounds and ranges handed to concurrent
-    /// lanes must not overlap.
+    /// `offset + len` must be in bounds of the wrapped buffer, and ranges
+    /// handed to concurrent lanes must not overlap. Debug builds turn a
+    /// violation of either clause into an immediate panic (bounds here,
+    /// overlap against this handle's other claims in the ledger).
     pub unsafe fn slice(&self, offset: usize, len: usize) -> &mut [f32] {
-        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+        debug_assert!(
+            offset <= self.len && len <= self.len - offset,
+            "RowsPtr::slice out of bounds: [{offset}, {offset}+{len}) vs buffer len {}",
+            self.len
+        );
+        #[cfg(debug_assertions)]
+        claims::claim(self.ptr as usize, offset, len);
+        std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
+    }
+}
+
+/// Debug-build claim ledger behind [`RowsPtr`]: a map from buffer base
+/// address to the ranges sliced out of it since its last `RowsPtr::new`.
+/// Exists only under `cfg(debug_assertions)` — release builds carry no
+/// ledger, no lock, no overhead.
+#[cfg(debug_assertions)]
+mod claims {
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, PoisonError};
+
+    static CLAIMS: Mutex<BTreeMap<usize, Vec<(usize, usize)>>> = Mutex::new(BTreeMap::new());
+
+    fn ledger() -> std::sync::MutexGuard<'static, BTreeMap<usize, Vec<(usize, usize)>>> {
+        // Poison-tolerant: a panicked test (e.g. the should_panic overlap
+        // test itself) must not cascade into every later claimant.
+        CLAIMS.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Forget all claims on `base`: a fresh `RowsPtr::new` starts a new
+    /// fan-out generation over the buffer (allocator address reuse is
+    /// handled the same way — the new owner resets the entry).
+    pub(super) fn reset(base: usize) {
+        ledger().remove(&base);
+    }
+
+    /// Record `[offset, offset+len)` against `base`, panicking if it
+    /// overlaps any other claim of the current generation.
+    pub(super) fn claim(base: usize, offset: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let mut map = ledger();
+        let ranges = map.entry(base).or_default();
+        for &(o, l) in ranges.iter() {
+            assert!(
+                offset + len <= o || o + l <= offset,
+                "RowsPtr::slice overlap: [{offset}, {}) vs existing claim [{o}, {}) \
+                 on the same buffer generation",
+                offset + len,
+                o + l
+            );
+        }
+        ranges.push((offset, len));
     }
 }
 
@@ -372,6 +467,24 @@ pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
 /// Collect `f(i)` for `i in 0..n` on the global pool, in index order.
 pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
     pool().par_map(n, f)
+}
+
+/// Spawn a free-standing OS thread named `heapr-<name>`. This is the one
+/// sanctioned spawn path outside this module — the `no-raw-thread-spawn`
+/// lint rule rejects raw `std::thread::spawn` everywhere else — so every
+/// thread in the process is attributable in debuggers, profilers and
+/// panic messages. Long-lived service threads (the serve-loop feeder,
+/// the CLI stream printer) go through here; data-parallel work belongs
+/// on [`par_for`]/[`par_map`] instead.
+pub fn spawn_named<T, F>(name: &str, f: F) -> thread::JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    thread::Builder::new()
+        .name(format!("heapr-{name}"))
+        .spawn(f)
+        .expect("spawn named thread")
 }
 
 #[cfg(test)]
@@ -515,6 +628,66 @@ mod tests {
         // serial pool: still sized, never zero
         assert_eq!(row_block(10, 64, 1), 3);
         assert!(row_block(1, 64, 0) >= 1);
+    }
+
+    #[test]
+    fn spawn_named_names_the_thread() {
+        let h = spawn_named("test-worker", || thread::current().name().map(String::from));
+        assert_eq!(h.join().unwrap().as_deref(), Some("heapr-test-worker"));
+    }
+
+    #[test]
+    fn rows_ptr_disjoint_lanes_fill_their_own_rows() {
+        let p = ThreadPool::new(4);
+        let mut buf = vec![0.0f32; 64 * 8];
+        let rows = RowsPtr::new(&mut buf);
+        p.par_for(64, |i| {
+            // SAFETY: lane i writes only its own row i (disjoint, in bounds).
+            let row = unsafe { rows.slice(i * 8, 8) };
+            for v in row {
+                *v = i as f32;
+            }
+        });
+        for (i, c) in buf.chunks(8).enumerate() {
+            assert!(c.iter().all(|&v| v == i as f32), "row {i} corrupted");
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn rows_ptr_bounds_check_fires_in_debug() {
+        let mut buf = vec![0.0f32; 8];
+        let rows = RowsPtr::new(&mut buf);
+        // SAFETY: violated on purpose — the debug bounds assert must
+        // abort before the raw slice is materialized.
+        let _ = unsafe { rows.slice(4, 8) };
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn rows_ptr_overlap_check_fires_in_debug() {
+        let mut buf = vec![0.0f32; 16];
+        let rows = RowsPtr::new(&mut buf);
+        // SAFETY: in bounds; first claim of this generation.
+        let _a = unsafe { rows.slice(0, 8) };
+        // SAFETY: in bounds; overlaps the first claim on purpose — must
+        // panic at the ledger check before any aliasing slice exists.
+        let _b = unsafe { rows.slice(4, 8) };
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn rows_ptr_new_resets_the_claim_ledger() {
+        let mut buf = vec![0.0f32; 8];
+        for _ in 0..3 {
+            // same base address every pass: without the reset in `new`,
+            // the second pass would trip the overlap assert
+            let rows = RowsPtr::new(&mut buf);
+            // SAFETY: one in-bounds claim per generation, no overlap.
+            let _ = unsafe { rows.slice(0, 8) };
+        }
     }
 
     #[test]

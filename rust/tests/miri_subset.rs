@@ -1,0 +1,178 @@
+//! The unsafe-substrate subset the nightly Miri CI tier interprets
+//! (`make miri` → `cargo +nightly miri test --test miri_subset`): the
+//! thread-pool fan-out, the `RowsPtr` disjoint-slice substrate behind
+//! every parallel writer, the cache-blocked GEMM on the global pool, and
+//! the serving lane primitives. Miri catches what tests cannot — UB from
+//! overlap, out-of-bounds, dangling `TaskCtx` pointers, or data races —
+//! so the tests here favor small `cfg!(miri)` shapes over throughput.
+//!
+//! The file also runs as a fast ordinary integration test with larger
+//! shapes, so the subset itself cannot rot between nightly runs.
+//!
+//! Miri notes: env vars are isolated (reads return `Err`), so the pool
+//! width is always set explicitly here; tests that touch the global pool
+//! serialize via `test_serial_lock` and restore a workerless 1-lane pool
+//! so no pool thread outlives the test process.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use heapr::runtime::{write_lane_f32, zero_lane_f32};
+use heapr::tensor::gemm::{self, Layout};
+use heapr::tensor::Tensor;
+use heapr::util::pool::{self, RowsPtr, ThreadPool};
+
+/// Deterministic pseudo-random fill (no rand crate, Miri-stable).
+fn fill(buf: &mut [f32], seed: u32) {
+    let mut s = seed | 1;
+    for v in buf.iter_mut() {
+        // xorshift32; map to [-1, 1)
+        s ^= s << 13;
+        s ^= s >> 17;
+        s ^= s << 5;
+        *v = (s as f32 / u32::MAX as f32) * 2.0 - 1.0;
+    }
+}
+
+#[test]
+fn par_for_runs_every_index_exactly_once() {
+    let n = if cfg!(miri) { 64 } else { 1000 };
+    let p = ThreadPool::new(3);
+    let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    p.par_for(n, |i| {
+        hits[i].fetch_add(1, Ordering::Relaxed);
+    });
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+}
+
+#[test]
+fn nested_par_for_caller_helps_without_deadlock() {
+    let (outer, inner) = if cfg!(miri) { (3, 4) } else { (4, 64) };
+    let p = std::sync::Arc::new(ThreadPool::new(2));
+    let q = std::sync::Arc::clone(&p);
+    let total = AtomicUsize::new(0);
+    p.par_for(outer, |_| {
+        q.par_for(inner, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    assert_eq!(total.load(Ordering::Relaxed), outer * inner);
+}
+
+#[test]
+fn par_map_collects_in_index_order() {
+    let n = if cfg!(miri) { 32 } else { 500 };
+    let p = ThreadPool::new(2);
+    let v = p.par_map(n, |i| i * 3 + 1);
+    assert_eq!(v, (0..n).map(|i| i * 3 + 1).collect::<Vec<_>>());
+}
+
+#[test]
+fn rows_ptr_disjoint_parallel_writes_land_intact() {
+    let (rows, width) = if cfg!(miri) { (16, 8) } else { (128, 32) };
+    let p = ThreadPool::new(4);
+    let mut buf = vec![0.0f32; rows * width];
+    let ptr = RowsPtr::new(&mut buf);
+    p.par_for(rows, |i| {
+        // SAFETY: lane i writes only its own row i — disjoint ranges,
+        // in bounds, and buf outlives the par_for.
+        let row = unsafe { ptr.slice(i * width, width) };
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (i * width + j) as f32;
+        }
+    });
+    for (k, &v) in buf.iter().enumerate() {
+        assert_eq!(v, k as f32);
+    }
+}
+
+/// The debug claim ledger must reject an overlapping claim *before* an
+/// aliasing `&mut` exists — which is exactly why this test is UB-free
+/// under Miri: the panic fires at the ledger check, not after two live
+/// aliasing slices.
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "overlap")]
+fn rows_ptr_overlap_claim_panics_before_aliasing() {
+    let mut buf = vec![0.0f32; 32];
+    let ptr = RowsPtr::new(&mut buf);
+    // SAFETY: in bounds; first claim of the generation.
+    let _a = unsafe { ptr.slice(0, 20) };
+    // SAFETY: in bounds; overlaps the first claim on purpose — must
+    // panic at the ledger, before the aliasing slice is materialized.
+    let _b = unsafe { ptr.slice(16, 8) };
+}
+
+#[test]
+fn spawn_named_thread_runs_to_completion_with_name() {
+    let h = pool::spawn_named("miri-probe", || {
+        std::thread::current().name().map(String::from)
+    });
+    assert_eq!(h.join().unwrap().as_deref(), Some("heapr-miri-probe"));
+}
+
+/// Cache-blocked GEMM across the real global pool: the `RowsPtr` row
+/// fan-out plus the `TaskCtx` borrow in `par_for`, end to end, and the
+/// bitwise accumulation contract against the serial reference. Shapes
+/// keep `m*n*k` above the parallel threshold so the unsafe path (not the
+/// serial fallback) is what Miri interprets.
+#[test]
+fn parallel_blocked_gemm_is_bitwise_equal_to_reference() {
+    let _guard = pool::test_serial_lock();
+    pool::set_threads(2);
+    let (m, k, n) = if cfg!(miri) { (32, 32, 32) } else { (96, 64, 48) };
+    let mut a = vec![0.0f32; m * k];
+    let mut b = vec![0.0f32; n * k];
+    fill(&mut a, 0xC0FFEE);
+    fill(&mut b, 0xBEEF);
+    let mut got = vec![0.0f32; m * n];
+    let mut want = vec![0.0f32; m * n];
+    gemm::blocked(Layout::TN, &a, &b, &mut got, m, k, n);
+    gemm::reference(Layout::TN, &a, &b, &mut want, m, k, n);
+    // bitwise, not approximate: the accumulation contract
+    let eq = got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits());
+    // back to a workerless pool before the assert can unwind the lock
+    pool::set_threads(1);
+    assert!(eq, "blocked GEMM diverged from reference");
+}
+
+#[test]
+fn write_lane_zeroes_lane_then_copies_rect() {
+    let mut dst = Tensor::from_vec(&[3, 2, 4], vec![7.0; 3 * 2 * 4]);
+    // narrower source: copied columns land, the rest of the lane is zero
+    let src = Tensor::from_vec(&[1, 2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    write_lane_f32(&mut dst, 1, &src).unwrap();
+    let lane: &[f32] = &dst.data()[8..16];
+    assert_eq!(lane, &[1.0, 2.0, 3.0, 0.0, 4.0, 5.0, 6.0, 0.0]);
+    // neighboring lanes untouched
+    assert!(dst.data()[..8].iter().all(|&v| v == 7.0));
+    assert!(dst.data()[16..].iter().all(|&v| v == 7.0));
+
+    zero_lane_f32(&mut dst, 1).unwrap();
+    assert!(dst.data()[8..16].iter().all(|&v| v == 0.0));
+    assert!(dst.data()[16..].iter().all(|&v| v == 7.0));
+
+    // contract violations are errors, not UB
+    assert!(write_lane_f32(&mut dst, 9, &src).is_err());
+    assert!(zero_lane_f32(&mut dst, 3).is_err());
+}
+
+#[test]
+fn pool_panic_is_contained_and_propagated() {
+    let n = if cfg!(miri) { 16 } else { 200 };
+    let p = ThreadPool::new(3);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        p.par_for(n, |i| {
+            if i == n / 2 {
+                panic!("expected probe panic");
+            }
+        });
+    }));
+    assert!(r.is_err(), "panic in par_for body must reach the caller");
+    // the pool stays usable afterwards
+    let count = Mutex::new(0usize);
+    p.par_for(n, |_| {
+        *count.lock().unwrap() += 1;
+    });
+    assert_eq!(*count.lock().unwrap(), n);
+}
