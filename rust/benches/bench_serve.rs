@@ -20,6 +20,13 @@
 //! batch-at-once vs continuously (lane scheduler, in-flight admission)
 //! and reports per-request p50/p99 latency — submission to completion,
 //! queue wait included — alongside tok/s for both.
+//!
+//! Last, the shared-prefix axis: N requests sharing a long system prompt
+//! served continuously under paged residency across a page-size sweep
+//! (plus a dense-resident baseline). Per-request p50/p99 admission
+//! latency, the prefix-cache counters, and the analytic
+//! max-concurrent-lanes-per-GB figure land in `BENCH_serve_paged.json`
+//! at the repo root.
 
 use heapr::bench::Bench;
 use heapr::coordinator::{serve_continuous, Batcher, Request, Residency, SchedulerOpts, Server};
@@ -28,17 +35,24 @@ use heapr::data::sampler::Split;
 use heapr::data::tokenizer::ByteTokenizer;
 use heapr::heapr::PrunePlan;
 use heapr::heapr::Scope;
+use heapr::model::flops::{kv_lane_bytes, kv_lanes_per_budget, kv_paged_lane_bytes};
 use heapr::model::store::ParamStore;
 use heapr::runtime::Engine;
 use heapr::tensor::gemm;
 use heapr::tensor::Tensor;
+use heapr::util::json::Json;
 use heapr::util::pool;
 use heapr::util::stats::percentile;
 
 const THREAD_AXIS: &[usize] = &[1, 2, 4];
 const RATIOS: &[f64] = &[0.0, 0.25, 0.5, 0.75];
-const RESIDENCY_AXIS: &[(Residency, &str)] =
-    &[(Residency::Resident, "session"), (Residency::Legacy, "legacy")];
+const RESIDENCY_AXIS: &[(Residency, &str)] = &[
+    (Residency::Resident, "session"),
+    (Residency::Paged, "paged"),
+    (Residency::Legacy, "legacy"),
+];
+/// Page sizes swept by the shared-prefix axis (positions per KV page).
+const PAGE_AXIS: &[usize] = &[8, 16, 32];
 
 fn main() {
     let engine = Engine::open("artifacts/tiny").expect("open tiny preset");
@@ -216,6 +230,112 @@ fn main() {
             p99_b / p99_c
         );
     }
+
+    // ---- shared-prefix axis: paged residency, page-size sweep ----------
+    // N requests share one long system prompt and differ only in a short
+    // tail: with the prefix cache on, every admission after the first
+    // maps the resident prefix pages (refcount++) and prefills only the
+    // tail, so admission latency and prefill work both drop. Swept over
+    // `PAGE_AXIS` page sizes plus a dense-resident baseline; each leg
+    // reports per-request p50/p99, the prefix counters, and the analytic
+    // lanes-per-GB figure from the observed workload extents.
+    let shared = split.chunks[0][..32].to_vec();
+    let prefix_reqs = || -> Vec<Request> {
+        (0..4 * bb)
+            .map(|i| {
+                let mut p = shared.clone();
+                p.extend((0..4 + 2 * (i % 3)).map(|j| ((i * 13 + j * 5) % 250 + 2) as i32));
+                Request::new(i as u64, p, 4 + 4 * (i % 4))
+            })
+            .collect()
+    };
+    let probe = prefix_reqs();
+    let max_extent = probe.iter().map(|r| r.extent()).max().unwrap();
+    let mean_rows =
+        probe.iter().map(|r| r.extent()).sum::<usize>() / probe.len();
+    let prompt_rows: usize = probe.iter().map(|r| r.prompt.len()).sum();
+    const GB: usize = 1 << 30;
+    let dense_lane = kv_lane_bytes(&cfg, max_extent);
+
+    let mut axis_rows: Vec<Json> = Vec::new();
+    let mut legs: Vec<(String, Residency, usize)> = PAGE_AXIS
+        .iter()
+        .map(|&p| (format!("paged/{p}"), Residency::Paged, p))
+        .collect();
+    legs.push(("dense".to_string(), Residency::Resident, 0));
+    for (label, residency, page) in legs {
+        let mut server = Server::new(&engine, &params, None).unwrap();
+        server.set_residency(residency);
+        if page > 0 {
+            server.set_kv_page(page);
+        }
+        server.serve_batch(&mk_requests()).unwrap(); // warm the executables
+        let (pages0, reused0, skipped0) = (
+            server.metrics.kv_pages_allocated,
+            server.metrics.prefix_pages_reused,
+            server.metrics.prefill_rows_skipped,
+        );
+        let reqs = prefix_reqs();
+        let total_tokens: f64 = reqs.iter().map(|r| r.max_new_tokens as f64).sum();
+        let mut batcher = mk_batcher(reqs);
+        let t0 = std::time::Instant::now();
+        let responses =
+            serve_continuous(&mut server, &mut batcher, SchedulerOpts::default()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let lats_ms: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
+        let (p50, p99) = (percentile(&lats_ms, 50.0), percentile(&lats_ms, 99.0));
+        let tps = total_tokens / wall;
+        let pages = server.metrics.kv_pages_allocated - pages0;
+        let reused = server.metrics.prefix_pages_reused - reused0;
+        let skipped = server.metrics.prefill_rows_skipped - skipped0;
+        let hit_rate = skipped as f64 / prompt_rows as f64;
+        let lane_bytes = if page > 0 {
+            kv_paged_lane_bytes(&cfg, page, mean_rows)
+        } else {
+            dense_lane
+        };
+        let lanes_per_gb = kv_lanes_per_budget(GB, lane_bytes);
+        println!(
+            "shared-prefix {label:>9}: {tps:8.1} tok/s, p50 {p50:7.1} ms, p99 {p99:7.1} ms, \
+             {reused} prefix pages reused, {skipped} prefill rows skipped \
+             (hit rate {:.1}%), {lanes_per_gb} lanes/GB",
+            100.0 * hit_rate
+        );
+        axis_rows.push(Json::obj(vec![
+            ("leg", Json::s(label)),
+            ("page", Json::n(page as f64)),
+            ("tok_s", Json::n(tps)),
+            ("latency_p50_ms", Json::n(p50)),
+            ("latency_p99_ms", Json::n(p99)),
+            ("kv_pages_allocated", Json::n(pages as f64)),
+            ("kv_pages_peak", Json::n(server.metrics.kv_pages_peak as f64)),
+            ("prefix_pages_reused", Json::n(reused as f64)),
+            ("prefill_rows_skipped", Json::n(skipped as f64)),
+            ("prefix_hit_rate", Json::n(hit_rate)),
+            ("lane_bytes", Json::n(lane_bytes as f64)),
+            ("max_concurrent_lanes_per_gb", Json::n(lanes_per_gb as f64)),
+        ]));
+    }
+    let summary = Json::obj(vec![
+        ("generated_by", Json::s("cargo bench --bench bench_serve")),
+        (
+            "note",
+            Json::s(
+                "pending first `make bench` run on a rust-enabled machine; the \
+                 authoring container has no cargo, so no measured numbers are \
+                 checked in yet — the bench sweeps page sizes over a shared-prefix \
+                 request stream and writes tok/s, admission-latency p50/p99, the \
+                 prefix-cache counters, and the analytic lanes-per-GB figure here",
+            ),
+        ),
+        ("shared_prompt_tokens", Json::n(shared.len() as f64)),
+        ("requests", Json::n(probe.len() as f64)),
+        ("max_extent", Json::n(max_extent as f64)),
+        ("dense_lane_bytes", Json::n(dense_lane as f64)),
+        ("shared_prefix_axis", Json::Arr(axis_rows)),
+    ]);
+    std::fs::write("BENCH_serve_paged.json", summary.to_string()).unwrap();
+    println!("wrote BENCH_serve_paged.json");
 
     bench.save("runs/bench/serve.json").unwrap();
 }

@@ -47,6 +47,14 @@ impl Request {
     pub fn extent(&self) -> usize {
         self.prompt.len() + self.max_new_tokens
     }
+
+    /// [`Request::extent`] as a page budget: the page-table length that
+    /// covers this request's worst case under paged KV residency. Unlike
+    /// a dense lane, this is a *bound*, not an allocation — pages
+    /// materialize only as rows are written.
+    pub fn page_budget(&self, page: usize) -> usize {
+        self.extent().div_ceil(page.max(1))
+    }
 }
 
 /// How pending requests are picked when more are queued than fit the
@@ -449,6 +457,15 @@ mod tests {
     #[test]
     fn request_extent_is_prompt_plus_budget() {
         assert_eq!(Request::new(0, vec![1; 7], 5).extent(), 12);
+    }
+
+    #[test]
+    fn request_page_budget_rounds_up() {
+        let r = Request::new(0, vec![1; 7], 5); // extent 12
+        assert_eq!(r.page_budget(16), 1);
+        assert_eq!(r.page_budget(4), 3);
+        assert_eq!(r.page_budget(5), 3);
+        assert_eq!(r.page_budget(0), 12, "page 0 degrades to 1 position/page");
     }
 
     #[test]

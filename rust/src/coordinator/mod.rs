@@ -1,15 +1,17 @@
 //! Serving coordinator: request queue + admission policy ([`batcher`]),
 //! rust-side routing ([`router`]), the per-layer serving composition and
-//! the batch-synchronous reference loop ([`serve`]), and the
-//! continuous-batching scheduler with in-flight admission
-//! ([`scheduler`]).
+//! the batch-synchronous reference loop ([`serve`]), the shared-prefix
+//! admission index ([`prefix`]), and the continuous-batching scheduler
+//! with in-flight admission and prefix-hit seating ([`scheduler`]).
 
 pub mod batcher;
+pub mod prefix;
 pub mod router;
 pub mod scheduler;
 pub mod serve;
 
 pub use batcher::{AdmissionPolicy, Batcher, Request, RequestId};
+pub use prefix::PrefixIndex;
 pub use router::Router;
 pub use scheduler::{serve_continuous, Scheduler, SchedulerOpts, StreamEvent};
 pub use serve::{DecodeState, Residency, Response, ServeMetrics, Server};

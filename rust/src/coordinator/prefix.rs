@@ -1,0 +1,193 @@
+//! Shared-prefix index for prefix-hit admission.
+//!
+//! The continuous scheduler registers every admitted prompt here. A later
+//! request whose prompt shares leading **full pages** (page size =
+//! `HEAPR_KV_PAGE` positions) with a live lane's prompt can seat by
+//! mapping those pages (refcount++, zero bytes, zero GEMMs) and
+//! prefilling only the tail — the shared-system-prompt pattern that
+//! dominates chat traffic.
+//!
+//! The index is a chained page hash: for a registered prompt, page `k`'s
+//! key is `H(H(...H(seed, page 0)..., page k-1), page k)`, so one map
+//! lookup per candidate length finds every lane holding that exact
+//! page-aligned prefix chain. Hashes only nominate; every hit is verified
+//! token-exact against the lane's stored prompt before any page is
+//! mapped, so a hash collision can cost a scan, never a wrong mapping.
+//!
+//! Sharing is capped at `(prompt.len() - 1) / page` pages for the
+//! incoming request — at least one tail token always replays through the
+//! lane-decode path so admission produces first-token logits — and at
+//! `stored.len() / page` for the donor, so a donor's in-flight decode
+//! appends (positions `>= stored.len()`) can never land in a page it
+//! shared.
+
+use std::collections::HashMap;
+
+/// FNV-1a offset basis / prime (64-bit).
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend a chain hash by one page of token ids.
+fn chain_hash(seed: u64, page: &[i32]) -> u64 {
+    let mut h = seed;
+    for &t in page {
+        for byte in t.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Index over the page-aligned prompt prefixes resident in live lanes.
+pub struct PrefixIndex {
+    page: usize,
+    /// chain hash of pages `0..=k` of a registered prompt → lanes whose
+    /// prompt covers that chain
+    by_hash: HashMap<u64, Vec<usize>>,
+    /// lane → registered prompt (token-exact verification + eviction);
+    /// grown on demand so compaction-resized lane sets just work
+    prompts: Vec<Option<Vec<i32>>>,
+}
+
+impl PrefixIndex {
+    pub fn new(page: usize, lanes: usize) -> PrefixIndex {
+        assert!(page > 0, "page size must be nonzero");
+        PrefixIndex { page, by_hash: HashMap::new(), prompts: vec![None; lanes] }
+    }
+
+    /// Positions per page.
+    pub fn page(&self) -> usize {
+        self.page
+    }
+
+    /// Number of lanes currently registered.
+    pub fn registered(&self) -> usize {
+        self.prompts.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// Register `lane` as holding `prompt`'s K/V rows. Replaces any
+    /// previous registration for the lane.
+    pub fn register(&mut self, lane: usize, prompt: &[i32]) {
+        self.evict(lane);
+        if lane >= self.prompts.len() {
+            self.prompts.resize(lane + 1, None);
+        }
+        let mut h = FNV_SEED;
+        for k in 0..prompt.len() / self.page {
+            h = chain_hash(h, &prompt[k * self.page..(k + 1) * self.page]);
+            self.by_hash.entry(h).or_default().push(lane);
+        }
+        self.prompts[lane] = Some(prompt.to_vec());
+    }
+
+    /// Drop `lane`'s registration (lane retired, or about to be reused).
+    pub fn evict(&mut self, lane: usize) {
+        let Some(prompt) = self.prompts.get_mut(lane).and_then(Option::take) else {
+            return;
+        };
+        let mut h = FNV_SEED;
+        for k in 0..prompt.len() / self.page {
+            h = chain_hash(h, &prompt[k * self.page..(k + 1) * self.page]);
+            if let Some(lanes) = self.by_hash.get_mut(&h) {
+                lanes.retain(|&l| l != lane);
+                if lanes.is_empty() {
+                    self.by_hash.remove(&h);
+                }
+            }
+        }
+    }
+
+    /// Forget everything (lane numbering changed, e.g. compaction).
+    pub fn clear(&mut self) {
+        self.by_hash.clear();
+        self.prompts.iter_mut().for_each(|p| *p = None);
+    }
+
+    /// Best donor for `prompt`: the lane sharing the longest page-aligned
+    /// token-exact prefix. Returns `(lane, npages)` with `npages >= 1`
+    /// and `npages * page <= prompt.len() - 1` (a non-empty tail always
+    /// remains to replay), or `None` when no full page matches.
+    pub fn lookup(&self, prompt: &[i32]) -> Option<(usize, usize)> {
+        let cap = prompt.len().saturating_sub(1) / self.page;
+        let mut hashes = Vec::with_capacity(cap);
+        let mut h = FNV_SEED;
+        for k in 0..cap {
+            h = chain_hash(h, &prompt[k * self.page..(k + 1) * self.page]);
+            hashes.push(h);
+        }
+        for k in (1..=cap).rev() {
+            let Some(lanes) = self.by_hash.get(&hashes[k - 1]) else { continue };
+            for &lane in lanes {
+                let Some(stored) = self.prompts.get(lane).and_then(Option::as_ref) else {
+                    continue;
+                };
+                // token-exact verification: hashes nominate, never decide
+                let n = k * self.page;
+                if stored.len() >= n && stored[..n] == prompt[..n] {
+                    return Some((lane, k));
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_finds_longest_page_aligned_prefix() {
+        let mut idx = PrefixIndex::new(4, 2);
+        idx.register(0, &[1, 2, 3, 4, 5, 6, 7, 8, 9]); // 2 full pages
+        // identical first 8 tokens, then diverges: 2 shared pages, but the
+        // incoming prompt of length 9 caps at (9-1)/4 = 2
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 99]), Some((0, 2)));
+        // only the first page matches
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 99, 6, 7, 8, 9]), Some((0, 1)));
+        // first page diverges: no hit
+        assert_eq!(idx.lookup(&[9, 2, 3, 4, 5, 6, 7, 8, 9]), None);
+    }
+
+    #[test]
+    fn lookup_always_leaves_a_tail_token() {
+        let mut idx = PrefixIndex::new(4, 1);
+        idx.register(0, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        // exact 8-token re-ask: only 1 page shareable, position 4..8 replay
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 5, 6, 7, 8]), Some((0, 1)));
+        // a prompt shorter than one page + 1 can never hit
+        assert_eq!(idx.lookup(&[1, 2, 3, 4]), None);
+    }
+
+    #[test]
+    fn donor_cap_respects_stored_full_pages() {
+        let mut idx = PrefixIndex::new(4, 1);
+        idx.register(0, &[1, 2, 3, 4, 5, 6]); // one full page only
+        // 12-token prompt matching all 6 stored tokens: donor holds just
+        // one full page, so only one page is shareable
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]), Some((0, 1)));
+    }
+
+    #[test]
+    fn evict_and_clear_forget_lanes() {
+        let mut idx = PrefixIndex::new(2, 2);
+        idx.register(0, &[1, 2, 3, 4]);
+        idx.register(1, &[1, 2, 9, 9]);
+        idx.evict(0);
+        // lane 1 still serves the shared first page
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 5]), Some((1, 1)));
+        idx.clear();
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 5]), None);
+        assert_eq!(idx.registered(), 0);
+    }
+
+    #[test]
+    fn register_replaces_previous_occupant() {
+        let mut idx = PrefixIndex::new(2, 1);
+        idx.register(0, &[1, 2, 3, 4]);
+        idx.register(0, &[5, 6, 7, 8]);
+        assert_eq!(idx.lookup(&[1, 2, 3, 4, 5]), None);
+        assert_eq!(idx.lookup(&[5, 6, 7, 8, 9]), Some((0, 2)));
+    }
+}

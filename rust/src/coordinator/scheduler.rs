@@ -54,7 +54,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::batcher::{Batcher, Request, RequestId};
-use crate::coordinator::serve::{argmax_row, DecodeState, Response, Server};
+use crate::coordinator::prefix::PrefixIndex;
+use crate::coordinator::serve::{argmax_row, lane_rows, DecodeState, Response, Server};
 use crate::data::tokenizer::{EOS, PAD};
 use crate::debug;
 
@@ -81,12 +82,30 @@ pub struct SchedulerOpts {
     pub stream: Option<Sender<StreamEvent>>,
     /// Compact to a smaller bucket once the queue has drained for good.
     pub compact: bool,
+    /// Shared-prefix page reuse at admission: a request whose prompt
+    /// prefix is resident in a live lane seats by mapping the shared
+    /// pages and replaying only the tail. Effective only under
+    /// [`crate::coordinator::Residency::Paged`] with a b=1 decode
+    /// artifact; bitwise-identical token streams either way.
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedulerOpts {
     fn default() -> Self {
-        SchedulerOpts { lanes: None, stream: None, compact: true }
+        SchedulerOpts {
+            lanes: None,
+            stream: None,
+            compact: true,
+            prefix_cache: prefix_cache_enabled(),
+        }
     }
+}
+
+/// `HEAPR_NO_PREFIX_CACHE=1` disables shared-prefix admission (pages and
+/// token streams are unchanged — only the prefill-skip optimization is
+/// off), the escape hatch mirroring `HEAPR_NO_BUFFER_CACHE`.
+pub fn prefix_cache_enabled() -> bool {
+    std::env::var("HEAPR_NO_PREFIX_CACHE").map(|v| v != "1").unwrap_or(true)
 }
 
 /// One occupied decode lane: the request plus exactly the per-sequence
@@ -140,6 +159,10 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         // allocated lazily at first admission so an empty queue costs
         // nothing; released (or compacted + released) on the way out
         let mut state: Option<DecodeState<'e>> = None;
+        // created alongside the state iff prefix reuse can apply: paged
+        // residency (pages to share) and a b=1 decode artifact (to replay
+        // prompt tails lane-solo)
+        let mut pidx: Option<PrefixIndex> = None;
         let mut responses: Vec<Response> = Vec::new();
 
         loop {
@@ -171,7 +194,13 @@ impl<'s, 'e> Scheduler<'s, 'e> {
                     break;
                 }
                 if state.is_none() {
-                    state = Some(self.server.empty_state(lanes.len(), max_pos)?);
+                    let st = self.server.empty_state(lanes.len(), max_pos)?;
+                    if self.opts.prefix_cache && cfg.serve_batches.contains(&1) {
+                        if let Some(page) = st.kv_page() {
+                            pidx = Some(PrefixIndex::new(page, lanes.len()));
+                        }
+                    }
+                    state = Some(st);
                 }
                 let mut ready = ready.into_iter();
                 for slot in 0..lanes.len() {
@@ -179,9 +208,21 @@ impl<'s, 'e> Scheduler<'s, 'e> {
                         continue;
                     }
                     let Some(req) = ready.next() else { break };
-                    let lane = self.admit(req, slot, state.as_mut().expect("state exists"))?;
+                    let lane = self.admit(
+                        req,
+                        slot,
+                        state.as_mut().expect("state exists"),
+                        pidx.as_mut(),
+                    )?;
                     lanes[slot] = Some(lane);
-                    self.commit(&mut lanes, slot, max_pos, state.as_mut(), &mut responses)?;
+                    self.commit(
+                        &mut lanes,
+                        slot,
+                        max_pos,
+                        state.as_mut(),
+                        pidx.as_mut(),
+                        &mut responses,
+                    )?;
                 }
             }
             if lanes.iter().all(|l| l.is_none()) {
@@ -193,7 +234,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
 
             // -- compaction: shrink the drain tail ---------------------
             if self.opts.compact && batcher.drained() {
-                self.compact(&mut lanes, &mut state)?;
+                self.compact(&mut lanes, &mut state, pidx.as_mut())?;
             }
 
             // -- one decode step across all lanes ----------------------
@@ -223,12 +264,20 @@ impl<'s, 'e> Scheduler<'s, 'e> {
             // *before* the next decode step — no one-step bubble.
             for slot in 0..lanes.len() {
                 if lanes[slot].is_some() {
-                    self.commit(&mut lanes, slot, max_pos, state.as_mut(), &mut responses)?;
+                    self.commit(
+                        &mut lanes,
+                        slot,
+                        max_pos,
+                        state.as_mut(),
+                        pidx.as_mut(),
+                        &mut responses,
+                    )?;
                 }
             }
         }
 
         if let Some(st) = state.take() {
+            self.server.absorb_kv_stats(&st);
             st.release();
         }
         self.server.metrics.wall_s += t0.elapsed().as_secs_f64();
@@ -244,6 +293,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         slot: usize,
         max_pos: usize,
         state: Option<&mut DecodeState<'e>>,
+        pidx: Option<&mut PrefixIndex>,
         responses: &mut Vec<Response>,
     ) -> Result<()> {
         let Some(lane) = &mut lanes[slot] else { return Ok(()) };
@@ -261,7 +311,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
             });
         }
         if done {
-            self.retire(lanes, slot, state, responses)?;
+            self.retire(lanes, slot, state, pidx, responses)?;
         }
         Ok(())
     }
@@ -269,20 +319,87 @@ impl<'s, 'e> Scheduler<'s, 'e> {
     /// In-flight admission: prefill `req` solo, seat its KV rows into
     /// the freed lane, and return the lane carrying the first
     /// (uncommitted) token — exactly the state `serve_batch` holds for
-    /// a batch row after its batched prefill.
-    fn admit(&mut self, req: Request, slot: usize, state: &mut DecodeState<'e>) -> Result<Lane> {
-        // Solo prefill at the shared state's capacity: row values are
-        // batch-composition independent, so the prompt's K/V rows land
-        // exactly as a batched prefill would have placed them. Only the
-        // prompt's rows are seated (see `DecodeState::admit_lane`).
-        let (logits, solo) =
-            self.server.prefill_with_capacity(&[req.prompt.clone()], state.capacity())?;
-        state.admit_lane(slot, &solo, req.prompt.len())?;
-        solo.release();
+    /// a batch row after its batched prefill. With a [`PrefixIndex`], a
+    /// prompt whose page-aligned prefix is resident in a live lane skips
+    /// the solo prefill: the shared pages are mapped and only the tail
+    /// replays ([`Scheduler::try_admit_prefix`]). Either way the prompt
+    /// is then registered as a future donor.
+    fn admit(
+        &mut self,
+        req: Request,
+        slot: usize,
+        state: &mut DecodeState<'e>,
+        mut pidx: Option<&mut PrefixIndex>,
+    ) -> Result<Lane> {
+        let hit = match pidx.as_deref_mut() {
+            Some(idx) => self.try_admit_prefix(&req, slot, state, idx)?,
+            None => None,
+        };
+        let lane = match hit {
+            Some(lane) => lane,
+            None => {
+                // Solo prefill at the shared state's capacity: row values
+                // are batch-composition independent, so the prompt's K/V
+                // rows land exactly as a batched prefill would have
+                // placed them. Only the prompt's rows are seated (see
+                // `DecodeState::admit_lane`).
+                let (logits, solo) =
+                    self.server.prefill_with_capacity(&[req.prompt.clone()], state.capacity())?;
+                state.admit_lane(slot, &solo, req.prompt.len())?;
+                self.server.absorb_kv_stats(&solo);
+                solo.release();
+                let next = argmax_row(&logits, 0);
+                debug!("admitted request {} into lane {slot}", req.id);
+                let pos = req.prompt.len();
+                Lane { req, next, pos, generated: Vec::new() }
+            }
+        };
+        if let Some(idx) = pidx {
+            idx.register(slot, &lane.req.prompt);
+        }
+        Ok(lane)
+    }
+
+    /// Prefix-hit admission: if a live lane's prompt shares leading full
+    /// pages with `req`'s (token-exact, page-aligned), map those pages
+    /// into the freed lane — refcount bumps, zero bytes, zero prefill
+    /// GEMMs — and replay only the prompt tail through b=1 lane decode
+    /// steps. The result is bitwise identical to a cold solo prefill: a
+    /// decode step at position `p` computes exactly row `p` of a masked
+    /// prefill (see `attend_softmax_v` in `runtime/host.rs`), and the
+    /// shared rows themselves are prefix-only functions of the prompt.
+    /// Returns `None` (cold path) when no donor qualifies.
+    fn try_admit_prefix(
+        &mut self,
+        req: &Request,
+        slot: usize,
+        state: &mut DecodeState<'e>,
+        pidx: &PrefixIndex,
+    ) -> Result<Option<Lane>> {
+        let Some((src, npages)) = pidx.lookup(&req.prompt) else { return Ok(None) };
+        if src == slot {
+            // the freed slot was evicted at retirement; a self-hit would
+            // mean a stale index — refuse rather than alias
+            return Ok(None);
+        }
+        let shared_rows = npages * pidx.page();
+        debug_assert!(shared_rows < req.prompt.len(), "lookup must leave a tail");
+        let mapped = state.map_prefix(src, slot, npages)?;
+        self.server.metrics.prefix_pages_reused += mapped as u64;
+        self.server.metrics.prefill_rows_skipped += shared_rows as u64;
+        // replay the tail; the last step's logits carry the first token
+        let mut logits = None;
+        for p in shared_rows..req.prompt.len() {
+            logits = Some(self.server.decode_lane_step(req.prompt[p], p, state, slot)?);
+        }
+        let logits = logits.expect("non-empty tail by construction");
         let next = argmax_row(&logits, 0);
-        debug!("admitted request {} into lane {slot}", req.id);
+        debug!(
+            "prefix-hit: request {} into lane {slot} ({npages} pages from lane {src})",
+            req.id
+        );
         let pos = req.prompt.len();
-        Ok(Lane { req, next, pos, generated: Vec::new() })
+        Ok(Some(Lane { req: req.clone(), next, pos, generated: Vec::new() }))
     }
 
     /// Retire one finished lane: zero its KV rows (the next occupant —
@@ -293,9 +410,15 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         lanes: &mut [Option<Lane>],
         slot: usize,
         state: Option<&mut DecodeState<'e>>,
+        pidx: Option<&mut PrefixIndex>,
         responses: &mut Vec<Response>,
     ) -> Result<()> {
         let lane = lanes[slot].take().expect("retiring an empty lane");
+        if let Some(idx) = pidx {
+            // the lane can no longer donate its prefix; pages it shared
+            // stay alive through their refcounts, not through the index
+            idx.evict(slot);
+        }
         if let Some(state) = state {
             state.zero_lane(slot)?;
         }
@@ -322,6 +445,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         &mut self,
         lanes: &mut Vec<Option<Lane>>,
         state: &mut Option<DecodeState<'e>>,
+        pidx: Option<&mut PrefixIndex>,
     ) -> Result<()> {
         let Some(old) = state.as_mut() else { return Ok(()) };
         let active: Vec<usize> = (0..lanes.len()).filter(|&i| lanes[i].is_some()).collect();
@@ -343,7 +467,17 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         for l in 0..old.n_layers() {
             let (k, v) = old.kv_cache(l)?;
             for (ni, &oi) in active.iter().enumerate() {
-                fresh.write_lane(l, ni, &k.slice0(oi, oi + 1), &v.slice0(oi, oi + 1))?;
+                // trim to the survivor's written rows: rows at and above
+                // `pos` are zeros on every residency (seated prompts are
+                // prompt-trimmed, retirement zeroes), so this is bitwise
+                // free — and under paging the fresh lane maps only the
+                // pages the survivor actually occupies
+                let rows = lanes[oi]
+                    .as_ref()
+                    .map(|ln| ln.pos)
+                    .unwrap_or(1)
+                    .clamp(1, old.capacity());
+                fresh.write_lane(l, ni, &lane_rows(&k, oi, rows), &lane_rows(&v, oi, rows))?;
             }
         }
         let mut packed: Vec<Option<Lane>> = (0..fresh.bucket()).map(|_| None).collect();
@@ -351,7 +485,19 @@ impl<'s, 'e> Scheduler<'s, 'e> {
             packed[ni] = lanes[oi].take();
         }
         *lanes = packed;
+        if let Some(idx) = pidx {
+            // lane numbering changed wholesale: rebuild the donor index
+            // against the packed slots (the fresh state's pages are new,
+            // but the resident prompt rows are unchanged)
+            idx.clear();
+            for (slot, lane) in lanes.iter().enumerate() {
+                if let Some(l) = lane {
+                    idx.register(slot, &l.req.prompt);
+                }
+            }
+        }
         if let Some(old) = state.replace(fresh) {
+            self.server.absorb_kv_stats(&old);
             old.release();
         }
         Ok(())

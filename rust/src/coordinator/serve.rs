@@ -27,7 +27,7 @@
 
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::batcher::Request;
 use crate::coordinator::router::Router;
@@ -62,6 +62,17 @@ pub struct ServeMetrics {
     /// Subset of `decode_upload_bytes` spent re-uploading KV caches —
     /// exactly zero on the session path (asserted by tests).
     pub decode_kv_upload_bytes: u64,
+    /// Physical KV pages allocated over the serve loop's lifetime
+    /// (cumulative across decode states; paged residency only).
+    pub kv_pages_allocated: u64,
+    /// High-water mark of simultaneously live KV pages in any one state.
+    pub kv_pages_peak: usize,
+    /// Page mappings added by prefix-hit admissions: each is one shared
+    /// page (refcount++), zero bytes moved, zero prefill GEMMs.
+    pub prefix_pages_reused: u64,
+    /// Prompt rows whose prefill compute was skipped because a resident
+    /// prefix already held their K/V pages.
+    pub prefill_rows_skipped: u64,
 }
 
 impl ServeMetrics {
@@ -79,6 +90,15 @@ impl ServeMetrics {
         }
         self.decode_upload_bytes as f64 / self.decode_steps as f64
     }
+
+    /// Fraction of admitted prompt rows served from resident prefix
+    /// pages instead of prefill compute.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            return 0.0;
+        }
+        self.prefill_rows_skipped as f64 / self.prompt_tokens as f64
+    }
 }
 
 /// Where decode state lives between steps.
@@ -89,6 +109,14 @@ pub enum Residency {
     /// shrink to the [bb, d] hidden-state vector and positions per layer —
     /// zero KV-cache bytes.
     Resident,
+    /// Like [`Residency::Resident`], but lane rectangles are virtual:
+    /// each lane owns a page table over a refcounted pool of fixed-size
+    /// pages ([`crate::runtime::PagedKv`]). Allocation is lazy (a lane
+    /// maps pages as rows are written or appended, never for its whole
+    /// capacity up front) and prefix-hit admissions map shared pages
+    /// instead of re-prefilling. Bitwise-identical token streams to
+    /// `Resident` (tier-1 `continuous_scheduler` gate).
+    Paged,
     /// PR-1 behavior: caches held host-side at the compiled maximum and
     /// re-uploaded (plus re-downloaded) every step. Kept selectable for
     /// the §Perf before/after measurement.
@@ -97,13 +125,33 @@ pub enum Residency {
 
 impl Residency {
     /// `HEAPR_NO_BUFFER_CACHE=1` selects the legacy path, same switch as
-    /// the weight-pinning fallback.
+    /// the weight-pinning fallback. Otherwise `HEAPR_KV_PAGE` picks the
+    /// paged pool's page size (default 16 positions); `HEAPR_KV_PAGE=0`
+    /// disables paging and keeps dense resident rectangles.
     pub fn from_env() -> Residency {
-        if buffer_cache_enabled() {
+        if !buffer_cache_enabled() {
+            Residency::Legacy
+        } else if kv_page_from_env() == 0 {
             Residency::Resident
         } else {
-            Residency::Legacy
+            Residency::Paged
         }
+    }
+}
+
+/// `HEAPR_KV_PAGE`: positions per KV page under paged residency
+/// (default 16). `0` turns paging off (see [`Residency::from_env`]).
+pub fn kv_page_from_env() -> usize {
+    std::env::var("HEAPR_KV_PAGE").ok().and_then(|v| v.parse().ok()).unwrap_or(16)
+}
+
+/// Page size used when a paged state is constructed while the env says
+/// "paging off": fall back to the default so a forced
+/// [`Server::set_residency`]`(Paged)` still works.
+fn effective_kv_page() -> usize {
+    match kv_page_from_env() {
+        0 => 16,
+        p => p,
     }
 }
 
@@ -134,9 +182,41 @@ impl DecodeState<'_> {
     }
 
     pub fn residency(&self) -> Residency {
-        match self.kind {
+        match &self.kind {
+            StateKind::Resident(sess) if sess.is_paged() => Residency::Paged,
             StateKind::Resident(_) => Residency::Resident,
             StateKind::Legacy(_) => Residency::Legacy,
+        }
+    }
+
+    /// Page size of the paged pool backing this state (`None` when the
+    /// state is dense-resident or legacy).
+    pub fn kv_page(&self) -> Option<usize> {
+        match &self.kind {
+            StateKind::Resident(sess) => sess.paged().map(|pk| pk.page_size()),
+            StateKind::Legacy(_) => None,
+        }
+    }
+
+    /// `(live, peak, total_allocated)` page counters of the paged pool.
+    pub fn page_stats(&self) -> Option<(usize, usize, u64)> {
+        match &self.kind {
+            StateKind::Resident(sess) => sess
+                .paged()
+                .map(|pk| (pk.live_pages(), pk.peak_pages(), pk.pages_allocated_total())),
+            StateKind::Legacy(_) => None,
+        }
+    }
+
+    /// Map the first `npages` prompt-prefix pages of lane `src` into lane
+    /// `dst` across every layer's K and V tables (paged residency only).
+    /// Pure refcount bumps — zero bytes move, zero prefill compute — and
+    /// the shared pages become immutable until one side retires. Returns
+    /// the number of physical page mappings added.
+    pub fn map_prefix(&mut self, src: usize, dst: usize, npages: usize) -> Result<usize> {
+        match &mut self.kind {
+            StateKind::Resident(sess) if sess.is_paged() => sess.map_prefix(src, dst, npages),
+            _ => bail!("map_prefix requires paged residency"),
         }
     }
 
@@ -276,6 +356,7 @@ pub struct Server<'e> {
     lnf_buf: DeviceTensor,
     embed_buf: DeviceTensor,
     residency: Residency,
+    kv_page: Option<usize>, // per-server page-size override (benchmarks)
     pub widths: WidthProfile,
     pub metrics: ServeMetrics,
 }
@@ -386,6 +467,7 @@ impl<'e> Server<'e> {
             lnf_buf,
             embed_buf,
             residency: Residency::from_env(),
+            kv_page: None,
             metrics: ServeMetrics {
                 expert_tokens: vec![0; cfg.n_layers * cfg.n_experts],
                 ..Default::default()
@@ -396,6 +478,17 @@ impl<'e> Server<'e> {
     /// Override the env-selected decode residency (tests, benchmarks).
     pub fn set_residency(&mut self, r: Residency) {
         self.residency = r;
+    }
+
+    /// Override the `HEAPR_KV_PAGE` page size for states this server
+    /// builds (benchmark page-size sweeps; env mutation is unsafe once
+    /// the worker pool is up). Ignored unless the residency is paged.
+    pub fn set_kv_page(&mut self, page: usize) {
+        self.kv_page = Some(page.max(1));
+    }
+
+    fn page_size(&self) -> usize {
+        self.kv_page.unwrap_or_else(effective_kv_page)
     }
 
     /// The engine this server executes on (upload accounting, config).
@@ -645,6 +738,16 @@ impl<'e> Server<'e> {
                 bb,
                 layers: cfg.n_layers,
             },
+            Residency::Paged => {
+                let mut sess = self.engine.session();
+                sess.alloc_paged(self.page_size(), cfg.n_heads, cfg.d_head, None)?;
+                DecodeState {
+                    kind: StateKind::Resident(sess),
+                    capacity,
+                    bb,
+                    layers: cfg.n_layers,
+                }
+            }
             Residency::Legacy => DecodeState {
                 kind: StateKind::Legacy(Vec::with_capacity(cfg.n_layers)),
                 capacity: cfg.max_decode_len,
@@ -699,6 +802,21 @@ impl<'e> Server<'e> {
             // place prefill K/V into decode caches (allocated once here)
             let (kt, vt) = (k.f32()?, v.f32()?);
             match &mut state.kind {
+                StateKind::Resident(sess) if sess.is_paged() => {
+                    // exact mirror of the dense resident below: every
+                    // bucket lane (pad lanes included) seats its first
+                    // min(t, capacity) prefill rows, so paged and dense
+                    // caches download bit-identically; rows past t stay
+                    // unmapped and read as the zeros fit_cache would
+                    // have stored
+                    let rows = t.min(state.capacity);
+                    sess.alloc_paged_resident(format!("kc{l}"), bb, state.capacity)?;
+                    sess.alloc_paged_resident(format!("vc{l}"), bb, state.capacity)?;
+                    for lane in 0..bb {
+                        sess.write_lane(&format!("kc{l}"), lane, &lane_rows(&kt, lane, rows))?;
+                        sess.write_lane(&format!("vc{l}"), lane, &lane_rows(&vt, lane, rows))?;
+                    }
+                }
                 StateKind::Resident(sess) => {
                     sess.alloc_resident(
                         format!("kc{l}"),
@@ -767,6 +885,24 @@ impl<'e> Server<'e> {
                         format!("vc{l}"),
                         Value::F32(Tensor::zeros(&[bb, h, capacity, hd])),
                     );
+                }
+                Ok(DecodeState {
+                    kind: StateKind::Resident(sess),
+                    capacity,
+                    bb,
+                    layers: cfg.n_layers,
+                })
+            }
+            Residency::Paged => {
+                // the per-lane capacity tier: `capacity` is only a page
+                // table length here — no lane allocates a rectangle up
+                // front, so an empty paged state holds zero KV bytes and
+                // each lane's footprint tracks what it actually wrote
+                let mut sess = self.engine.session();
+                sess.alloc_paged(self.page_size(), h, hd, None)?;
+                for l in 0..cfg.n_layers {
+                    sess.alloc_paged_resident(format!("kc{l}"), bb, capacity)?;
+                    sess.alloc_paged_resident(format!("vc{l}"), bb, capacity)?;
                 }
                 Ok(DecodeState {
                     kind: StateKind::Resident(sess),
@@ -899,6 +1035,78 @@ impl<'e> Server<'e> {
         self.lm_head(x.reshape(&[bb, d])?.slice0(0, b))
     }
 
+    /// One greedy decode step for a *single lane* of a paged state — the
+    /// tail prefill of a prefix-hit admission. Token `token` is embedded
+    /// at `position`, appended into lane `lane`'s page tables and attended
+    /// through a batch-1 decode artifact bound with [`SArg::ResLane`],
+    /// leaving every other lane's caches untouched. Because a decode step
+    /// at position `p` is bitwise identical to row `p` of a masked prefill
+    /// (see `attend_softmax_v` in `runtime/host.rs`), replaying a prompt's
+    /// tail through this method reproduces a cold prefill's cache rows and
+    /// logits exactly.
+    pub fn decode_lane_step(
+        &mut self,
+        token: i32,
+        position: usize,
+        state: &mut DecodeState<'e>,
+        lane: usize,
+    ) -> Result<Tensor> {
+        let cfg = self.cfg();
+        let d = cfg.d_model;
+        if position >= state.capacity() {
+            bail!("decode_lane_step: position {position} outside capacity {}", state.capacity());
+        }
+        if !cfg.serve_batches.contains(&1) {
+            bail!(
+                "decode_lane_step needs a b=1 decode artifact (serve_batches {:?})",
+                cfg.serve_batches
+            );
+        }
+        let mut x = self.embed(&[token], &[position])?.reshape(&[1, 1, d])?;
+        let pos_val = Value::I32(ITensor::from_vec(&[1], vec![position as i32]));
+        for l in 0..cfg.n_layers {
+            let StateKind::Resident(sess) = &mut state.kind else {
+                bail!("decode_lane_step requires session residency");
+            };
+            let a = &self.layers[l].attn;
+            let x_val = Value::F32(x.clone());
+            let (kn, vn) = (format!("kc{l}"), format!("vc{l}"));
+            let out = sess.run_s(
+                "attn_decode_b1",
+                &[
+                    SArg::Val(&x_val),
+                    SArg::Buf(&a[0].buf),
+                    SArg::Buf(&a[1].buf),
+                    SArg::Buf(&a[2].buf),
+                    SArg::Buf(&a[3].buf),
+                    SArg::Buf(&a[4].buf),
+                    SArg::ResLane(&kn, lane),
+                    SArg::ResLane(&vn, lane),
+                    SArg::Val(&pos_val),
+                ],
+            )?;
+            let y = out
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("attn_decode output arity"))?;
+            let flat = y.f32()?.reshape(&[1, d])?;
+            let merged = self.moe_layer(l, flat)?;
+            x = merged.reshape(&[1, 1, d])?;
+        }
+        self.lm_head(x.reshape(&[1, d])?)
+    }
+
+    /// Fold a (paged) state's pool counters into the serve metrics. Call
+    /// once per state lifetime, before [`DecodeState::release`] — the
+    /// counters are cumulative within a pool, so absorbing twice would
+    /// double-count. No-op for dense / legacy states.
+    pub fn absorb_kv_stats(&mut self, state: &DecodeState<'_>) {
+        if let Some((_live, peak, total)) = state.page_stats() {
+            self.metrics.kv_pages_allocated += total;
+            self.metrics.kv_pages_peak = self.metrics.kv_pages_peak.max(peak);
+        }
+    }
+
     /// Serve a batch of requests to completion (greedy decoding).
     pub fn serve_batch(&mut self, requests: &[Request]) -> Result<Vec<Response>> {
         let cfg = self.cfg();
@@ -961,6 +1169,7 @@ impl<'e> Server<'e> {
             }
         }
         self.metrics.decode_upload_bytes += self.engine.upload_stats().1 - upload0;
+        self.absorb_kv_stats(&state);
         state.release();
         let latency = t0.elapsed().as_secs_f64() * 1000.0;
         self.metrics.requests += b;
@@ -1014,8 +1223,9 @@ fn fit_cache(kv: &Tensor, s: usize) -> Tensor {
 
 /// Extract one batch lane of a `[b, h, t, hd]` cache as `[1, h, rows, hd]`,
 /// trimming (or zero-extending) the sequence axis to `rows` — the
-/// admission copy, in a single pass.
-fn lane_rows(kv: &Tensor, lane: usize, rows: usize) -> Tensor {
+/// admission copy, in a single pass. Shared with the scheduler's
+/// compaction, which trims survivors to their written rows.
+pub(crate) fn lane_rows(kv: &Tensor, lane: usize, rows: usize) -> Tensor {
     let &[_b, h, t, hd] = kv.shape() else { panic!("bad cache shape") };
     let keep = t.min(rows);
     let mut out = Tensor::zeros(&[1, h, rows, hd]);

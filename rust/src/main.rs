@@ -322,6 +322,7 @@ fn cmd_serve(
             lanes: (mode.lanes > 0).then_some(mode.lanes),
             stream: mode.stream.then_some(ev_tx),
             compact: true,
+            ..SchedulerOpts::default()
         };
         let responses = serve_continuous(&mut server, &mut batcher, opts)?;
         if let Some(p) = printer {
@@ -357,6 +358,17 @@ fn cmd_serve(
         m.upload_bytes_per_step(),
         server.residency(),
     );
+    if mode.continuous && m.kv_pages_allocated > 0 {
+        info!(
+            "  kv paging: {} pages allocated (peak {} live), prefix hit rate {:.1}% \
+             ({} pages reused, {} prefill rows skipped)",
+            m.kv_pages_allocated,
+            m.kv_pages_peak,
+            m.prefix_hit_rate() * 100.0,
+            m.prefix_pages_reused,
+            m.prefill_rows_skipped,
+        );
+    }
     for r in responses.iter().take(2) {
         info!("  req {} -> {:?}", r.id, ByteTokenizer.decode(&r.tokens));
     }

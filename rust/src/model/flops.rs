@@ -64,6 +64,30 @@ pub fn expert_flops_reduction(cfg: &ModelConfig, pruned: &WidthProfile) -> f64 {
     1.0 - f1 / f0
 }
 
+/// Bytes one *dense* KV lane pins for the whole decode: a full
+/// `[n_heads, capacity, d_head]` f32 rectangle for K and V in every
+/// layer, regardless of how many rows the occupant ever writes.
+pub fn kv_lane_bytes(cfg: &ModelConfig, capacity: usize) -> usize {
+    cfg.n_layers * 2 * cfg.n_heads * capacity * cfg.d_head * 4
+}
+
+/// Bytes a *paged* lane holding `rows` written positions pins under page
+/// size `page`: `ceil(rows/page)` pages per (layer, K|V) table. This is
+/// the quantity the block allocator actually charges — unwritten tail
+/// capacity costs nothing.
+pub fn kv_paged_lane_bytes(cfg: &ModelConfig, page: usize, rows: usize) -> usize {
+    let pages = rows.div_ceil(page.max(1));
+    cfg.n_layers * 2 * pages * cfg.n_heads * page.max(1) * cfg.d_head * 4
+}
+
+/// Concurrent lanes a KV byte budget seats: dense lanes pay
+/// [`kv_lane_bytes`] at full `capacity`; paged lanes pay
+/// [`kv_paged_lane_bytes`] for the rows they hold. The paged count is
+/// what the `bench_serve` lanes-per-GB figure reports.
+pub fn kv_lanes_per_budget(budget_bytes: usize, lane_bytes: usize) -> usize {
+    budget_bytes / lane_bytes.max(1)
+}
+
 /// Total forward+backward FLOPs of a calibration run over `n_tokens`
 /// (backward ≈ 2× forward), for Table 5's TFLOPs column.
 pub fn calib_flops(cfg: &ModelConfig, n_tokens: usize, passes_fwd: f64, passes_bwd: f64) -> f64 {
@@ -111,6 +135,23 @@ mod tests {
         assert_eq!(f_half.attention, f_full.attention);
         let rr = flops_reduction(&c, &half);
         assert!(rr > 0.0 && rr < 0.5);
+    }
+
+    #[test]
+    fn paged_lane_sizing_beats_dense_for_short_occupants() {
+        let c = cfg(); // n_layers 2, n_heads 2, d_head 32
+        let dense = kv_lane_bytes(&c, 64);
+        assert_eq!(dense, 2 * 2 * 2 * 64 * 32 * 4);
+        // an 8-row occupant under page 16 pins one page per table
+        let paged = kv_paged_lane_bytes(&c, 16, 8);
+        assert_eq!(paged, 2 * 2 * 2 * 16 * 32 * 4);
+        assert!(paged < dense);
+        // full occupancy converges to the dense rectangle
+        assert_eq!(kv_paged_lane_bytes(&c, 16, 64), dense);
+        let budget = 8 * dense;
+        assert_eq!(kv_lanes_per_budget(budget, dense), 8);
+        assert_eq!(kv_lanes_per_budget(budget, paged), 32);
+        assert_eq!(kv_lanes_per_budget(budget, 0), budget); // guard, no div-by-zero
     }
 
     #[test]

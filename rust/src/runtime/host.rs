@@ -35,6 +35,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::ModelConfig;
+use crate::runtime::kv::PagedKv;
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::value::Value;
 use crate::tensor::{
@@ -70,6 +71,30 @@ fn req<'a>(inputs: &[Option<&'a Value>], i: usize) -> Result<&'a Value> {
         .copied()
         .flatten()
         .ok_or_else(|| anyhow!("session call: missing input {i}"))
+}
+
+/// Decode attention tail shared by the contiguous and paged cache walks:
+/// shifted softmax over the attended scores (one per cache row 0..=pos),
+/// then the V reduction `softmax(scores) · V` as a 1×kk·kk×hd GEMM under
+/// the process kernel's accumulation contract. Because the reduction runs
+/// over exactly the attended rows, a decode step at position p is bitwise
+/// identical to masked prefill row p of the same sequence for every
+/// kernel tier — the invariant the prefix-reuse admission path (seat
+/// shared pages, decode only the tail) rests on. `out` is overwritten.
+fn attend_softmax_v(scores: &[f32], vrows: &[f32], out: &mut [f32], hd: usize) {
+    let kk = scores.len();
+    debug_assert_eq!(vrows.len(), kk * hd);
+    let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    let mut aw = vec![0.0f32; kk];
+    for (e, sc) in aw.iter_mut().zip(scores) {
+        *e = (sc - mx).exp();
+        z += *e;
+    }
+    for e in &mut aw {
+        *e /= z;
+    }
+    gemm::gemm(gemm::Layout::NN, &aw, vrows, out, 1, kk, hd);
 }
 
 /// Copy sub-matrix `idx` (of `rows * cols` elements) out of a stacked
@@ -1141,10 +1166,12 @@ impl HostBackend {
     /// into the caches at `pos[bi]`, and attend over the 0..=pos prefix.
     /// The caches may have any capacity S > pos — the session path binds
     /// right-sized residents, the stateless path the compiled maximum;
-    /// masked-out tail entries soften to exact 0.0 under the shifted
-    /// softmax, so logits are bitwise independent of S. (batch, head)
-    /// pairs fan out over the pool with each lane owning its cache block
-    /// and output slice, so results are also bitwise thread-invariant.
+    /// scores, softmax and the V reduction all run over exactly the
+    /// attended pos+1 rows ([`attend_softmax_v`]), so logits are bitwise
+    /// independent of S *and* bitwise identical to the corresponding
+    /// masked prefill row under every kernel tier. (batch, head) pairs
+    /// fan out over the pool with each lane owning its cache block and
+    /// output slice, so results are also bitwise thread-invariant.
     /// Mutates `kc`/`vc` in place; returns y = x + attn(x) as [b, 1, d].
     #[allow(clippy::too_many_arguments)]
     fn decode_attend(
@@ -1206,33 +1233,18 @@ impl HostBackend {
                 vrows[pmax * hd..(pmax + 1) * hd]
                     .copy_from_slice(&vn.data()[src..src + hd]);
                 let qrow = &q.data()[src..src + hd];
-                let mut scores = vec![NEG; s];
-                for (si, sc) in scores.iter_mut().enumerate().take(pmax + 1) {
+                let kk = pmax + 1;
+                let mut scores = vec![0.0f32; kk];
+                for (si, sc) in scores.iter_mut().enumerate() {
                     let krow = &krows[si * hd..(si + 1) * hd];
                     *sc = gemm::dot_k(qrow, krow) * scale;
-                }
-                let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let mut z = 0.0f32;
-                let mut ex = vec![0.0f32; s];
-                for (e, sc) in ex.iter_mut().zip(&scores) {
-                    *e = (sc - mx).exp();
-                    z += *e;
                 }
                 // SAFETY: lane bh writes only its own hd-wide block of
                 // out at src = bi*d + hi*hd — disjoint per (bi, hi), in
                 // bounds (out is b*d = b*h*hd), and out outlives the
                 // par_for.
                 let orow = unsafe { op.slice(src, hd) };
-                for (si, &e) in ex.iter().enumerate() {
-                    let a = e / z;
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let vrow = &vrows[si * hd..(si + 1) * hd];
-                    for (o, &v) in orow.iter_mut().zip(vrow) {
-                        *o += a * v;
-                    }
-                }
+                attend_softmax_v(&scores, &vrows[..kk * hd], orow, hd);
             });
         }
         let y_att = matmul_tn(&Tensor::from_vec(&[b, d], out), wo);
@@ -1292,6 +1304,91 @@ impl HostBackend {
             req(inputs, 8)?.as_i32()?,
         )?;
         Ok(vec![Value::F32(y)])
+    }
+
+    /// `attn_decode_b*` against paged KV residents: the same projections
+    /// and per-position attention as [`Self::decode_attend`], but K/V rows
+    /// are appended into and read back from per-lane page tables
+    /// ([`PagedKv`]) instead of a contiguous lane rectangle. `lanes[bi]`
+    /// names the page-table lane batch row `bi` decodes against (the
+    /// prefix-reuse tail decode binds a single shared-state lane;
+    /// whole-state decode binds the identity mapping). The walk is serial
+    /// over (lane, head) pairs — each pair's computation is independent
+    /// and the attended V rows are gathered into one contiguous slab for
+    /// [`attend_softmax_v`], so outputs are bitwise identical to the
+    /// contiguous path at any capacity and thread count.
+    pub(crate) fn attn_decode_paged(
+        &self,
+        inputs: &[Option<&Value>],
+        pk: &mut PagedKv,
+        kname: &str,
+        vname: &str,
+        lanes: &[usize],
+    ) -> Result<Vec<Value>> {
+        let x = req(inputs, 0)?.as_f32()?;
+        let &[b, one, d] = x.shape() else { bail!("attn_decode x must be [b,1,d]") };
+        if one != 1 {
+            bail!("attn_decode wants a single position, got {one}");
+        }
+        if lanes.len() != b {
+            bail!("attn_decode_paged: {} lanes bound for batch {b}", lanes.len());
+        }
+        let (h, hd) = (self.cfg.n_heads, self.cfg.d_head);
+        if pk.heads() != h || pk.head_dim() != hd {
+            bail!(
+                "attn_decode_paged: pool geometry {}x{} does not match \
+                 model {h}x{hd}",
+                pk.heads(),
+                pk.head_dim()
+            );
+        }
+        let cap = match (pk.logical_shape(kname), pk.logical_shape(vname)) {
+            (Some(ks), Some(vs)) if ks == vs => ks[2],
+            (Some(ks), Some(vs)) => bail!(
+                "attn_decode_paged: cache shapes differ (k {ks:?} v {vs:?})"
+            ),
+            _ => bail!("attn_decode_paged: {kname:?}/{vname:?} are not paged residents"),
+        };
+        let pos = req(inputs, 8)?.as_i32()?;
+        for bi in 0..b {
+            let p = pos.data()[bi];
+            if p < 0 || p as usize >= cap {
+                bail!("decode position {p} outside cache capacity {cap}");
+            }
+        }
+        let ln1 = req(inputs, 1)?.as_f32()?;
+        let xf = x.reshape(&[b, d])?;
+        let xn = rmsnorm(&xf, ln1, EPS);
+        let q = matmul_tn(&xn, req(inputs, 2)?.as_f32()?);
+        let kn = matmul_tn(&xn, req(inputs, 3)?.as_f32()?);
+        let vn = matmul_tn(&xn, req(inputs, 4)?.as_f32()?);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            let pmax = pos.data()[bi] as usize;
+            let lane = lanes[bi];
+            let kk = pmax + 1;
+            for hi in 0..h {
+                let src = bi * d + hi * hd;
+                pk.append_row(kname, lane, hi, pmax, &kn.data()[src..src + hd])?;
+                pk.append_row(vname, lane, hi, pmax, &vn.data()[src..src + hd])?;
+                let qrow = &q.data()[src..src + hd];
+                let mut scores = vec![0.0f32; kk];
+                for (si, sc) in scores.iter_mut().enumerate() {
+                    *sc = gemm::dot_k(qrow, pk.row(kname, lane, hi, si)?) * scale;
+                }
+                let mut vslab = vec![0.0f32; kk * hd];
+                for si in 0..kk {
+                    vslab[si * hd..(si + 1) * hd]
+                        .copy_from_slice(pk.row(vname, lane, hi, si)?);
+                }
+                attend_softmax_v(&scores, &vslab, &mut out[src..src + hd], hd);
+            }
+        }
+        let y_att = matmul_tn(&Tensor::from_vec(&[b, d], out), req(inputs, 5)?.as_f32()?);
+        let mut y = xf;
+        add_into(&mut y, &y_att);
+        Ok(vec![Value::F32(y.reshape(&[b, 1, d])?)])
     }
 
     /// Session entry point ([`crate::runtime::Session::run_s`]): execute

@@ -1,0 +1,645 @@
+//! Page-granular KV residency: a refcounted pool of fixed-size pages plus
+//! per-lane page tables, generalizing the contiguous lane rectangle that
+//! [`super::Session`] residents used to be.
+//!
+//! A *page* holds `page` consecutive sequence positions of one lane across
+//! all heads — an `[h, page, hd]` f32 slab. A paged resident (one per KV
+//! cache tensor, e.g. `kc0`) is a table of `ceil(capacity / page)` page
+//! slots per lane; `None` slots read as logical zeros, so allocating a
+//! resident maps nothing and moves no bytes. Pages are refcounted: two
+//! lanes whose prompts share a prefix can map the same physical pages
+//! (`share_prefix`), and a retiring lane's release only returns a page to
+//! the free list when the last mapping drops ([`PagedKv::zero_lane`] is
+//! refcount-aware by construction). Shared pages are immutable —
+//! [`KvPool::page_mut`] refuses refcounts above one, so the decode append
+//! path can never write through an alias; tails always land on fresh
+//! (refcount 1) pages.
+//!
+//! The accounting story mirrors the dense resident contract upside down:
+//! dense `alloc_resident` pays the full `[lanes, h, capacity, hd]` upload
+//! at admission even though a short request touches a fraction of it;
+//! paged allocation pays nothing until rows are written, a prefix map pays
+//! nothing ever, and a lane's footprint is `ceil(rows / page)` pages —
+//! which is what lets a fixed byte budget seat strictly more mixed-extent
+//! lanes (see `rust/tests/paged_kv.rs`).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// Index of a physical page inside a [`KvPool`].
+pub type PageId = usize;
+
+struct PageSlot {
+    data: Vec<f32>,
+    /// 0 = on the free list; otherwise the number of lane-table mappings.
+    refs: u32,
+}
+
+/// Refcounted pool of equally-sized f32 pages with an optional hard
+/// budget. Freed pages are recycled (and re-zeroed at allocation, so a
+/// recycled page can never leak a previous occupant's rows).
+pub struct KvPool {
+    page_elems: usize,
+    slots: Vec<PageSlot>,
+    free: Vec<PageId>,
+    /// Hard cap on simultaneously-live pages (`None` = unbounded).
+    budget: Option<usize>,
+    live: usize,
+    peak: usize,
+    allocated_total: u64,
+}
+
+impl KvPool {
+    fn new(page_elems: usize, budget: Option<usize>) -> KvPool {
+        KvPool {
+            page_elems,
+            slots: Vec::new(),
+            free: Vec::new(),
+            budget,
+            live: 0,
+            peak: 0,
+            allocated_total: 0,
+        }
+    }
+
+    /// Allocate a zeroed page with refcount 1.
+    fn alloc(&mut self) -> Result<PageId> {
+        if let Some(b) = self.budget {
+            if self.live >= b {
+                bail!("kv pool budget exhausted: {b} pages live");
+            }
+        }
+        let id = match self.free.pop() {
+            Some(id) => {
+                let s = &mut self.slots[id];
+                debug_assert_eq!(s.refs, 0);
+                s.data.fill(0.0);
+                s.refs = 1;
+                id
+            }
+            None => {
+                self.slots.push(PageSlot {
+                    data: vec![0.0; self.page_elems],
+                    refs: 1,
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.live += 1;
+        self.peak = self.peak.max(self.live);
+        self.allocated_total += 1;
+        Ok(id)
+    }
+
+    /// Add a mapping to a live page (prefix sharing).
+    fn retain(&mut self, id: PageId) -> Result<()> {
+        let s = self
+            .slots
+            .get_mut(id)
+            .ok_or_else(|| anyhow!("kv pool: retain of unknown page {id}"))?;
+        if s.refs == 0 {
+            bail!("kv pool: retain of freed page {id}");
+        }
+        s.refs += 1;
+        Ok(())
+    }
+
+    /// Drop one mapping; frees the page when the last mapping drops.
+    /// Returns whether the page was actually freed.
+    fn release(&mut self, id: PageId) -> Result<bool> {
+        let s = self
+            .slots
+            .get_mut(id)
+            .ok_or_else(|| anyhow!("kv pool: release of unknown page {id}"))?;
+        if s.refs == 0 {
+            bail!("kv pool: double release of page {id}");
+        }
+        s.refs -= 1;
+        if s.refs == 0 {
+            self.free.push(id);
+            self.live -= 1;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn page(&self, id: PageId) -> &[f32] {
+        &self.slots[id].data
+    }
+
+    /// Mutable page access — refused for shared pages, which is the
+    /// aliasing guarantee: a decode append can never write through a
+    /// mapping another lane also holds.
+    fn page_mut(&mut self, id: PageId) -> Result<&mut [f32]> {
+        let s = &mut self.slots[id];
+        if s.refs != 1 {
+            bail!(
+                "kv pool: mutable access to page {id} with {} mappings \
+                 (shared pages are immutable)",
+                s.refs
+            );
+        }
+        Ok(&mut s.data)
+    }
+}
+
+/// One paged resident: per-lane page tables over the shared pool.
+struct PagedResident {
+    /// Logical `[lanes, h, capacity, hd]` shape (what the dense resident
+    /// would have been).
+    shape: Vec<usize>,
+    pages_per_lane: usize,
+    /// `tables[lane][pg]` maps logical page `pg` (positions
+    /// `pg*page .. (pg+1)*page`) to a physical page; `None` reads as
+    /// zeros.
+    tables: Vec<Vec<Option<PageId>>>,
+}
+
+/// The paged replacement for a session's KV residents: named logical
+/// `[lanes, h, capacity, hd]` tensors whose storage is page tables over
+/// one shared [`KvPool`].
+pub struct PagedKv {
+    /// Sequence positions per page.
+    page: usize,
+    h: usize,
+    hd: usize,
+    pool: KvPool,
+    residents: BTreeMap<String, PagedResident>,
+    /// Zero row returned for reads of unmapped pages.
+    zero_row: Vec<f32>,
+}
+
+impl PagedKv {
+    /// `page` positions per page, `h`×`hd` attention geometry,
+    /// `budget_pages` optional hard cap on live physical pages.
+    pub fn new(page: usize, h: usize, hd: usize, budget_pages: Option<usize>) -> Result<PagedKv> {
+        if page == 0 || h == 0 || hd == 0 {
+            bail!("paged kv: page/heads/head_dim must be nonzero (got {page}/{h}/{hd})");
+        }
+        Ok(PagedKv {
+            page,
+            h,
+            hd,
+            pool: KvPool::new(h * page * hd, budget_pages),
+            residents: BTreeMap::new(),
+            zero_row: vec![0.0; hd],
+        })
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page
+    }
+
+    pub fn heads(&self) -> usize {
+        self.h
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hd
+    }
+
+    /// Bytes of one physical page.
+    pub fn page_bytes(&self) -> usize {
+        self.pool.page_elems * 4
+    }
+
+    /// Physical pages currently live / high-water mark / ever allocated.
+    pub fn live_pages(&self) -> usize {
+        self.pool.live
+    }
+
+    pub fn peak_pages(&self) -> usize {
+        self.pool.peak
+    }
+
+    pub fn pages_allocated_total(&self) -> u64 {
+        self.pool.allocated_total
+    }
+
+    /// Bytes currently held by live pages (the paged analogue of
+    /// `Session::resident_bytes`).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.pool.live * self.pool.page_elems * 4) as u64
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.residents.contains_key(name)
+    }
+
+    /// Logical dense shape the resident stands in for.
+    pub fn logical_shape(&self, name: &str) -> Option<&[usize]> {
+        self.residents.get(name).map(|r| r.shape.as_slice())
+    }
+
+    /// Names of every paged resident (deterministic order).
+    pub fn resident_names(&self) -> impl Iterator<Item = &str> {
+        self.residents.keys().map(String::as_str)
+    }
+
+    fn resident(&self, name: &str) -> Result<&PagedResident> {
+        self.residents
+            .get(name)
+            .ok_or_else(|| anyhow!("no paged resident {name:?}"))
+    }
+
+    fn lane_table<'a>(&'a self, name: &str, lane: usize) -> Result<&'a [Option<PageId>]> {
+        let r = self.resident(name)?;
+        r.tables
+            .get(lane)
+            .map(|t| t.as_slice())
+            .ok_or_else(|| anyhow!("paged resident {name:?}: lane {lane} out of range"))
+    }
+
+    /// Allocate (or replace) a paged resident: `lanes` all-unmapped page
+    /// tables covering `capacity` positions. Maps no pages and moves no
+    /// bytes — storage is paid lazily as rows are written.
+    pub fn alloc_resident(
+        &mut self,
+        name: impl Into<String>,
+        lanes: usize,
+        capacity: usize,
+    ) -> Result<()> {
+        let name = name.into();
+        if lanes == 0 || capacity == 0 {
+            bail!("paged resident {name:?}: lanes/capacity must be nonzero");
+        }
+        self.free_resident(&name)?;
+        let pages_per_lane = capacity.div_ceil(self.page);
+        self.residents.insert(
+            name,
+            PagedResident {
+                shape: vec![lanes, self.h, capacity, self.hd],
+                pages_per_lane,
+                tables: vec![vec![None; pages_per_lane]; lanes],
+            },
+        );
+        Ok(())
+    }
+
+    /// Release every page a resident maps and drop it; returns whether it
+    /// existed.
+    pub fn free_resident(&mut self, name: &str) -> Result<bool> {
+        let Some(r) = self.residents.remove(name) else {
+            return Ok(false);
+        };
+        for table in &r.tables {
+            for id in table.iter().flatten() {
+                self.pool.release(*id)?;
+            }
+        }
+        Ok(true)
+    }
+
+    /// Mapped page count of one lane (its physical footprint in pages,
+    /// shared or not).
+    pub fn lane_pages(&self, name: &str, lane: usize) -> Result<usize> {
+        Ok(self.lane_table(name, lane)?.iter().flatten().count())
+    }
+
+    /// Seat a lane from a dense single-lane tensor (`[1, h, rows, hd]`,
+    /// exact head geometry): release whatever the lane mapped, then map
+    /// `ceil(min(rows, capacity) / page)` fresh pages and copy the rows
+    /// in. Rows beyond `rows` read as zeros (unmapped) — the paged
+    /// equivalent of dense `write_lane`'s zero-then-copy contract.
+    pub fn write_lane(&mut self, name: &str, lane: usize, src: &Tensor) -> Result<()> {
+        let ss = src.shape().to_vec();
+        let (h, hd) = (self.h, self.hd);
+        if ss.len() != 4 || ss[0] != 1 || ss[1] != h || ss[3] != hd {
+            bail!(
+                "paged write_lane {name:?}: src shape {ss:?} is not \
+                 [1, {h}, rows, {hd}]"
+            );
+        }
+        let rows_src = ss[2];
+        let r = self.resident(name)?;
+        let cap = r.shape[2];
+        if lane >= r.tables.len() {
+            bail!("paged write_lane {name:?}: lane {lane} out of range");
+        }
+        let rows = rows_src.min(cap);
+        let npages = rows.div_ceil(self.page);
+        self.zero_lane(name, lane)?;
+        let mut ids = Vec::with_capacity(npages);
+        for _ in 0..npages {
+            match self.pool.alloc() {
+                Ok(id) => ids.push(id),
+                Err(e) => {
+                    // roll back the partial allocation so nothing leaks
+                    for id in ids {
+                        self.pool.release(id)?;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let page = self.page;
+        let data = src.data();
+        for (pg, id) in ids.iter().enumerate() {
+            let slab = self.pool.page_mut(*id)?;
+            let lo = pg * page;
+            let hi_row = ((pg + 1) * page).min(rows);
+            for hi in 0..h {
+                for si in lo..hi_row {
+                    let s = (hi * rows_src + si) * hd;
+                    let d = (hi * page + (si - lo)) * hd;
+                    slab[d..d + hd].copy_from_slice(&data[s..s + hd]);
+                }
+            }
+        }
+        let r = self.residents.get_mut(name).expect("checked above");
+        for (pg, id) in ids.into_iter().enumerate() {
+            r.tables[lane][pg] = Some(id);
+        }
+        Ok(())
+    }
+
+    /// Unmap every page of a lane (lane retirement). Refcount-aware: a
+    /// page still mapped by another lane (a shared prefix page) survives —
+    /// only this lane's mappings drop.
+    pub fn zero_lane(&mut self, name: &str, lane: usize) -> Result<()> {
+        let r = self
+            .residents
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("no paged resident {name:?}"))?;
+        if lane >= r.tables.len() {
+            bail!("paged zero_lane {name:?}: lane {lane} out of range");
+        }
+        let ids: Vec<PageId> = r.tables[lane].iter_mut().filter_map(|e| e.take()).collect();
+        for id in ids {
+            self.pool.release(id)?;
+        }
+        Ok(())
+    }
+
+    /// Map the first `npages` pages of `src_lane` into `dst_lane`
+    /// (refcount++, zero bytes moved) — the prefix-reuse admission
+    /// primitive. Requires those source pages mapped and the destination
+    /// slots unmapped. Returns the number of physical pages shared.
+    pub fn share_prefix(
+        &mut self,
+        name: &str,
+        src_lane: usize,
+        dst_lane: usize,
+        npages: usize,
+    ) -> Result<usize> {
+        if src_lane == dst_lane {
+            bail!("paged share_prefix {name:?}: src and dst are both lane {src_lane}");
+        }
+        let r = self.resident(name)?;
+        if src_lane >= r.tables.len() || dst_lane >= r.tables.len() {
+            bail!("paged share_prefix {name:?}: lane out of range");
+        }
+        if npages > r.pages_per_lane {
+            bail!(
+                "paged share_prefix {name:?}: {npages} pages exceed the \
+                 {}-page table",
+                r.pages_per_lane
+            );
+        }
+        let mut ids = Vec::with_capacity(npages);
+        for pg in 0..npages {
+            match r.tables[src_lane][pg] {
+                Some(id) => ids.push(id),
+                None => bail!(
+                    "paged share_prefix {name:?}: source lane {src_lane} \
+                     page {pg} is unmapped"
+                ),
+            }
+            if r.tables[dst_lane][pg].is_some() {
+                bail!(
+                    "paged share_prefix {name:?}: destination lane {dst_lane} \
+                     page {pg} is already mapped"
+                );
+            }
+        }
+        for id in &ids {
+            self.pool.retain(*id)?;
+        }
+        let r = self.residents.get_mut(name).expect("checked above");
+        for (pg, id) in ids.iter().enumerate() {
+            r.tables[dst_lane][pg] = Some(*id);
+        }
+        Ok(ids.len())
+    }
+
+    /// Append one head-row at position `si` (the decode KV append).
+    /// Allocates the covering page on first touch; refuses to write a
+    /// shared page (tails must land on fresh pages — see `page_mut`).
+    pub fn append_row(
+        &mut self,
+        name: &str,
+        lane: usize,
+        hi: usize,
+        si: usize,
+        row: &[f32],
+    ) -> Result<()> {
+        if row.len() != self.hd || hi >= self.h {
+            bail!(
+                "paged append_row {name:?}: head {hi}/{} row len {}/{}",
+                self.h,
+                row.len(),
+                self.hd
+            );
+        }
+        let r = self.resident(name)?;
+        let cap = r.shape[2];
+        if lane >= r.tables.len() || si >= cap {
+            bail!(
+                "paged append_row {name:?}: lane {lane} position {si} out of \
+                 range (capacity {cap})"
+            );
+        }
+        let (page, hd) = (self.page, self.hd);
+        let pg = si / page;
+        let id = match r.tables[lane][pg] {
+            Some(id) => id,
+            None => {
+                let id = self.pool.alloc()?;
+                self.residents.get_mut(name).expect("checked above").tables[lane][pg] = Some(id);
+                id
+            }
+        };
+        let slab = self.pool.page_mut(id)?;
+        let d = (hi * page + si % page) * hd;
+        slab[d..d + hd].copy_from_slice(row);
+        Ok(())
+    }
+
+    /// Read one head-row at position `si`; unmapped pages read as zeros.
+    pub fn row(&self, name: &str, lane: usize, hi: usize, si: usize) -> Result<&[f32]> {
+        let r = self.resident(name)?;
+        let cap = r.shape[2];
+        if lane >= r.tables.len() || hi >= self.h || si >= cap {
+            bail!(
+                "paged row {name:?}: lane {lane} head {hi} position {si} out \
+                 of range"
+            );
+        }
+        Ok(match r.tables[lane][si / self.page] {
+            Some(id) => {
+                let d = (hi * self.page + si % self.page) * self.hd;
+                &self.pool.page(id)[d..d + self.hd]
+            }
+            None => &self.zero_row,
+        })
+    }
+
+    /// Gather `rows` positions of one lane into a dense `[1, h, rows, hd]`
+    /// tensor (compaction / readback).
+    pub fn lane_rows(&self, name: &str, lane: usize, rows: usize) -> Result<Tensor> {
+        let r = self.resident(name)?;
+        let cap = r.shape[2];
+        let rows = rows.min(cap).max(1);
+        let (h, hd) = (self.h, self.hd);
+        let mut out = vec![0.0f32; h * rows * hd];
+        for hi in 0..h {
+            for si in 0..rows {
+                let src = self.row(name, lane, hi, si)?;
+                let d = (hi * rows + si) * hd;
+                out[d..d + hd].copy_from_slice(src);
+            }
+        }
+        Ok(Tensor::from_vec(&[1, h, rows, hd], out))
+    }
+
+    /// Gather the full logical `[lanes, h, capacity, hd]` dense tensor
+    /// (unmapped pages read as zeros) — the paged `download`.
+    pub fn dense(&self, name: &str) -> Result<Tensor> {
+        let r = self.resident(name)?;
+        let (lanes, h, cap, hd) = (r.shape[0], r.shape[1], r.shape[2], r.shape[3]);
+        let mut out = vec![0.0f32; lanes * h * cap * hd];
+        let lane_sz = h * cap * hd;
+        for lane in 0..lanes {
+            for hi in 0..h {
+                for si in 0..cap {
+                    let src = self.row(name, lane, hi, si)?;
+                    let d = lane * lane_sz + (hi * cap + si) * hd;
+                    out[d..d + hd].copy_from_slice(src);
+                }
+            }
+        }
+        Ok(Tensor::from_vec(&[lanes, h, cap, hd], out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pk(page: usize) -> PagedKv {
+        PagedKv::new(page, 2, 4, None).unwrap()
+    }
+
+    fn lane_tensor(h: usize, rows: usize, hd: usize, base: f32) -> Tensor {
+        let data: Vec<f32> = (0..h * rows * hd).map(|i| base + i as f32).collect();
+        Tensor::from_vec(&[1, h, rows, hd], data)
+    }
+
+    #[test]
+    fn alloc_is_lazy_and_write_maps_ceil_rows_over_page() {
+        let mut p = pk(4);
+        p.alloc_resident("kc0", 3, 16).unwrap();
+        assert_eq!(p.live_pages(), 0);
+        p.write_lane("kc0", 1, &lane_tensor(2, 6, 4, 0.0)).unwrap();
+        assert_eq!(p.lane_pages("kc0", 1).unwrap(), 2); // ceil(6/4)
+        assert_eq!(p.live_pages(), 2);
+        // reads round-trip, rows beyond the write read as zeros
+        assert_eq!(p.row("kc0", 1, 0, 0).unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(p.row("kc0", 1, 1, 5).unwrap(), &[44.0, 45.0, 46.0, 47.0]);
+        assert_eq!(p.row("kc0", 1, 0, 7).unwrap(), &[0.0; 4]);
+        assert_eq!(p.row("kc0", 1, 0, 15).unwrap(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn shared_page_survives_sharer_retirement_and_refuses_writes() {
+        let mut p = pk(4);
+        p.alloc_resident("kc0", 2, 16).unwrap();
+        p.write_lane("kc0", 0, &lane_tensor(2, 8, 4, 1.0)).unwrap();
+        assert_eq!(p.share_prefix("kc0", 0, 1, 2).unwrap(), 2);
+        assert_eq!(p.live_pages(), 2); // shared, not copied
+        // appends into a shared page are refused
+        assert!(p.append_row("kc0", 1, 0, 3, &[9.0; 4]).is_err());
+        // the sharer retires; the pages stay live for lane 0
+        p.zero_lane("kc0", 1).unwrap();
+        assert_eq!(p.live_pages(), 2);
+        assert_eq!(p.row("kc0", 0, 0, 0).unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        // now exclusive again: lane 0 may append past its rows
+        p.append_row("kc0", 0, 0, 8, &[5.0; 4]).unwrap();
+        assert_eq!(p.live_pages(), 3);
+    }
+
+    #[test]
+    fn budget_caps_live_pages() {
+        let mut p = PagedKv::new(4, 2, 4, Some(2)).unwrap();
+        p.alloc_resident("kc0", 2, 32).unwrap();
+        p.write_lane("kc0", 0, &lane_tensor(2, 8, 4, 0.0)).unwrap(); // 2 pages
+        assert!(p.append_row("kc0", 1, 0, 0, &[1.0; 4]).is_err()); // over budget
+        p.zero_lane("kc0", 0).unwrap();
+        p.append_row("kc0", 1, 0, 0, &[1.0; 4]).unwrap(); // freed capacity reusable
+        assert_eq!(p.live_pages(), 1);
+    }
+
+    #[test]
+    fn recycled_page_is_zeroed() {
+        let mut p = pk(4);
+        p.alloc_resident("kc0", 2, 8).unwrap();
+        p.write_lane("kc0", 0, &lane_tensor(2, 4, 4, 7.0)).unwrap();
+        p.zero_lane("kc0", 0).unwrap();
+        // the freed physical page comes back for lane 1; only position 0
+        // row 0 is written — everything else must read zero
+        p.append_row("kc0", 1, 0, 0, &[1.0; 4]).unwrap();
+        assert_eq!(p.row("kc0", 1, 0, 1).unwrap(), &[0.0; 4]);
+        assert_eq!(p.row("kc0", 1, 1, 0).unwrap(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn write_lane_truncates_to_capacity_and_validates_geometry() {
+        let mut p = pk(4);
+        p.alloc_resident("kc0", 1, 8).unwrap();
+        p.write_lane("kc0", 0, &lane_tensor(2, 12, 4, 0.0)).unwrap();
+        assert_eq!(p.lane_pages("kc0", 0).unwrap(), 2); // capacity 8 = 2 pages
+        assert!(p.write_lane("kc0", 0, &Tensor::zeros(&[1, 3, 4, 4])).is_err());
+        assert!(p.write_lane("kc0", 0, &Tensor::zeros(&[2, 2, 4, 4])).is_err());
+    }
+
+    #[test]
+    fn share_prefix_validates_mapping_state() {
+        let mut p = pk(4);
+        p.alloc_resident("kc0", 3, 16).unwrap();
+        p.write_lane("kc0", 0, &lane_tensor(2, 4, 4, 0.0)).unwrap();
+        // more pages than the source has mapped
+        assert!(p.share_prefix("kc0", 0, 1, 2).is_err());
+        p.write_lane("kc0", 1, &lane_tensor(2, 4, 4, 0.0)).unwrap();
+        // destination already mapped
+        assert!(p.share_prefix("kc0", 0, 1, 1).is_err());
+        assert!(p.share_prefix("kc0", 0, 0, 1).is_err()); // self-share
+        assert_eq!(p.share_prefix("kc0", 0, 2, 1).unwrap(), 1);
+    }
+
+    #[test]
+    fn free_resident_returns_every_page() {
+        let mut p = pk(4);
+        p.alloc_resident("kc0", 2, 8).unwrap();
+        p.write_lane("kc0", 0, &lane_tensor(2, 8, 4, 0.0)).unwrap();
+        p.share_prefix("kc0", 0, 1, 2).unwrap();
+        assert!(p.free_resident("kc0").unwrap());
+        assert_eq!(p.live_pages(), 0);
+        assert!(!p.free_resident("kc0").unwrap());
+    }
+
+    #[test]
+    fn dense_and_lane_rows_gather_with_zero_fill() {
+        let mut p = pk(4);
+        p.alloc_resident("kc0", 2, 8).unwrap();
+        let t = lane_tensor(2, 4, 4, 3.0);
+        p.write_lane("kc0", 1, &t).unwrap();
+        let d = p.dense("kc0").unwrap();
+        assert_eq!(d.shape(), &[2, 2, 8, 4]);
+        assert!(d.data()[..2 * 8 * 4].iter().all(|&x| x == 0.0)); // lane 0 unmapped
+        let g = p.lane_rows("kc0", 1, 4).unwrap();
+        assert_eq!(g.shape(), &[1, 2, 4, 4]);
+        assert_eq!(g.data(), t.data());
+    }
+}

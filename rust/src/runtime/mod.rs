@@ -37,8 +37,20 @@
 //! metrics can prove what moved: `run` pays per call, `upload` /
 //! `alloc_resident` / `write_lane` pay once, `run_b` and resident args
 //! are free.
+//!
+//! A session may instead hold its KV residents **paged**
+//! ([`Session::alloc_paged`] + [`Session::alloc_paged_resident`]): lanes
+//! become page tables over a refcounted pool ([`kv::PagedKv`]) rather
+//! than slices of a dense rectangle. The lane primitives keep their
+//! contracts (`write_lane` pays the source bytes, `zero_lane` is free and
+//! leak-proof), allocation itself pays *nothing* (pages map lazily as
+//! rows are written), and two lanes can share prompt-prefix pages by
+//! refcount ([`Session::map_prefix`], also free). [`SArg::ResLane`] binds
+//! a single lane of a paged resident to a batch-1 decode artifact — the
+//! prefix-reuse tail-prefill primitive.
 
 pub mod host;
+pub mod kv;
 pub mod manifest;
 pub mod preset;
 pub mod value;
@@ -46,7 +58,8 @@ pub mod value;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use kv::PagedKv;
+pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
 pub use value::{Literal, Value};
 
 use std::collections::HashMap;
@@ -261,6 +274,7 @@ impl Engine {
         Session {
             engine: self,
             residents: HashMap::new(),
+            paged: None,
         }
     }
 
@@ -323,11 +337,23 @@ fn check_input(
     v: &Value,
     capacity_axis: Option<usize>,
 ) -> Result<()> {
+    check_shape(name, io, v.shape(), v.dtype(), capacity_axis)
+}
+
+/// Shape/dtype half of [`check_input`], callable for paged residents
+/// (which have a logical shape but no dense [`Value`] to borrow).
+fn check_shape(
+    name: &str,
+    io: &IoSpec,
+    shape: &[usize],
+    dtype: Dtype,
+    capacity_axis: Option<usize>,
+) -> Result<()> {
     let shape_ok = match capacity_axis {
-        None => v.shape() == io.shape.as_slice(),
+        None => shape == io.shape.as_slice(),
         Some(ax) => {
-            v.shape().len() == io.shape.len()
-                && v.shape()
+            shape.len() == io.shape.len()
+                && shape
                     .iter()
                     .zip(&io.shape)
                     .enumerate()
@@ -340,24 +366,20 @@ fn check_input(
                     })
         }
     };
-    if shape_ok && v.dtype() == io.dtype {
+    if shape_ok && dtype == io.dtype {
         return Ok(());
     }
     match capacity_axis {
         None => bail!(
-            "{name}: input {:?} got shape {:?} dtype {}, want {:?} {}",
+            "{name}: input {:?} got shape {shape:?} dtype {dtype}, want {:?} {}",
             io.name,
-            v.shape(),
-            v.dtype(),
             io.shape,
             io.dtype
         ),
         Some(ax) => bail!(
-            "{name}: resident {:?} got shape {:?} dtype {}, want {:?} {} \
+            "{name}: resident {:?} got shape {shape:?} dtype {dtype}, want {:?} {} \
              (axis {ax} is capacity: 1..={} allowed)",
             io.name,
-            v.shape(),
-            v.dtype(),
             io.shape,
             io.dtype,
             io.shape[ax]
@@ -464,11 +486,16 @@ pub fn zero_lane_f32(dst: &mut Tensor, lane: usize) -> Result<()> {
 }
 
 /// One argument to [`Session::run_s`]: a per-call host value (marshalled
-/// this call), a pinned [`DeviceBuffer`], or a named session resident.
+/// this call), a pinned [`DeviceBuffer`], a named session resident, or a
+/// single-lane view of a *paged* resident (`ResLane(name, lane)`) — the
+/// shape the artifact sees is the resident's logical shape with the
+/// leading (lane) axis collapsed to 1, which is how a batch-1 decode
+/// artifact prefills one tail position of a shared multi-lane state.
 pub enum SArg<'a> {
     Val(&'a Value),
     Buf(&'a DeviceBuffer),
     Res(&'a str),
+    ResLane(&'a str, usize),
 }
 
 /// Engine-resident mutable state for a decode sequence (or any loop that
@@ -507,6 +534,10 @@ pub enum SArg<'a> {
 pub struct Session<'e> {
     engine: &'e Engine,
     residents: HashMap<String, Value>,
+    /// Paged KV storage, when this session holds page-table residents
+    /// ([`Session::alloc_paged`]). Dense and paged residents coexist by
+    /// name: lane primitives and `run_s` dispatch per resident.
+    paged: Option<PagedKv>,
 }
 
 impl<'e> Session<'e> {
@@ -517,35 +548,126 @@ impl<'e> Session<'e> {
         self.residents.insert(name.into(), v);
     }
 
+    /// Switch this session to paged KV storage: `page` positions per
+    /// page over an `h`×`hd` attention geometry, optionally hard-capped
+    /// at `budget_pages` live pages. Must precede
+    /// [`Session::alloc_paged_resident`]. Allocates nothing and moves no
+    /// bytes.
+    pub fn alloc_paged(
+        &mut self,
+        page: usize,
+        h: usize,
+        hd: usize,
+        budget_pages: Option<usize>,
+    ) -> Result<()> {
+        if self.paged.is_some() {
+            bail!("session already holds paged state");
+        }
+        self.paged = Some(PagedKv::new(page, h, hd, budget_pages)?);
+        Ok(())
+    }
+
+    /// Allocate a named *paged* resident: `lanes` page tables spanning
+    /// `capacity` positions, all unmapped. Unlike [`Session::alloc_resident`]
+    /// this is free — no pages map and no upload is priced until rows are
+    /// written ([`Session::write_lane`]) or appended (decode) — which is
+    /// exactly the over-allocation the dense rectangle paid per lane.
+    pub fn alloc_paged_resident(
+        &mut self,
+        name: impl Into<String>,
+        lanes: usize,
+        capacity: usize,
+    ) -> Result<()> {
+        let pk = self
+            .paged
+            .as_mut()
+            .ok_or_else(|| anyhow!("alloc_paged_resident before alloc_paged"))?;
+        pk.alloc_resident(name, lanes, capacity)
+    }
+
+    /// Whether this session holds paged KV state.
+    pub fn is_paged(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    /// The paged KV pool, for stats readback (live/peak/total pages).
+    pub fn paged(&self) -> Option<&PagedKv> {
+        self.paged.as_ref()
+    }
+
+    /// Map the first `npages` prompt-prefix pages of `src_lane` into
+    /// `dst_lane` across *every* paged resident (each KV cache tensor of
+    /// every layer) — refcount increments only, zero bytes copied or
+    /// uploaded. Returns the total number of physical page mappings
+    /// added. This is the prefix-reuse admission primitive: the new
+    /// lane's first `npages * page` positions read the donor's rows.
+    pub fn map_prefix(&mut self, src_lane: usize, dst_lane: usize, npages: usize) -> Result<usize> {
+        let pk = self
+            .paged
+            .as_mut()
+            .ok_or_else(|| anyhow!("map_prefix on a session without paged state"))?;
+        let names: Vec<String> = pk.resident_names().map(String::from).collect();
+        if names.is_empty() {
+            bail!("map_prefix: no paged residents");
+        }
+        let mut mapped = 0;
+        for n in &names {
+            mapped += pk.share_prefix(n, src_lane, dst_lane, npages)?;
+        }
+        Ok(mapped)
+    }
+
     pub fn has_resident(&self, name: &str) -> bool {
         self.residents.contains_key(name)
+            || self.paged.as_ref().is_some_and(|pk| pk.has(name))
     }
 
     pub fn resident_shape(&self, name: &str) -> Option<&[usize]> {
-        self.residents.get(name).map(|v| v.shape())
-    }
-
-    /// Total bytes held by residents (capacity accounting).
-    pub fn resident_bytes(&self) -> u64 {
-        self.residents.values().map(|v| v.byte_len() as u64).sum()
-    }
-
-    /// Copy a resident back to the host (end-of-sequence readback).
-    pub fn download(&self, name: &str) -> Result<Value> {
         self.residents
             .get(name)
-            .cloned()
-            .ok_or_else(|| anyhow!("no resident {name:?} in session"))
+            .map(|v| v.shape())
+            .or_else(|| self.paged.as_ref().and_then(|pk| pk.logical_shape(name)))
     }
 
-    /// Drop one resident; returns whether it existed.
+    /// Total bytes held by residents (capacity accounting). Paged
+    /// residents count their *live pages*, not their logical extent —
+    /// the whole point of paging.
+    pub fn resident_bytes(&self) -> u64 {
+        self.residents.values().map(|v| v.byte_len() as u64).sum::<u64>()
+            + self.paged.as_ref().map_or(0, |pk| pk.resident_bytes())
+    }
+
+    /// Copy a resident back to the host (end-of-sequence readback). A
+    /// paged resident gathers to its dense logical shape, unmapped pages
+    /// reading as zeros.
+    pub fn download(&self, name: &str) -> Result<Value> {
+        if let Some(v) = self.residents.get(name) {
+            return Ok(v.clone());
+        }
+        if let Some(pk) = &self.paged {
+            if pk.has(name) {
+                return Ok(Value::F32(pk.dense(name)?));
+            }
+        }
+        bail!("no resident {name:?} in session")
+    }
+
+    /// Drop one resident; returns whether it existed. Dropping a paged
+    /// resident releases every page it mapped.
     pub fn free_resident(&mut self, name: &str) -> bool {
-        self.residents.remove(name).is_some()
+        if self.residents.remove(name).is_some() {
+            return true;
+        }
+        self.paged
+            .as_mut()
+            .and_then(|pk| pk.free_resident(name).ok())
+            .unwrap_or(false)
     }
 
     /// Release every resident (the sequence is finished).
     pub fn clear(&mut self) {
         self.residents.clear();
+        self.paged = None;
     }
 
     /// Overwrite one index of resident `name`'s leading (batch/lane) axis
@@ -561,25 +683,40 @@ impl<'e> Session<'e> {
     /// traffic, not per-step decode traffic. On a device backend this
     /// maps to a strided host->device copy into an existing buffer.
     pub fn write_lane(&mut self, name: &str, lane: usize, src: &Tensor) -> Result<()> {
-        let v = self
-            .residents
-            .get_mut(name)
-            .ok_or_else(|| anyhow!("write_lane: no resident {name:?} in session"))?;
-        let dst = v.as_f32_mut()?;
-        write_lane_f32(dst, lane, src)?;
-        self.engine.note_upload(1, (src.data().len() * 4) as u64);
-        Ok(())
+        if let Some(v) = self.residents.get_mut(name) {
+            let dst = v.as_f32_mut()?;
+            write_lane_f32(dst, lane, src)?;
+            self.engine.note_upload(1, (src.data().len() * 4) as u64);
+            return Ok(());
+        }
+        if let Some(pk) = self.paged.as_mut() {
+            if pk.has(name) {
+                // paged seating maps ceil(rows/page) fresh pages for the
+                // lane; same upload price as the dense path — the source
+                // rows cross the host->device boundary either way
+                pk.write_lane(name, lane, src)?;
+                self.engine.note_upload(1, (src.data().len() * 4) as u64);
+                return Ok(());
+            }
+        }
+        bail!("write_lane: no resident {name:?} in session")
     }
 
     /// Zero one index of resident `name`'s leading axis (lane
     /// retirement). Moves no host->device bytes on the host backend; a
-    /// device backend would issue a device-side fill.
+    /// device backend would issue a device-side fill. On a paged resident
+    /// this unmaps the lane's page table — refcount-aware, so a prefix
+    /// page still mapped by a live sharer survives untouched.
     pub fn zero_lane(&mut self, name: &str, lane: usize) -> Result<()> {
-        let v = self
-            .residents
-            .get_mut(name)
-            .ok_or_else(|| anyhow!("zero_lane: no resident {name:?} in session"))?;
-        zero_lane_f32(v.as_f32_mut()?, lane)
+        if let Some(v) = self.residents.get_mut(name) {
+            return zero_lane_f32(v.as_f32_mut()?, lane);
+        }
+        if let Some(pk) = self.paged.as_mut() {
+            if pk.has(name) {
+                return pk.zero_lane(name, lane);
+            }
+        }
+        bail!("zero_lane: no resident {name:?} in session")
     }
 
     /// Execute `name` against a mix of per-call values, pinned buffers and
@@ -596,6 +733,16 @@ impl<'e> Session<'e> {
                 args.len(),
                 spec.inputs.len()
             );
+        }
+        // calls touching paged residents (by name or lane view) take the
+        // page-table walk instead of the dense in-place path
+        let paged_call = args.iter().any(|a| match a {
+            SArg::ResLane(..) => true,
+            SArg::Res(n) => self.paged.as_ref().is_some_and(|pk| pk.has(n)),
+            _ => false,
+        });
+        if paged_call {
+            return self.run_s_paged(name, spec, args);
         }
         let mut aliased: Vec<(usize, String)> = Vec::new();
         let mut val_events = 0usize;
@@ -617,6 +764,10 @@ impl<'e> Session<'e> {
                     if spec.outputs.iter().any(|o| o.name == io.name) {
                         aliased.push((i, (*n).to_string()));
                     }
+                }
+                // lane views were routed to run_s_paged above
+                SArg::ResLane(n, _) => {
+                    bail!("{name}: lane view of {n:?} requires paged session state")
                 }
             }
         }
@@ -675,6 +826,9 @@ impl<'e> Session<'e> {
                                 Some(&self.residents[*n])
                             }
                         }
+                        SArg::ResLane(..) => {
+                            unreachable!("lane views route to run_s_paged")
+                        }
                     })
                     .collect();
                 let mut inout: Vec<(usize, &mut Value)> =
@@ -698,6 +852,9 @@ impl<'e> Session<'e> {
                         SArg::Val(v) => *v,
                         SArg::Buf(b) => &b.value,
                         SArg::Res(n) => &self.residents[*n],
+                        SArg::ResLane(..) => {
+                            unreachable!("lane views route to run_s_paged")
+                        }
                     })
                     .collect();
                 let outs = pb.run_s(name, &full, spec)?;
@@ -719,6 +876,106 @@ impl<'e> Session<'e> {
                 Ok(kept)
             }
         }
+    }
+
+    /// [`Session::run_s`] for calls touching paged residents: host-only,
+    /// decode-only. The KV caches arrive as paged names (whole state) or
+    /// [`SArg::ResLane`] views (one lane, batch-1 artifact); both are
+    /// validated against the manifest on their *logical* shapes with the
+    /// usual capacity-axis relaxation, then the backend appends and
+    /// attends through the page tables in place. Accounting matches the
+    /// dense path exactly: `Val` args are priced, residents are free.
+    fn run_s_paged(
+        &mut self,
+        name: &str,
+        spec: &ArtifactSpec,
+        args: &[SArg],
+    ) -> Result<Vec<Value>> {
+        if !name.starts_with("attn_decode_b") {
+            bail!("{name}: paged residents only serve attn_decode_b* session calls");
+        }
+        let hb = match &self.engine.backend {
+            Backend::Host(hb) => hb,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => bail!("{name}: paged residents are host-backend only"),
+        };
+        let pk = self
+            .paged
+            .as_mut()
+            .ok_or_else(|| anyhow!("{name}: lane view without paged session state"))?;
+        let mut val_events = 0usize;
+        let mut val_bytes = 0u64;
+        let mut inputs: Vec<Option<&Value>> = vec![None; args.len()];
+        // (kcache|vcache, resident name, lane view)
+        let mut karg: Option<(&str, Option<usize>)> = None;
+        let mut varg: Option<(&str, Option<usize>)> = None;
+        for (i, (arg, io)) in args.iter().zip(&spec.inputs).enumerate() {
+            match arg {
+                SArg::Val(v) => {
+                    check_input(name, io, v, None)?;
+                    val_events += 1;
+                    val_bytes += v.byte_len() as u64;
+                    inputs[i] = Some(*v);
+                }
+                SArg::Buf(b) => {
+                    check_input(name, io, &b.value, None)?;
+                    inputs[i] = Some(&b.value);
+                }
+                SArg::Res(n) | SArg::ResLane(n, _) => {
+                    let lane = match arg {
+                        SArg::ResLane(_, l) => Some(*l),
+                        _ => None,
+                    };
+                    let shape = pk.logical_shape(n).ok_or_else(|| {
+                        anyhow!(
+                            "{name}: resident {n:?} is not paged (a paged call \
+                             cannot mix dense residents)"
+                        )
+                    })?;
+                    let mut eff = shape.to_vec();
+                    if let Some(l) = lane {
+                        if l >= eff[0] {
+                            bail!("{name}: lane {l} out of range for {n:?} ({} lanes)", eff[0]);
+                        }
+                        eff[0] = 1; // the artifact sees a single-lane view
+                    }
+                    let cap_ax = manifest::capacity_axis(name, &io.name);
+                    check_shape(name, io, &eff, Dtype::F32, cap_ax)?;
+                    match io.name.as_str() {
+                        "kcache" => karg = Some((*n, lane)),
+                        "vcache" => varg = Some((*n, lane)),
+                        other => bail!(
+                            "{name}: paged resident bound to input {other:?} \
+                             (only kcache/vcache may be paged)"
+                        ),
+                    }
+                }
+            }
+        }
+        let (Some((kname, klane)), Some((vname, vlane))) = (karg, varg) else {
+            bail!("{name}: paged decode needs both kcache and vcache residents")
+        };
+        if klane != vlane {
+            bail!("{name}: kcache/vcache lane views disagree ({klane:?} vs {vlane:?})");
+        }
+        // batch rows map to page-table lanes: identity for whole-state
+        // decode, the single named lane for a ResLane view
+        let b = spec.inputs[0].shape[0];
+        let lanes: Vec<usize> = match klane {
+            None => (0..b).collect(),
+            Some(l) => vec![l],
+        };
+        self.engine.note_upload(val_events, val_bytes);
+        self.engine.count_call(name);
+        let out = hb.attn_decode_paged(&inputs, pk, kname, vname, &lanes)?;
+        let skip: Vec<&str> = spec
+            .outputs
+            .iter()
+            .filter(|o| o.name == "kcache" || o.name == "vcache")
+            .map(|o| o.name.as_str())
+            .collect();
+        check_session_outputs(name, spec, &skip, &out)?;
+        Ok(out)
     }
 }
 
@@ -1027,6 +1284,50 @@ mod tests {
         // unknown resident errors
         assert!(sess.write_lane("nope", 0, &src).is_err());
         assert!(sess.zero_lane("nope", 0).is_err());
+    }
+
+    #[test]
+    fn session_paged_lane_primitives_price_like_dense_but_alloc_is_free() {
+        let e = Engine::open("artifacts/tiny").unwrap();
+        let mut sess = e.session();
+        let (_, b0) = e.upload_stats();
+        sess.alloc_paged(4, 2, 32, None).unwrap();
+        sess.alloc_paged_resident("kc0", 4, 8).unwrap();
+        sess.alloc_paged_resident("vc0", 4, 8).unwrap();
+        let (_, b1) = e.upload_stats();
+        assert_eq!(b1, b0, "paged allocation moves no bytes");
+        assert!(sess.is_paged());
+        assert!(sess.has_resident("kc0"));
+        assert_eq!(sess.resident_shape("kc0"), Some(&[4usize, 2, 8, 32][..]));
+        assert_eq!(sess.resident_bytes(), 0, "no live pages before seating");
+        let src = Tensor::from_vec(&[1, 2, 6, 32], vec![1.0; 2 * 6 * 32]);
+        sess.write_lane("kc0", 0, &src).unwrap();
+        sess.write_lane("vc0", 0, &src).unwrap();
+        let (_, b2) = e.upload_stats();
+        assert_eq!(b2 - b1, 2 * (2 * 6 * 32 * 4) as u64, "seating pays src bytes");
+        // ceil(6/4) = 2 live pages per cache, each [h=2, page=4, hd=32] f32
+        assert_eq!(sess.resident_bytes(), 4 * (2 * 4 * 32 * 4) as u64);
+        // prefix map: lane 1 shares lane 0's first page in both caches
+        let mapped = sess.map_prefix(0, 1, 1).unwrap();
+        assert_eq!(mapped, 2);
+        assert_eq!(e.upload_stats().1, b2, "prefix maps move no bytes");
+        let kc = sess.download("kc0").unwrap().f32().unwrap();
+        assert_eq!(kc.at(&[1, 0, 3, 0]), 1.0); // shared page rows visible
+        assert_eq!(kc.at(&[1, 0, 4, 0]), 0.0); // beyond the mapped prefix
+        // donor retires; the sharer still reads the prefix page
+        sess.zero_lane("kc0", 0).unwrap();
+        sess.zero_lane("vc0", 0).unwrap();
+        let kc = sess.download("kc0").unwrap().f32().unwrap();
+        assert_eq!(kc.at(&[0, 0, 0, 0]), 0.0);
+        assert_eq!(
+            kc.at(&[1, 0, 3, 0]),
+            1.0,
+            "refcounted prefix page survives donor retirement"
+        );
+        // freeing releases every page
+        assert!(sess.free_resident("kc0"));
+        assert!(sess.free_resident("vc0"));
+        assert_eq!(sess.resident_bytes(), 0);
     }
 
     #[test]

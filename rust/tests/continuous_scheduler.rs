@@ -1,9 +1,9 @@
 //! Continuous-scheduler correctness: per-request token streams under
 //! in-flight admission must be **bitwise identical** to the
 //! batch-synchronous `serve_batch` reference — whatever the admission
-//! policy, lane count, thread count, residency or compaction setting —
-//! and a recycled lane must never expose its previous occupant's KV
-//! rows.
+//! policy, lane count, thread count, residency (dense, paged, legacy;
+//! prefix-hit or cold) or compaction setting — and a recycled lane must
+//! never expose its previous occupant's KV rows.
 
 use std::sync::mpsc::channel;
 use std::sync::{Mutex, OnceLock};
@@ -96,7 +96,7 @@ fn continuous_matches_serve_batch_across_threads_and_residency() {
 
     for threads in [1usize, 4] {
         pool::set_threads(threads);
-        for residency in [Residency::Resident, Residency::Legacy] {
+        for residency in [Residency::Resident, Residency::Paged, Residency::Legacy] {
             let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
             server.set_residency(residency);
             let mut batcher = queue(&reqs, AdmissionPolicy::Fifo);
@@ -108,10 +108,10 @@ fn continuous_matches_serve_batch_across_threads_and_residency() {
                 want,
                 "continuous tokens diverged ({residency:?}, {threads} threads)"
             );
-            if residency == Residency::Resident {
+            if residency != Residency::Legacy {
                 assert_eq!(
                     server.metrics.decode_kv_upload_bytes, 0,
-                    "continuous resident decode must never re-upload a KV cache"
+                    "continuous {residency:?} decode must never re-upload a KV cache"
                 );
             }
             assert_eq!(server.metrics.requests, reqs.len());
@@ -132,7 +132,7 @@ fn admission_order_lanes_and_compaction_do_not_change_tokens() {
             for compact in [true, false] {
                 let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
                 let mut batcher = queue(&reqs, policy);
-                let opts = SchedulerOpts { lanes, stream: None, compact };
+                let opts = SchedulerOpts { lanes, compact, ..SchedulerOpts::default() };
                 let got = serve_continuous(&mut server, &mut batcher, opts).unwrap();
                 assert_eq!(
                     tokens_by_id(got),
@@ -152,7 +152,7 @@ fn streaming_events_reassemble_every_response() {
     let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
     let mut batcher = queue(&reqs, AdmissionPolicy::Fifo);
     let (tx, rx) = channel::<StreamEvent>();
-    let opts = SchedulerOpts { lanes: None, stream: Some(tx), compact: true };
+    let opts = SchedulerOpts { stream: Some(tx), ..SchedulerOpts::default() };
     let responses = serve_continuous(&mut server, &mut batcher, opts).unwrap();
     let events: Vec<StreamEvent> = rx.into_iter().collect();
 
@@ -178,7 +178,7 @@ fn recycled_lane_never_observes_previous_occupants_kv() {
     let cfg = ctx.engine.config().clone();
     let base = base_prompt();
 
-    for residency in [Residency::Resident, Residency::Legacy] {
+    for residency in [Residency::Resident, Residency::Paged, Residency::Legacy] {
         let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
         server.set_residency(residency);
         let max_pos = cfg.seq_len.min(cfg.max_decode_len);
@@ -233,6 +233,57 @@ fn recycled_lane_never_observes_previous_occupants_kv() {
         assert!(row(&k, 0, 0).iter().all(|&x| x == 0.0));
         state.release();
     }
+}
+
+#[test]
+fn shared_prefix_admission_skips_prefill_and_matches_cold_path() {
+    // Four requests sharing a long prompt prefix (the shared-system-prompt
+    // pattern): under paged residency with the prefix cache on, later
+    // admissions must seat by mapping the donor's pages and replaying
+    // only the prompt tail — provably skipping prefill rows — while
+    // producing tokens bit-identical to the cold path.
+    let ctx = shared().lock().unwrap();
+    let base = base_prompt();
+    // plen 40 / 48 alternating: with the default 16-position page every
+    // prompt past the first shares two full pages (32 tokens) of prefix
+    let reqs: Vec<Request> = (0..4u64)
+        .map(|i| Request::new(i, base[..40 + 8 * (i as usize % 2)].to_vec(), 4))
+        .collect();
+    let want = solo_reference(&ctx, &reqs);
+
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    server.set_residency(Residency::Paged);
+    let mut batcher = queue(&reqs, AdmissionPolicy::Fifo);
+    let got = serve_continuous(&mut server, &mut batcher, SchedulerOpts::default()).unwrap();
+    assert_eq!(
+        tokens_by_id(got),
+        want,
+        "prefix-hit admission changed tokens vs the cold path"
+    );
+    assert!(
+        server.metrics.prefix_pages_reused > 0,
+        "shared-prefix workload must map donor pages"
+    );
+    assert!(
+        server.metrics.prefill_rows_skipped > 0,
+        "shared-prefix workload must skip prefill rows"
+    );
+    assert!(
+        server.metrics.prefix_hit_rate() > 0.0 && server.metrics.prefix_hit_rate() <= 1.0,
+        "hit rate out of range: {}",
+        server.metrics.prefix_hit_rate()
+    );
+
+    // HEAPR_NO_PREFIX_CACHE equivalent (opts knob; env stays untouched in
+    // a threaded test): same queue, cold admissions only, same tokens
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    server.set_residency(Residency::Paged);
+    let mut batcher = queue(&reqs, AdmissionPolicy::Fifo);
+    let opts = SchedulerOpts { prefix_cache: false, ..SchedulerOpts::default() };
+    let got = serve_continuous(&mut server, &mut batcher, opts).unwrap();
+    assert_eq!(tokens_by_id(got), want, "cold paged path diverged");
+    assert_eq!(server.metrics.prefix_pages_reused, 0);
+    assert_eq!(server.metrics.prefill_rows_skipped, 0);
 }
 
 #[test]

@@ -17,7 +17,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use heapr::runtime::{write_lane_f32, zero_lane_f32};
+use heapr::runtime::{write_lane_f32, zero_lane_f32, PagedKv};
 use heapr::tensor::gemm::{self, Layout};
 use heapr::tensor::Tensor;
 use heapr::util::pool::{self, RowsPtr, ThreadPool};
@@ -155,6 +155,142 @@ fn write_lane_zeroes_lane_then_copies_rect() {
     // contract violations are errors, not UB
     assert!(write_lane_f32(&mut dst, 9, &src).is_err());
     assert!(zero_lane_f32(&mut dst, 3).is_err());
+}
+
+/// Property test for the paged KV allocator: a deterministic random walk
+/// of write/share/append/retire operations across lanes, asserting the
+/// pool invariants the serving path leans on — refcount consistency
+/// (shared rows survive any one side's retirement, bit-identically),
+/// rejection of writes into shared pages (append-only tails; no aliased
+/// mutation), and zero leaked pages once every lane has drained.
+#[test]
+fn paged_kv_random_walk_holds_refcount_and_leak_invariants() {
+    let (lanes, capacity, page, h, hd, steps) =
+        if cfg!(miri) { (3, 8, 2, 1, 4, 60) } else { (6, 32, 4, 2, 8, 1200) };
+    let mut pk = PagedKv::new(page, h, hd, None).unwrap();
+    pk.alloc_resident("kc", lanes, capacity).unwrap();
+
+    // host-side mirror of what each lane's rows should read back as
+    let mut mirror: Vec<Vec<Vec<f32>>> = vec![vec![vec![0.0; hd]; h * capacity]; lanes];
+    // rows each lane owns (written or mapped); shared-from tracking is
+    // implicit — the mirror holds the donor's values after share_prefix
+    let mut rows_of: Vec<usize> = vec![0; lanes];
+
+    let mut s: u32 = 0x5EED_1234;
+    let mut rng = move || {
+        s ^= s << 13;
+        s ^= s >> 17;
+        s ^= s << 5;
+        s
+    };
+    for step in 0..steps {
+        let lane = rng() as usize % lanes;
+        match rng() % 4 {
+            // write_lane: fresh rows replace the lane wholesale
+            0 => {
+                let rows = 1 + rng() as usize % capacity;
+                let mut data = vec![0.0f32; h * rows * hd];
+                fill(&mut data, step as u32 | 1);
+                let src = Tensor::from_vec(&[1, h, rows, hd], data.clone());
+                pk.write_lane("kc", lane, &src).unwrap();
+                for hi in 0..h {
+                    for si in 0..capacity {
+                        mirror[lane][hi * capacity + si] = if si < rows {
+                            data[(hi * rows + si) * hd..(hi * rows + si + 1) * hd].to_vec()
+                        } else {
+                            vec![0.0; hd]
+                        };
+                    }
+                }
+                rows_of[lane] = rows;
+            }
+            // share_prefix: map a donor's full pages into an empty lane
+            1 => {
+                let dst = rng() as usize % lanes;
+                let npages = rows_of[lane] / page;
+                if dst == lane || npages == 0 || pk.lane_pages("kc", dst).unwrap() > 0 {
+                    continue;
+                }
+                let got = pk.share_prefix("kc", lane, dst, npages).unwrap();
+                assert_eq!(got, npages, "share_prefix must map every requested page");
+                for hi in 0..h {
+                    for si in 0..npages * page {
+                        mirror[dst][hi * capacity + si] = mirror[lane][hi * capacity + si].clone();
+                    }
+                }
+                rows_of[dst] = npages * page;
+            }
+            // append_row: extend the lane's tail one position
+            2 => {
+                let si = rows_of[lane];
+                if si >= capacity {
+                    continue;
+                }
+                let covering_shared = rows_of[lane] % page != 0
+                    && pk.lane_pages("kc", lane).unwrap() > 0
+                    && {
+                        // a mid-page append lands in the last mapped page;
+                        // if that page is shared, the pool must refuse
+                        let mut row = vec![0.0f32; hd];
+                        fill(&mut row, 0xA11CE);
+                        let r = pk.append_row("kc", lane, 0, si, &row);
+                        if r.is_err() {
+                            true
+                        } else {
+                            for hi in 1..h {
+                                pk.append_row("kc", lane, hi, si, &row).unwrap();
+                            }
+                            for hi in 0..h {
+                                mirror[lane][hi * capacity + si] = row.clone();
+                            }
+                            rows_of[lane] = si + 1;
+                            false
+                        }
+                    };
+                if !covering_shared && rows_of[lane] % page == 0 {
+                    // page-aligned append: always lands on a fresh page
+                    let mut row = vec![0.0f32; hd];
+                    fill(&mut row, step as u32 ^ 0xF00D);
+                    for hi in 0..h {
+                        pk.append_row("kc", lane, hi, si, &row).unwrap();
+                        mirror[lane][hi * capacity + si] = row.clone();
+                    }
+                    rows_of[lane] = si + 1;
+                }
+            }
+            // zero_lane: retire; refcounted pages must not corrupt donors
+            _ => {
+                pk.zero_lane("kc", lane).unwrap();
+                for cell in mirror[lane].iter_mut() {
+                    cell.fill(0.0);
+                }
+                rows_of[lane] = 0;
+            }
+        }
+        // full readback against the mirror every few steps (every step
+        // under Miri would be quadratic in interpreter time)
+        if step % 16 == 0 {
+            for l in 0..lanes {
+                for hi in 0..h {
+                    for si in 0..capacity {
+                        let got = pk.row("kc", l, hi, si).unwrap();
+                        assert_eq!(
+                            got,
+                            &mirror[l][hi * capacity + si][..],
+                            "lane {l} head {hi} row {si} diverged at step {step}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // drain: every lane retires, every page must come home
+    for lane in 0..lanes {
+        pk.zero_lane("kc", lane).unwrap();
+    }
+    assert_eq!(pk.live_pages(), 0, "pages leaked after drain");
+    assert_eq!(pk.resident_bytes(), 0);
 }
 
 #[test]

@@ -1,0 +1,228 @@
+//! Paged KV residency: bitwise parity with dense residents, refcounted
+//! prefix-page lifetimes across lane retirement, and the acceptance
+//! criterion that a fixed page budget admits strictly more mixed-extent
+//! lanes than fixed-extent rectangles.
+
+use std::sync::{Mutex, OnceLock};
+
+use heapr::coordinator::{Request, Residency, Server};
+use heapr::model::store::ParamStore;
+use heapr::runtime::{Engine, PagedKv};
+use heapr::tensor::Tensor;
+
+const DIR: &str = "artifacts/tiny";
+
+struct Shared {
+    engine: Engine,
+    params: ParamStore,
+}
+
+// SAFETY: access is serialized through the Mutex (see integration.rs).
+unsafe impl Send for Shared {}
+
+fn shared() -> &'static Mutex<Shared> {
+    static CTX: OnceLock<Mutex<Shared>> = OnceLock::new();
+    CTX.get_or_init(|| {
+        let engine = Engine::open(DIR).expect("open tiny preset");
+        let params = ParamStore::init(&engine.manifest, 23);
+        Mutex::new(Shared { engine, params })
+    })
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    // deterministic mixed-length prompts over the byte vocab
+    (0..3usize)
+        .map(|i| (0..12 + 10 * i).map(|j| ((j * 7 + i * 31) % 250 + 2) as i32).collect())
+        .collect()
+}
+
+#[test]
+fn paged_serve_is_bitwise_equal_to_dense_residency() {
+    let ctx = shared().lock().unwrap();
+    let reqs: Vec<Request> = prompts()
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p, 4 + i))
+        .collect();
+
+    let mut dense = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    dense.set_residency(Residency::Resident);
+    let want = dense.serve_batch(&reqs).unwrap();
+
+    let mut paged = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    paged.set_residency(Residency::Paged);
+    let got = paged.serve_batch(&reqs).unwrap();
+
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.id, g.id);
+        assert_eq!(w.tokens, g.tokens, "req {} tokens diverged under paging", w.id);
+    }
+    assert_eq!(dense.metrics.kv_pages_allocated, 0, "dense states own no pages");
+    assert!(paged.metrics.kv_pages_allocated > 0, "paged serve must allocate pages");
+    assert!(paged.metrics.kv_pages_peak > 0);
+    assert_eq!(
+        paged.metrics.decode_kv_upload_bytes, 0,
+        "paged decode must never re-upload a KV cache"
+    );
+}
+
+#[test]
+fn paged_prefill_and_decode_caches_match_dense_bitwise() {
+    // Stronger than token equality: the downloaded cache tensors (the
+    // paged ones gathered through page tables) must match the dense
+    // rectangles bit for bit, after prefill and after decode appends.
+    let ctx = shared().lock().unwrap();
+    let ps = prompts();
+
+    let mut dense = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    dense.set_residency(Residency::Resident);
+    let mut paged = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    paged.set_residency(Residency::Paged);
+
+    let (ld, mut sd) = dense.prefill_with_capacity(&ps, 48).unwrap();
+    let (lp, mut sp) = paged.prefill_with_capacity(&ps, 48).unwrap();
+    assert_eq!(sd.capacity(), sp.capacity());
+    assert_eq!(ld.data(), lp.data(), "prefill logits diverged");
+    for l in 0..sd.n_layers() {
+        let (kd, vd) = sd.kv_cache(l).unwrap();
+        let (kp, vp) = sp.kv_cache(l).unwrap();
+        assert_eq!(kd.shape(), kp.shape());
+        assert_eq!(kd.data(), kp.data(), "layer {l} K diverged after prefill");
+        assert_eq!(vd.data(), vp.data(), "layer {l} V diverged after prefill");
+    }
+
+    // two decode steps: the paged append path must track the dense one
+    let argmax = |logits: &Tensor, row: usize| -> i32 {
+        let v = logits.shape()[1];
+        let xs = &logits.data()[row * v..(row + 1) * v];
+        let mut best = 0usize;
+        for (j, &x) in xs.iter().enumerate() {
+            if x > xs[best] {
+                best = j;
+            }
+        }
+        best as i32
+    };
+    let mut next: Vec<i32> = vec![5, 6, 7];
+    let mut poss: Vec<usize> = ps.iter().map(|p| p.len()).collect();
+    for _ in 0..2 {
+        let od = dense.decode_step(&next, &poss, &mut sd).unwrap();
+        let op = paged.decode_step(&next, &poss, &mut sp).unwrap();
+        assert_eq!(od.data(), op.data(), "decode logits diverged");
+        for (i, p) in poss.iter_mut().enumerate() {
+            next[i] = argmax(&od, i);
+            *p += 1;
+        }
+    }
+    for l in 0..sd.n_layers() {
+        let (kd, _) = sd.kv_cache(l).unwrap();
+        let (kp, _) = sp.kv_cache(l).unwrap();
+        assert_eq!(kd.data(), kp.data(), "layer {l} K diverged after decode");
+    }
+    sd.release();
+    sp.release();
+}
+
+#[test]
+fn retired_sharer_cannot_zero_live_prefix_pages() {
+    // The zero_lane satellite at the serve layer: a donor lane retiring
+    // must only drop its refcounts — a prefix page still mapped by a live
+    // sharer keeps its rows until the sharer retires too.
+    let ctx = shared().lock().unwrap();
+    let cfg = ctx.engine.config().clone();
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    server.set_residency(Residency::Paged);
+
+    let mut state = server.empty_state(2, 64).unwrap();
+    let page = state.kv_page().expect("paged state");
+    let npages = 32 / page;
+    assert!(npages >= 1, "test assumes HEAPR_KV_PAGE <= 32 (default 16)");
+
+    let prompt: Vec<i32> = (0..32).map(|j| (j % 250 + 2) as i32).collect();
+    let (_l, solo) = server.prefill_with_capacity(&[prompt], state.capacity()).unwrap();
+    state.admit_lane(0, &solo, 32).unwrap();
+    solo.release();
+
+    let mapped = state.map_prefix(0, 1, npages).unwrap();
+    assert_eq!(
+        mapped,
+        npages * 2 * cfg.n_layers,
+        "every layer's K and V tables must map the shared pages"
+    );
+
+    let row = |t: &Tensor, lane: usize, pos: usize| -> Vec<f32> {
+        let (h, hd, s) = (cfg.n_heads, cfg.d_head, t.shape()[2]);
+        let start = ((lane * h) * s + pos) * hd;
+        t.data()[start..start + hd].to_vec()
+    };
+
+    // donor retires: the sharer's view of the prefix must survive intact
+    let (k_before, _) = state.kv_cache(0).unwrap();
+    state.zero_lane(0).unwrap();
+    let (k, v) = state.kv_cache(0).unwrap();
+    for pos in 0..npages * page {
+        assert_eq!(
+            row(&k, 1, pos),
+            row(&k_before, 1, pos),
+            "retiring the donor corrupted the sharer's prefix row {pos}"
+        );
+    }
+    assert!(row(&k, 1, 0).iter().any(|&x| x != 0.0), "shared rows must be real data");
+    for pos in 0..32 {
+        assert!(
+            row(&k, 0, pos).iter().all(|&x| x == 0.0)
+                && row(&v, 0, pos).iter().all(|&x| x == 0.0),
+            "the donor's own lane view must be zeroed at row {pos}"
+        );
+    }
+
+    // sharer retires: now — and only now — the pages actually free
+    state.zero_lane(1).unwrap();
+    let (live, _peak, _total) = state.page_stats().unwrap();
+    assert_eq!(live, 0, "refcounts must drain to zero once both sides retire");
+    let (k, _) = state.kv_cache(0).unwrap();
+    assert!(k.data().iter().all(|&x| x == 0.0));
+    state.release();
+}
+
+#[test]
+fn fixed_page_budget_admits_strictly_more_mixed_extent_lanes() {
+    // Acceptance criterion, demonstrated as an assertion: under the same
+    // byte budget, paged residency seats strictly more concurrent
+    // mixed-extent lanes than fixed-extent rectangles.
+    let (page, h, hd, capacity) = (16usize, 2usize, 32usize, 64usize);
+    let budget_pages = 8usize;
+    let mut pk = PagedKv::new(page, h, hd, Some(budget_pages)).unwrap();
+    let budget_bytes = budget_pages * pk.page_bytes();
+
+    // a dense lane is a full [h, capacity, hd] rectangle, whatever the
+    // occupant actually wrote
+    let dense_lane_bytes = h * capacity * hd * 4;
+    let dense_lanes = budget_bytes / dense_lane_bytes;
+    assert_eq!(dense_lanes, 2, "fixture: the budget fits exactly 2 dense lanes");
+
+    // paged lanes pay only for written rows: short-prompt occupants with
+    // a large *potential* extent cost one page each
+    pk.alloc_resident("kc", 16, capacity).unwrap();
+    let rows = page / 2; // 8-row prompts, extent up to `capacity`
+    let mut seated = 0usize;
+    for lane in 0..16 {
+        let src = Tensor::from_vec(&[1, h, rows, hd], vec![1.0; h * rows * hd]);
+        match pk.write_lane("kc", lane, &src) {
+            Ok(()) => seated += 1,
+            Err(_) => break, // budget exhausted
+        }
+    }
+    assert_eq!(seated, budget_pages, "one page per short lane until the budget caps");
+    assert!(
+        seated > dense_lanes,
+        "paging must admit strictly more mixed-extent lanes ({seated} vs {dense_lanes})"
+    );
+    assert_eq!(pk.live_pages(), budget_pages, "failed admissions must not leak pages");
+
+    // retiring one lane frees its page for the next admission
+    pk.zero_lane("kc", 0).unwrap();
+    let src = Tensor::from_vec(&[1, h, rows, hd], vec![2.0; h * rows * hd]);
+    pk.write_lane("kc", 15, &src).unwrap();
+    assert_eq!(pk.live_pages(), budget_pages);
+}
