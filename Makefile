@@ -42,18 +42,24 @@ docs:
 # the SAFETY-comment convention on every unsafe site, the NaN-ordering
 # ban (no partial_cmp().unwrap() outside util::cmp), the single-spawn-path
 # policy (util::pool::spawn_named), the HEAPR_* env-var registry against
-# README's table, and rust/tests ⇄ Cargo.toml test registration. Exits
+# README's table, rust/tests ⇄ Cargo.toml test registration, the
+# ARCHITECTURE layer map (layering), lock acquisition-order cycles
+# (lock-order), the decode-hot-path panic ban (panic-free-serve), and
+# SendPtr/RowsPtr construction confinement (sendptr-confinement). Exits
 # nonzero with clickable file:line:col diagnostics; escape hatch is a
-# span-anchored `// lint:allow(<rule>)` comment (see README).
+# span-anchored `// lint:allow(<rule>)` comment (see README). CI runs
+# the same binary with --json and renders findings as PR annotations.
 lint:
 	cargo run -q --release --bin heapr-lint -- --root .
 
 # Nightly-only: run the cfg(miri)-shrunk unsafe-substrate subset under
-# Miri (pool fan-out, RowsPtr disjoint slicing, lane writes). Needs
-# `rustup +nightly component add miri`. Mirrored by the non-blocking
+# Miri (pool fan-out, RowsPtr disjoint slicing, lane writes). Override
+# MIRI_NIGHTLY to use the CI-pinned toolchain (see verify.yml); needs
+# `rustup +$(MIRI_NIGHTLY) component add miri`. Mirrored by the gating
 # CI job in .github/workflows/verify.yml.
+MIRI_NIGHTLY ?= nightly
 miri:
-	cargo +nightly miri test --test miri_subset
+	cargo +$(MIRI_NIGHTLY) miri test --test miri_subset
 
 verify: fmt clippy docs lint tier1
 

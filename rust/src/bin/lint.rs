@@ -1,18 +1,30 @@
 //! `heapr-lint` — the repo's dependency-free static-analysis gate.
 //!
-//! Usage: `heapr-lint [--root <repo-root>]` (default: the current
-//! directory). Prints one clickable `file:line:col: [rule] message` per
-//! finding and exits nonzero when anything fires. `make lint` runs it
-//! as part of `make verify`; the engine and rule catalogue live in
-//! `heapr::lint` (see `docs/ARCHITECTURE.md` §7).
+//! Usage: `heapr-lint [--root <repo-root>] [--json] [--rule <name>]…`
+//! (default root: the current directory). Prints one clickable
+//! `file:line:col: [rule] message` per finding — or, under `--json`,
+//! one JSON object per line (`{"file":…,"line":…,"col":…,"rule":…,
+//! "msg":…}`) for machine consumption (CI turns these into GitHub
+//! annotations) — and exits nonzero when anything fires. `--rule`
+//! restricts output to the named rule(s) (repeatable) so a developer
+//! can iterate on one rule; the name must be a known rule or
+//! meta-diagnostic. `make lint` runs the binary as part of
+//! `make verify`; the engine and rule catalogue live in `heapr::lint`
+//! (see `docs/ARCHITECTURE.md` §7).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use heapr::lint;
+use heapr::lint::{self, rules};
+
+fn usage() {
+    println!("usage: heapr-lint [--root <repo-root>] [--json] [--rule <name>]...");
+}
 
 fn main() -> ExitCode {
     let mut root = PathBuf::from(".");
+    let mut json = false;
+    let mut only: Vec<String> = Vec::new();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -23,8 +35,28 @@ fn main() -> ExitCode {
                     return ExitCode::from(2);
                 }
             },
+            "--json" => json = true,
+            "--rule" => match args.next() {
+                Some(name) => {
+                    let known = rules::RULES.contains(&name.as_str())
+                        || name == rules::UNKNOWN_RULE
+                        || name == rules::ALLOW_JUSTIFY;
+                    if !known {
+                        eprintln!(
+                            "heapr-lint: unknown rule `{name}` (known: {:?})",
+                            rules::RULES
+                        );
+                        return ExitCode::from(2);
+                    }
+                    only.push(name);
+                }
+                None => {
+                    eprintln!("heapr-lint: --rule needs a rule name");
+                    return ExitCode::from(2);
+                }
+            },
             "-h" | "--help" => {
-                println!("usage: heapr-lint [--root <repo-root>]");
+                usage();
                 return ExitCode::SUCCESS;
             }
             other => {
@@ -34,13 +66,22 @@ fn main() -> ExitCode {
         }
     }
     match lint::lint_repo(&root) {
-        Ok(diags) if diags.is_empty() => {
-            println!("heapr-lint: clean");
-            ExitCode::SUCCESS
-        }
-        Ok(diags) => {
+        Ok(mut diags) => {
+            if !only.is_empty() {
+                diags.retain(|d| only.iter().any(|r| r == d.rule));
+            }
+            if diags.is_empty() {
+                if !json {
+                    println!("heapr-lint: clean");
+                }
+                return ExitCode::SUCCESS;
+            }
             for d in &diags {
-                println!("{d}");
+                if json {
+                    println!("{}", d.to_json());
+                } else {
+                    println!("{d}");
+                }
             }
             eprintln!("heapr-lint: {} finding(s)", diags.len());
             ExitCode::FAILURE

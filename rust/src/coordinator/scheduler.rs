@@ -51,7 +51,7 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{Batcher, Request, RequestId};
 use crate::coordinator::prefix::PrefixIndex;
@@ -211,7 +211,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
                     let lane = self.admit(
                         req,
                         slot,
-                        state.as_mut().expect("state exists"),
+                        state.as_mut().context("scheduler state exists after admission")?,
                         pidx.as_mut(),
                     )?;
                     lanes[slot] = Some(lane);
@@ -238,7 +238,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
             }
 
             // -- one decode step across all lanes ----------------------
-            let st = state.as_mut().expect("occupied lanes have a state");
+            let st = state.as_mut().context("occupied lanes have a state")?;
             let mut next = vec![PAD; lanes.len()];
             let mut poss = vec![0usize; lanes.len()];
             for (i, lane) in lanes.iter().enumerate() {
@@ -392,7 +392,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         for p in shared_rows..req.prompt.len() {
             logits = Some(self.server.decode_lane_step(req.prompt[p], p, state, slot)?);
         }
-        let logits = logits.expect("non-empty tail by construction");
+        let logits = logits.context("prefix-hit replay left no tail logits")?;
         let next = argmax_row(&logits, 0);
         debug!(
             "prefix-hit: request {} into lane {slot} ({npages} pages from lane {src})",
@@ -413,7 +413,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         pidx: Option<&mut PrefixIndex>,
         responses: &mut Vec<Response>,
     ) -> Result<()> {
-        let lane = lanes[slot].take().expect("retiring an empty lane");
+        let lane = lanes[slot].take().context("retire called on an empty lane")?;
         if let Some(idx) = pidx {
             // the lane can no longer donate its prefix; pages it shared
             // stay alive through their refcounts, not through the index

@@ -27,7 +27,7 @@
 
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::Request;
 use crate::coordinator::router::Router;
@@ -527,13 +527,14 @@ impl<'e> Server<'e> {
         let d = cfg.d_model;
         let n = x.shape()[0];
         let buckets = cfg.token_buckets.clone();
-        let max_bucket = *buckets.last().unwrap();
+        let max_bucket = *buckets.last().context("token_buckets is non-empty")?;
         let mut y = x.clone(); // residual accumulates expert outputs
 
         let mut start = 0usize;
         while start < n {
             let take = (n - start).min(max_bucket);
-            let nb = Router::token_bucket(&buckets, take).unwrap();
+            let nb = Router::token_bucket(&buckets, take)
+                .context("chunk size fits the largest token bucket")?;
             // pad chunk to bucket
             let mut chunk = vec![0.0f32; nb * d];
             chunk[..take * d]
@@ -579,7 +580,8 @@ impl<'e> Server<'e> {
                 let mut gstart = 0usize;
                 while gstart < pairs.len() {
                     let gtake = (pairs.len() - gstart).min(max_bucket);
-                    let gb = Router::token_bucket(&buckets, gtake).unwrap();
+                    let gb = Router::token_bucket(&buckets, gtake)
+                        .context("group size fits the largest token bucket")?;
                     let mut xs = vec![0.0f32; gb * d];
                     let gather = |i: usize, dst: &mut [f32]| {
                         let (t, _) = pairs[gstart + i];
@@ -591,6 +593,7 @@ impl<'e> Server<'e> {
                         }
                     } else {
                         // parallel gather: lane i fills row i only
+                        // lint:allow(sendptr-confinement) disjoint-row gather; see SAFETY at the use site below
                         let ptr = RowsPtr::new(&mut xs);
                         pool::par_for(gtake, |i| {
                             // SAFETY: lane i writes only row i of xs —
@@ -618,7 +621,11 @@ impl<'e> Server<'e> {
                             ],
                         )?
                     };
-                    let ys = res.into_iter().next().unwrap().f32()?;
+                    let ys = res
+                        .into_iter()
+                        .next()
+                        .context("expert kernel returns one output")?
+                        .f32()?;
                     let scatter = |i: usize, dst: &mut [f32]| {
                         let (_, w) = pairs[gstart + i];
                         let src = &ys.data()[i * d..(i + 1) * d];
@@ -635,6 +642,7 @@ impl<'e> Server<'e> {
                     } else {
                         // parallel scatter-add: token indices are unique
                         // within a group, so destination rows are disjoint
+                        // lint:allow(sendptr-confinement) disjoint-row scatter; see SAFETY at the use site below
                         let ptr = RowsPtr::new(y.data_mut());
                         pool::par_for(gtake, |i| {
                             let (t, _) = pairs[gstart + i];
@@ -658,7 +666,8 @@ impl<'e> Server<'e> {
         let cfg = self.cfg();
         let b = states.shape()[0];
         let d = cfg.d_model;
-        let nb = Router::token_bucket(&cfg.token_buckets, b).unwrap();
+        let nb = Router::token_bucket(&cfg.token_buckets, b)
+            .context("batch size fits the largest token bucket")?;
         let mut xs = vec![0.0f32; nb * d];
         xs[..b * d].copy_from_slice(states.data());
         let xs_t = Tensor::from_vec(&[nb, d], xs);
@@ -678,7 +687,11 @@ impl<'e> Server<'e> {
                 ],
             )?
         };
-        let logits = out.into_iter().next().unwrap().f32()?;
+        let logits = out
+            .into_iter()
+            .next()
+            .context("lm_head kernel returns one output")?
+            .f32()?;
         Ok(logits.slice0(0, b))
     }
 
@@ -997,12 +1010,15 @@ impl<'e> Server<'e> {
                         let x_b = self.engine.upload(Value::F32(x.clone()))?;
                         let kc_b = self.engine.upload(Value::F32(caches[l].0.clone()))?;
                         let vc_b = self.engine.upload(Value::F32(caches[l].1.clone()))?;
+                        let pos_b = pos_b
+                            .as_ref()
+                            .context("pos buffer is uploaded when the buffer cache is on")?;
                         self.engine.run_b(
                             &format!("attn_decode_b{bb}"),
                             &[
                                 &x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf,
                                 &a[3].buf, &a[4].buf, &kc_b.buf, &vc_b.buf,
-                                &pos_b.as_ref().unwrap().buf,
+                                &pos_b.buf,
                             ],
                         )?
                     } else {
@@ -1198,8 +1214,7 @@ pub(crate) fn argmax_row(logits: &Tensor, row: usize) -> i32 {
     xs.iter()
         .enumerate()
         .max_by(|a, b| crate::util::cmp::f32_nan_first(*a.1, *b.1))
-        .unwrap()
-        .0 as i32
+        .map_or(0, |(i, _)| i as i32)
 }
 
 /// Re-seat a [B, H, T, hd] prefill cache in a [B, H, S, hd] decode cache
@@ -1207,6 +1222,7 @@ pub(crate) fn argmax_row(logits: &Tensor, row: usize) -> i32 {
 /// (if growing) zeroed. Runs once per sequence at prefill — per-step cache
 /// movement is gone; the resident path appends in place instead.
 fn fit_cache(kv: &Tensor, s: usize) -> Tensor {
+    // lint:allow(panic-free-serve) shape invariant: prefill caches are always [B,H,T,hd] from the attn kernels
     let &[b, h, t, hd] = kv.shape() else { panic!("bad cache shape") };
     let keep = t.min(s);
     let mut out = Tensor::zeros(&[b, h, s, hd]);
@@ -1226,6 +1242,7 @@ fn fit_cache(kv: &Tensor, s: usize) -> Tensor {
 /// admission copy, in a single pass. Shared with the scheduler's
 /// compaction, which trims survivors to their written rows.
 pub(crate) fn lane_rows(kv: &Tensor, lane: usize, rows: usize) -> Tensor {
+    // lint:allow(panic-free-serve) shape invariant: decode caches are always [B,H,S,hd] from fit_cache / the KV pool
     let &[_b, h, t, hd] = kv.shape() else { panic!("bad cache shape") };
     let keep = t.min(rows);
     let mut out = Tensor::zeros(&[1, h, rows, hd]);

@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use crate::config::ModelConfig;
 use crate::model::store::ParamStore;
+// lint:allow(layering) by design: calibration drives the engine as a client (ARCHITECTURE §2); it is not on the serve path
 use crate::runtime::{Engine, Value};
 use crate::tensor::{ITensor, Tensor};
 

@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use crate::heapr::calibrate::CalibStats;
 use crate::model::store::ParamStore;
+// lint:allow(layering) by design: importance scoring drives the engine as a client (ARCHITECTURE §2); it is not on the serve path
 use crate::runtime::{Engine, Value};
 use crate::tensor::Tensor;
 #[cfg(not(feature = "pjrt"))]

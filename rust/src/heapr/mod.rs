@@ -30,6 +30,7 @@ use anyhow::Result;
 
 use crate::data::sampler::CalibSampler;
 use crate::model::store::ParamStore;
+// lint:allow(layering) by design: HEAPr calibration drives the engine as a client (ARCHITECTURE §2); it is not on the serve path
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 

@@ -1,0 +1,673 @@
+//! Cross-file passes: rules that need to see the whole repo at once
+//! instead of one file at a time. [`super::lint_repo`] parses every
+//! source file into a [`SourceFile`], then hands the full slice here.
+//!
+//! Two rules live at this layer:
+//!
+//! * [`layering`] — extracts the intra-crate `use crate::…` graph and
+//!   asserts the ARCHITECTURE.md §7 layer map (util/tensor are the
+//!   foundation; runtime may not import the coordinator; model/heapr
+//!   may not import runtime or coordinator), plus whole-graph dependency
+//!   cycle detection with the full path in the message;
+//! * [`lock_order`] — collects `Mutex`/`Condvar` acquisition sites per
+//!   function in the lock-discipline scope (`util/pool.rs`,
+//!   `runtime/kv.rs`, `coordinator/`), builds the conservative
+//!   may-hold-while-acquiring graph (call-edge-aware within the scope),
+//!   and flags cycles as potential deadlocks.
+//!
+//! The lock model is intentionally static and conservative; see
+//! ARCHITECTURE.md §7 for the normative statement the rule encodes:
+//! a lock's identity is the final field/variable name before `.lock()`,
+//! a `let`-bound guard is held to the end of its enclosing block (or an
+//! explicit `drop(guard)`), an unbound temporary is held to the end of
+//! its statement, and `Condvar::wait*` counts as a point acquisition of
+//! the condvar's node (the wait releases its mutex, so it is never
+//! *held*).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::TokKind;
+use super::rules::{SourceFile, LAYERING, LOCK_ORDER};
+use super::tree::{Item, Tree};
+use super::Diagnostic;
+
+/// The crate module a repo-relative path belongs to, for layering:
+/// `rust/src/util/pool.rs` → `util`, `rust/src/config.rs` → `config`,
+/// `rust/src/bin/lint.rs` → `bin`. Files outside `rust/src` (tests,
+/// vendored code) are not part of the crate layer map.
+pub fn module_of(path: &str) -> Option<&str> {
+    let rest = path.strip_prefix("rust/src/")?;
+    let first = rest.split('/').next().unwrap_or(rest);
+    Some(first.strip_suffix(".rs").unwrap_or(first))
+}
+
+/// Why an import from `from` into `to` is forbidden, if it is.
+fn layer_reason(from: &str, to: &str) -> Option<&'static str> {
+    match from {
+        // Foundation: util imports nothing internal; tensor may import
+        // only util (gemm legitimately drives the thread pool).
+        "util" => Some("`util` is the foundation and imports nothing internal"),
+        "tensor" => (to != "util")
+            .then_some("`tensor` may import only `util` (foundation layer)"),
+        "runtime" => (to == "coordinator")
+            .then_some("`runtime` (L2) may not import the `coordinator` (L3)"),
+        "model" | "heapr" => matches!(to, "runtime" | "coordinator").then_some(
+            "`model`/`heapr` may not import `runtime` or `coordinator` \
+             (engine access is the caller's job)",
+        ),
+        _ => None,
+    }
+}
+
+/// Rule `layering`: assert the layer map over the `use crate::…` graph
+/// and report any dependency cycle with its full module path.
+pub fn layering(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let known: BTreeSet<&str> = files.iter().filter_map(|f| module_of(&f.path)).collect();
+    // (from, to) → use sites, in walk order (files arrive sorted).
+    let mut edges: BTreeMap<(String, String), Vec<(&str, u32, u32)>> = BTreeMap::new();
+    for f in files {
+        let Some(m) = module_of(&f.path) else { continue };
+        let toks = &f.toks;
+        for item in Tree::new(toks).items() {
+            let Item::Use { path, line, col, cfg_test } = item else { continue };
+            if cfg_test || path.first().map(String::as_str) != Some("crate") {
+                continue;
+            }
+            let Some(dep) = path.get(1) else { continue };
+            if dep == m || !known.contains(dep.as_str()) {
+                continue;
+            }
+            edges
+                .entry((m.to_string(), dep.clone()))
+                .or_default()
+                .push((f.path.as_str(), line, col));
+        }
+    }
+
+    let mut out = Vec::new();
+    for ((from, to), sites) in &edges {
+        if let Some(reason) = layer_reason(from, to) {
+            for (file, line, col) in sites {
+                out.push(Diagnostic {
+                    rule: LAYERING,
+                    file: file.to_string(),
+                    line: *line,
+                    col: *col,
+                    message: format!("layer violation: `{from}` imports `{to}`; {reason}"),
+                });
+            }
+        }
+    }
+
+    // Whole-graph cycle detection, independent of the layer table: any
+    // module cycle is a finding, anchored at the first use site of the
+    // cycle's first edge.
+    let adj: BTreeMap<&str, BTreeSet<&str>> = edges.keys().fold(
+        BTreeMap::new(),
+        |mut m, (from, to)| {
+            m.entry(from.as_str()).or_default().insert(to.as_str());
+            m
+        },
+    );
+    for cycle in find_cycles(&adj) {
+        let path = cycle.join("` → `");
+        let (file, line, col) =
+            edges[&(cycle[0].to_string(), cycle[1].to_string())][0];
+        out.push(Diagnostic {
+            rule: LAYERING,
+            file: file.to_string(),
+            line,
+            col,
+            message: format!(
+                "dependency cycle between modules: `{path}` → `{}` \
+                 (break one of these imports)",
+                cycle[0]
+            ),
+        });
+    }
+    out
+}
+
+/// Find cycles in a directed graph; returns one representative cycle per
+/// strongly-connected component, as a node path (first node repeated
+/// implicitly at the end), canonically rotated and deduplicated.
+/// Deterministic: nodes and successors iterate in sorted order.
+fn find_cycles<'a>(adj: &BTreeMap<&'a str, BTreeSet<&'a str>>) -> Vec<Vec<&'a str>> {
+    let mut found: BTreeSet<Vec<&str>> = BTreeSet::new();
+    for &start in adj.keys() {
+        // DFS with an explicit stack of (node, successor iterator index).
+        let mut stack: Vec<(&str, Vec<&str>)> = vec![(
+            start,
+            adj.get(start).map(|s| s.iter().copied().collect()).unwrap_or_default(),
+        )];
+        let mut on_path: Vec<&str> = vec![start];
+        let mut visited: BTreeSet<&str> = BTreeSet::new();
+        visited.insert(start);
+        while let Some((_, succs)) = stack.last_mut() {
+            let Some(next) = succs.pop() else {
+                stack.pop();
+                on_path.pop();
+                continue;
+            };
+            if let Some(pos) = on_path.iter().position(|&n| n == next) {
+                let mut cycle: Vec<&str> = on_path[pos..].to_vec();
+                // canonical rotation: start at the lexicographically
+                // smallest node so each cycle is reported once
+                let min = cycle.iter().enumerate().min_by_key(|(_, n)| **n).map(|(i, _)| i);
+                if let Some(i) = min {
+                    cycle.rotate_left(i);
+                }
+                found.insert(cycle);
+                continue;
+            }
+            if visited.insert(next) {
+                on_path.push(next);
+                stack.push((
+                    next,
+                    adj.get(next).map(|s| s.iter().copied().collect()).unwrap_or_default(),
+                ));
+            }
+        }
+    }
+    found.into_iter().collect()
+}
+
+// ----------------------------------------------------------- lock-order --
+
+/// Files inside the lock-discipline scope.
+fn in_lock_scope(path: &str) -> bool {
+    path.ends_with("util/pool.rs")
+        || path.ends_with("runtime/kv.rs")
+        || path.contains("coordinator/")
+}
+
+/// One acquisition event inside a function body.
+struct Acq {
+    /// Lock identity: the final field/variable name before `.lock()` /
+    /// `.wait*()`.
+    name: String,
+    /// Code-token index of the event (the receiver name token).
+    at: usize,
+    /// Half-open code-index range during which the guard is held;
+    /// `None` for point events (`Condvar::wait*` releases its mutex and
+    /// holds nothing).
+    held: Option<(usize, usize)>,
+    line: u32,
+    col: u32,
+}
+
+/// Per-function analysis result.
+struct FnLocks {
+    file: String,
+    acqs: Vec<Acq>,
+    /// `name(` call sites within the body: (callee, code index).
+    calls: Vec<(String, usize)>,
+}
+
+/// Rule `lock-order`: build the may-hold-while-acquiring graph over the
+/// lock-discipline scope and flag cycles as potential deadlocks.
+/// Same-name edges are suppressed (an indexed receiver like
+/// `slots[i].lock()` names one identity but guards many mutexes), so
+/// re-entrant acquisition is out of scope for this rule.
+pub fn lock_order(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut fns: BTreeMap<String, Vec<FnLocks>> = BTreeMap::new();
+    for f in files {
+        if !in_lock_scope(&f.path) {
+            continue;
+        }
+        let tree = Tree::new(&f.toks);
+        for item in tree.items() {
+            let Item::Fn { name, body: Some((open, close)), cfg_test, .. } = item else {
+                continue;
+            };
+            if cfg_test || name.is_empty() {
+                continue;
+            }
+            fns.entry(name).or_default().push(scan_fn(&f.path, &tree, open, close));
+        }
+    }
+
+    // Direct lock sets per function name (merged over same-name fns —
+    // conservative), then the transitive closure through call edges.
+    let mut reach: BTreeMap<String, BTreeSet<String>> = fns
+        .iter()
+        .map(|(name, bodies)| {
+            let locks = bodies
+                .iter()
+                .flat_map(|b| b.acqs.iter().map(|a| a.name.clone()))
+                .collect();
+            (name.clone(), locks)
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for (name, bodies) in &fns {
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for b in bodies {
+                for (callee, _) in &b.calls {
+                    if let Some(r) = reach.get(callee) {
+                        add.extend(r.iter().cloned());
+                    }
+                }
+            }
+            let mine = reach.get_mut(name).expect("every scanned fn has a reach entry");
+            let before = mine.len();
+            mine.extend(add);
+            changed |= mine.len() != before;
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Held-while-acquiring edges: (held, acquired) → first witness site.
+    let mut edge_site: BTreeMap<(String, String), (String, u32, u32, String)> = BTreeMap::new();
+    let mut record =
+        |from: &str, to: &str, file: &str, line: u32, col: u32, how: String| {
+            edge_site
+                .entry((from.to_string(), to.to_string()))
+                .or_insert_with(|| (file.to_string(), line, col, how));
+        };
+    for bodies in fns.values() {
+        for b in bodies {
+            for a in &b.acqs {
+                let Some((h0, h1)) = a.held else { continue };
+                for other in &b.acqs {
+                    if other.at > h0 && other.at < h1 && other.name != a.name {
+                        record(
+                            &a.name,
+                            &other.name,
+                            &b.file,
+                            other.line,
+                            other.col,
+                            format!("`{}` acquired while `{}` is held", other.name, a.name),
+                        );
+                    }
+                }
+                for (callee, at) in &b.calls {
+                    if *at <= h0 || *at >= h1 {
+                        continue;
+                    }
+                    let Some(r) = reach.get(callee) else { continue };
+                    for l in r {
+                        if *l != a.name {
+                            record(
+                                &a.name,
+                                l,
+                                &b.file,
+                                a.line,
+                                a.col,
+                                format!(
+                                    "call to `{callee}` (which may lock `{l}`) \
+                                     while `{}` is held",
+                                    a.name
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let adj: BTreeMap<&str, BTreeSet<&str>> = edge_site.keys().fold(
+        BTreeMap::new(),
+        |mut m, (from, to)| {
+            m.entry(from.as_str()).or_default().insert(to.as_str());
+            m
+        },
+    );
+    let mut out = Vec::new();
+    for cycle in find_cycles(&adj) {
+        let next = cycle.get(1).copied().unwrap_or(cycle[0]);
+        let (file, line, col, how) =
+            &edge_site[&(cycle[0].to_string(), next.to_string())];
+        let path = cycle.join("` → `");
+        out.push(Diagnostic {
+            rule: LOCK_ORDER,
+            file: file.clone(),
+            line: *line,
+            col: *col,
+            message: format!(
+                "potential deadlock: lock-order cycle `{path}` → `{}` \
+                 (each arrow = acquired while the previous is held; witness: {how})",
+                cycle[0]
+            ),
+        });
+    }
+    out
+}
+
+/// Rust keywords that look like `name(` call sites but are not calls.
+fn is_keywordish(s: &str) -> bool {
+    matches!(
+        s,
+        "if" | "while" | "for" | "match" | "return" | "loop" | "fn" | "as" | "in"
+            | "let" | "move" | "ref" | "mut" | "else" | "break" | "continue"
+    )
+}
+
+/// Scan one function body (code indices `open..=close`) for lock
+/// acquisitions and call sites.
+fn scan_fn(file: &str, tree: &Tree, open: usize, close: usize) -> FnLocks {
+    let code = &tree.code;
+    let mut acqs = Vec::new();
+    let mut calls = Vec::new();
+    let mut i = open + 1;
+    while i < close {
+        let t = code[i];
+        // `name(` call site
+        if t.kind == TokKind::Ident
+            && !is_keywordish(&t.text)
+            && code.get(i + 1).is_some_and(|n| n.text == "(")
+        {
+            match t.text.as_str() {
+                "lock" | "wait" | "wait_timeout" | "wait_while"
+                    if i > open + 1 && code[i - 1].text == "." =>
+                {
+                    if let Some(a) = acquisition(tree, open, close, i) {
+                        acqs.push(a);
+                    }
+                }
+                _ => calls.push((t.text.clone(), i)),
+            }
+        }
+        i += 1;
+    }
+    FnLocks { file: file.to_string(), acqs, calls }
+}
+
+/// Build the acquisition event for a `.lock(` / `.wait*(` at code index
+/// `m` (the method name). Returns `None` when the receiver cannot be
+/// named (conservative skip).
+fn acquisition(tree: &Tree, body_open: usize, body_close: usize, m: usize) -> Option<Acq> {
+    let code = &tree.code;
+    // receiver: the token before the `.`; step through a `]`/`)` group
+    let mut r = m - 1; // the `.`
+    if r == 0 {
+        return None;
+    }
+    r -= 1;
+    let recv = loop {
+        let t = code[r];
+        if t.kind == TokKind::Ident {
+            break t;
+        }
+        if (t.text == "]" || t.text == ")") && tree.partner(r).is_some() {
+            let open = tree.partner(r).expect("checked");
+            if open == 0 {
+                return None;
+            }
+            r = open - 1;
+            continue;
+        }
+        return None;
+    };
+    let name = recv.text.clone();
+    let is_wait = code[m].text.starts_with("wait");
+    if is_wait {
+        // Condvar::wait* releases its mutex; point event, nothing held.
+        return Some(Acq { name, at: r, held: None, line: recv.line, col: recv.col });
+    }
+    // Statement start: walk back to the nearest `;` / `{` / `}`,
+    // stepping over balanced `)`/`]` groups.
+    let mut s = r;
+    while s > body_open {
+        let prev = code[s - 1];
+        if matches!(prev.text.as_str(), ";" | "{" | "}") && prev.kind == TokKind::Punct {
+            break;
+        }
+        if (prev.text == ")" || prev.text == "]") && prev.kind == TokKind::Punct {
+            match tree.partner(s - 1) {
+                Some(o) => s = o,
+                None => break,
+            }
+            continue;
+        }
+        s -= 1;
+    }
+    let bound = code.get(s).is_some_and(|t| t.kind == TokKind::Ident && t.text == "let");
+    let end = if bound {
+        // held to the end of the enclosing block, or an explicit
+        // `drop(binding)` inside it
+        let close = tree
+            .enclosing_brace(m)
+            .and_then(|b| tree.partner(b))
+            .unwrap_or(body_close);
+        let mut bind = code.get(s + 1).filter(|t| t.kind == TokKind::Ident);
+        if bind.is_some_and(|t| t.text == "mut") {
+            bind = code.get(s + 2).filter(|t| t.kind == TokKind::Ident);
+        }
+        let mut end = close;
+        if let Some(b) = bind {
+            let mut k = m;
+            while k + 3 < close.min(code.len()) {
+                if code[k].text == "drop"
+                    && code[k + 1].text == "("
+                    && code[k + 2].text == b.text
+                    && code[k + 3].text == ")"
+                {
+                    end = k;
+                    break;
+                }
+                k += 1;
+            }
+        }
+        end
+    } else {
+        // temporary: held to the end of the statement — the next `;`, or
+        // the `{` that opens a block (an if/while condition temporary
+        // drops before the block runs)
+        let mut k = m + 1;
+        loop {
+            if k >= body_close || k >= code.len() {
+                break body_close;
+            }
+            let t = code[k];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" => {
+                        k = tree.partner(k).map(|c| c + 1).unwrap_or(body_close);
+                        continue;
+                    }
+                    ";" | "{" | "}" => break k,
+                    _ => {}
+                }
+            }
+            k += 1;
+        }
+    };
+    Some(Acq { name, at: r, held: Some((r, end)), line: recv.line, col: recv.col })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, src: &str) -> SourceFile {
+        SourceFile::parse(path, src)
+    }
+
+    // ------------------------------------------------------------ layering
+
+    #[test]
+    fn module_of_paths() {
+        assert_eq!(module_of("rust/src/util/pool.rs"), Some("util"));
+        assert_eq!(module_of("rust/src/config.rs"), Some("config"));
+        assert_eq!(module_of("rust/src/bin/lint.rs"), Some("bin"));
+        assert_eq!(module_of("rust/tests/integration.rs"), None);
+    }
+
+    #[test]
+    fn forbidden_imports_fire() {
+        let files = vec![
+            sf("rust/src/runtime/mod.rs", "use crate::coordinator::Scheduler;\n"),
+            sf("rust/src/coordinator/mod.rs", "pub struct Scheduler;\n"),
+            sf("rust/src/model/mod.rs", "use crate::runtime::Engine;\n"),
+            sf("rust/src/util/mod.rs", "use crate::runtime::Engine;\n"),
+            sf("rust/src/tensor/mod.rs", "use crate::util::pool;\n"),
+        ];
+        let d = layering(&files);
+        let fired: Vec<(&str, u32)> = d.iter().map(|x| (x.file.as_str(), x.line)).collect();
+        assert_eq!(
+            fired,
+            vec![
+                ("rust/src/model/mod.rs", 1),
+                ("rust/src/runtime/mod.rs", 1),
+                ("rust/src/util/mod.rs", 1),
+            ],
+            "{d:#?}"
+        );
+        assert!(d.iter().all(|x| x.rule == LAYERING));
+    }
+
+    #[test]
+    fn tensor_to_util_is_allowed() {
+        let files = vec![
+            sf("rust/src/tensor/gemm.rs", "use crate::util::pool::ThreadPool;\n"),
+            sf("rust/src/util/pool.rs", "pub struct ThreadPool;\n"),
+        ];
+        assert!(layering(&files).is_empty());
+    }
+
+    #[test]
+    fn cycle_is_reported_with_full_path() {
+        let files = vec![
+            sf("rust/src/alpha.rs", "use crate::beta::B;\n"),
+            sf("rust/src/beta.rs", "use crate::gamma::G;\n"),
+            sf("rust/src/gamma.rs", "use crate::alpha::A;\n"),
+        ];
+        let d = layering(&files);
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert!(d[0].message.contains("`alpha` → `beta` → `gamma` → `alpha`"), "{}", d[0].message);
+        assert_eq!(d[0].file, "rust/src/alpha.rs");
+    }
+
+    #[test]
+    fn cfg_test_imports_do_not_count() {
+        let files = vec![
+            sf(
+                "rust/src/model/mod.rs",
+                "#[cfg(test)]\nmod tests {\n    use crate::runtime::Engine;\n}\n",
+            ),
+            sf("rust/src/runtime/mod.rs", "pub struct Engine;\n"),
+        ];
+        assert!(layering(&files).is_empty());
+    }
+
+    #[test]
+    fn non_module_second_segment_is_ignored() {
+        // `use crate::debug;` imports a macro, not a module
+        let files = vec![sf("rust/src/runtime/mod.rs", "use crate::{debug, info};\n")];
+        assert!(layering(&files).is_empty());
+    }
+
+    // ---------------------------------------------------------- lock-order
+
+    fn pool(src: &str) -> Vec<SourceFile> {
+        vec![sf("rust/src/util/pool.rs", src)]
+    }
+
+    #[test]
+    fn inverted_orders_cycle() {
+        let src = "impl Q {\n\
+            fn ab(&self) {\n    let a = self.a.lock().unwrap();\n    self.b.lock().unwrap();\n}\n\
+            fn ba(&self) {\n    let b = self.b.lock().unwrap();\n    self.a.lock().unwrap();\n}\n\
+            }\n";
+        let d = lock_order(&pool(src));
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert_eq!(d[0].rule, LOCK_ORDER);
+        assert!(d[0].message.contains("`a` → `b` → `a`"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let src = "impl Q {\n\
+            fn ab(&self) {\n    let a = self.a.lock().unwrap();\n    self.b.lock().unwrap();\n}\n\
+            fn ab2(&self) {\n    let a = self.a.lock().unwrap();\n    let b = self.b.lock().unwrap();\n}\n\
+            }\n";
+        assert!(lock_order(&pool(src)).is_empty());
+    }
+
+    #[test]
+    fn drop_releases_before_second_lock() {
+        let src = "fn f(&self) {\n    let a = self.a.lock().unwrap();\n    drop(a);\n\
+                   \x20   let b = self.b.lock().unwrap();\n}\n\
+                   fn g(&self) {\n    let b = self.b.lock().unwrap();\n    drop(b);\n\
+                   \x20   let a = self.a.lock().unwrap();\n}\n";
+        assert!(lock_order(&pool(src)).is_empty());
+    }
+
+    #[test]
+    fn condition_temporary_does_not_hold_into_block() {
+        // `if *x.lock()… { y.lock() }` + elsewhere `y` then `x` must NOT
+        // cycle: the condition temporary drops before the block runs
+        let src = "fn f(&self) {\n    if *self.x.lock().unwrap() == 0 {\n        \
+                   self.y.lock().unwrap();\n    }\n}\n\
+                   fn g(&self) {\n    let y = self.y.lock().unwrap();\n    \
+                   self.x.lock().unwrap();\n}\n";
+        assert!(lock_order(&pool(src)).is_empty());
+    }
+
+    #[test]
+    fn statement_temporary_does_hold_within_statement() {
+        let src = "fn f(&self) {\n    g(self.a.lock().unwrap(), self.b.lock().unwrap());\n}\n\
+                   fn h(&self) {\n    let b = self.b.lock().unwrap();\n    \
+                   self.a.lock().unwrap();\n}\n";
+        let d = lock_order(&pool(src));
+        assert_eq!(d.len(), 1, "{d:#?}");
+    }
+
+    #[test]
+    fn call_edges_are_transitive() {
+        // f: holds a, calls g; g locks b. h: holds b, locks a → cycle.
+        let src = "fn f(&self) {\n    let a = self.a.lock().unwrap();\n    self.g();\n}\n\
+                   fn g(&self) {\n    self.b.lock().unwrap();\n}\n\
+                   fn h(&self) {\n    let b = self.b.lock().unwrap();\n    \
+                   self.a.lock().unwrap();\n}\n";
+        let d = lock_order(&pool(src));
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert!(d[0].message.contains("potential deadlock"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn same_lock_name_reacquisition_is_not_flagged() {
+        // `slots[i].lock()` / `slots[j].lock()` share a receiver name
+        // but guard *different* mutexes — same-name edges are suppressed
+        // (direct and through calls) to avoid aliasing false positives;
+        // documented limitation of the name-based lock identity.
+        let src = "fn f(&self) {\n    let a = slots[i].lock().unwrap();\n    \
+                   let b = slots[j].lock().unwrap();\n}\n";
+        assert!(lock_order(&pool(src)).is_empty());
+        let src2 = "fn f(&self) {\n    let a = self.a.lock().unwrap();\n    self.g();\n}\n\
+                    fn g(&self) {\n    self.a.lock().unwrap();\n}\n";
+        assert!(lock_order(&pool(src2)).is_empty());
+    }
+
+    #[test]
+    fn wait_is_an_acquisition_but_holds_nothing() {
+        // pool.rs shape: hold `remaining`, wait on `done_cv` → edge
+        // remaining→done_cv; the reverse never exists because a wait
+        // holds nothing. No cycle.
+        let src = "fn f(&self) {\n    let mut rem = self.remaining.lock().unwrap();\n    \
+                   while *rem > 0 {\n        rem = self.done_cv.wait(rem).unwrap();\n    }\n}\n";
+        assert!(lock_order(&pool(src)).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_fns_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n\
+                   fn ab(&self) {\n    let a = self.a.lock().unwrap();\n    self.b.lock().unwrap();\n}\n\
+                   fn ba(&self) {\n    let b = self.b.lock().unwrap();\n    self.a.lock().unwrap();\n}\n\
+                   }\n";
+        assert!(lock_order(&pool(src)).is_empty());
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored() {
+        let src = "fn ab(&self) {\n    let a = self.a.lock().unwrap();\n    self.b.lock().unwrap();\n}\n\
+                   fn ba(&self) {\n    let b = self.b.lock().unwrap();\n    self.a.lock().unwrap();\n}\n";
+        let files = vec![sf("rust/src/train/mod.rs", src)];
+        assert!(lock_order(&files).is_empty());
+    }
+}

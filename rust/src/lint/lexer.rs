@@ -10,9 +10,14 @@
 //! * line comments (`//`, `///`, `//!`) and **nested** block comments
 //!   (`/* a /* b */ c */` is one token — Rust block comments nest);
 //! * string literals with escapes (`"\\"`, `"\""`), byte strings
-//!   (`b"…"`), and raw strings with any hash depth (`r"…"`, `r#"…"#`,
-//!   `br##"…"##`) — a raw string containing `unsafe` or `*/` stays one
-//!   [`TokKind::Str`] token;
+//!   (`b"…"`), C strings (`c"…"`, Rust 1.77), and raw strings with any
+//!   hash depth (`r"…"`, `r#"…"#`, `br##"…"##`, `cr#"…"#`) — a raw
+//!   string containing `unsafe` or `*/` stays one [`TokKind::Str`]
+//!   token;
+//! * a leading UTF-8 BOM and/or `#!…` shebang line is skipped before
+//!   lexing starts (`#![inner_attr]` is *not* a shebang and still lexes
+//!   as `#` `!` `[` …), so neither can shift the classification of the
+//!   rest of the file;
 //! * raw identifiers: `r#match` is an identifier, not the start of a raw
 //!   string;
 //! * char literals vs lifetimes: `'a'` is a char, `'a` in `&'a str` is a
@@ -68,13 +73,14 @@ pub struct Tok {
 
 impl Tok {
     /// For [`TokKind::Str`] tokens: the content between the quotes, with
-    /// any `b`/`r` prefix and raw-string hashes stripped (escapes are
-    /// *not* decoded). Returns the raw text unchanged for other kinds.
+    /// any `b`/`r`/`c` prefix and raw-string hashes stripped (escapes
+    /// are *not* decoded). Returns the raw text unchanged for other
+    /// kinds.
     pub fn str_content(&self) -> &str {
         if self.kind != TokKind::Str {
             return &self.text;
         }
-        let s = self.text.trim_start_matches(['b', 'r']).trim_matches('#');
+        let s = self.text.trim_start_matches(['b', 'r', 'c']).trim_matches('#');
         s.strip_prefix('"').and_then(|s| s.strip_suffix('"')).unwrap_or(s)
     }
 }
@@ -129,6 +135,19 @@ impl<'a> Cursor<'a> {
 pub fn lex(src: &str) -> Vec<Tok> {
     let mut toks = Vec::new();
     let mut cur = Cursor::new(src);
+    // Leading BOM, then a shebang line (`#!…` at byte 0 that is not the
+    // start of an inner attribute `#![…]`) — both skipped silently so
+    // they can't shift how the rest of the file lexes. Resetting
+    // `line_start` keeps column numbers 1-based past the BOM.
+    if cur.src.starts_with(&[0xEF, 0xBB, 0xBF]) {
+        cur.i = 3;
+        cur.line_start = 3;
+    }
+    if cur.peek(0) == Some(b'#') && cur.peek(1) == Some(b'!') && cur.peek(2) != Some(b'[') {
+        while cur.peek(0).is_some_and(|c| c != b'\n') {
+            cur.bump();
+        }
+    }
     while let Some(b) = cur.peek(0) {
         if b.is_ascii_whitespace() {
             cur.bump();
@@ -172,10 +191,12 @@ fn scan_token(cur: &mut Cursor, b: u8) -> TokKind {
         }
         return TokKind::BlockComment;
     }
-    // string-ish prefixes: r"…", r#"…"#, b"…", br#"…"#, and the raw
-    // *identifier* escape r#ident (which is NOT a string)
-    if b == b'r' || b == b'b' {
-        let after_b = if b == b'b' && cur.peek(1) == Some(b'r') { 2 } else { 1 };
+    // string-ish prefixes: r"…", r#"…"#, b"…", br#"…"#, c"…", cr#"…"#
+    // (Rust 1.77 C strings), and the raw *identifier* escape r#ident
+    // (which is NOT a string)
+    if b == b'r' || b == b'b' || b == b'c' {
+        let after_b =
+            if (b == b'b' || b == b'c') && cur.peek(1) == Some(b'r') { 2 } else { 1 };
         let mut hashes = 0usize;
         while cur.peek(after_b + hashes) == Some(b'#') {
             hashes += 1;
@@ -195,7 +216,7 @@ fn scan_token(cur: &mut Cursor, b: u8) -> TokKind {
             return TokKind::Ident;
         }
         if hashes == 0 && cur.peek(after_b) == Some(b'"') {
-            // b"…" (after_b == 1 only: br"…" was handled above)
+            // b"…" / c"…" (after_b == 1 only: br/cr were handled above)
             cur.bump_n(after_b);
             return scan_quoted(cur, b'"');
         }
@@ -453,6 +474,59 @@ mod tests {
             let t = lex(src);
             assert!(!t.is_empty(), "{src:?} must still lex");
         }
+    }
+
+    #[test]
+    fn c_string_literals() {
+        let t = kinds(r###"(c"lib\0", cr#"raw " c"#)"###);
+        let strs: Vec<_> = t.iter().filter(|(k, _)| *k == TokKind::Str).collect();
+        assert_eq!(strs.len(), 2, "{t:?}");
+        assert_eq!(strs[0].1, "c\"lib\\0\"");
+        assert_eq!(strs[1].1, "cr#\"raw \" c\"#");
+    }
+
+    #[test]
+    fn c_prefixed_idents_are_not_c_strings() {
+        // `crate` starts with `cr`, `c` alone is an ident, `cr8` too
+        let t = kinds("crate c cr8 c\"s\"");
+        assert_eq!(t[0], (TokKind::Ident, "crate".into()));
+        assert_eq!(t[1], (TokKind::Ident, "c".into()));
+        assert_eq!(t[2], (TokKind::Ident, "cr8".into()));
+        assert_eq!(t[3], (TokKind::Str, "c\"s\"".into()));
+    }
+
+    #[test]
+    fn unterminated_c_string_extends_to_eof() {
+        for src in ["c\"never", "cr#\"never"] {
+            let t = lex(src);
+            assert_eq!(t.len(), 1, "{src:?} -> {t:?}");
+            assert_eq!(t[0].kind, TokKind::Str);
+        }
+    }
+
+    #[test]
+    fn shebang_line_is_skipped() {
+        let t = lex("#!/usr/bin/env run-cargo-script\nfn main() {}\n");
+        assert_eq!((t[0].kind, t[0].text.as_str(), t[0].line), (TokKind::Ident, "fn", 2));
+        assert!(t.iter().all(|x| !x.text.contains("usr")));
+    }
+
+    #[test]
+    fn inner_attribute_is_not_a_shebang() {
+        let t = kinds("#![allow(dead_code)]\nfn main() {}\n");
+        assert_eq!(t[0], (TokKind::Punct, "#".into()));
+        assert_eq!(t[1], (TokKind::Punct, "!".into()));
+        assert_eq!(t[2], (TokKind::Punct, "[".into()));
+    }
+
+    #[test]
+    fn bom_then_shebang_is_skipped_with_sane_columns() {
+        let t = lex("\u{feff}#!/bin/sh\nlet x = 1;\n");
+        assert_eq!((t[0].kind, t[0].text.as_str()), (TokKind::Ident, "let"));
+        assert_eq!((t[0].line, t[0].col), (2, 1));
+        // BOM alone, no shebang
+        let t = lex("\u{feff}fn f() {}");
+        assert_eq!((t[0].text.as_str(), t[0].line, t[0].col), ("fn", 1, 1));
     }
 
     #[test]

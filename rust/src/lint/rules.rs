@@ -9,6 +9,7 @@
 
 use super::Diagnostic;
 use crate::lint::lexer::{lex, Tok, TokKind};
+use crate::lint::tree::{self, Tree};
 
 /// Every `unsafe` block/fn/impl must be immediately preceded by a
 /// `// SAFETY:` comment (or a `# Safety` doc section).
@@ -23,11 +24,42 @@ pub const THREAD_SPAWN: &str = "no-raw-thread-spawn";
 pub const ENV_REGISTRY: &str = "env-var-registry";
 /// Every file under `rust/tests/` must be a `Cargo.toml` test target.
 pub const TEST_REG: &str = "test-registration";
+/// The `use crate::…` graph must satisfy the ARCHITECTURE.md layer map
+/// and be cycle-free (cross-file; see [`super::graph::layering`]).
+pub const LAYERING: &str = "layering";
+/// The may-hold-while-acquiring lock graph must be cycle-free
+/// (cross-file; see [`super::graph::lock_order`]).
+pub const LOCK_ORDER: &str = "lock-order";
+/// No `unwrap()`/`expect()`/`panic!`/`unreachable!`/`todo!` in the
+/// decode hot path (host, kv, scheduler, serve, gemm).
+pub const PANIC_FREE: &str = "panic-free-serve";
+/// `RowsPtr`/`SendPtr` construction only in the registered raw-pointer
+/// modules (`util/pool`, `tensor/gemm`, `runtime/host`).
+pub const SENDPTR: &str = "sendptr-confinement";
 /// Meta-diagnostic: a `lint:allow` naming a rule that does not exist.
 pub const UNKNOWN_RULE: &str = "unknown-rule";
+/// Meta-diagnostic: a `lint:allow` for a rule in [`JUSTIFIED_RULES`]
+/// with no justification text after the closing paren.
+pub const ALLOW_JUSTIFY: &str = "allow-needs-justification";
 
 /// The enforced rule set (the valid names for `lint:allow`).
-pub const RULES: [&str; 5] = [UNSAFE_SAFETY, PARTIAL_CMP, THREAD_SPAWN, ENV_REGISTRY, TEST_REG];
+pub const RULES: [&str; 9] = [
+    UNSAFE_SAFETY,
+    PARTIAL_CMP,
+    THREAD_SPAWN,
+    ENV_REGISTRY,
+    TEST_REG,
+    LAYERING,
+    LOCK_ORDER,
+    PANIC_FREE,
+    SENDPTR,
+];
+
+/// Rules whose `lint:allow` escapes must carry a written justification:
+/// `// lint:allow(panic-free-serve) <why this site is sound>`. An empty
+/// suffix surfaces as [`ALLOW_JUSTIFY`] (the allow still applies, so the
+/// meta-finding is the only diagnostic — CI stays red either way).
+pub const JUSTIFIED_RULES: [&str; 4] = [LAYERING, LOCK_ORDER, PANIC_FREE, SENDPTR];
 
 /// One lexed source file plus a line → covering-tokens index (multi-line
 /// comments and strings cover every line they span).
@@ -37,6 +69,9 @@ pub struct SourceFile {
     pub path: String,
     pub toks: Vec<Tok>,
     cover: Vec<Vec<usize>>,
+    /// Line ranges governed by `#[cfg(test)]` items (see
+    /// [`tree::Tree::test_lines`]); hot-path rules skip these.
+    test_lines: Vec<(u32, u32)>,
 }
 
 /// Classification of one source line, for the SAFETY-adjacency walk.
@@ -62,7 +97,13 @@ impl SourceFile {
                 cover[ln as usize - 1].push(i);
             }
         }
-        SourceFile { path: path.to_string(), toks, cover }
+        let test_lines = Tree::new(&toks).test_lines();
+        SourceFile { path: path.to_string(), toks, cover, test_lines }
+    }
+
+    /// Is 1-based `line` inside a `#[cfg(test)]` item?
+    pub fn is_test_line(&self, line: u32) -> bool {
+        tree::in_ranges(&self.test_lines, line)
     }
 
     /// Tokens whose span covers line `ln` (1-based).
@@ -385,6 +426,115 @@ pub fn test_registration(test_files: &[String], cargo: &str) -> Vec<Diagnostic> 
     out
 }
 
+// -------------------------------------------------- panic-free-serve --
+
+/// Is this file part of the decode hot path?
+fn in_panic_free_scope(path: &str) -> bool {
+    path.ends_with("runtime/host.rs")
+        || path.ends_with("runtime/kv.rs")
+        || path.ends_with("coordinator/scheduler.rs")
+        || path.ends_with("coordinator/serve.rs")
+        || path.contains("tensor/gemm")
+}
+
+/// Rule `panic-free-serve`: no `unwrap()`/`expect()`/`panic!`/
+/// `unreachable!`/`todo!` in the decode hot path. A request must fail
+/// with an error `Response`, not take the whole serve loop down.
+/// `#[cfg(test)]` code is exempt; everything else needs a
+/// `lint:allow(panic-free-serve) <justification>` escape.
+pub fn panic_free_serve(f: &SourceFile) -> Vec<Diagnostic> {
+    if !in_panic_free_scope(&f.path) {
+        return Vec::new();
+    }
+    let code = f.code();
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.kind != TokKind::Ident || f.is_test_line(t.line) {
+            continue;
+        }
+        let what = match t.text.as_str() {
+            // `.unwrap(` / `.expect(` method calls only — `unwrap_or`
+            // and friends are the non-panicking fixes, not findings
+            "unwrap" | "expect"
+                if i > 0
+                    && code[i - 1].text == "."
+                    && code.get(i + 1).is_some_and(|n| n.text == "(") =>
+            {
+                format!(".{}()", t.text)
+            }
+            "panic" | "unreachable" | "todo"
+                if code.get(i + 1).is_some_and(|n| n.text == "!") =>
+            {
+                format!("{}!", t.text)
+            }
+            _ => continue,
+        };
+        out.push(diag(
+            PANIC_FREE,
+            &f.path,
+            t,
+            format!(
+                "`{what}` in the decode hot path; return an error \
+                 (`.context(..)?` / `bail!`) or justify with \
+                 `lint:allow(panic-free-serve) <why>`"
+            ),
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------- sendptr-confinement --
+
+/// Modules registered for raw-pointer parallelism (audited `RowsPtr` /
+/// `SendPtr` construction).
+fn in_sendptr_scope(path: &str) -> bool {
+    path.ends_with("util/pool.rs")
+        || path.contains("tensor/gemm")
+        || path.ends_with("runtime/host.rs")
+}
+
+/// Rule `sendptr-confinement`: `RowsPtr::new(..)` and `SendPtr(..)`
+/// construction sites are allowed only in the registered modules, so
+/// raw-pointer parallelism cannot leak into new code unaudited. Fires
+/// in test code too — tests run the same aliasing risks.
+pub fn sendptr_confinement(f: &SourceFile) -> Vec<Diagnostic> {
+    if in_sendptr_scope(&f.path) {
+        return Vec::new();
+    }
+    let code = f.code();
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let constructed = match t.text.as_str() {
+            "RowsPtr" => {
+                code.get(i + 1).is_some_and(|a| a.text == ":")
+                    && code.get(i + 2).is_some_and(|a| a.text == ":")
+                    && code.get(i + 3).is_some_and(|a| a.kind == TokKind::Ident && a.text == "new")
+            }
+            "SendPtr" => code.get(i + 1).is_some_and(|a| a.text == "(" || a.text == "{"),
+            _ => false,
+        };
+        if constructed {
+            out.push(diag(
+                SENDPTR,
+                &f.path,
+                t,
+                format!(
+                    "`{}` constructed outside the registered raw-pointer modules \
+                     (util/pool, tensor/gemm, runtime/host); move the construction \
+                     or justify with `lint:allow(sendptr-confinement) <why>`",
+                    t.text
+                ),
+            ));
+        }
+    }
+    out
+}
+
 // ------------------------------------------------------- lint:allow --
 
 /// A span-anchored rule suppression parsed from an allow directive
@@ -401,10 +551,12 @@ pub struct Allow {
 /// *starts* with `lint:allow(` (after the `//`/`/*` leader), so prose
 /// that merely mentions the syntax is not a directive. Unknown rule
 /// names come back as diagnostics (a typoed allow must not silently
-/// suppress nothing).
+/// suppress nothing), and allows for [`JUSTIFIED_RULES`] with no
+/// justification text after the closing paren come back as
+/// [`ALLOW_JUSTIFY`] findings.
 pub fn allows(f: &SourceFile) -> (Vec<Allow>, Vec<Diagnostic>) {
     let mut out = Vec::new();
-    let mut unknown = Vec::new();
+    let mut meta = Vec::new();
     for t in &f.toks {
         if !t.kind.is_comment() {
             continue;
@@ -412,11 +564,26 @@ pub fn allows(f: &SourceFile) -> (Vec<Allow>, Vec<Diagnostic>) {
         let body = t.text.trim_start_matches(['/', '*', '!']).trim_start();
         let Some(args) = body.strip_prefix("lint:allow(") else { continue };
         let Some(end) = args.find(')') else { continue };
+        let justification =
+            args[end + 1..].trim_end_matches("*/").trim();
         for name in args[..end].split(',') {
             let name = name.trim();
             match RULES.iter().find(|r| **r == name) {
-                Some(rule) => out.push(Allow { rule, from: t.line, to: t.end_line + 1 }),
-                None => unknown.push(diag(
+                Some(rule) => {
+                    if JUSTIFIED_RULES.contains(rule) && justification.is_empty() {
+                        meta.push(diag(
+                            ALLOW_JUSTIFY,
+                            &f.path,
+                            t,
+                            format!(
+                                "lint:allow({name}) requires a justification after the \
+                                 closing paren: why is this site sound?"
+                            ),
+                        ));
+                    }
+                    out.push(Allow { rule, from: t.line, to: t.end_line + 1 });
+                }
+                None => meta.push(diag(
                     UNKNOWN_RULE,
                     &f.path,
                     t,
@@ -425,7 +592,7 @@ pub fn allows(f: &SourceFile) -> (Vec<Allow>, Vec<Diagnostic>) {
             }
         }
     }
-    (out, unknown)
+    (out, meta)
 }
 
 #[cfg(test)]
@@ -645,5 +812,99 @@ mod tests {
         let (a, unknown) = allows(&sf("rust/src/x.rs", src));
         assert!(a.is_empty());
         assert!(unknown.is_empty());
+    }
+
+    #[test]
+    fn justified_rules_require_a_justification() {
+        // bare allow on a justified rule → meta finding, allow still parsed
+        let src = "// lint:allow(panic-free-serve)\nx.unwrap();\n";
+        let (a, meta) = allows(&sf("rust/src/runtime/host.rs", src));
+        assert_eq!(a.len(), 1);
+        assert_eq!(rules_fired(&meta), vec![ALLOW_JUSTIFY]);
+        // with a justification → clean
+        let src = "// lint:allow(panic-free-serve) shape checked two lines up\nx.unwrap();\n";
+        let (a, meta) = allows(&sf("rust/src/runtime/host.rs", src));
+        assert_eq!((a.len(), meta.len()), (1, 0));
+        // legacy rules stay justification-free
+        let src = "// lint:allow(no-raw-thread-spawn)\nstd::thread::spawn(f);\n";
+        let (a, meta) = allows(&sf("rust/src/x.rs", src));
+        assert_eq!((a.len(), meta.len()), (1, 0));
+        // a block comment's trailing */ is not a justification
+        let src = "/* lint:allow(sendptr-confinement) */\nlet p = RowsPtr::new(&mut v);\n";
+        let (_a, meta) = allows(&sf("rust/src/x.rs", src));
+        assert_eq!(rules_fired(&meta), vec![ALLOW_JUSTIFY]);
+    }
+
+    // ----------------------------------------------------- panic-free-serve
+
+    #[test]
+    fn hot_path_panics_fire() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   \x20   let a = x.unwrap();\n\
+                   \x20   let b = x.expect(\"b\");\n\
+                   \x20   if a == 0 { panic!(\"zero\"); }\n\
+                   \x20   match b { 0 => unreachable!(), _ => todo!() }\n\
+                   }\n";
+        let d = panic_free_serve(&sf("rust/src/coordinator/serve.rs", src));
+        let fired: Vec<(u32, &str)> = d
+            .iter()
+            .map(|x| (x.line, x.message.split('`').nth(1).unwrap_or("")))
+            .collect();
+        assert_eq!(
+            fired,
+            vec![
+                (2, ".unwrap()"),
+                (3, ".expect()"),
+                (4, "panic!"),
+                (5, "unreachable!"),
+                (5, "todo!"),
+            ],
+            "{d:#?}"
+        );
+    }
+
+    #[test]
+    fn non_hot_path_files_and_test_code_are_exempt() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(panic_free_serve(&sf("rust/src/train/mod.rs", src)).is_empty());
+        let src = "fn ok() -> u32 { 0 }\n#[cfg(test)]\nmod tests {\n\
+                   \x20   fn t() { x.unwrap(); panic!(\"fine in tests\"); }\n}\n";
+        assert!(panic_free_serve(&sf("rust/src/runtime/kv.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn non_panicking_variants_clear() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   \x20   x.unwrap_or(0) + x.unwrap_or_else(|| 1) + x.unwrap_or_default()\n\
+                   }\n// a comment saying unwrap() is fine\n";
+        assert!(panic_free_serve(&sf("rust/src/runtime/host.rs", src)).is_empty());
+    }
+
+    // -------------------------------------------------- sendptr-confinement
+
+    #[test]
+    fn stray_rowsptr_and_sendptr_fire() {
+        let src = "let p = RowsPtr::new(&mut buf);\nlet q = SendPtr(raw);\n";
+        let d = sendptr_confinement(&sf("rust/src/coordinator/serve.rs", src));
+        let fired: Vec<(u32, &str)> = d.iter().map(|x| (x.line, x.rule)).collect();
+        assert_eq!(fired, vec![(1, SENDPTR), (2, SENDPTR)], "{d:#?}");
+    }
+
+    #[test]
+    fn registered_modules_are_exempt() {
+        let src = "let p = RowsPtr::new(&mut buf);\nlet q = SendPtr(raw);\n";
+        for path in
+            ["rust/src/util/pool.rs", "rust/src/tensor/gemm.rs", "rust/src/runtime/host.rs"]
+        {
+            assert!(sendptr_confinement(&sf(path, src)).is_empty(), "{path}");
+        }
+    }
+
+    #[test]
+    fn mentions_that_are_not_constructions_clear() {
+        let src = "use crate::util::pool::{RowsPtr, SendPtr};\n\
+                   fn f(p: RowsPtr, s: &SendPtr) -> RowsPtr { g(p, s) }\n\
+                   // RowsPtr::new in prose\nlet s = \"SendPtr(fake)\";\n";
+        assert!(sendptr_confinement(&sf("rust/src/coordinator/serve.rs", src)).is_empty());
     }
 }

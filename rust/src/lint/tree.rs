@@ -1,0 +1,537 @@
+//! Token-tree layer over [`super::lexer`]: delimiter matching and item
+//! extraction, the structure the cross-file rules in [`super::graph`]
+//! (and the scoped rules in [`super::rules`]) are built on.
+//!
+//! This is still not a Rust parser — it is the minimal tree view a
+//! repo linter needs, and it **never panics on unbalanced input** (an
+//! unmatched opener simply has no partner; an unmatched closer is
+//! ignored). Three services:
+//!
+//! * [`Tree::new`] — match every `(`/`)`, `[`/`]`, `{`/`}` pair in the
+//!   non-comment token stream (strings and comments were already opaque
+//!   single tokens at the lexer level, so a brace inside a string can
+//!   never desynchronize the tree);
+//! * [`Tree::items`] — extract `use` declarations (with `crate::{a, b}`
+//!   group expansion), `fn` items with their body ranges, `mod` items,
+//!   and `impl` blocks, each tagged with whether a `#[cfg(test)]`
+//!   attribute governs it;
+//! * [`Tree::test_lines`] — the line ranges covered by `#[cfg(test)]`
+//!   items, so rules that audit *shipped* code (panic-freedom, raw
+//!   pointer confinement, layering) can skip test scaffolding.
+
+use super::lexer::{Tok, TokKind};
+
+/// Matched-delimiter view over a lexed file. Indices refer to the
+/// `code` vector (comments filtered out), not the raw token stream.
+pub struct Tree<'a> {
+    /// Non-comment tokens in source order.
+    pub code: Vec<&'a Tok>,
+    /// `partner[i]`: for an opening delimiter, the index of its closer;
+    /// for a closer, its opener; `None` for everything else and for
+    /// unbalanced delimiters.
+    partner: Vec<Option<usize>>,
+}
+
+/// One extracted item. Line/col anchor at the introducing keyword.
+#[derive(Debug)]
+pub enum Item {
+    /// `use a::b::{c, d::e};` — one entry per expanded leaf path.
+    Use { path: Vec<String>, line: u32, col: u32, cfg_test: bool },
+    /// `fn name(..) { .. }` — `body` is the `(open, close)` code-index
+    /// pair of the body braces (`None` for bodyless trait methods or
+    /// unterminated input).
+    Fn { name: String, line: u32, body: Option<(usize, usize)>, cfg_test: bool },
+    /// `mod name { .. }` or `mod name;`.
+    Mod { name: String, line: u32, body: Option<(usize, usize)>, cfg_test: bool },
+    /// `impl .. { .. }`.
+    Impl { line: u32, body: Option<(usize, usize)>, cfg_test: bool },
+}
+
+impl<'a> Tree<'a> {
+    /// Build the matched-delimiter view. Unbalanced input degrades to
+    /// `None` partners — no panic, ever (fuzz-shaped inputs reach this
+    /// through `lint_repo` on arbitrary `.rs` files).
+    pub fn new(toks: &'a [Tok]) -> Tree<'a> {
+        let code: Vec<&Tok> = toks.iter().filter(|t| !t.kind.is_comment()).collect();
+        let mut partner = vec![None; code.len()];
+        // One stack per delimiter class: a stray `)` must not steal the
+        // partner of an outer `{`.
+        let mut stacks: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let class = |t: &Tok| match t.text.as_str() {
+            "(" | ")" => Some(0usize),
+            "[" | "]" => Some(1),
+            "{" | "}" => Some(2),
+            _ => None,
+        };
+        for (i, t) in code.iter().enumerate() {
+            if t.kind != TokKind::Punct {
+                continue;
+            }
+            let Some(c) = class(t) else { continue };
+            if matches!(t.text.as_str(), "(" | "[" | "{") {
+                stacks[c].push(i);
+            } else if let Some(open) = stacks[c].pop() {
+                partner[open] = Some(i);
+                partner[i] = Some(open);
+            } // unmatched closer: ignored
+        }
+        Tree { code, partner }
+    }
+
+    /// The matching delimiter of code index `i`, if balanced.
+    pub fn partner(&self, i: usize) -> Option<usize> {
+        self.partner.get(i).copied().flatten()
+    }
+
+    /// The code index of the innermost `{` enclosing code index `i`
+    /// (`None` at top level). Linear scan backwards, skipping balanced
+    /// sibling blocks via the partner table.
+    pub fn enclosing_brace(&self, i: usize) -> Option<usize> {
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let t = self.code[j];
+            if t.kind == TokKind::Punct && t.text == "}" {
+                match self.partner(j) {
+                    Some(open) => j = open, // skip the sibling block
+                    None => return None,    // unbalanced: give up, no panic
+                }
+            } else if t.kind == TokKind::Punct && t.text == "{" {
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    /// Extract `use` / `fn` / `mod` / `impl` items at every nesting
+    /// level. `cfg_test` is true when the item itself carries a
+    /// `#[cfg(test)]` attribute or sits inside an item that does.
+    pub fn items(&self) -> Vec<Item> {
+        let mut out = Vec::new();
+        // (close-index, _) stack of enclosing cfg(test) bodies.
+        let mut test_until: Vec<usize> = Vec::new();
+        let mut i = 0;
+        while i < self.code.len() {
+            while test_until.last().is_some_and(|&c| i > c) {
+                test_until.pop();
+            }
+            let in_test = !test_until.is_empty();
+            let t = self.code[i];
+            if t.kind != TokKind::Ident {
+                i += 1;
+                continue;
+            }
+            match t.text.as_str() {
+                "use" => {
+                    let (paths, next) = self.parse_use(i + 1);
+                    for p in paths {
+                        out.push(Item::Use {
+                            path: p,
+                            line: t.line,
+                            col: t.col,
+                            cfg_test: in_test || self.has_cfg_test_attr(i),
+                        });
+                    }
+                    i = next;
+                }
+                "fn" => {
+                    let name = self
+                        .code
+                        .get(i + 1)
+                        .filter(|n| n.kind == TokKind::Ident)
+                        .map(|n| n.text.clone())
+                        .unwrap_or_default();
+                    let body = self.find_body(i + 1);
+                    let cfg_test = in_test || self.has_cfg_test_attr(i);
+                    if let (Some((_, close)), true) = (body, cfg_test) {
+                        test_until.push(close);
+                    }
+                    out.push(Item::Fn { name, line: t.line, body, cfg_test });
+                    i += 1;
+                }
+                "mod" => {
+                    let name = self
+                        .code
+                        .get(i + 1)
+                        .filter(|n| n.kind == TokKind::Ident)
+                        .map(|n| n.text.clone())
+                        .unwrap_or_default();
+                    let body = self.find_body(i + 1);
+                    let cfg_test = in_test || self.has_cfg_test_attr(i);
+                    if let (Some((_, close)), true) = (body, cfg_test) {
+                        test_until.push(close);
+                    }
+                    out.push(Item::Mod { name, line: t.line, body, cfg_test });
+                    i += 1;
+                }
+                "impl" => {
+                    let body = self.find_body(i + 1);
+                    let cfg_test = in_test || self.has_cfg_test_attr(i);
+                    if let (Some((_, close)), true) = (body, cfg_test) {
+                        test_until.push(close);
+                    }
+                    out.push(Item::Impl { line: t.line, body, cfg_test });
+                    i += 1;
+                }
+                _ => i += 1,
+            }
+        }
+        out
+    }
+
+    /// 1-based inclusive line ranges governed by `#[cfg(test)]` items.
+    pub fn test_lines(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for item in self.items() {
+            let (body, cfg_test) = match &item {
+                Item::Fn { body, cfg_test, .. }
+                | Item::Mod { body, cfg_test, .. }
+                | Item::Impl { body, cfg_test, .. } => (*body, *cfg_test),
+                Item::Use { line, cfg_test, .. } => {
+                    if *cfg_test {
+                        out.push((*line, *line));
+                    }
+                    continue;
+                }
+            };
+            if let (Some((open, close)), true) = (body, cfg_test) {
+                // from the item keyword's line is not recorded in body,
+                // so anchor at the opening brace; attributes above are
+                // harmless to leave un-covered.
+                out.push((self.code[open].line, self.code[close].end_line));
+            }
+        }
+        merge_ranges(out)
+    }
+
+    /// Scan forward from code index `i` for the item's body: the first
+    /// `{` before any `;` at the current nesting (skipping balanced
+    /// `(..)` / `[..]` / `<..>`-free groups via the partner table).
+    /// Returns the `(open, close)` pair.
+    fn find_body(&self, mut i: usize) -> Option<(usize, usize)> {
+        while i < self.code.len() {
+            let t = self.code[i];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "{" => return self.partner(i).map(|c| (i, c)),
+                    ";" => return None,
+                    "(" | "[" => {
+                        i = self.partner(i).map(|c| c + 1)?;
+                        continue;
+                    }
+                    // a stray closer means we ran out of this item's
+                    // scope (e.g. `fn` as the last token of a block)
+                    ")" | "]" | "}" => return None,
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        None
+    }
+
+    /// Is code index `i` (an item keyword) preceded by attribute groups
+    /// among which one is `#[cfg(test)]` (or `#[cfg(.. test ..)]`)?
+    /// Walks consecutive `#[..]` / visibility / qualifier tokens upward.
+    fn has_cfg_test_attr(&self, i: usize) -> bool {
+        let mut j = i;
+        loop {
+            if j == 0 {
+                return false;
+            }
+            let prev = self.code[j - 1];
+            // transparent qualifiers between attributes and the keyword
+            if prev.kind == TokKind::Ident
+                && matches!(prev.text.as_str(), "pub" | "unsafe" | "const" | "async" | "extern")
+            {
+                j -= 1;
+                continue;
+            }
+            if prev.kind == TokKind::Punct && prev.text == ")" {
+                // `pub(crate)` etc: skip the group and the ident before
+                match self.partner(j - 1) {
+                    Some(open) => {
+                        j = open;
+                        continue;
+                    }
+                    None => return false,
+                }
+            }
+            if prev.kind == TokKind::Punct && prev.text == "]" {
+                let Some(open) = self.partner(j - 1) else { return false };
+                // open points at `[`; the token before must be `#`
+                if open == 0 || self.code[open - 1].text != "#" {
+                    return false;
+                }
+                if self.attr_is_cfg_test(open, j - 1) {
+                    return true;
+                }
+                j = open - 1; // keep walking: more attributes above?
+                continue;
+            }
+            return false;
+        }
+    }
+
+    /// Does the attribute body between `[` (exclusive) and `]`
+    /// (exclusive) spell `cfg ( .. test .. )`?
+    fn attr_is_cfg_test(&self, open: usize, close: usize) -> bool {
+        let body = &self.code[open + 1..close];
+        body.first().is_some_and(|t| t.kind == TokKind::Ident && t.text == "cfg")
+            && body.iter().any(|t| t.kind == TokKind::Ident && t.text == "test")
+    }
+
+    /// Parse one `use` declaration starting after the `use` keyword.
+    /// Returns the expanded leaf paths and the code index just past the
+    /// terminating `;` (or wherever parsing gave up — always progress).
+    fn parse_use(&self, start: usize) -> (Vec<Vec<String>>, usize) {
+        let mut paths = Vec::new();
+        let end = self.use_end(start);
+        self.parse_use_group(start, end, &Vec::new(), &mut paths, 0);
+        (paths, end)
+    }
+
+    /// Find the code index just past the `;` that ends a use starting
+    /// at `start` (or the end of input for unterminated declarations).
+    fn use_end(&self, start: usize) -> usize {
+        let mut i = start;
+        while i < self.code.len() {
+            let t = self.code[i];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    ";" => return i + 1,
+                    "{" | "(" | "[" => match self.partner(i) {
+                        Some(c) => {
+                            i = c + 1;
+                            continue;
+                        }
+                        None => return self.code.len(),
+                    },
+                    "}" | ")" | "]" => return i, // stray closer: stop
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        self.code.len()
+    }
+
+    /// Recursive expansion of a use segment list over `[start, end)`:
+    /// `prefix::{a, b::c}` yields `prefix::a` and `prefix::b::c`.
+    /// `depth` bounds pathological nesting (never panics, just stops).
+    fn parse_use_group(
+        &self,
+        start: usize,
+        end: usize,
+        prefix: &[String],
+        out: &mut Vec<Vec<String>>,
+        depth: usize,
+    ) {
+        if depth > 16 {
+            return;
+        }
+        let mut segs: Vec<String> = prefix.to_vec();
+        let mut emitted = false;
+        let mut i = start;
+        while i < end {
+            let t = self.code[i];
+            match (t.kind, t.text.as_str()) {
+                (TokKind::Ident, "as") => {
+                    // rename: skip the alias ident
+                    i += 2;
+                }
+                (TokKind::Ident, _) => {
+                    segs.push(t.text.clone());
+                    i += 1;
+                }
+                (TokKind::Punct, ":") => i += 1,
+                (TokKind::Punct, "*") => {
+                    segs.push("*".to_string());
+                    i += 1;
+                }
+                (TokKind::Punct, "{") => {
+                    let close = self.partner(i).unwrap_or(end.min(self.code.len()));
+                    // split the group body on top-level commas
+                    let mut item_start = i + 1;
+                    let mut j = i + 1;
+                    while j < close {
+                        let u = self.code[j];
+                        if u.kind == TokKind::Punct {
+                            match u.text.as_str() {
+                                "," => {
+                                    self.parse_use_group(item_start, j, &segs, out, depth + 1);
+                                    item_start = j + 1;
+                                }
+                                "{" | "(" | "[" => {
+                                    j = self.partner(j).unwrap_or(close);
+                                }
+                                _ => {}
+                            }
+                        }
+                        j += 1;
+                    }
+                    if item_start < close {
+                        self.parse_use_group(item_start, close, &segs, out, depth + 1);
+                    }
+                    emitted = true;
+                    i = close + 1;
+                }
+                (TokKind::Punct, ";") => break,
+                _ => i += 1,
+            }
+        }
+        if !emitted && segs.len() > prefix.len() {
+            out.push(segs);
+        }
+    }
+}
+
+/// Merge overlapping/adjacent 1-based inclusive line ranges.
+fn merge_ranges(mut v: Vec<(u32, u32)>) -> Vec<(u32, u32)> {
+    v.sort_unstable();
+    let mut out: Vec<(u32, u32)> = Vec::new();
+    for (a, b) in v {
+        match out.last_mut() {
+            Some((_, pb)) if a <= *pb + 1 => *pb = (*pb).max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// Is 1-based `line` inside any of the (merged, sorted) ranges?
+pub fn in_ranges(ranges: &[(u32, u32)], line: u32) -> bool {
+    ranges.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn tree(src: &str) -> (Vec<Tok>, Vec<Item>) {
+        let toks = lex(src);
+        let items = Tree::new(&toks).items();
+        (toks, items)
+    }
+
+    fn use_paths(src: &str) -> Vec<String> {
+        let (_t, items) = tree(src);
+        items
+            .iter()
+            .filter_map(|i| match i {
+                Item::Use { path, .. } => Some(path.join("::")),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_nested_delimiters() {
+        let toks = lex("fn f(a: [u8; 3]) { g((1), [2]); }");
+        let t = Tree::new(&toks);
+        // every opener has a partner and round-trips
+        for i in 0..t.code.len() {
+            if matches!(t.code[i].text.as_str(), "(" | "[" | "{") {
+                let c = t.partner(i).expect("balanced");
+                assert_eq!(t.partner(c), Some(i));
+            }
+        }
+    }
+
+    #[test]
+    fn unbalanced_input_never_panics() {
+        for src in ["fn f( {", "}}} )))", "{ ( } )", "fn f() { loop {", "use a::{b, ;"] {
+            let toks = lex(src);
+            let t = Tree::new(&toks);
+            let _ = t.items();
+            let _ = t.test_lines();
+            for i in 0..t.code.len() {
+                let _ = t.partner(i);
+                let _ = t.enclosing_brace(i);
+            }
+        }
+    }
+
+    #[test]
+    fn simple_use_path() {
+        assert_eq!(use_paths("use crate::tensor::Tensor;"), vec!["crate::tensor::Tensor"]);
+    }
+
+    #[test]
+    fn grouped_use_expands() {
+        let p = use_paths("use crate::{util::pool, runtime::{Engine, kv::PagedKv}};");
+        assert_eq!(
+            p,
+            vec!["crate::util::pool", "crate::runtime::Engine", "crate::runtime::kv::PagedKv"]
+        );
+    }
+
+    #[test]
+    fn use_rename_and_glob() {
+        let p = use_paths("use crate::tensor::ops as tops;\nuse crate::util::*;");
+        assert_eq!(p, vec!["crate::tensor::ops", "crate::util::*"]);
+    }
+
+    #[test]
+    fn fn_bodies_extracted() {
+        let (_t, items) = tree("fn a() { x(); }\nfn b(v: Vec<u8>) -> usize { v.len() }\nfn c();");
+        let fns: Vec<(&str, bool)> = items
+            .iter()
+            .filter_map(|i| match i {
+                Item::Fn { name, body, .. } => Some((name.as_str(), body.is_some())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fns, vec![("a", true), ("b", true), ("c", false)]);
+    }
+
+    #[test]
+    fn cfg_test_mod_marks_ranges() {
+        let src = "fn shipped() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let toks = lex(src);
+        let ranges = Tree::new(&toks).test_lines();
+        assert!(in_ranges(&ranges, 4), "{ranges:?}");
+        assert!(!in_ranges(&ranges, 1), "{ranges:?}");
+    }
+
+    #[test]
+    fn cfg_test_fn_with_other_attrs_marks_ranges() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\npub fn helper() {\n    boom();\n}\nfn live() {}\n";
+        let toks = lex(src);
+        let ranges = Tree::new(&toks).test_lines();
+        assert!(in_ranges(&ranges, 4), "{ranges:?}");
+        assert!(!in_ranges(&ranges, 6), "{ranges:?}");
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_range() {
+        let src = "#[cfg(debug_assertions)]\nmod claims {\n    fn f() {}\n}\n";
+        let toks = lex(src);
+        assert!(Tree::new(&toks).test_lines().is_empty());
+    }
+
+    #[test]
+    fn nested_items_inside_cfg_test_inherit() {
+        let src = "#[cfg(test)]\nmod tests {\n    use crate::runtime::Engine;\n}\n";
+        let (_t, items) = tree(src);
+        let u = items
+            .iter()
+            .find_map(|i| match i {
+                Item::Use { cfg_test, .. } => Some(*cfg_test),
+                _ => None,
+            })
+            .unwrap();
+        assert!(u, "use inside #[cfg(test)] mod must be tagged cfg_test");
+    }
+
+    #[test]
+    fn enclosing_brace_walks_out_of_sibling_blocks() {
+        let toks = lex("fn f() { { inner(); } outer(); }");
+        let t = Tree::new(&toks);
+        let outer_idx = t.code.iter().position(|x| x.text == "outer").unwrap();
+        let open = t.enclosing_brace(outer_idx).unwrap();
+        // the fn body brace (code index 4: `fn f ( ) {`), not the inner block's
+        assert_eq!(open, 4);
+    }
+}

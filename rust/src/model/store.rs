@@ -9,6 +9,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
+// lint:allow(layering) structural: ParamStore is defined by the manifest contract (ARCHITECTURE §2) and Manifest/Value are data-only types
 use crate::runtime::{Manifest, Value};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;

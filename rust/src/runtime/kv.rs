@@ -23,7 +23,7 @@
 //! which is what lets a fixed byte budget seat strictly more mixed-extent
 //! lanes (see `rust/tests/paged_kv.rs`).
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 
 use crate::tensor::Tensor;
@@ -348,7 +348,7 @@ impl PagedKv {
                 }
             }
         }
-        let r = self.residents.get_mut(name).expect("checked above");
+        let r = self.residents.get_mut(name).context("resident exists: checked above")?;
         for (pg, id) in ids.into_iter().enumerate() {
             r.tables[lane][pg] = Some(id);
         }
@@ -417,7 +417,7 @@ impl PagedKv {
         for id in &ids {
             self.pool.retain(*id)?;
         }
-        let r = self.residents.get_mut(name).expect("checked above");
+        let r = self.residents.get_mut(name).context("resident exists: checked above")?;
         for (pg, id) in ids.iter().enumerate() {
             r.tables[dst_lane][pg] = Some(*id);
         }
@@ -457,7 +457,10 @@ impl PagedKv {
             Some(id) => id,
             None => {
                 let id = self.pool.alloc()?;
-                self.residents.get_mut(name).expect("checked above").tables[lane][pg] = Some(id);
+                self.residents
+                    .get_mut(name)
+                    .context("resident exists: checked above")?
+                    .tables[lane][pg] = Some(id);
                 id
             }
         };

@@ -72,6 +72,7 @@ fn rows_ptr_disjoint_parallel_writes_land_intact() {
     let (rows, width) = if cfg!(miri) { (16, 8) } else { (128, 32) };
     let p = ThreadPool::new(4);
     let mut buf = vec![0.0f32; rows * width];
+    // lint:allow(sendptr-confinement) this test exercises RowsPtr itself under Miri
     let ptr = RowsPtr::new(&mut buf);
     p.par_for(rows, |i| {
         // SAFETY: lane i writes only its own row i — disjoint ranges,
@@ -95,6 +96,7 @@ fn rows_ptr_disjoint_parallel_writes_land_intact() {
 #[should_panic(expected = "overlap")]
 fn rows_ptr_overlap_claim_panics_before_aliasing() {
     let mut buf = vec![0.0f32; 32];
+    // lint:allow(sendptr-confinement) this test exercises RowsPtr's claim ledger itself
     let ptr = RowsPtr::new(&mut buf);
     // SAFETY: in bounds; first claim of the generation.
     let _a = unsafe { ptr.slice(0, 20) };
