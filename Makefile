@@ -38,17 +38,23 @@ clippy:
 docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
-# Repo linter (rust/src/lint): dependency-free static analysis enforcing
-# the SAFETY-comment convention on every unsafe site, the NaN-ordering
-# ban (no partial_cmp().unwrap() outside util::cmp), the single-spawn-path
-# policy (util::pool::spawn_named), the HEAPR_* env-var registry against
-# README's table, rust/tests ⇄ Cargo.toml test registration, the
-# ARCHITECTURE layer map (layering), lock acquisition-order cycles
-# (lock-order), the decode-hot-path panic ban (panic-free-serve), and
-# SendPtr/RowsPtr construction confinement (sendptr-confinement). Exits
-# nonzero with clickable file:line:col diagnostics; escape hatch is a
+# Repo linter (rust/src/lint): dependency-free static analysis, twelve
+# rules — the SAFETY-comment convention on every unsafe site, the
+# NaN-ordering ban (no partial_cmp().unwrap() outside util::cmp), the
+# single-spawn-path policy (util::pool::spawn_named), the HEAPR_* env-var
+# registry against README's table, rust/tests ⇄ Cargo.toml test
+# registration, the ARCHITECTURE §2 layer map (layering, doc-driven),
+# lock acquisition-order cycles (lock-order), the decode-hot-path panic
+# ban (panic-free-serve), SendPtr/RowsPtr construction confinement
+# (sendptr-confinement), heap allocations reachable from the decode
+# entry set (hot-path-alloc — the allocation-free steady-state decode
+# invariant), unpinned float reductions (float-accum-order), and
+# discarded Results (swallowed-result). `--list-rules` / `--explain
+# <rule>` document the catalogue from the binary itself. Exits nonzero
+# with clickable file:line:col diagnostics; escape hatch is a
 # span-anchored `// lint:allow(<rule>)` comment (see README). CI runs
-# the same binary with --json and renders findings as PR annotations.
+# the same binary with --json under a 10s wall-clock budget and renders
+# findings as PR annotations.
 lint:
 	cargo run -q --release --bin heapr-lint -- --root .
 

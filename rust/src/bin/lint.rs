@@ -1,6 +1,7 @@
 //! `heapr-lint` — the repo's dependency-free static-analysis gate.
 //!
-//! Usage: `heapr-lint [--root <repo-root>] [--json] [--rule <name>]…`
+//! Usage: `heapr-lint [--root <repo-root>] [--json] [--rule <name>]…`,
+//! or `heapr-lint --list-rules` / `heapr-lint --explain <rule>`
 //! (default root: the current directory). Prints one clickable
 //! `file:line:col: [rule] message` per finding — or, under `--json`,
 //! one JSON object per line (`{"file":…,"line":…,"col":…,"rule":…,
@@ -8,8 +9,12 @@
 //! annotations) — and exits nonzero when anything fires. `--rule`
 //! restricts output to the named rule(s) (repeatable) so a developer
 //! can iterate on one rule; the name must be a known rule or
-//! meta-diagnostic. `make lint` runs the binary as part of
-//! `make verify`; the engine and rule catalogue live in `heapr::lint`
+//! meta-diagnostic, else exit 2 with the known list. `--list-rules`
+//! prints the enabled rule names one per line (CI records the count so
+//! a silently-disabled rule is visible); `--explain <rule>` prints the
+//! one-paragraph doc for a rule from the same catalogue the README
+//! renders. `make lint` runs the binary as part of `make verify`; the
+//! engine and rule catalogue live in `heapr::lint`
 //! (see `docs/ARCHITECTURE.md` §7).
 
 use std::path::PathBuf;
@@ -18,7 +23,16 @@ use std::process::ExitCode;
 use heapr::lint::{self, rules};
 
 fn usage() {
-    println!("usage: heapr-lint [--root <repo-root>] [--json] [--rule <name>]...");
+    println!(
+        "usage: heapr-lint [--root <repo-root>] [--json] [--rule <name>]...\n\
+         \x20      heapr-lint --list-rules | --explain <rule>"
+    );
+}
+
+/// The doc paragraph for `name` from [`rules::RULE_DOCS`] (rules and
+/// meta-diagnostics alike).
+fn explain(name: &str) -> Option<&'static str> {
+    rules::RULE_DOCS.iter().find(|(n, _)| *n == name).map(|&(_, doc)| doc)
 }
 
 fn main() -> ExitCode {
@@ -36,6 +50,33 @@ fn main() -> ExitCode {
                 }
             },
             "--json" => json = true,
+            "--list-rules" => {
+                for rule in rules::RULES {
+                    println!("{rule}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--explain" => match args.next() {
+                Some(name) => match explain(&name) {
+                    Some(doc) => {
+                        println!("{name}\n\n{doc}");
+                        return ExitCode::SUCCESS;
+                    }
+                    None => {
+                        eprintln!(
+                            "heapr-lint: unknown rule `{name}` (known: {:?})",
+                            rules::RULES
+                        );
+                        usage();
+                        return ExitCode::from(2);
+                    }
+                },
+                None => {
+                    eprintln!("heapr-lint: --explain needs a rule name");
+                    usage();
+                    return ExitCode::from(2);
+                }
+            },
             "--rule" => match args.next() {
                 Some(name) => {
                     let known = rules::RULES.contains(&name.as_str())

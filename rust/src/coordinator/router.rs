@@ -19,10 +19,24 @@ pub struct Router;
 impl Router {
     /// gates: [N, E] dense top-k weights. Returns E groups.
     pub fn group(gates: &Tensor) -> Vec<ExpertGroup> {
+        let mut groups = Vec::new();
+        Self::group_into(gates, &mut groups);
+        groups
+    }
+
+    /// [`group`], but reusing caller-owned scratch: `groups` is resized
+    /// to E and each group's index/weight vectors are cleared in place,
+    /// so a steady-state decode loop re-fills warm capacity instead of
+    /// allocating E fresh groups per step.
+    pub fn group_into(gates: &Tensor, groups: &mut Vec<ExpertGroup>) {
         let &[n, e] = gates.shape() else {
             panic!("gates must be [N,E], got {:?}", gates.shape())
         };
-        let mut groups = vec![ExpertGroup::default(); e];
+        groups.resize_with(e, ExpertGroup::default);
+        for g in groups.iter_mut() {
+            g.token_idx.clear();
+            g.weights.clear();
+        }
         for t in 0..n {
             for x in 0..e {
                 let w = gates.at(&[t, x]);
@@ -32,7 +46,6 @@ impl Router {
                 }
             }
         }
-        groups
     }
 
     /// Smallest bucket >= n from `buckets` (ascending); None if n == 0.

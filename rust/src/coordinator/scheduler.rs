@@ -145,6 +145,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
     /// Run the serve loop until the queue is drained (producer channel
     /// closed and every admitted request retired).
     pub fn run(&mut self, batcher: &mut Batcher) -> Result<Vec<Response>> {
+        // lint:allow(hot-path-alloc) one-time setup before the serve loop: a small plain-old-data config copy, and `run` is entered once
         let cfg = self.server.engine().config().clone();
         let max_pos = cfg.seq_len.min(cfg.max_decode_len);
         let widest = *cfg.serve_batches.last().unwrap_or(&1);
@@ -155,6 +156,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         // wall_s (and tok/s) measures serving, not producer idle, and
         // stays comparable with serve_batch's
         let mut t0 = Instant::now();
+        // lint:allow(hot-path-alloc) one-time lane-table allocation before the loop
         let mut lanes: Vec<Option<Lane>> = (0..bb).map(|_| None).collect();
         // allocated lazily at first admission so an empty queue costs
         // nothing; released (or compacted + released) on the way out
@@ -164,6 +166,12 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         // prompt tails lane-solo)
         let mut pidx: Option<PrefixIndex> = None;
         let mut responses: Vec<Response> = Vec::new();
+        // per-step token/position scratch, reused across every decode
+        // iteration: the steady-state loop must not heap-allocate
+        // (hot-path-alloc). `resize` only grows them once, to the lane
+        // count; compaction shrinks `lanes`, never grows it.
+        let mut next: Vec<i32> = Vec::new();
+        let mut poss: Vec<usize> = Vec::new();
 
         loop {
             // -- admission: refill freed lanes from the queue. Each
@@ -239,8 +247,10 @@ impl<'s, 'e> Scheduler<'s, 'e> {
 
             // -- one decode step across all lanes ----------------------
             let st = state.as_mut().context("occupied lanes have a state")?;
-            let mut next = vec![PAD; lanes.len()];
-            let mut poss = vec![0usize; lanes.len()];
+            next.clear();
+            next.resize(lanes.len(), PAD);
+            poss.clear();
+            poss.resize(lanes.len(), 0);
             for (i, lane) in lanes.iter().enumerate() {
                 if let Some(lane) = lane {
                     next[i] = lane.next;
@@ -303,6 +313,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
             || lane.generated.len() >= lane.req.max_new_tokens
             || lane.pos + 1 >= max_pos;
         if let Some(tx) = &self.opts.stream {
+            // lint:allow(swallowed-result) streaming is observability, not control flow: a dropped receiver must not fail the serve loop
             let _ = tx.send(StreamEvent {
                 id: lane.req.id,
                 index: lane.generated.len() - 1,
@@ -335,25 +346,28 @@ impl<'s, 'e> Scheduler<'s, 'e> {
             Some(idx) => self.try_admit_prefix(&req, slot, state, idx)?,
             None => None,
         };
-        let lane = match hit {
-            Some(lane) => lane,
+        let next = match hit {
+            Some(next) => next,
             None => {
                 // Solo prefill at the shared state's capacity: row values
                 // are batch-composition independent, so the prompt's K/V
                 // rows land exactly as a batched prefill would have
                 // placed them. Only the prompt's rows are seated (see
                 // `DecodeState::admit_lane`).
-                let (logits, solo) =
-                    self.server.prefill_with_capacity(&[req.prompt.clone()], state.capacity())?;
+                let (logits, solo) = self
+                    .server
+                    .prefill_with_capacity(std::slice::from_ref(&req.prompt), state.capacity())?;
                 state.admit_lane(slot, &solo, req.prompt.len())?;
                 self.server.absorb_kv_stats(&solo);
                 solo.release();
-                let next = argmax_row(&logits, 0);
                 debug!("admitted request {} into lane {slot}", req.id);
-                let pos = req.prompt.len();
-                Lane { req, next, pos, generated: Vec::new() }
+                argmax_row(&logits, 0)
             }
         };
+        // either arm leaves the request owned here, so the `Lane` takes
+        // it by move — admission never clones a prompt
+        let pos = req.prompt.len();
+        let lane = Lane { req, next, pos, generated: Vec::new() };
         if let Some(idx) = pidx {
             idx.register(slot, &lane.req.prompt);
         }
@@ -368,14 +382,16 @@ impl<'s, 'e> Scheduler<'s, 'e> {
     /// decode step at position `p` computes exactly row `p` of a masked
     /// prefill (see `attend_softmax_v` in `runtime/host.rs`), and the
     /// shared rows themselves are prefix-only functions of the prompt.
-    /// Returns `None` (cold path) when no donor qualifies.
+    /// Returns the first (uncommitted) token on a hit — the caller owns
+    /// the request and builds the `Lane` by move — or `None` (cold
+    /// path) when no donor qualifies.
     fn try_admit_prefix(
         &mut self,
         req: &Request,
         slot: usize,
         state: &mut DecodeState<'e>,
         pidx: &PrefixIndex,
-    ) -> Result<Option<Lane>> {
+    ) -> Result<Option<i32>> {
         let Some((src, npages)) = pidx.lookup(&req.prompt) else { return Ok(None) };
         if src == slot {
             // the freed slot was evicted at retirement; a self-hit would
@@ -398,8 +414,7 @@ impl<'s, 'e> Scheduler<'s, 'e> {
             "prefix-hit: request {} into lane {slot} ({npages} pages from lane {src})",
             req.id
         );
-        let pos = req.prompt.len();
-        Ok(Some(Lane { req: req.clone(), next, pos, generated: Vec::new() }))
+        Ok(Some(next))
     }
 
     /// Retire one finished lane: zero its KV rows (the next occupant —

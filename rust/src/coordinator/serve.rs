@@ -30,7 +30,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::Request;
-use crate::coordinator::router::Router;
+use crate::coordinator::router::{ExpertGroup, Router};
 use crate::data::tokenizer::{EOS, PAD};
 use crate::heapr::plan::{surgery, PrunePlan};
 use crate::model::store::ParamStore;
@@ -348,6 +348,98 @@ struct LayerBuffers {
     router: DeviceTensor,
 }
 
+/// Every kernel / resident name the decode hot path ever asks for,
+/// rendered once at server build: per-step `format!` calls are heap
+/// allocations, and the steady-state decode loop must not allocate
+/// (`hot-path-alloc`). Lookups are linear scans over a handful of
+/// entries — allocation-free and cache-resident.
+struct Names {
+    /// `("kc{l}", "vc{l}")` per layer.
+    kv: Vec<(String, String)>,
+    /// `attn_decode_b{bb}` per serve-batch bucket.
+    attn_decode: Vec<(usize, String)>,
+    /// `moe_gate_n{nb}` per token bucket.
+    moe_gate: Vec<(usize, String)>,
+    /// `lm_head_n{nb}` per token bucket.
+    lm_head: Vec<(usize, String)>,
+    /// `expert_n{nb}_w{w}` per (token bucket, retained width) pair
+    /// actually present in the served plan.
+    expert: Vec<(usize, usize, String)>,
+}
+
+impl Names {
+    fn build(cfg: &crate::config::ModelConfig, experts: &[Vec<ExpertWeights>]) -> Names {
+        let mut widths: Vec<usize> =
+            experts.iter().flatten().map(|e| e.width).filter(|&w| w > 0).collect();
+        widths.sort_unstable();
+        widths.dedup();
+        Names {
+            kv: (0..cfg.n_layers).map(|l| (format!("kc{l}"), format!("vc{l}"))).collect(),
+            attn_decode: cfg
+                .serve_batches
+                .iter()
+                .map(|&bb| (bb, format!("attn_decode_b{bb}")))
+                .collect(),
+            moe_gate: cfg
+                .token_buckets
+                .iter()
+                .map(|&nb| (nb, format!("moe_gate_n{nb}")))
+                .collect(),
+            lm_head: cfg
+                .token_buckets
+                .iter()
+                .map(|&nb| (nb, format!("lm_head_n{nb}")))
+                .collect(),
+            expert: cfg
+                .token_buckets
+                .iter()
+                .flat_map(|&nb| {
+                    widths.iter().map(move |&w| (nb, w, format!("expert_n{nb}_w{w}")))
+                })
+                .collect(),
+        }
+    }
+
+    fn kv_names(&self, l: usize) -> Result<(&str, &str)> {
+        self.kv
+            .get(l)
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .ok_or_else(|| anyhow!("no KV names for layer {l}"))
+    }
+
+    fn attn_name(&self, bb: usize) -> Result<&str> {
+        self.attn_decode
+            .iter()
+            .find(|&&(b, _)| b == bb)
+            .map(|(_, n)| n.as_str())
+            .ok_or_else(|| anyhow!("no attn_decode artifact for bucket {bb}"))
+    }
+
+    fn gate_name(&self, nb: usize) -> Result<&str> {
+        self.moe_gate
+            .iter()
+            .find(|&&(b, _)| b == nb)
+            .map(|(_, n)| n.as_str())
+            .ok_or_else(|| anyhow!("no moe_gate artifact for bucket {nb}"))
+    }
+
+    fn head_name(&self, nb: usize) -> Result<&str> {
+        self.lm_head
+            .iter()
+            .find(|&&(b, _)| b == nb)
+            .map(|(_, n)| n.as_str())
+            .ok_or_else(|| anyhow!("no lm_head artifact for bucket {nb}"))
+    }
+
+    fn expert_name(&self, nb: usize, w: usize) -> Result<&str> {
+        self.expert
+            .iter()
+            .find(|&&(b, ew, _)| b == nb && ew == w)
+            .map(|(_, _, n)| n.as_str())
+            .ok_or_else(|| anyhow!("no expert artifact for bucket {nb} width {w}"))
+    }
+}
+
 pub struct Server<'e> {
     engine: &'e Engine,
     base: ParamStore,
@@ -357,6 +449,16 @@ pub struct Server<'e> {
     embed_buf: DeviceTensor,
     residency: Residency,
     kv_page: Option<usize>, // per-server page-size override (benchmarks)
+    /// Precomputed hot-path kernel / resident names (see [`Names`]).
+    names: Names,
+    /// Decode-step scratch, reused across steps so the steady-state
+    /// loop never heap-allocates: padded token / position rows, the
+    /// per-group routed (token, weight) pairs, and the per-expert
+    /// token groups the router re-fills each chunk.
+    scratch_toks: Vec<i32>,
+    scratch_poss: Vec<usize>,
+    scratch_pairs: Vec<(usize, f32)>,
+    scratch_groups: Vec<ExpertGroup>,
     pub widths: WidthProfile,
     pub metrics: ServeMetrics,
 }
@@ -458,6 +560,7 @@ impl<'e> Server<'e> {
         }
         let lnf_buf = up(store.get("lnf")?)?;
         let embed_buf = up(store.get("embed")?)?;
+        let names = Names::build(&cfg, &experts);
         Ok(Server {
             engine,
             base: store.clone(),
@@ -468,6 +571,11 @@ impl<'e> Server<'e> {
             embed_buf,
             residency: Residency::from_env(),
             kv_page: None,
+            names,
+            scratch_toks: Vec::new(),
+            scratch_poss: Vec::new(),
+            scratch_pairs: Vec::new(),
+            scratch_groups: Vec::new(),
             metrics: ServeMetrics {
                 expert_tokens: vec![0; cfg.n_layers * cfg.n_experts],
                 ..Default::default()
@@ -500,8 +608,12 @@ impl<'e> Server<'e> {
         self.residency
     }
 
-    fn cfg(&self) -> crate::config::ModelConfig {
-        self.engine.config().clone()
+    /// The engine's model config, by reference: `cfg()` sits on every
+    /// decode-hot call path, so it must not clone (`hot-path-alloc`).
+    /// The `'e` lifetime means the borrow is independent of `self` —
+    /// callers can hold it across `&mut self` calls.
+    fn cfg(&self) -> &'e crate::config::ModelConfig {
+        self.engine.config()
     }
 
     /// embed lookup + positional embedding; pad id embeds position anyway.
@@ -510,6 +622,7 @@ impl<'e> Server<'e> {
         let embed = self.base.get("embed")?;
         let pos = self.base.get("pos")?;
         let d = cfg.d_model;
+        // lint:allow(hot-path-alloc) embed output is consumed by the value-ABI `Tensor::from_vec` below; no scratch row can back it
         let mut out = vec![0.0f32; tokens.len() * d];
         for (i, (&t, &p)) in tokens.iter().zip(positions).enumerate() {
             let trow = &embed.data()[(t as usize) * d..(t as usize + 1) * d];
@@ -526,16 +639,18 @@ impl<'e> Server<'e> {
         let cfg = self.cfg();
         let d = cfg.d_model;
         let n = x.shape()[0];
-        let buckets = cfg.token_buckets.clone();
+        let buckets = &cfg.token_buckets;
         let max_bucket = *buckets.last().context("token_buckets is non-empty")?;
+        // lint:allow(hot-path-alloc) the residual accumulator must own a copy: experts scatter-add into `y` while `x` is still read for gathers
         let mut y = x.clone(); // residual accumulates expert outputs
 
         let mut start = 0usize;
         while start < n {
             let take = (n - start).min(max_bucket);
-            let nb = Router::token_bucket(&buckets, take)
+            let nb = Router::token_bucket(buckets, take)
                 .context("chunk size fits the largest token bucket")?;
             // pad chunk to bucket
+            // lint:allow(hot-path-alloc) chunk buffer is consumed by the value-ABI `Tensor::from_vec`; ownership moves into the engine call
             let mut chunk = vec![0.0f32; nb * d];
             chunk[..take * d]
                 .copy_from_slice(&x.data()[start * d..(start + take) * d]);
@@ -543,45 +658,53 @@ impl<'e> Server<'e> {
             let out = if buffer_cache_enabled() {
                 let chunk_b = self.engine.upload(Value::F32(chunk_t))?;
                 self.engine.run_b(
-                    &format!("moe_gate_n{nb}"),
+                    self.names.gate_name(nb)?,
                     &[&chunk_b.buf, &self.layers[l].ln2.buf, &self.layers[l].router.buf],
                 )?
             } else {
-                self.engine.run(
-                    &format!("moe_gate_n{nb}"),
-                    &[
-                        Value::F32(chunk_t),
-                        Value::F32(self.base.get(&format!("l{l}.ln2"))?.clone()),
-                        Value::F32(self.base.get(&format!("l{l}.router"))?.clone()),
-                    ],
-                )?
+                self.run_moe_gate_legacy(l, nb, chunk_t)?
             };
-            let xn = out[0].clone().f32()?;
-            let gates = out[1].clone().f32()?;
-            let groups = Router::group(&gates);
+            let mut out = out.into_iter();
+            let xn = out.next().context("moe_gate returns (xn, gates)")?.f32()?;
+            let gates = out.next().context("moe_gate returns (xn, gates)")?.f32()?;
+            // per-expert groups reuse server-owned scratch: `group_into`
+            // clears and re-fills warm Vec capacity instead of building
+            // E fresh groups per chunk
+            let mut groups = std::mem::take(&mut self.scratch_groups);
+            Router::group_into(&gates, &mut groups);
 
             for (e, group) in groups.iter().enumerate() {
-                // drop padding rows from the group
-                let pairs: Vec<(usize, f32)> = group
-                    .token_idx
-                    .iter()
-                    .zip(&group.weights)
-                    .filter(|(&t, _)| t < take)
-                    .map(|(&t, &w)| (t, w))
-                    .collect();
+                // drop padding rows from the group; the pair list reuses
+                // server-owned scratch (grown once, to the largest routed
+                // group) so steady-state routing never heap-allocates
+                let mut pairs = std::mem::take(&mut self.scratch_pairs);
+                pairs.clear();
+                pairs.extend(
+                    group
+                        .token_idx
+                        .iter()
+                        .zip(&group.weights)
+                        .filter(|(&t, _)| t < take)
+                        .map(|(&t, &w)| (t, w)),
+                );
                 if pairs.is_empty() {
+                    self.scratch_pairs = pairs;
                     continue;
                 }
                 let ew = &self.experts[l][e];
                 self.metrics.expert_tokens[l * cfg.n_experts + e] += pairs.len();
                 if ew.width == 0 {
-                    continue; // fully pruned expert contributes nothing
+                    // fully pruned expert contributes nothing
+                    self.scratch_pairs = pairs;
+                    continue;
                 }
+                let ew_width = ew.width;
                 let mut gstart = 0usize;
                 while gstart < pairs.len() {
                     let gtake = (pairs.len() - gstart).min(max_bucket);
-                    let gb = Router::token_bucket(&buckets, gtake)
+                    let gb = Router::token_bucket(buckets, gtake)
                         .context("group size fits the largest token bucket")?;
+                    // lint:allow(hot-path-alloc) gather buffer is consumed by the value-ABI `Tensor::from_vec`; ownership moves into the engine call
                     let mut xs = vec![0.0f32; gb * d];
                     let gather = |i: usize, dst: &mut [f32]| {
                         let (t, _) = pairs[gstart + i];
@@ -607,19 +730,11 @@ impl<'e> Server<'e> {
                     let res = if buffer_cache_enabled() {
                         let xs_b = self.engine.upload(Value::F32(xs_t))?;
                         self.engine.run_b(
-                            &format!("expert_n{gb}_w{}", ew.width),
+                            self.names.expert_name(gb, ew_width)?,
                             &[&xs_b.buf, &ew.bufs[0].buf, &ew.bufs[1].buf, &ew.bufs[2].buf],
                         )?
                     } else {
-                        self.engine.run(
-                            &format!("expert_n{gb}_w{}", ew.width),
-                            &[
-                                Value::F32(xs_t),
-                                Value::F32(ew.host[0].clone()),
-                                Value::F32(ew.host[1].clone()),
-                                Value::F32(ew.host[2].clone()),
-                            ],
-                        )?
+                        self.run_expert_legacy(l, e, gb, xs_t)?
                     };
                     let ys = res
                         .into_iter()
@@ -655,10 +770,44 @@ impl<'e> Server<'e> {
                     }
                     gstart += gtake;
                 }
+                self.scratch_pairs = pairs;
             }
+            self.scratch_groups = groups;
             start += take;
         }
         Ok(y)
+    }
+
+    /// Legacy-path (`HEAPR_NO_BUFFER_CACHE=1`) MoE gate dispatch: the
+    /// layer-norm and router weights round-trip by value on every call.
+    /// Split out of [`Server::moe_layer`] as a declared cold boundary —
+    /// the steady-state decode loop never takes this path, so its
+    /// by-value clones stay out of the hot set.
+    fn run_moe_gate_legacy(&self, l: usize, nb: usize, chunk_t: Tensor) -> Result<Vec<Value>> {
+        self.engine.run(
+            &format!("moe_gate_n{nb}"),
+            &[
+                Value::F32(chunk_t),
+                Value::F32(self.base.get(&format!("l{l}.ln2"))?.clone()),
+                Value::F32(self.base.get(&format!("l{l}.router"))?.clone()),
+            ],
+        )
+    }
+
+    /// Legacy-path expert dispatch for expert `e` of layer `l`: all
+    /// three weight tensors round-trip by value. A declared cold
+    /// boundary for the same reason as [`Server::run_moe_gate_legacy`].
+    fn run_expert_legacy(&self, l: usize, e: usize, gb: usize, xs_t: Tensor) -> Result<Vec<Value>> {
+        let ew = &self.experts[l][e];
+        self.engine.run(
+            &format!("expert_n{gb}_w{}", ew.width),
+            &[
+                Value::F32(xs_t),
+                Value::F32(ew.host[0].clone()),
+                Value::F32(ew.host[1].clone()),
+                Value::F32(ew.host[2].clone()),
+            ],
+        )
     }
 
     /// Last-position logits for a set of row states [B, d].
@@ -668,24 +817,18 @@ impl<'e> Server<'e> {
         let d = cfg.d_model;
         let nb = Router::token_bucket(&cfg.token_buckets, b)
             .context("batch size fits the largest token bucket")?;
+        // lint:allow(hot-path-alloc) padded lm_head input is consumed by the value-ABI `Tensor::from_vec`; ownership moves into the engine call
         let mut xs = vec![0.0f32; nb * d];
         xs[..b * d].copy_from_slice(states.data());
         let xs_t = Tensor::from_vec(&[nb, d], xs);
         let out = if buffer_cache_enabled() {
             let xs_b = self.engine.upload(Value::F32(xs_t))?;
             self.engine.run_b(
-                &format!("lm_head_n{nb}"),
+                self.names.head_name(nb)?,
                 &[&xs_b.buf, &self.lnf_buf.buf, &self.embed_buf.buf],
             )?
         } else {
-            self.engine.run(
-                &format!("lm_head_n{nb}"),
-                &[
-                    Value::F32(xs_t),
-                    Value::F32(self.base.get("lnf")?.clone()),
-                    Value::F32(self.base.get("embed")?.clone()),
-                ],
-            )?
+            self.run_lm_head_legacy(nb, xs_t)?
         };
         let logits = out
             .into_iter()
@@ -693,6 +836,21 @@ impl<'e> Server<'e> {
             .context("lm_head kernel returns one output")?
             .f32()?;
         Ok(logits.slice0(0, b))
+    }
+
+    /// Legacy-path (`HEAPR_NO_BUFFER_CACHE=1`) LM-head dispatch: the
+    /// final layer norm and the tied embedding matrix round-trip by
+    /// value. A declared cold boundary for the same reason as
+    /// [`Server::run_moe_gate_legacy`].
+    fn run_lm_head_legacy(&self, nb: usize, xs_t: Tensor) -> Result<Vec<Value>> {
+        self.engine.run(
+            &format!("lm_head_n{nb}"),
+            &[
+                Value::F32(xs_t),
+                Value::F32(self.base.get("lnf")?.clone()),
+                Value::F32(self.base.get("embed")?.clone()),
+            ],
+        )
     }
 
     /// Full-batch prefill; returns per-seq last-position logits [B, V]
@@ -963,28 +1121,41 @@ impl<'e> Server<'e> {
         let bb = state.bb;
         let b = next_tokens.len();
         assert!(b <= bb);
-        let mut toks = vec![PAD; bb];
+        // padded token/position rows live in server-owned scratch: the
+        // steady-state decode loop allocates nothing per step
+        let mut toks = std::mem::take(&mut self.scratch_toks);
+        toks.clear();
+        toks.resize(bb, PAD);
         toks[..b].copy_from_slice(next_tokens);
-        let mut poss = vec![0usize; bb];
+        let mut poss = std::mem::take(&mut self.scratch_poss);
+        poss.clear();
+        poss.resize(bb, 0);
         poss[..b].copy_from_slice(positions);
         let mut x = self.embed(&toks, &poss)?.reshape(&[bb, 1, d])?;
 
+        // lint:allow(hot-path-alloc) the [bb] i32 position tensor is the designed per-step upload; `from_vec` consumes its Vec, so no scratch can back it
         let pos_t = ITensor::from_vec(&[bb], poss.iter().map(|&p| p as i32).collect());
+        self.scratch_toks = toks;
+        self.scratch_poss = poss;
+        // lint:allow(hot-path-alloc) [bb]-element clone into the argument value wrapper — per-step position traffic, not a cache copy
         let pos_val = Value::I32(pos_t.clone());
         let pos_b = match &state.kind {
             StateKind::Legacy(_) if buffer_cache_enabled() => {
+                // lint:allow(hot-path-alloc) legacy-path-only clone of the [bb] position tensor
                 Some(self.engine.upload(Value::I32(pos_t.clone()))?)
             }
             _ => None,
         };
         for l in 0..cfg.n_layers {
-            let a = &self.layers[l].attn;
             let flat = match &mut state.kind {
                 StateKind::Resident(sess) => {
-                    let x_val = Value::F32(x.clone());
-                    let (kn, vn) = (format!("kc{l}"), format!("vc{l}"));
+                    // the hidden state moves into the argument value — no
+                    // per-layer clone; it is rebuilt from the MoE output below
+                    let x_val = Value::F32(x);
+                    let (kn, vn) = self.names.kv_names(l)?;
+                    let a = &self.layers[l].attn;
                     let out = sess.run_s(
-                        &format!("attn_decode_b{bb}"),
+                        self.names.attn_name(bb)?,
                         &[
                             SArg::Val(&x_val),
                             SArg::Buf(&a[0].buf),
@@ -992,8 +1163,8 @@ impl<'e> Server<'e> {
                             SArg::Buf(&a[2].buf),
                             SArg::Buf(&a[3].buf),
                             SArg::Buf(&a[4].buf),
-                            SArg::Res(&kn),
-                            SArg::Res(&vn),
+                            SArg::Res(kn),
+                            SArg::Res(vn),
                             SArg::Val(&pos_val),
                         ],
                     )?;
@@ -1004,51 +1175,69 @@ impl<'e> Server<'e> {
                     y.f32()?.reshape(&[bb, d])?
                 }
                 StateKind::Legacy(caches) => {
-                    let kv_bytes =
-                        ((caches[l].0.len() + caches[l].1.len()) * 4) as u64;
-                    let out = if buffer_cache_enabled() {
-                        let x_b = self.engine.upload(Value::F32(x.clone()))?;
-                        let kc_b = self.engine.upload(Value::F32(caches[l].0.clone()))?;
-                        let vc_b = self.engine.upload(Value::F32(caches[l].1.clone()))?;
-                        let pos_b = pos_b
-                            .as_ref()
-                            .context("pos buffer is uploaded when the buffer cache is on")?;
-                        self.engine.run_b(
-                            &format!("attn_decode_b{bb}"),
-                            &[
-                                &x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf,
-                                &a[3].buf, &a[4].buf, &kc_b.buf, &vc_b.buf,
-                                &pos_b.buf,
-                            ],
-                        )?
-                    } else {
-                        self.engine.run(
-                            &format!("attn_decode_b{bb}"),
-                            &[
-                                Value::F32(x.clone()),
-                                Value::F32(self.base.get(&format!("l{l}.ln1"))?.clone()),
-                                Value::F32(self.base.get(&format!("l{l}.wq"))?.clone()),
-                                Value::F32(self.base.get(&format!("l{l}.wk"))?.clone()),
-                                Value::F32(self.base.get(&format!("l{l}.wv"))?.clone()),
-                                Value::F32(self.base.get(&format!("l{l}.wo"))?.clone()),
-                                Value::F32(caches[l].0.clone()),
-                                Value::F32(caches[l].1.clone()),
-                                Value::I32(pos_t.clone()),
-                            ],
-                        )?
-                    };
-                    self.metrics.decode_kv_upload_bytes += kv_bytes;
-                    let [y, kc, vc]: [Value; 3] = out
-                        .try_into()
-                        .map_err(|_| anyhow!("attn_decode output arity"))?;
-                    caches[l] = (kc.f32()?, vc.f32()?);
-                    y.f32()?.reshape(&[bb, d])?
+                    self.legacy_decode_attn(l, &x, bb, d, &pos_t, pos_b.as_ref(), caches)?
                 }
             };
             let merged = self.moe_layer(l, flat)?;
             x = merged.reshape(&[bb, 1, d])?;
         }
         self.lm_head(x.reshape(&[bb, d])?.slice0(0, b))
+    }
+
+    /// One legacy-path decode attention step for layer `l`: both cache
+    /// tensors round-trip through the engine by value (and re-upload
+    /// under the buffer cache). Split out of [`Server::decode_step`] as
+    /// a declared cold boundary — the resident path never enters it, so
+    /// its per-step clones stay out of the hot set.
+    #[allow(clippy::too_many_arguments)]
+    fn legacy_decode_attn(
+        &mut self,
+        l: usize,
+        x: &Tensor,
+        bb: usize,
+        d: usize,
+        pos_t: &ITensor,
+        pos_b: Option<&DeviceTensor>,
+        caches: &mut [(Tensor, Tensor)],
+    ) -> Result<Tensor> {
+        let a = &self.layers[l].attn;
+        let kv_bytes = ((caches[l].0.len() + caches[l].1.len()) * 4) as u64;
+        let out = if buffer_cache_enabled() {
+            let x_b = self.engine.upload(Value::F32(x.clone()))?;
+            let kc_b = self.engine.upload(Value::F32(caches[l].0.clone()))?;
+            let vc_b = self.engine.upload(Value::F32(caches[l].1.clone()))?;
+            let pos_b =
+                pos_b.context("pos buffer is uploaded when the buffer cache is on")?;
+            self.engine.run_b(
+                &format!("attn_decode_b{bb}"),
+                &[
+                    &x_b.buf, &a[0].buf, &a[1].buf, &a[2].buf,
+                    &a[3].buf, &a[4].buf, &kc_b.buf, &vc_b.buf,
+                    &pos_b.buf,
+                ],
+            )?
+        } else {
+            self.engine.run(
+                &format!("attn_decode_b{bb}"),
+                &[
+                    Value::F32(x.clone()),
+                    Value::F32(self.base.get(&format!("l{l}.ln1"))?.clone()),
+                    Value::F32(self.base.get(&format!("l{l}.wq"))?.clone()),
+                    Value::F32(self.base.get(&format!("l{l}.wk"))?.clone()),
+                    Value::F32(self.base.get(&format!("l{l}.wv"))?.clone()),
+                    Value::F32(self.base.get(&format!("l{l}.wo"))?.clone()),
+                    Value::F32(caches[l].0.clone()),
+                    Value::F32(caches[l].1.clone()),
+                    Value::I32(pos_t.clone()),
+                ],
+            )?
+        };
+        self.metrics.decode_kv_upload_bytes += kv_bytes;
+        let [y, kc, vc]: [Value; 3] = out
+            .try_into()
+            .map_err(|_| anyhow!("attn_decode output arity"))?;
+        caches[l] = (kc.f32()?, vc.f32()?);
+        y.f32()?.reshape(&[bb, d])
     }
 
     /// One greedy decode step for a *single lane* of a paged state — the
@@ -1079,14 +1268,17 @@ impl<'e> Server<'e> {
             );
         }
         let mut x = self.embed(&[token], &[position])?.reshape(&[1, 1, d])?;
+        // lint:allow(hot-path-alloc) single-element position tensor for the b=1 lane replay; `from_vec` consumes its Vec
         let pos_val = Value::I32(ITensor::from_vec(&[1], vec![position as i32]));
         for l in 0..cfg.n_layers {
             let StateKind::Resident(sess) = &mut state.kind else {
                 bail!("decode_lane_step requires session residency");
             };
             let a = &self.layers[l].attn;
-            let x_val = Value::F32(x.clone());
-            let (kn, vn) = (format!("kc{l}"), format!("vc{l}"));
+            // the hidden state moves into the argument value — no
+            // per-layer clone; it is rebuilt from the MoE output below
+            let x_val = Value::F32(x);
+            let (kn, vn) = self.names.kv_names(l)?;
             let out = sess.run_s(
                 "attn_decode_b1",
                 &[
@@ -1096,8 +1288,8 @@ impl<'e> Server<'e> {
                     SArg::Buf(&a[2].buf),
                     SArg::Buf(&a[3].buf),
                     SArg::Buf(&a[4].buf),
-                    SArg::ResLane(&kn, lane),
-                    SArg::ResLane(&vn, lane),
+                    SArg::ResLane(kn, lane),
+                    SArg::ResLane(vn, lane),
                     SArg::Val(&pos_val),
                 ],
             )?;

@@ -31,7 +31,9 @@ pub fn perplexity(
         inputs.push(Value::I32(tokens));
         inputs.push(Value::I32(targets));
         let out = engine.run("loss_masked", &inputs)?;
+        // lint:allow(float-accum-order) f64 scalar total over eval batches, accumulated in the loop's one fixed order
         nll += out[0].clone().f32()?.item() as f64;
+        // lint:allow(float-accum-order) same fixed-order f64 scalar total as `nll` above
         cnt += out[1].clone().f32()?.item() as f64;
     }
     Ok((nll / cnt.max(1.0)).exp())

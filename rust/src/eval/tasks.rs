@@ -135,9 +135,10 @@ pub fn eval_tasks(
         .collect()
 }
 
-/// Mean accuracy across task results.
+/// Mean accuracy across task results (0.0 when empty).
 pub fn mean_accuracy(results: &[TaskResult]) -> f64 {
-    results.iter().map(|r| r.accuracy).sum::<f64>() / results.len() as f64
+    let accs: Vec<f64> = results.iter().map(|r| r.accuracy).collect();
+    crate::util::stats::mean(&accs)
 }
 
 #[cfg(test)]

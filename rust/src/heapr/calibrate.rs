@@ -180,6 +180,7 @@ impl Calibrator {
 fn add_into(acc: &mut Tensor, x: &Tensor) {
     assert_eq!(acc.shape(), x.shape());
     for (a, b) in acc.data_mut().iter_mut().zip(x.data()) {
+        // lint:allow(float-accum-order) calibration moments accumulate batch-sequentially by definition (Ḡ += per-batch G); the loader seed pins batch order
         *a += *b;
     }
 }

@@ -73,6 +73,7 @@ pub fn expert_scores(scores: &Tensor) -> Tensor {
         for ei in 0..e {
             let mut s = 0.0;
             for k in 0..di {
+                // lint:allow(float-accum-order) Eq. 8 expert aggregation: a ranking signal summed over <= d_i nonnegative atomic scores; no bitwise contract
                 s += scores.at(&[li, ei, k]);
             }
             out.set(&[li, ei], s);

@@ -1,0 +1,642 @@
+//! `lint::calls` — the whole-repo call graph, forward reachability
+//! from the decode-step entry set, and the `hot-path-alloc` rule that
+//! rides on it.
+//!
+//! The graph is name-resolved within the crate, from the token tree
+//! alone (no type information): `recv.name(..)` resolves to inherent
+//! methods named `name` (free functions as a fallback when no method
+//! exists), `path::name(..)` to both sets, and a bare `name(..)` to
+//! free functions first. Macros never produce edges — a call site
+//! requires `(` directly after the name, and a macro name is followed
+//! by `!`. A call may therefore resolve to several same-named
+//! functions; reachability takes them all. That conservatism is the
+//! point: a function is declared *cold* only by name, in
+//! [`COLD_BOUNDARIES`], with the rationale documented in
+//! ARCHITECTURE.md §7 — never by accident of resolution.
+//!
+//! Traversal starts at [`ENTRY_POINTS`] — the per-token decode step:
+//! the scheduler's step/commit/admission loop, the serve layer's
+//! `decode_step`/`decode_lane_step`, the session and host `run_s`
+//! decode family, the `runtime/kv` page walk, and the GEMM kernels —
+//! and stops at cold boundaries (constructors, admission/retirement
+//! machinery, legacy dispatch helpers) and at [`SANCTIONED_SINKS`]
+//! (the owned-tensor value ABI: allocations there are the engine
+//! contract, not per-token jitter). Entry functions are always
+//! scanned, even when their name also appears in a stop list (e.g.
+//! `Scheduler::run` is an entry while `run` — the `HostBackend` name
+//! dispatcher — is a boundary). `#[cfg(test)]` code is never entered.
+//!
+//! [`hot_path_alloc`] then scans every reachable body for
+//! heap-allocation sites (`vec![..]`, `format!`, `Box::new`,
+//! `String::from`, `..::with_capacity`, `.to_vec()`, `.to_string()`,
+//! `.to_owned()`, `.clone()`, `.collect()`). `Vec::new`/`String::new`
+//! are exempt (const constructors, no allocation until growth), and
+//! growth of a *reused* scratch buffer (`.push`/`.extend`/`.resize`
+//! onto state-owned storage) is by design not a finding — it
+//! amortizes to zero steady-state allocations, which is exactly the
+//! pattern the rule pushes hot code toward.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::lexer::TokKind;
+use super::rules::{SourceFile, HOT_ALLOC};
+use super::tree::{Item, Tree};
+use super::Diagnostic;
+
+/// The decode-step entry set, as (file suffix, fn name) pairs. This
+/// list is normative (mirrored in ARCHITECTURE.md §7); the
+/// `real_repo_entry_points_resolve` test keeps it honest against the
+/// actual tree.
+pub const ENTRY_POINTS: &[(&str, &str)] = &[
+    // per-token scheduler loop: step body, token commit, mid-flight
+    // admission (runs between decode steps on the scheduler thread)
+    ("coordinator/scheduler.rs", "run"),
+    ("coordinator/scheduler.rs", "commit"),
+    ("coordinator/scheduler.rs", "admit"),
+    ("coordinator/scheduler.rs", "try_admit_prefix"),
+    // serve layer: the per-step forward pass
+    ("coordinator/serve.rs", "decode_step"),
+    ("coordinator/serve.rs", "decode_lane_step"),
+    // session + host backend decode family
+    ("runtime/mod.rs", "run_s"),
+    ("runtime/host.rs", "run_s"),
+    ("runtime/host.rs", "decode_attend"),
+    ("runtime/host.rs", "attn_decode"),
+    ("runtime/host.rs", "attn_decode_inplace"),
+    ("runtime/host.rs", "attn_decode_paged"),
+    ("runtime/host.rs", "attend_softmax_v"),
+    // paged-KV per-step page walk (append one row, read one row)
+    ("runtime/kv.rs", "append_row"),
+    ("runtime/kv.rs", "row"),
+    // GEMM kernels (every decode matmul lands here)
+    ("tensor/gemm.rs", "gemm"),
+    ("tensor/gemm.rs", "blocked"),
+    ("tensor/gemm.rs", "simd"),
+    ("tensor/gemm.rs", "naive"),
+    ("tensor/gemm.rs", "dot"),
+    ("tensor/gemm.rs", "dot8"),
+    ("tensor/gemm.rs", "dot_k"),
+    ("tensor/gemm.rs", "dot_simd"),
+];
+
+/// Functions reachability does not descend into, by name. These are
+/// per-sequence or per-run machinery that sits *next to* the decode
+/// loop, not inside its steady state; each group's rationale is the
+/// ARCHITECTURE.md §7 text. Name-only matching is deliberate: the
+/// same boundary name may resolve across several types
+/// (`write_lane` exists on `DecodeState`, `Session` and `PagedKv`),
+/// and all of them are cold for the same reason.
+pub const COLD_BOUNDARIES: &[&str] = &[
+    // constructors and defaults: run once per object, not per token
+    "new",
+    "default",
+    // per-sequence admission / retirement / drain machinery: paid per
+    // request, amortized over its whole generation
+    "retire",
+    "compact",
+    "prefill",
+    "prefill_with_capacity",
+    "empty_state",
+    "serve_batch",
+    "admit_lane",
+    "write_lane",
+    "zero_lane",
+    "release",
+    "map_prefix",
+    "share_prefix",
+    "alloc_resident",
+    "alloc_paged",
+    "alloc_paged_resident",
+    "free_resident",
+    "register",
+    "evict",
+    "lookup",
+    "clear",
+    "session",
+    "download",
+    "dense",
+    "absorb_kv_stats",
+    // first-touch page allocation: the pool hands back recycled pages
+    // in steady state; a fresh allocation is a capacity event
+    "alloc",
+    // legacy / non-decode dispatch: `HostBackend::run` is a name
+    // dispatcher (the decode artifact family is declared as entries
+    // directly); `run` on `Engine` is the stateless upload-per-call
+    // path that `run_s` exists to replace
+    "run",
+    "dispatch",
+    "fit_cache",
+    "lane_rows",
+    "kv_cache",
+    "legacy_decode_attn",
+    "run_moe_gate_legacy",
+    "run_expert_legacy",
+    "run_lm_head_legacy",
+    // std-method name shadowing: `.parse()` on `str` and `.load()` on
+    // atomics resolve by name to the config/manifest/checkpoint
+    // loaders — all once-per-process startup machinery. The local fns
+    // that share these names (`Json::parse`, `Kernel::parse`,
+    // `Checkpoint::load`, …) are themselves cold for the same reason.
+    "parse",
+    "load",
+    // blocking request intake: the scheduler parks here between
+    // batches; work done behind these names is paid per admitted
+    // request, not per decoded token
+    "wait_ready",
+    "take_ready",
+];
+
+/// Value-ABI sinks: calls whose *callee* is not scanned because its
+/// allocations are the engine's owned-tensor contract (every kernel
+/// and artifact returns freshly owned tensors by construction).
+/// Removing those allocations means engine-level buffer donation (the
+/// PJRT follow-up), not scratch hoisting — so the audit's scope is
+/// the orchestration layer plus the in-place decode-append family,
+/// and these names stop traversal exactly like a cold boundary.
+/// Kept as a separate list so `--explain hot-path-alloc` and the docs
+/// can state the two rationales apart.
+pub const SANCTIONED_SINKS: &[&str] = &[
+    "from_vec", "zeros", "reshape", "slice0", "f32", "as_f32", "as_f32_mut", "as_i32",
+    "upload", "run_b", "matmul_tn", "matmul_nn", "matmul_at", "rmsnorm", "softmax",
+    "gather0",
+];
+
+/// One function (free fn or method) with a body, as a call-graph node.
+pub struct FnInfo {
+    /// Index into the [`SourceFile`] slice the graph was built over.
+    pub file: usize,
+    pub name: String,
+    /// Declared inside an `impl` block (span containment) vs at
+    /// module level.
+    pub is_method: bool,
+    pub line: u32,
+    /// Code-token indices of the body's `{` / `}` in the file's tree.
+    pub body: (usize, usize),
+    pub cfg_test: bool,
+}
+
+/// One `name(` call site inside a function body.
+pub struct CallSite {
+    pub name: String,
+    /// Code-token index of the name token in the file's tree.
+    pub at: usize,
+    /// Candidate callees (indices into [`CallGraph::fns`]), deduped.
+    pub callees: Vec<usize>,
+}
+
+/// The crate call graph: every bodied function, its call sites, and
+/// the per-file token trees the sites index into.
+pub struct CallGraph<'a> {
+    pub files: &'a [SourceFile],
+    pub trees: Vec<Tree<'a>>,
+    pub fns: Vec<FnInfo>,
+    /// `calls[i]` — the call sites inside `fns[i]`'s body (tokens of
+    /// functions nested inside it are skipped; they are their own
+    /// nodes).
+    pub calls: Vec<Vec<CallSite>>,
+}
+
+/// Rust keywords that can look like `name(` call sites but are not.
+pub(crate) fn is_keywordish(s: &str) -> bool {
+    matches!(
+        s,
+        "if" | "while" | "for" | "match" | "return" | "loop" | "fn" | "as" | "in"
+            | "let" | "move" | "ref" | "mut" | "else" | "break" | "continue"
+    )
+}
+
+impl<'a> CallGraph<'a> {
+    pub fn build(files: &'a [SourceFile]) -> CallGraph<'a> {
+        let trees: Vec<Tree<'a>> = files.iter().map(|f| Tree::new(&f.toks)).collect();
+        let mut fns: Vec<FnInfo> = Vec::new();
+        for (fi, tree) in trees.iter().enumerate() {
+            let mut impls: Vec<(usize, usize)> = Vec::new();
+            let mut decls: Vec<(String, u32, (usize, usize), bool)> = Vec::new();
+            for item in tree.items() {
+                match item {
+                    Item::Impl { body: Some((o, c)), .. } => impls.push((o, c)),
+                    Item::Fn { name, line, body: Some((o, c)), cfg_test } => {
+                        if !name.is_empty() {
+                            decls.push((name, line, (o, c), cfg_test));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            for (name, line, (o, c), cfg_test) in decls {
+                let is_method = impls.iter().any(|&(io, ic)| io < o && c < ic);
+                fns.push(FnInfo { file: fi, name, is_method, line, body: (o, c), cfg_test });
+            }
+        }
+
+        // Name → candidate node indices, split by declaration kind.
+        let mut free: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut meth: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            let map = if f.is_method { &mut meth } else { &mut free };
+            map.entry(f.name.as_str()).or_default().push(i);
+        }
+
+        let mut calls = Vec::with_capacity(fns.len());
+        for (i, f) in fns.iter().enumerate() {
+            let nested = nested_bodies(&fns, i);
+            calls.push(scan_calls(&trees[f.file], f.body, &nested, &free, &meth));
+        }
+        CallGraph { files, trees, fns, calls }
+    }
+
+    /// The node whose file path ends with `suffix` and whose name is
+    /// `name` (first match in build order, test code excluded).
+    pub fn fn_index(&self, suffix: &str, name: &str) -> Option<usize> {
+        self.fns.iter().position(|f| {
+            !f.cfg_test && f.name == name && self.files[f.file].path.ends_with(suffix)
+        })
+    }
+
+    /// Forward BFS from `entries`. Traversal never enters
+    /// `#[cfg(test)]` functions and does not descend into callees
+    /// whose *name* is in `stop`; entry functions themselves are
+    /// always scanned, even when stop-named. Returns node → the entry
+    /// node it was first reached from (the finding witness).
+    pub fn reachable_from(&self, entries: &[usize], stop: &[&str]) -> BTreeMap<usize, usize> {
+        let mut hot: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        for &e in entries {
+            if !self.fns[e].cfg_test && !hot.contains_key(&e) {
+                hot.insert(e, e);
+                queue.push_back(e);
+            }
+        }
+        while let Some(i) = queue.pop_front() {
+            let witness = hot[&i];
+            for site in &self.calls[i] {
+                for &j in &site.callees {
+                    let f = &self.fns[j];
+                    if f.cfg_test || stop.contains(&f.name.as_str()) {
+                        continue;
+                    }
+                    if !hot.contains_key(&j) {
+                        hot.insert(j, witness);
+                        queue.push_back(j);
+                    }
+                }
+            }
+        }
+        hot
+    }
+}
+
+/// Body spans of every *other* function strictly nested inside
+/// `fns[i]`'s body (same file) — skipped when scanning `i`, so a
+/// nested `fn` is attributed to its own node, not its enclosure.
+fn nested_bodies(fns: &[FnInfo], i: usize) -> Vec<(usize, usize)> {
+    let me = &fns[i];
+    let mut out: Vec<(usize, usize)> = fns
+        .iter()
+        .enumerate()
+        .filter(|&(j, f)| {
+            j != i && f.file == me.file && f.body.0 > me.body.0 && f.body.1 < me.body.1
+        })
+        .map(|(_, f)| f.body)
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Extract and resolve the call sites in one body.
+fn scan_calls(
+    tree: &Tree<'_>,
+    (open, close): (usize, usize),
+    nested: &[(usize, usize)],
+    free: &BTreeMap<&str, Vec<usize>>,
+    meth: &BTreeMap<&str, Vec<usize>>,
+) -> Vec<CallSite> {
+    let code = &tree.code;
+    let mut out: Vec<CallSite> = Vec::new();
+    let mut i = open + 1;
+    while i < close && i < code.len() {
+        if let Some(&(_, nc)) = nested.iter().find(|&&(no, _)| no == i) {
+            i = nc + 1;
+            continue;
+        }
+        let t = code[i];
+        if t.kind != TokKind::Ident
+            || is_keywordish(&t.text)
+            || !code.get(i + 1).is_some_and(|n| n.kind == TokKind::Punct && n.text == "(")
+        {
+            i += 1;
+            continue;
+        }
+        // `fn name(` is a declaration, not a call
+        if i > 0 && code[i - 1].kind == TokKind::Ident && code[i - 1].text == "fn" {
+            i += 1;
+            continue;
+        }
+        let name = t.text.as_str();
+        let dotted = i > 0 && code[i - 1].kind == TokKind::Punct && code[i - 1].text == ".";
+        let pathed = i >= 2 && code[i - 1].text == ":" && code[i - 2].text == ":";
+        let callees = if dotted {
+            prefer(meth.get(name), free.get(name))
+        } else if pathed {
+            merge(meth.get(name), free.get(name))
+        } else {
+            prefer(free.get(name), meth.get(name))
+        };
+        out.push(CallSite { name: t.text.clone(), at: i, callees });
+        i += 1;
+    }
+    out
+}
+
+/// `a` when non-empty, else `b` (the resolution fallback).
+fn prefer(a: Option<&Vec<usize>>, b: Option<&Vec<usize>>) -> Vec<usize> {
+    match a {
+        Some(v) if !v.is_empty() => v.clone(),
+        _ => b.cloned().unwrap_or_default(),
+    }
+}
+
+/// Sorted union of both candidate sets (path calls reach either kind).
+fn merge(a: Option<&Vec<usize>>, b: Option<&Vec<usize>>) -> Vec<usize> {
+    let mut v: Vec<usize> =
+        a.into_iter().chain(b).flat_map(|v| v.iter().copied()).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+// ------------------------------------------------------ hot-path-alloc --
+
+/// Rule `hot-path-alloc`: heap-allocation sites in any function
+/// reachable from the decode-step entry set. See the module docs for
+/// the detector inventory and the exemptions.
+pub fn hot_path_alloc(cg: &CallGraph<'_>) -> Vec<Diagnostic> {
+    let mut entries: Vec<usize> = Vec::new();
+    for &(suffix, name) in ENTRY_POINTS {
+        for (i, f) in cg.fns.iter().enumerate() {
+            if !f.cfg_test && f.name == name && cg.files[f.file].path.ends_with(suffix) {
+                entries.push(i);
+            }
+        }
+    }
+    let stop: Vec<&str> =
+        COLD_BOUNDARIES.iter().chain(SANCTIONED_SINKS).copied().collect();
+    let hot = cg.reachable_from(&entries, &stop);
+
+    let mut out = Vec::new();
+    for (&i, &w) in &hot {
+        let f = &cg.fns[i];
+        let path = &cg.files[f.file].path;
+        let entry = &cg.fns[w];
+        let via = if w == i {
+            String::new()
+        } else {
+            format!(" (reachable from entry `{}`)", entry.name)
+        };
+        let nested = nested_bodies(&cg.fns, i);
+        for (t, what) in alloc_sites(&cg.trees[f.file], f.body, &nested) {
+            out.push(Diagnostic {
+                rule: HOT_ALLOC,
+                file: path.clone(),
+                line: t.0,
+                col: t.1,
+                message: format!(
+                    "{what} in decode-hot fn `{}`{via}; the steady-state decode loop \
+                     must not heap-allocate — reuse state-owned scratch or justify \
+                     with `lint:allow(hot-path-alloc) <why>`",
+                    f.name
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Allocation sites in one body: ((line, col), description).
+fn alloc_sites(
+    tree: &Tree<'_>,
+    (open, close): (usize, usize),
+    nested: &[(usize, usize)],
+) -> Vec<((u32, u32), String)> {
+    let code = &tree.code;
+    let mut out = Vec::new();
+    let mut i = open + 1;
+    while i < close && i < code.len() {
+        if let Some(&(_, nc)) = nested.iter().find(|&&(no, _)| no == i) {
+            i = nc + 1;
+            continue;
+        }
+        let t = code[i];
+        if t.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let next = |k: usize| code.get(i + k).map(|n| n.text.as_str()).unwrap_or("");
+        let prev = |k: usize| {
+            i.checked_sub(k).and_then(|p| code.get(p)).map(|n| n.text.as_str()).unwrap_or("")
+        };
+        // a `(` directly after the name, or a `::<..>(` turbofish
+        let called = next(1) == "(" || (next(1) == ":" && next(2) == ":" && next(3) == "<");
+        let hit = match t.text.as_str() {
+            "vec" if next(1) == "!" => Some("`vec![..]` heap-allocates".to_string()),
+            "format" if next(1) == "!" => Some("`format!` allocates a String".to_string()),
+            "with_capacity" if next(1) == "(" && prev(1) == ":" => {
+                Some("`::with_capacity` heap-allocates".to_string())
+            }
+            "new" if next(1) == "(" && prev(1) == ":" && prev(2) == ":" && prev(3) == "Box" => {
+                Some("`Box::new` heap-allocates".to_string())
+            }
+            "from" if next(1) == "(" && prev(1) == ":" && prev(2) == ":" && prev(3) == "String" => {
+                Some("`String::from` allocates".to_string())
+            }
+            m @ ("to_vec" | "to_string" | "to_owned" | "clone" | "collect")
+                if called && prev(1) == "." =>
+            {
+                Some(format!("`.{m}()` allocates a fresh owned value"))
+            }
+            _ => None,
+        };
+        if let Some(what) = hit {
+            out.push(((t.line, t.col), what));
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, src: &str) -> SourceFile {
+        SourceFile::parse(path, src)
+    }
+
+    fn names(cg: &CallGraph<'_>, set: &BTreeMap<usize, usize>) -> Vec<String> {
+        set.keys().map(|&i| cg.fns[i].name.clone()).collect()
+    }
+
+    #[test]
+    fn direct_and_transitive_edges_resolve() {
+        let files = vec![sf(
+            "rust/src/a.rs",
+            "fn a() { b(); }\nfn b() { c(); }\nfn c() {}\nfn d() {}\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let e = cg.fn_index("a.rs", "a").unwrap();
+        let hot = cg.reachable_from(&[e], &[]);
+        assert_eq!(names(&cg, &hot), vec!["a", "b", "c"]);
+        // every reached node's witness is the single entry
+        assert!(hot.values().all(|&w| w == e));
+    }
+
+    #[test]
+    fn method_vs_free_fn_shadowing() {
+        let files = vec![sf(
+            "rust/src/a.rs",
+            "struct S;\nimpl S {\n    fn step(&self) { inner_m(); }\n}\n\
+             fn step() { inner_f(); }\n\
+             fn inner_m() {}\nfn inner_f() {}\n\
+             fn via_method(s: &S) { s.step(); }\n\
+             fn via_free() { step(); }\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let m = cg.fn_index("a.rs", "via_method").unwrap();
+        let f = cg.fn_index("a.rs", "via_free").unwrap();
+        let hot_m = cg.reachable_from(&[m], &[]);
+        let hot_f = cg.reachable_from(&[f], &[]);
+        let nm = names(&cg, &hot_m);
+        let nf = names(&cg, &hot_f);
+        assert!(nm.contains(&"inner_m".to_string()) && !nm.contains(&"inner_f".to_string()), "{nm:?}");
+        assert!(nf.contains(&"inner_f".to_string()) && !nf.contains(&"inner_m".to_string()), "{nf:?}");
+    }
+
+    #[test]
+    fn dotted_call_falls_back_to_free_fn_when_no_method_exists() {
+        let files = vec![sf(
+            "rust/src/a.rs",
+            "fn f(&self) { self.g(); }\nfn g(&self) { h(); }\nfn h() {}\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let e = cg.fn_index("a.rs", "f").unwrap();
+        assert_eq!(names(&cg, &cg.reachable_from(&[e], &[])), vec!["f", "g", "h"]);
+    }
+
+    #[test]
+    fn recursion_terminates_and_macros_make_no_edges() {
+        let files = vec![sf(
+            "rust/src/a.rs",
+            "fn a() { a(); b(); }\nfn b() { a(); println!(\"x\"); }\nfn println() {}\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let e = cg.fn_index("a.rs", "a").unwrap();
+        // `println!` is a macro (name followed by `!`), so the free fn
+        // named `println` must not be reached through it
+        assert_eq!(names(&cg, &cg.reachable_from(&[e], &[])), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn boundary_names_stop_traversal_but_entries_are_always_scanned() {
+        let files = vec![sf(
+            "rust/src/a.rs",
+            "fn run() { helper(); }\nfn helper() { deep(); }\nfn deep() {}\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let e = cg.fn_index("a.rs", "run").unwrap();
+        // `run` as entry is scanned even though `run` is also a stop
+        // name; `helper` is stopped by name, so `deep` is never seen
+        let hot = cg.reachable_from(&[e], &["run", "helper"]);
+        assert_eq!(names(&cg, &hot), vec!["run"]);
+    }
+
+    #[test]
+    fn cfg_test_fns_are_never_entered() {
+        let files = vec![sf(
+            "rust/src/a.rs",
+            "fn a() { t(); }\n#[cfg(test)]\nmod tests {\n    fn t() { super::a(); }\n}\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let e = cg.fn_index("a.rs", "a").unwrap();
+        assert_eq!(names(&cg, &cg.reachable_from(&[e], &[])), vec!["a"]);
+    }
+
+    #[test]
+    fn nested_fn_tokens_belong_to_the_nested_node() {
+        let files = vec![sf(
+            "rust/src/a.rs",
+            "fn outer() {\n    fn inner() { leaf(); }\n    other();\n}\n\
+             fn leaf() {}\nfn other() {}\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let e = cg.fn_index("a.rs", "outer").unwrap();
+        // outer reaches other() but NOT leaf(): the inner body's call
+        // belongs to `inner`, which nothing calls
+        assert_eq!(names(&cg, &cg.reachable_from(&[e], &[])), vec!["outer", "other"]);
+    }
+
+    #[test]
+    fn hot_path_alloc_fires_only_on_reachable_bodies() {
+        let files = vec![sf(
+            "rust/src/coordinator/scheduler.rs",
+            "impl Scheduler {\n\
+             \x20   fn run(&mut self) { let xs = data.to_vec(); self.helper(); }\n\
+             \x20   fn helper(&self) { let v = vec![0; 8]; }\n\
+             \x20   fn retire(&mut self) { let cold = vec![1; 8]; }\n\
+             }\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let d = hot_path_alloc(&cg);
+        let fired: Vec<(u32, &str)> = d.iter().map(|x| (x.line, x.rule)).collect();
+        // run's .to_vec() and helper's vec![..]; retire is a cold
+        // boundary by name and stays silent
+        assert_eq!(fired, vec![(2, HOT_ALLOC), (3, HOT_ALLOC)], "{d:#?}");
+        assert!(d[1].message.contains("reachable from entry `run`"), "{}", d[1].message);
+    }
+
+    #[test]
+    fn const_constructors_and_scratch_growth_are_exempt() {
+        let files = vec![sf(
+            "rust/src/coordinator/scheduler.rs",
+            "impl Scheduler {\n\
+             \x20   fn run(&mut self) {\n\
+             \x20       let mut v: Vec<i32> = Vec::new();\n\
+             \x20       let s = String::new();\n\
+             \x20       self.scratch.clear();\n\
+             \x20       self.scratch.resize(8, 0);\n\
+             \x20       self.scratch.push(1);\n\
+             \x20   }\n\
+             }\n",
+        )];
+        let cg = CallGraph::build(&files);
+        assert_eq!(hot_path_alloc(&cg), Vec::new());
+    }
+
+    /// The entry-point table stays honest against the real tree: every
+    /// declared (file, fn) pair must resolve to a node. A rename that
+    /// silently empties the hot set fails here, not in production.
+    #[test]
+    fn real_repo_entry_points_resolve() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let mut files = Vec::new();
+        for sub in ["coordinator", "runtime", "tensor"] {
+            let dir = root.join("rust").join("src").join(sub);
+            for e in std::fs::read_dir(dir).unwrap() {
+                let p = e.unwrap().path();
+                if p.extension().is_some_and(|x| x == "rs") {
+                    let rel = format!(
+                        "rust/src/{sub}/{}",
+                        p.file_name().unwrap().to_string_lossy()
+                    );
+                    files.push(sf(&rel, &std::fs::read_to_string(&p).unwrap()));
+                }
+            }
+        }
+        let cg = CallGraph::build(&files);
+        let missing: Vec<String> = ENTRY_POINTS
+            .iter()
+            .filter(|(suffix, name)| cg.fn_index(suffix, name).is_none())
+            .map(|(suffix, name)| format!("{suffix}::{name}"))
+            .collect();
+        assert!(missing.is_empty(), "stale ENTRY_POINTS entries: {missing:?}");
+    }
+}

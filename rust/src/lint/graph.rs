@@ -1,19 +1,26 @@
 //! Cross-file passes: rules that need to see the whole repo at once
 //! instead of one file at a time. [`super::lint_repo`] parses every
-//! source file into a [`SourceFile`], then hands the full slice here.
+//! source file into a [`SourceFile`], then hands the full slice here
+//! (plus the crate call graph from [`super::calls`]).
 //!
 //! Two rules live at this layer:
 //!
 //! * [`layering`] — extracts the intra-crate `use crate::…` graph and
-//!   asserts the ARCHITECTURE.md §7 layer map (util/tensor are the
-//!   foundation; runtime may not import the coordinator; model/heapr
-//!   may not import runtime or coordinator), plus whole-graph dependency
-//!   cycle detection with the full path in the message;
+//!   asserts the layer map, plus whole-graph dependency cycle
+//!   detection with the full path in the message. The map itself is
+//!   parsed at lint time from the machine-parsed table in
+//!   ARCHITECTURE.md §2 when the doc is present — the doc is the
+//!   normative source, and a missing/unparseable table or a row
+//!   naming a nonexistent module is itself a finding. The built-in
+//!   map (util/tensor are the foundation; runtime may not import the
+//!   coordinator; model/heapr may not import runtime or coordinator)
+//!   is the fallback for doc-less trees (fixtures);
 //! * [`lock_order`] — collects `Mutex`/`Condvar` acquisition sites per
 //!   function in the lock-discipline scope (`util/pool.rs`,
 //!   `runtime/kv.rs`, `coordinator/`), builds the conservative
-//!   may-hold-while-acquiring graph (call-edge-aware within the scope),
-//!   and flags cycles as potential deadlocks.
+//!   may-hold-while-acquiring graph — call edges come from the
+//!   [`super::calls`] graph, restricted to the scope — and flags
+//!   cycles as potential deadlocks.
 //!
 //! The lock model is intentionally static and conservative; see
 //! ARCHITECTURE.md §7 for the normative statement the rule encodes:
@@ -26,6 +33,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
+use super::calls::{is_keywordish, CallGraph};
 use super::lexer::TokKind;
 use super::rules::{SourceFile, LAYERING, LOCK_ORDER};
 use super::tree::{Item, Tree};
@@ -41,7 +49,11 @@ pub fn module_of(path: &str) -> Option<&str> {
     Some(first.strip_suffix(".rs").unwrap_or(first))
 }
 
-/// Why an import from `from` into `to` is forbidden, if it is.
+/// Why an import from `from` into `to` is forbidden, if it is — the
+/// built-in fallback map, used when no ARCHITECTURE.md is present
+/// (fixture trees). With the doc present, the §2 table is normative
+/// and this map must agree with it (the table is written to encode
+/// exactly these constraints; drift is a finding).
 fn layer_reason(from: &str, to: &str) -> Option<&'static str> {
     match from {
         // Foundation: util imports nothing internal; tensor may import
@@ -59,9 +71,108 @@ fn layer_reason(from: &str, to: &str) -> Option<&'static str> {
     }
 }
 
+/// One parsed row of the ARCHITECTURE §2 layer table.
+enum Constraint {
+    /// "imports nothing internal"
+    Nothing,
+    /// "imports only `a`, `b`"
+    Only(Vec<String>),
+    /// "never imports `a` or `b`"
+    Not(Vec<String>),
+}
+
+/// The repo-relative path layer-table findings anchor to.
+const ARCH_DOC: &str = "docs/ARCHITECTURE.md";
+
+/// Parse the machine-parsed layer table out of ARCHITECTURE.md §2:
+/// the first `| module | constraint |` table after the
+/// "machine-parsed by heapr-lint" marker line. Returns the rows
+/// (module, constraint, 1-based doc line) and any drift findings
+/// (marker/table missing, unparseable constraint text).
+fn parse_layer_table(doc: &str) -> (Vec<(String, Constraint, u32)>, Vec<Diagnostic>) {
+    let drift = |line: u32, message: String| Diagnostic {
+        rule: LAYERING,
+        file: ARCH_DOC.to_string(),
+        line,
+        col: 1,
+        message,
+    };
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    let mut after_marker = false;
+    let mut in_table = false;
+    for (i, raw) in doc.lines().enumerate() {
+        let ln = i as u32 + 1;
+        let line = raw.trim();
+        if !after_marker {
+            after_marker = line.contains("machine-parsed by heapr-lint");
+            continue;
+        }
+        if !line.starts_with('|') {
+            if in_table {
+                break; // the marked table ended
+            }
+            continue;
+        }
+        in_table = true;
+        let cells: Vec<&str> = line.trim_matches('|').split('|').map(str::trim).collect();
+        if cells.len() < 2 || cells[0].starts_with("---") || cells[0] == "module" {
+            continue; // header / separator row
+        }
+        let ticked = |s: &str| -> Vec<String> {
+            s.split('`')
+                .skip(1)
+                .step_by(2)
+                .map(str::to_string)
+                .collect()
+        };
+        let modules = ticked(cells[0]);
+        let [module] = modules.as_slice() else {
+            out.push(drift(
+                ln,
+                format!("layer-table row has no single backticked module name: `{line}`"),
+            ));
+            continue;
+        };
+        let text = cells[1];
+        let deps = ticked(text);
+        let constraint = if text.contains("nothing internal") {
+            Constraint::Nothing
+        } else if text.contains("only") && !deps.is_empty() {
+            Constraint::Only(deps)
+        } else if text.contains("never import") && !deps.is_empty() {
+            Constraint::Not(deps)
+        } else {
+            out.push(drift(
+                ln,
+                format!(
+                    "unparseable layer constraint for `{module}`: `{text}` (say \
+                     \"imports nothing internal\", \"imports only `a`\", or \
+                     \"never imports `a` or `b`\")"
+                ),
+            ));
+            continue;
+        };
+        rows.push((module.clone(), constraint, ln));
+    }
+    if rows.is_empty() && out.is_empty() {
+        out.push(drift(
+            1,
+            "no machine-parsed layer table found (marker \"machine-parsed by \
+             heapr-lint\" followed by a `| module | constraint |` table in §2); \
+             the layering rule has lost its normative source"
+                .to_string(),
+        ));
+    }
+    (rows, out)
+}
+
 /// Rule `layering`: assert the layer map over the `use crate::…` graph
-/// and report any dependency cycle with its full module path.
-pub fn layering(files: &[SourceFile]) -> Vec<Diagnostic> {
+/// and report any dependency cycle with its full module path. `arch`
+/// is the ARCHITECTURE.md contents when the doc exists — its §2 table
+/// is then the normative map (drift findings anchored to the doc);
+/// `None` falls back to the built-in [`layer_reason`] map.
+pub fn layering(files: &[SourceFile], arch: Option<&str>) -> Vec<Diagnostic> {
     let known: BTreeSet<&str> = files.iter().filter_map(|f| module_of(&f.path)).collect();
     // (from, to) → use sites, in walk order (files arrive sorted).
     let mut edges: BTreeMap<(String, String), Vec<(&str, u32, u32)>> = BTreeMap::new();
@@ -85,8 +196,49 @@ pub fn layering(files: &[SourceFile]) -> Vec<Diagnostic> {
     }
 
     let mut out = Vec::new();
+    let table = arch.map(parse_layer_table);
+    if let Some((rows, drift)) = &table {
+        out.extend(drift.iter().cloned());
+        for (module, _, ln) in rows {
+            if !known.contains(module.as_str()) {
+                out.push(Diagnostic {
+                    rule: LAYERING,
+                    file: ARCH_DOC.to_string(),
+                    line: *ln,
+                    col: 1,
+                    message: format!(
+                        "layer table names module `{module}` which does not exist \
+                         under rust/src (doc drift: update the §2 table)"
+                    ),
+                });
+            }
+        }
+    }
+    // The verdict for one import edge: the §2 table when present
+    // (normative), the built-in map otherwise.
+    let reason = |from: &str, to: &str| -> Option<String> {
+        match &table {
+            Some((rows, _)) => {
+                let (_, c, _) = rows.iter().find(|(m, _, _)| m == from)?;
+                let hit = match c {
+                    Constraint::Nothing => true,
+                    Constraint::Only(deps) => !deps.iter().any(|d| d == to),
+                    Constraint::Not(deps) => deps.iter().any(|d| d == to),
+                };
+                hit.then(|| {
+                    let what = match c {
+                        Constraint::Nothing => "imports nothing internal".to_string(),
+                        Constraint::Only(deps) => format!("may import only `{}`", deps.join("`, `")),
+                        Constraint::Not(deps) => format!("may never import `{}`", deps.join("`/`")),
+                    };
+                    format!("`{from}` {what} (ARCHITECTURE §2)")
+                })
+            }
+            None => layer_reason(from, to).map(str::to_string),
+        }
+    };
     for ((from, to), sites) in &edges {
-        if let Some(reason) = layer_reason(from, to) {
+        if let Some(reason) = reason(from, to) {
             for (file, line, col) in sites {
                 out.push(Diagnostic {
                     rule: LAYERING,
@@ -196,61 +348,47 @@ struct Acq {
     col: u32,
 }
 
-/// Per-function analysis result.
-struct FnLocks {
-    file: String,
-    acqs: Vec<Acq>,
-    /// `name(` call sites within the body: (callee, code index).
-    calls: Vec<(String, usize)>,
-}
-
 /// Rule `lock-order`: build the may-hold-while-acquiring graph over the
 /// lock-discipline scope and flag cycles as potential deadlocks.
-/// Same-name edges are suppressed (an indexed receiver like
-/// `slots[i].lock()` names one identity but guards many mutexes), so
-/// re-entrant acquisition is out of scope for this rule.
-pub fn lock_order(files: &[SourceFile]) -> Vec<Diagnostic> {
-    let mut fns: BTreeMap<String, Vec<FnLocks>> = BTreeMap::new();
-    for f in files {
-        if !in_lock_scope(&f.path) {
-            continue;
-        }
-        let tree = Tree::new(&f.toks);
-        for item in tree.items() {
-            let Item::Fn { name, body: Some((open, close)), cfg_test, .. } = item else {
-                continue;
-            };
-            if cfg_test || name.is_empty() {
-                continue;
-            }
-            fns.entry(name).or_default().push(scan_fn(&f.path, &tree, open, close));
-        }
-    }
-
-    // Direct lock sets per function name (merged over same-name fns —
-    // conservative), then the transitive closure through call edges.
-    let mut reach: BTreeMap<String, BTreeSet<String>> = fns
-        .iter()
-        .map(|(name, bodies)| {
-            let locks = bodies
-                .iter()
-                .flat_map(|b| b.acqs.iter().map(|a| a.name.clone()))
-                .collect();
-            (name.clone(), locks)
+/// Call edges come from the crate [`CallGraph`], restricted to in-scope
+/// non-test functions (an out-of-scope callee holds no locks by scope
+/// definition, so traversal through it adds nothing). Same-name edges
+/// are suppressed (an indexed receiver like `slots[i].lock()` names one
+/// identity but guards many mutexes), so re-entrant acquisition is out
+/// of scope for this rule.
+pub fn lock_order(cg: &CallGraph<'_>) -> Vec<Diagnostic> {
+    // In-scope nodes and their acquisition events.
+    let scoped: Vec<usize> = (0..cg.fns.len())
+        .filter(|&i| {
+            let f = &cg.fns[i];
+            !f.cfg_test && in_lock_scope(&cg.files[f.file].path)
         })
+        .collect();
+    let in_scope: BTreeSet<usize> = scoped.iter().copied().collect();
+    let acqs: BTreeMap<usize, Vec<Acq>> = scoped
+        .iter()
+        .map(|&i| {
+            let f = &cg.fns[i];
+            (i, scan_acqs(&cg.trees[f.file], f.body.0, f.body.1))
+        })
+        .collect();
+
+    // Direct lock sets per node, then the transitive closure through
+    // the call-graph edges (callees restricted to the scope).
+    let mut reach: BTreeMap<usize, BTreeSet<String>> = acqs
+        .iter()
+        .map(|(&i, a)| (i, a.iter().map(|x| x.name.clone()).collect()))
         .collect();
     loop {
         let mut changed = false;
-        for (name, bodies) in &fns {
+        for &i in &scoped {
             let mut add: BTreeSet<String> = BTreeSet::new();
-            for b in bodies {
-                for (callee, _) in &b.calls {
-                    if let Some(r) = reach.get(callee) {
-                        add.extend(r.iter().cloned());
-                    }
+            for site in &cg.calls[i] {
+                for j in site.callees.iter().filter(|j| in_scope.contains(j)) {
+                    add.extend(reach[j].iter().cloned());
                 }
             }
-            let mine = reach.get_mut(name).expect("every scanned fn has a reach entry");
+            let mine = reach.get_mut(&i).expect("every scoped fn has a reach entry");
             let before = mine.len();
             mine.extend(add);
             changed |= mine.len() != before;
@@ -268,39 +406,39 @@ pub fn lock_order(files: &[SourceFile]) -> Vec<Diagnostic> {
                 .entry((from.to_string(), to.to_string()))
                 .or_insert_with(|| (file.to_string(), line, col, how));
         };
-    for bodies in fns.values() {
-        for b in bodies {
-            for a in &b.acqs {
-                let Some((h0, h1)) = a.held else { continue };
-                for other in &b.acqs {
-                    if other.at > h0 && other.at < h1 && other.name != a.name {
-                        record(
-                            &a.name,
-                            &other.name,
-                            &b.file,
-                            other.line,
-                            other.col,
-                            format!("`{}` acquired while `{}` is held", other.name, a.name),
-                        );
-                    }
+    for &i in &scoped {
+        let file = &cg.files[cg.fns[i].file].path;
+        for a in &acqs[&i] {
+            let Some((h0, h1)) = a.held else { continue };
+            for other in &acqs[&i] {
+                if other.at > h0 && other.at < h1 && other.name != a.name {
+                    record(
+                        &a.name,
+                        &other.name,
+                        file,
+                        other.line,
+                        other.col,
+                        format!("`{}` acquired while `{}` is held", other.name, a.name),
+                    );
                 }
-                for (callee, at) in &b.calls {
-                    if *at <= h0 || *at >= h1 {
-                        continue;
-                    }
-                    let Some(r) = reach.get(callee) else { continue };
-                    for l in r {
+            }
+            for site in &cg.calls[i] {
+                if site.at <= h0 || site.at >= h1 {
+                    continue;
+                }
+                for j in site.callees.iter().filter(|j| in_scope.contains(j)) {
+                    for l in &reach[j] {
                         if *l != a.name {
                             record(
                                 &a.name,
                                 l,
-                                &b.file,
+                                file,
                                 a.line,
                                 a.col,
                                 format!(
-                                    "call to `{callee}` (which may lock `{l}`) \
+                                    "call to `{}` (which may lock `{l}`) \
                                      while `{}` is held",
-                                    a.name
+                                    site.name, a.name
                                 ),
                             );
                         }
@@ -338,43 +476,29 @@ pub fn lock_order(files: &[SourceFile]) -> Vec<Diagnostic> {
     out
 }
 
-/// Rust keywords that look like `name(` call sites but are not calls.
-fn is_keywordish(s: &str) -> bool {
-    matches!(
-        s,
-        "if" | "while" | "for" | "match" | "return" | "loop" | "fn" | "as" | "in"
-            | "let" | "move" | "ref" | "mut" | "else" | "break" | "continue"
-    )
-}
-
 /// Scan one function body (code indices `open..=close`) for lock
-/// acquisitions and call sites.
-fn scan_fn(file: &str, tree: &Tree, open: usize, close: usize) -> FnLocks {
+/// acquisition events. Call sites are no longer collected here — the
+/// [`CallGraph`] owns call extraction and resolution.
+fn scan_acqs(tree: &Tree, open: usize, close: usize) -> Vec<Acq> {
     let code = &tree.code;
     let mut acqs = Vec::new();
-    let mut calls = Vec::new();
     let mut i = open + 1;
     while i < close {
         let t = code[i];
-        // `name(` call site
         if t.kind == TokKind::Ident
             && !is_keywordish(&t.text)
             && code.get(i + 1).is_some_and(|n| n.text == "(")
+            && matches!(t.text.as_str(), "lock" | "wait" | "wait_timeout" | "wait_while")
+            && i > open + 1
+            && code[i - 1].text == "."
         {
-            match t.text.as_str() {
-                "lock" | "wait" | "wait_timeout" | "wait_while"
-                    if i > open + 1 && code[i - 1].text == "." =>
-                {
-                    if let Some(a) = acquisition(tree, open, close, i) {
-                        acqs.push(a);
-                    }
-                }
-                _ => calls.push((t.text.clone(), i)),
+            if let Some(a) = acquisition(tree, open, close, i) {
+                acqs.push(a);
             }
         }
         i += 1;
     }
-    FnLocks { file: file.to_string(), acqs, calls }
+    acqs
 }
 
 /// Build the acquisition event for a `.lock(` / `.wait*(` at code index
@@ -507,7 +631,7 @@ mod tests {
             sf("rust/src/util/mod.rs", "use crate::runtime::Engine;\n"),
             sf("rust/src/tensor/mod.rs", "use crate::util::pool;\n"),
         ];
-        let d = layering(&files);
+        let d = layering(&files, None);
         let fired: Vec<(&str, u32)> = d.iter().map(|x| (x.file.as_str(), x.line)).collect();
         assert_eq!(
             fired,
@@ -527,7 +651,7 @@ mod tests {
             sf("rust/src/tensor/gemm.rs", "use crate::util::pool::ThreadPool;\n"),
             sf("rust/src/util/pool.rs", "pub struct ThreadPool;\n"),
         ];
-        assert!(layering(&files).is_empty());
+        assert!(layering(&files, None).is_empty());
     }
 
     #[test]
@@ -537,7 +661,7 @@ mod tests {
             sf("rust/src/beta.rs", "use crate::gamma::G;\n"),
             sf("rust/src/gamma.rs", "use crate::alpha::A;\n"),
         ];
-        let d = layering(&files);
+        let d = layering(&files, None);
         assert_eq!(d.len(), 1, "{d:#?}");
         assert!(d[0].message.contains("`alpha` → `beta` → `gamma` → `alpha`"), "{}", d[0].message);
         assert_eq!(d[0].file, "rust/src/alpha.rs");
@@ -552,14 +676,81 @@ mod tests {
             ),
             sf("rust/src/runtime/mod.rs", "pub struct Engine;\n"),
         ];
-        assert!(layering(&files).is_empty());
+        assert!(layering(&files, None).is_empty());
     }
 
     #[test]
     fn non_module_second_segment_is_ignored() {
         // `use crate::debug;` imports a macro, not a module
         let files = vec![sf("rust/src/runtime/mod.rs", "use crate::{debug, info};\n")];
-        assert!(layering(&files).is_empty());
+        assert!(layering(&files, None).is_empty());
+    }
+
+    // ------------------------------------------- layering (doc-driven map)
+
+    const ARCH_FIXTURE: &str = "# doc\n\n## 2. Layers\n\n\
+        The table below is machine-parsed by heapr-lint.\n\n\
+        | module | constraint |\n|---|---|\n\
+        | `util` | imports nothing internal |\n\
+        | `tensor` | imports only `util` |\n\
+        | `runtime` | never imports `coordinator` |\n";
+
+    #[test]
+    fn doc_table_drives_the_verdicts() {
+        let files = vec![
+            sf("rust/src/tensor/mod.rs", "use crate::util::pool;\nuse crate::runtime::E;\n"),
+            sf("rust/src/util/mod.rs", "pub struct P;\n"),
+            sf("rust/src/runtime/mod.rs", "pub struct E;\n"),
+        ];
+        let d = layering(&files, Some(ARCH_FIXTURE));
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert_eq!((d[0].file.as_str(), d[0].line), ("rust/src/tensor/mod.rs", 2));
+        assert!(d[0].message.contains("ARCHITECTURE §2"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn missing_marker_or_table_is_a_drift_finding() {
+        let files = vec![sf("rust/src/util/mod.rs", "pub struct P;\n")];
+        let d = layering(&files, Some("# doc with no marked table\n"));
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert_eq!(d[0].file, "docs/ARCHITECTURE.md");
+        assert!(d[0].message.contains("no machine-parsed layer table"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn unparseable_row_and_unknown_module_are_drift_findings() {
+        let arch = "machine-parsed by heapr-lint\n\
+            | module | constraint |\n|---|---|\n\
+            | `util` | does whatever it wants |\n\
+            | `phantom` | never imports `util` |\n";
+        let files = vec![sf("rust/src/util/mod.rs", "pub struct P;\n")];
+        let d = layering(&files, Some(arch));
+        let msgs: Vec<&str> = d.iter().map(|x| x.message.as_str()).collect();
+        assert_eq!(d.len(), 2, "{d:#?}");
+        assert!(msgs[0].contains("unparseable layer constraint for `util`"), "{msgs:?}");
+        assert!(msgs[1].contains("names module `phantom`"), "{msgs:?}");
+        assert!(d.iter().all(|x| x.file == "docs/ARCHITECTURE.md"));
+    }
+
+    #[test]
+    fn doc_and_builtin_maps_agree_on_the_builtin_cases() {
+        // The §2 fixture rows encode the same constraints as
+        // `layer_reason`; both map forms must produce identical
+        // verdicts over the same import edges.
+        let files = vec![
+            sf("rust/src/runtime/mod.rs", "use crate::coordinator::S;\n"),
+            sf("rust/src/coordinator/mod.rs", "pub struct S;\n"),
+            sf("rust/src/util/mod.rs", "use crate::runtime::R;\n"),
+            sf("rust/src/tensor/mod.rs", "use crate::util::pool;\npub struct T;\n"),
+        ];
+        let with_doc: Vec<(String, u32)> = layering(&files, Some(ARCH_FIXTURE))
+            .into_iter()
+            .map(|x| (x.file, x.line))
+            .collect();
+        let builtin: Vec<(String, u32)> =
+            layering(&files, None).into_iter().map(|x| (x.file, x.line)).collect();
+        assert_eq!(with_doc, builtin, "doc-driven and built-in verdicts diverge");
+        assert_eq!(with_doc.len(), 2, "{with_doc:?}"); // runtime→coordinator, util→runtime
     }
 
     // ---------------------------------------------------------- lock-order
@@ -568,13 +759,18 @@ mod tests {
         vec![sf("rust/src/util/pool.rs", src)]
     }
 
+    /// Run lock-order through the call graph, as `lint_repo` does.
+    fn lo(files: &[SourceFile]) -> Vec<Diagnostic> {
+        lock_order(&CallGraph::build(files))
+    }
+
     #[test]
     fn inverted_orders_cycle() {
         let src = "impl Q {\n\
             fn ab(&self) {\n    let a = self.a.lock().unwrap();\n    self.b.lock().unwrap();\n}\n\
             fn ba(&self) {\n    let b = self.b.lock().unwrap();\n    self.a.lock().unwrap();\n}\n\
             }\n";
-        let d = lock_order(&pool(src));
+        let d = lo(&pool(src));
         assert_eq!(d.len(), 1, "{d:#?}");
         assert_eq!(d[0].rule, LOCK_ORDER);
         assert!(d[0].message.contains("`a` → `b` → `a`"), "{}", d[0].message);
@@ -586,7 +782,7 @@ mod tests {
             fn ab(&self) {\n    let a = self.a.lock().unwrap();\n    self.b.lock().unwrap();\n}\n\
             fn ab2(&self) {\n    let a = self.a.lock().unwrap();\n    let b = self.b.lock().unwrap();\n}\n\
             }\n";
-        assert!(lock_order(&pool(src)).is_empty());
+        assert!(lo(&pool(src)).is_empty());
     }
 
     #[test]
@@ -595,7 +791,7 @@ mod tests {
                    \x20   let b = self.b.lock().unwrap();\n}\n\
                    fn g(&self) {\n    let b = self.b.lock().unwrap();\n    drop(b);\n\
                    \x20   let a = self.a.lock().unwrap();\n}\n";
-        assert!(lock_order(&pool(src)).is_empty());
+        assert!(lo(&pool(src)).is_empty());
     }
 
     #[test]
@@ -606,7 +802,7 @@ mod tests {
                    self.y.lock().unwrap();\n    }\n}\n\
                    fn g(&self) {\n    let y = self.y.lock().unwrap();\n    \
                    self.x.lock().unwrap();\n}\n";
-        assert!(lock_order(&pool(src)).is_empty());
+        assert!(lo(&pool(src)).is_empty());
     }
 
     #[test]
@@ -614,7 +810,7 @@ mod tests {
         let src = "fn f(&self) {\n    g(self.a.lock().unwrap(), self.b.lock().unwrap());\n}\n\
                    fn h(&self) {\n    let b = self.b.lock().unwrap();\n    \
                    self.a.lock().unwrap();\n}\n";
-        let d = lock_order(&pool(src));
+        let d = lo(&pool(src));
         assert_eq!(d.len(), 1, "{d:#?}");
     }
 
@@ -625,7 +821,7 @@ mod tests {
                    fn g(&self) {\n    self.b.lock().unwrap();\n}\n\
                    fn h(&self) {\n    let b = self.b.lock().unwrap();\n    \
                    self.a.lock().unwrap();\n}\n";
-        let d = lock_order(&pool(src));
+        let d = lo(&pool(src));
         assert_eq!(d.len(), 1, "{d:#?}");
         assert!(d[0].message.contains("potential deadlock"), "{}", d[0].message);
     }
@@ -638,10 +834,10 @@ mod tests {
         // documented limitation of the name-based lock identity.
         let src = "fn f(&self) {\n    let a = slots[i].lock().unwrap();\n    \
                    let b = slots[j].lock().unwrap();\n}\n";
-        assert!(lock_order(&pool(src)).is_empty());
+        assert!(lo(&pool(src)).is_empty());
         let src2 = "fn f(&self) {\n    let a = self.a.lock().unwrap();\n    self.g();\n}\n\
                     fn g(&self) {\n    self.a.lock().unwrap();\n}\n";
-        assert!(lock_order(&pool(src2)).is_empty());
+        assert!(lo(&pool(src2)).is_empty());
     }
 
     #[test]
@@ -651,7 +847,7 @@ mod tests {
         // holds nothing. No cycle.
         let src = "fn f(&self) {\n    let mut rem = self.remaining.lock().unwrap();\n    \
                    while *rem > 0 {\n        rem = self.done_cv.wait(rem).unwrap();\n    }\n}\n";
-        assert!(lock_order(&pool(src)).is_empty());
+        assert!(lo(&pool(src)).is_empty());
     }
 
     #[test]
@@ -660,7 +856,7 @@ mod tests {
                    fn ab(&self) {\n    let a = self.a.lock().unwrap();\n    self.b.lock().unwrap();\n}\n\
                    fn ba(&self) {\n    let b = self.b.lock().unwrap();\n    self.a.lock().unwrap();\n}\n\
                    }\n";
-        assert!(lock_order(&pool(src)).is_empty());
+        assert!(lo(&pool(src)).is_empty());
     }
 
     #[test]
@@ -668,6 +864,6 @@ mod tests {
         let src = "fn ab(&self) {\n    let a = self.a.lock().unwrap();\n    self.b.lock().unwrap();\n}\n\
                    fn ba(&self) {\n    let b = self.b.lock().unwrap();\n    self.a.lock().unwrap();\n}\n";
         let files = vec![sf("rust/src/train/mod.rs", src)];
-        assert!(lock_order(&files).is_empty());
+        assert!(lo(&files).is_empty());
     }
 }

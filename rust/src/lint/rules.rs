@@ -36,6 +36,15 @@ pub const PANIC_FREE: &str = "panic-free-serve";
 /// `RowsPtr`/`SendPtr` construction only in the registered raw-pointer
 /// modules (`util/pool`, `tensor/gemm`, `runtime/host`).
 pub const SENDPTR: &str = "sendptr-confinement";
+/// No heap-allocation site in any function reachable from the
+/// decode-step entry set (cross-file; see [`super::calls`]).
+pub const HOT_ALLOC: &str = "hot-path-alloc";
+/// No bare `+=` / `.sum::<f32|f64>()` float reduction outside the
+/// kernel layer and the sanctioned `util` reducers.
+pub const FLOAT_ACCUM: &str = "float-accum-order";
+/// No `let _ = <fallible call>` / bare `.ok();` Result discards
+/// outside `#[cfg(test)]`.
+pub const SWALLOWED: &str = "swallowed-result";
 /// Meta-diagnostic: a `lint:allow` naming a rule that does not exist.
 pub const UNKNOWN_RULE: &str = "unknown-rule";
 /// Meta-diagnostic: a `lint:allow` for a rule in [`JUSTIFIED_RULES`]
@@ -43,7 +52,7 @@ pub const UNKNOWN_RULE: &str = "unknown-rule";
 pub const ALLOW_JUSTIFY: &str = "allow-needs-justification";
 
 /// The enforced rule set (the valid names for `lint:allow`).
-pub const RULES: [&str; 9] = [
+pub const RULES: [&str; 12] = [
     UNSAFE_SAFETY,
     PARTIAL_CMP,
     THREAD_SPAWN,
@@ -53,13 +62,120 @@ pub const RULES: [&str; 9] = [
     LOCK_ORDER,
     PANIC_FREE,
     SENDPTR,
+    HOT_ALLOC,
+    FLOAT_ACCUM,
+    SWALLOWED,
 ];
 
 /// Rules whose `lint:allow` escapes must carry a written justification:
 /// `// lint:allow(panic-free-serve) <why this site is sound>`. An empty
 /// suffix surfaces as [`ALLOW_JUSTIFY`] (the allow still applies, so the
 /// meta-finding is the only diagnostic — CI stays red either way).
-pub const JUSTIFIED_RULES: [&str; 4] = [LAYERING, LOCK_ORDER, PANIC_FREE, SENDPTR];
+pub const JUSTIFIED_RULES: [&str; 7] =
+    [LAYERING, LOCK_ORDER, PANIC_FREE, SENDPTR, HOT_ALLOC, FLOAT_ACCUM, SWALLOWED];
+
+/// One paragraph of normative documentation per rule (and per
+/// meta-diagnostic) — the `--explain <rule>` text, and the source of
+/// truth the README rule table summarizes.
+pub const RULE_DOCS: &[(&str, &str)] = &[
+    (
+        UNSAFE_SAFETY,
+        "Every `unsafe` block, fn, or impl must sit directly under a `// SAFETY:` \
+         comment (or a `# Safety` doc section) stating the soundness argument. \
+         Attribute lines between the comment and the item are transparent; a blank \
+         or code line breaks adjacency.",
+    ),
+    (
+        PARTIAL_CMP,
+        "`partial_cmp(..).unwrap()/.expect(..)` is banned outside `util::cmp`: a NaN \
+         comparand panics at the ordering site. Orderings over floats go through the \
+         `total_cmp`-based helpers, which are total by construction.",
+    ),
+    (
+        THREAD_SPAWN,
+        "`std::thread::spawn` is allowed only inside `util::pool`. One spawn path \
+         means thread naming, panic parking, and shutdown are audited in one place \
+         instead of leaking per call site.",
+    ),
+    (
+        ENV_REGISTRY,
+        "Every `HEAPR_*` environment read must have a row in README's env table, and \
+         every row must correspond to a live read — both directions, so the table \
+         can be trusted as the complete runtime-knob inventory.",
+    ),
+    (
+        TEST_REG,
+        "Every file under `rust/tests/` must be declared as a `[[test]]` target in \
+         Cargo.toml, and every declared target must exist on disk. An orphaned test \
+         file silently never runs; this keeps the suite closed under addition.",
+    ),
+    (
+        LAYERING,
+        "The `use crate::…` graph must satisfy the layer map and stay cycle-free. \
+         The map is parsed at lint time from the machine-parsed table in \
+         ARCHITECTURE.md §2 (the doc is the normative source; a missing or \
+         unparseable table is itself a finding), with the built-in map as the \
+         fallback when the doc is absent (fixture trees).",
+    ),
+    (
+        LOCK_ORDER,
+        "The conservative may-hold-while-acquiring lock graph over the \
+         lock-discipline scope (`util/pool`, `runtime/kv`, `coordinator/`) must be \
+         cycle-free. Lock identity is the receiver name before `.lock()`; call \
+         edges come from the `lint::calls` graph, restricted to the scope.",
+    ),
+    (
+        PANIC_FREE,
+        "No `unwrap()` / `expect()` / `panic!` / `unreachable!` / `todo!` in the \
+         decode hot path (host, kv, scheduler, serve, gemm). A bad request must \
+         fail with an error response, not take the serve loop down.",
+    ),
+    (
+        SENDPTR,
+        "`RowsPtr::new` / `SendPtr` construction is confined to the registered \
+         raw-pointer modules (`util/pool`, `tensor/gemm`, `runtime/host`), so \
+         raw-pointer parallelism cannot spread unaudited. Fires in test code too.",
+    ),
+    (
+        HOT_ALLOC,
+        "No heap-allocation site (`vec![..]`, `format!`, `Box::new`, \
+         `String::from`, `::with_capacity`, `.to_vec()`, `.to_string()`, \
+         `.to_owned()`, `.clone()`, `.collect()`) in any function reachable from \
+         the decode-step entry set in the `lint::calls` graph. `Vec::new` / \
+         `String::new` are exempt (const, no allocation until growth), and growing \
+         a reused state-owned scratch buffer is by design not a finding — it \
+         amortizes to zero steady-state allocations. Entry points, cold \
+         boundaries, and sanctioned value-ABI sinks are listed in \
+         ARCHITECTURE.md §7; predictable per-token latency is the contract.",
+    ),
+    (
+        FLOAT_ACCUM,
+        "No bare `acc += x` over a float local and no `.sum::<f32|f64>()` outside \
+         the kernel layer (`tensor/`, `runtime/host.rs`) and the sanctioned \
+         reducers (`util/stats.rs`, `util/rng.rs`). Every bitwise-equivalence \
+         claim rests on a pinned accumulation order; ad-hoc reductions reorder \
+         under refactors and break it silently. `#[cfg(test)]` code is exempt.",
+    ),
+    (
+        SWALLOWED,
+        "No `let _ = <fallible call>` and no bare `.ok();` statement outside \
+         `#[cfg(test)]`: both discard a `Result` without a decision. Handle it, \
+         propagate with `?`, or justify the discard with a written allow. \
+         Expressions that already decide (`unwrap`/`expect`/trailing `?`) are \
+         not findings.",
+    ),
+    (
+        UNKNOWN_RULE,
+        "Meta-diagnostic: a `lint:allow(..)` escape names a rule that does not \
+         exist, so it would silently suppress nothing. Typos stay loud.",
+    ),
+    (
+        ALLOW_JUSTIFY,
+        "Meta-diagnostic: a `lint:allow` for a justified-class rule carries no \
+         written justification after the closing paren. The allow still applies, \
+         so this finding is what keeps CI red until the why is written down.",
+    ),
+];
 
 /// One lexed source file plus a line → covering-tokens index (multi-line
 /// comments and strings cover every line they span).
@@ -535,6 +651,260 @@ pub fn sendptr_confinement(f: &SourceFile) -> Vec<Diagnostic> {
     out
 }
 
+// --------------------------------------------------- float-accum-order --
+
+/// Files whose reductions *are* the pinned-order contract: the kernel
+/// layer (`tensor/`, plus `runtime/host.rs` — the decode attention /
+/// softmax family pins its own order next to the GEMM driver) and the
+/// sanctioned `util` reducers (`util/stats.rs`, `util/rng.rs`).
+fn in_float_accum_scope(path: &str) -> bool {
+    path.contains("tensor/")
+        || path.ends_with("runtime/host.rs")
+        || path.ends_with("util/stats.rs")
+        || path.ends_with("util/rng.rs")
+}
+
+/// A numeric literal that denotes a float (`1.0`, `2.5f32`, `3f64`).
+fn is_float_literal(text: &str) -> bool {
+    text.contains('.') || text.ends_with("f32") || text.ends_with("f64")
+}
+
+/// Rule `float-accum-order`: bare `+=` accumulation into a float local
+/// and `.sum::<f32|f64>()` reductions outside the sanctioned scope.
+/// Every bitwise-equivalence claim in the repo rests on a pinned
+/// accumulation order; an ad-hoc reduction reorders under innocent
+/// refactors. Indexed (`dst[j] += …`) and field (`self.m.x += …`)
+/// accumulations are deliberately out of pattern — the rule targets
+/// scalar reduction loops, the shape that silently becomes a kernel.
+/// `#[cfg(test)]` code and `rust/tests/` integration files are exempt —
+/// test reference computations decide by assertion, not by contract.
+pub fn float_accum_order(f: &SourceFile) -> Vec<Diagnostic> {
+    if in_float_accum_scope(&f.path) || f.path.starts_with("rust/tests/") {
+        return Vec::new();
+    }
+    let t = Tree::new(&f.toks);
+    let code = &t.code;
+    let mut out = Vec::new();
+
+    // Pass 1: float-typed `let` locals — an explicit `: f32/f64`
+    // annotation, or an initializer containing a float literal or an
+    // `f32`/`f64` cast/path before its terminating `;`.
+    let mut float_vars: Vec<&str> = Vec::new();
+    for i in 0..code.len() {
+        if code[i].kind != TokKind::Ident || code[i].text != "let" {
+            continue;
+        }
+        let mut j = i + 1;
+        if code.get(j).is_some_and(|x| x.text == "mut") {
+            j += 1;
+        }
+        let Some(var) = code.get(j).filter(|x| x.kind == TokKind::Ident) else { continue };
+        let mut is_float = false;
+        let mut k = j + 1;
+        let mut depth = 0usize;
+        while k < code.len() {
+            let c = code[k];
+            if c.kind == TokKind::Punct {
+                match c.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth = depth.saturating_sub(1),
+                    ";" if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            is_float |= c.kind == TokKind::Num && is_float_literal(&c.text);
+            is_float |= c.kind == TokKind::Ident && (c.text == "f32" || c.text == "f64");
+            k += 1;
+        }
+        if is_float {
+            float_vars.push(var.text.as_str());
+        }
+    }
+
+    for i in 0..code.len() {
+        let c = code[i];
+        if c.kind != TokKind::Ident || f.is_test_line(c.line) {
+            continue;
+        }
+        // Pass 2: `x += …` where `x` is a float local (not `recv.x`).
+        if float_vars.contains(&c.text.as_str())
+            && (i == 0 || code[i - 1].text != ".")
+            && code.get(i + 1).is_some_and(|n| n.text == "+")
+            && code.get(i + 2).is_some_and(|n| n.text == "=")
+        {
+            out.push(diag(
+                FLOAT_ACCUM,
+                &f.path,
+                c,
+                format!(
+                    "bare `{} += ..` float accumulation outside the pinned kernels; \
+                     route the reduction through `tensor::gemm` / `util::stats`, or \
+                     justify with `lint:allow(float-accum-order) <why the order is \
+                     free here>`",
+                    c.text
+                ),
+            ));
+        }
+        // Pass 3: `.sum::<f32|f64>()` turbofish reductions.
+        if c.text == "sum"
+            && i > 0
+            && code[i - 1].text == "."
+            && code.get(i + 1).is_some_and(|n| n.text == ":")
+            && code.get(i + 2).is_some_and(|n| n.text == ":")
+            && code.get(i + 3).is_some_and(|n| n.text == "<")
+            && code.get(i + 4).is_some_and(|n| n.text == "f32" || n.text == "f64")
+        {
+            out.push(diag(
+                FLOAT_ACCUM,
+                &f.path,
+                c,
+                "`.sum::<f32|f64>()` reduction outside the pinned kernels; \
+                 iterator reduction order is unpinned — use `util::stats` or \
+                 justify with `lint:allow(float-accum-order) <why>`"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------- swallowed-result --
+
+/// True when the `.ok();` chain ending at the `.` token at index `dot`
+/// is the tail of a binding or assignment (`let x = …ok();`,
+/// `x = …ok();`): the Option is kept for use, not discarded. Walks
+/// backwards to the statement start, hopping closed groups whole via
+/// the partner table; reaching a `;` or an unmatched `{` first means
+/// the chain stands bare.
+fn ok_chain_is_bound(t: &Tree, dot: usize) -> bool {
+    let code = &t.code;
+    let mut j = dot;
+    while j > 0 {
+        j -= 1;
+        let u = code[j];
+        if u.kind != TokKind::Punct {
+            if u.kind == TokKind::Ident && u.text == "let" {
+                return true;
+            }
+            continue;
+        }
+        match u.text.as_str() {
+            ")" | "]" | "}" => match t.partner(j) {
+                Some(open) => j = open,
+                None => return false, // unmatched closer: malformed, stay conservative
+            },
+            ";" | "{" => return false,
+            "=" => {
+                let prev = if j > 0 { code[j - 1].text.as_str() } else { "" };
+                let next = code.get(j + 1).map_or("", |n| n.text.as_str());
+                // a plain assignment `=` — not `==`/`!=`/`<=`/`>=`,
+                // compound `+=`-family, or a match arm's `=>`
+                if next != "="
+                    && next != ">"
+                    && !matches!(
+                        prev,
+                        "=" | "!" | "<" | ">" | "+" | "-" | "*" | "/" | "%" | "&" | "|" | "^"
+                    )
+                {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Rule `swallowed-result`: `let _ = <expr with a call>` and bare
+/// `.ok();` statements discard a `Result` without a decision. The
+/// pattern skips expressions that already decide — a contained
+/// `unwrap`/`expect`, a trailing `?` before the `;`, or a binding
+/// (`let x = …ok();` / `x = …ok();` convert Result→Option for use, they
+/// do not discard it). `#[cfg(test)]` code and `rust/tests/`
+/// integration files are exempt.
+pub fn swallowed_result(f: &SourceFile) -> Vec<Diagnostic> {
+    if f.path.starts_with("rust/tests/") {
+        return Vec::new();
+    }
+    let t = Tree::new(&f.toks);
+    let code = &t.code;
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        let c = code[i];
+        if c.kind != TokKind::Ident || f.is_test_line(c.line) {
+            continue;
+        }
+        // (a) `let _ = …;`
+        if c.text == "let"
+            && code.get(i + 1).is_some_and(|n| n.text == "_")
+            && code.get(i + 2).is_some_and(|n| n.text == "=")
+        {
+            let mut k = i + 3;
+            let mut depth = 0usize;
+            let (mut has_call, mut decided) = (false, false);
+            while k < code.len() {
+                let e = code[k];
+                if e.kind == TokKind::Punct {
+                    match e.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth = depth.saturating_sub(1),
+                        ";" if depth == 0 => {
+                            decided |= code[k - 1].text == "?";
+                            break;
+                        }
+                        _ => {}
+                    }
+                } else if e.kind == TokKind::Ident {
+                    match e.text.as_str() {
+                        "unwrap" | "expect" => decided = true,
+                        name if !super::calls::is_keywordish(name) => {
+                            // `name(` call or `name!(` macro call
+                            has_call |= code.get(k + 1).is_some_and(|n| n.text == "(");
+                            has_call |= code.get(k + 1).is_some_and(|n| n.text == "!")
+                                && code.get(k + 2).is_some_and(|n| n.text == "(");
+                        }
+                        _ => {}
+                    }
+                }
+                k += 1;
+            }
+            if has_call && !decided {
+                out.push(diag(
+                    SWALLOWED,
+                    &f.path,
+                    c,
+                    "`let _ = <fallible call>` swallows the Result; handle it, \
+                     propagate with `?`, or justify with \
+                     `lint:allow(swallowed-result) <why the outcome is irrelevant>`"
+                        .to_string(),
+                ));
+            }
+        }
+        // (b) a bare `.ok();` statement (chained `.ok().…` is fine, and a
+        // bound `let x = …ok();` / `x = …ok();` converts the Result for
+        // use rather than discarding it — walk back to the statement
+        // start, hopping closed groups via the partner table).
+        if c.text == "ok"
+            && i > 0
+            && code[i - 1].text == "."
+            && code.get(i + 1).is_some_and(|n| n.text == "(")
+            && code.get(i + 2).is_some_and(|n| n.text == ")")
+            && code.get(i + 3).is_some_and(|n| n.text == ";")
+            && !ok_chain_is_bound(&t, i - 1)
+        {
+            out.push(diag(
+                SWALLOWED,
+                &f.path,
+                c,
+                "bare `.ok();` discards the Result; handle it, propagate with \
+                 `?`, or justify with `lint:allow(swallowed-result) <why>`"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
 // ------------------------------------------------------- lint:allow --
 
 /// A span-anchored rule suppression parsed from an allow directive
@@ -906,5 +1276,101 @@ mod tests {
                    fn f(p: RowsPtr, s: &SendPtr) -> RowsPtr { g(p, s) }\n\
                    // RowsPtr::new in prose\nlet s = \"SendPtr(fake)\";\n";
         assert!(sendptr_confinement(&sf("rust/src/coordinator/serve.rs", src)).is_empty());
+    }
+
+    // --------------------------------------------------- float-accum-order
+
+    #[test]
+    fn bare_float_accumulation_fires() {
+        let src = "fn f(xs: &[f32]) -> f32 {\n\
+                   \x20   let mut acc = 0.0;\n\
+                   \x20   for x in xs { acc += x; }\n\
+                   \x20   acc\n}\n";
+        let d = float_accum_order(&sf("rust/src/eval/mod.rs", src));
+        let fired: Vec<(u32, &str)> = d.iter().map(|x| (x.line, x.rule)).collect();
+        assert_eq!(fired, vec![(3, FLOAT_ACCUM)], "{d:#?}");
+    }
+
+    #[test]
+    fn annotated_float_and_sum_turbofish_fire() {
+        let src = "fn f(xs: &[f32]) {\n\
+                   \x20   let mut s: f32 = 0.0;\n    s += xs[0];\n\
+                   \x20   let t = xs.iter().sum::<f32>();\n}\n";
+        let d = float_accum_order(&sf("rust/src/model/flops.rs", src));
+        let fired: Vec<u32> = d.iter().map(|x| x.line).collect();
+        assert_eq!(fired, vec![3, 4], "{d:#?}");
+    }
+
+    #[test]
+    fn integer_field_and_indexed_accumulation_clear() {
+        let src = "fn f(dst: &mut [f32], m: &mut M) {\n\
+                   \x20   let mut n = 0usize;\n    n += 1;\n\
+                   \x20   dst[0] += 1.0;\n    m.hits += 2;\n\
+                   \x20   self.metrics.steps += 1;\n}\n";
+        assert!(float_accum_order(&sf("rust/src/eval/mod.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn kernel_scope_and_test_code_are_exempt() {
+        let src = "fn f(xs: &[f32]) -> f32 {\n\
+                   \x20   let mut acc = 0.0;\n\
+                   \x20   for x in xs { acc += x; }\n    acc\n}\n";
+        assert!(float_accum_order(&sf("rust/src/tensor/gemm.rs", src)).is_empty());
+        assert!(float_accum_order(&sf("rust/src/runtime/host.rs", src)).is_empty());
+        assert!(float_accum_order(&sf("rust/src/util/stats.rs", src)).is_empty());
+        let test_src = format!("#[cfg(test)]\nmod tests {{\n{src}}}\n");
+        assert!(float_accum_order(&sf("rust/src/eval/mod.rs", &test_src)).is_empty());
+    }
+
+    // ---------------------------------------------------- swallowed-result
+
+    #[test]
+    fn let_underscore_call_and_bare_ok_fire() {
+        let src = "fn f(tx: &Sender<u32>, file: &mut W) {\n\
+                   \x20   let _ = tx.send(1);\n\
+                   \x20   let _ = write!(file, \"x\");\n\
+                   \x20   file.flush().ok();\n}\n";
+        let d = swallowed_result(&sf("rust/src/coordinator/scheduler.rs", src));
+        let fired: Vec<(u32, &str)> = d.iter().map(|x| (x.line, x.rule)).collect();
+        assert_eq!(fired, vec![(2, SWALLOWED), (3, SWALLOWED), (4, SWALLOWED)], "{d:#?}");
+    }
+
+    #[test]
+    fn decided_discards_and_non_calls_clear() {
+        let src = "fn f(h: Handle, x: u32) -> Result<()> {\n\
+                   \x20   let _ = h.join().unwrap();\n\
+                   \x20   let _ = maybe()?;\n\
+                   \x20   let _ = x;\n\
+                   \x20   let y = h.ok().map(|v| v + 1);\n\
+                   \x20   Ok(())\n}\n";
+        assert!(swallowed_result(&sf("rust/src/util/pool.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn swallowed_result_is_test_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n\
+                   \x20   fn t(tx: &Sender<u32>) { let _ = tx.send(1); tx.flush().ok(); }\n}\n";
+        assert!(swallowed_result(&sf("rust/src/coordinator/scheduler.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn bound_ok_conversions_clear_but_bare_still_fires() {
+        // `let x = …ok();` and `x = …ok();` keep the Option; only the
+        // statement-position discard is a finding.
+        let src = "fn f(path: &str, slot: &mut Option<String>, tx: &Sender<u32>) {\n\
+                   \x20   let arch = std::fs::read_to_string(path).ok();\n\
+                   \x20   *slot = std::fs::read_to_string(path).ok();\n\
+                   \x20   let picked = (if arch.is_some() { tx.probe() } else { tx.poll() }).ok();\n\
+                   \x20   tx.send(1).ok();\n}\n";
+        let d = swallowed_result(&sf("rust/src/coordinator/scheduler.rs", src));
+        let fired: Vec<u32> = d.iter().map(|x| x.line).collect();
+        assert_eq!(fired, vec![5], "{d:#?}");
+    }
+
+    #[test]
+    fn integration_test_paths_are_exempt() {
+        let src = "fn f(tx: &Sender<u32>) { tx.send(1).ok(); let mut a = 0.0; a += 1.0; }\n";
+        assert!(swallowed_result(&sf("rust/tests/integration.rs", src)).is_empty());
+        assert!(float_accum_order(&sf("rust/tests/integration.rs", src)).is_empty());
     }
 }

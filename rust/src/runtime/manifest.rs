@@ -108,6 +108,7 @@ impl Manifest {
         self.artifacts
             .get(name)
             .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                                   // lint:allow(hot-path-alloc) error-path only: the keys list renders the missing-artifact message inside `ok_or_else`, never on a hit
                                    self.artifacts.keys().collect::<Vec<_>>()))
     }
 

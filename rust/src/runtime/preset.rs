@@ -99,11 +99,11 @@ pub fn param_specs(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
     specs
 }
 
-fn f(name: &str, shape: &[usize]) -> IoSpec {
+fn fspec(name: &str, shape: &[usize]) -> IoSpec {
     IoSpec { name: name.to_string(), shape: shape.to_vec(), dtype: Dtype::F32 }
 }
 
-fn i(name: &str, shape: &[usize]) -> IoSpec {
+fn ispec(name: &str, shape: &[usize]) -> IoSpec {
     IoSpec { name: name.to_string(), shape: shape.to_vec(), dtype: Dtype::I32 }
 }
 
@@ -116,7 +116,7 @@ pub fn synthesize(cfg: &ModelConfig) -> Manifest {
     let (l, e, d, di) = (cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_inter);
     let (h, hd, smax) = (cfg.n_heads, cfg.d_head, cfg.max_decode_len);
 
-    let pspecs: Vec<IoSpec> = params.iter().map(|(n, s)| f(n, s)).collect();
+    let pspecs: Vec<IoSpec> = params.iter().map(|(n, s)| fspec(n, s)).collect();
     let mut artifacts = std::collections::BTreeMap::new();
     let mut add = |name: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>| {
         artifacts.insert(
@@ -127,122 +127,122 @@ pub fn synthesize(cfg: &ModelConfig) -> Manifest {
 
     // train_step: params + m + v + step + lr + tokens + targets
     let mut inp = pspecs.clone();
-    inp.extend(params.iter().map(|(n, s)| f(&format!("m.{n}"), s)));
-    inp.extend(params.iter().map(|(n, s)| f(&format!("v.{n}"), s)));
-    inp.push(i("step", &[]));
-    inp.push(f("lr", &[]));
-    inp.push(i("tokens", &[b, t]));
-    inp.push(i("targets", &[b, t]));
-    let mut out = vec![f("loss", &[]), f("ce", &[])];
-    out.extend(params.iter().map(|(n, s)| f(n, s)));
-    out.extend(params.iter().map(|(n, s)| f(&format!("m.{n}"), s)));
-    out.extend(params.iter().map(|(n, s)| f(&format!("v.{n}"), s)));
+    inp.extend(params.iter().map(|(n, s)| fspec(&format!("m.{n}"), s)));
+    inp.extend(params.iter().map(|(n, s)| fspec(&format!("v.{n}"), s)));
+    inp.push(ispec("step", &[]));
+    inp.push(fspec("lr", &[]));
+    inp.push(ispec("tokens", &[b, t]));
+    inp.push(ispec("targets", &[b, t]));
+    let mut out = vec![fspec("loss", &[]), fspec("ce", &[])];
+    out.extend(params.iter().map(|(n, s)| fspec(n, s)));
+    out.extend(params.iter().map(|(n, s)| fspec(&format!("m.{n}"), s)));
+    out.extend(params.iter().map(|(n, s)| fspec(&format!("v.{n}"), s)));
     add("train_step", inp, out);
 
     let masked = |extra: &[IoSpec]| -> Vec<IoSpec> {
         let mut v = pspecs.clone();
-        v.push(f("mask", &[l, e, di]));
+        v.push(fspec("mask", &[l, e, di]));
         v.extend(extra.iter().cloned());
         v
     };
     add(
         "forward_masked",
-        masked(&[i("tokens", &[b, t])]),
-        vec![f("logits", &[b, t, v])],
+        masked(&[ispec("tokens", &[b, t])]),
+        vec![fspec("logits", &[b, t, v])],
     );
     add(
         "loss_masked",
-        masked(&[i("tokens", &[b, t]), i("targets", &[b, t])]),
-        vec![f("nll_sum", &[]), f("tok_cnt", &[])],
+        masked(&[ispec("tokens", &[b, t]), ispec("targets", &[b, t])]),
+        vec![fspec("nll_sum", &[]), fspec("tok_cnt", &[])],
     );
     add(
         "seq_nll",
-        masked(&[i("tokens", &[b, t]), i("targets", &[b, t])]),
-        vec![f("nll_rows", &[b]), f("cnt_rows", &[b])],
+        masked(&[ispec("tokens", &[b, t]), ispec("targets", &[b, t])]),
+        vec![fspec("nll_rows", &[b]), fspec("cnt_rows", &[b])],
     );
 
     let mut inp = pspecs.clone();
-    inp.push(i("tokens", &[b, t]));
-    inp.push(i("targets", &[b, t]));
+    inp.push(ispec("tokens", &[b, t]));
+    inp.push(ispec("targets", &[b, t]));
     add(
         "calib_pass1",
         inp,
-        vec![f("ce", &[]), f("gsum", &[l, e, d, d]), f("counts", &[l, e])],
+        vec![fspec("ce", &[]), fspec("gsum", &[l, e, d, d]), fspec("counts", &[l, e])],
     );
     let mut inp = pspecs.clone();
-    inp.push(i("tokens", &[b, t]));
+    inp.push(ispec("tokens", &[b, t]));
     add(
         "calib_pass2",
         inp,
         vec![
-            f("hsq", &[l, e, di]),
-            f("hmax", &[l, e, di]),
-            f("counts", &[l, e]),
-            f("probe", &[]),
+            fspec("hsq", &[l, e, di]),
+            fspec("hmax", &[l, e, di]),
+            fspec("counts", &[l, e]),
+            fspec("probe", &[]),
         ],
     );
     add(
         "quadform",
-        vec![f("wd", &[d, di]), f("G", &[d, d])],
-        vec![f("q", &[di])],
+        vec![fspec("wd", &[d, di]), fspec("G", &[d, d])],
+        vec![fspec("q", &[di])],
     );
 
     let attn_w = |v: &mut Vec<IoSpec>| {
-        v.push(f("ln1", &[d]));
-        v.push(f("wq", &[d, d]));
-        v.push(f("wk", &[d, d]));
-        v.push(f("wv", &[d, d]));
-        v.push(f("wo", &[d, d]));
+        v.push(fspec("ln1", &[d]));
+        v.push(fspec("wq", &[d, d]));
+        v.push(fspec("wk", &[d, d]));
+        v.push(fspec("wv", &[d, d]));
+        v.push(fspec("wo", &[d, d]));
     };
     for &bb in &cfg.serve_batches {
-        let mut inp = vec![f("x", &[bb, t, d])];
+        let mut inp = vec![fspec("x", &[bb, t, d])];
         attn_w(&mut inp);
-        inp.push(f("len_mask", &[bb, t]));
+        inp.push(fspec("len_mask", &[bb, t]));
         add(
             &format!("attn_prefill_b{bb}"),
             inp,
             vec![
-                f("y", &[bb, t, d]),
-                f("k", &[bb, h, t, hd]),
-                f("v", &[bb, h, t, hd]),
+                fspec("y", &[bb, t, d]),
+                fspec("k", &[bb, h, t, hd]),
+                fspec("v", &[bb, h, t, hd]),
             ],
         );
-        let mut inp = vec![f("x", &[bb, 1, d])];
+        let mut inp = vec![fspec("x", &[bb, 1, d])];
         attn_w(&mut inp);
-        inp.push(f("kcache", &[bb, h, smax, hd]));
-        inp.push(f("vcache", &[bb, h, smax, hd]));
-        inp.push(i("pos", &[bb]));
+        inp.push(fspec("kcache", &[bb, h, smax, hd]));
+        inp.push(fspec("vcache", &[bb, h, smax, hd]));
+        inp.push(ispec("pos", &[bb]));
         add(
             &format!("attn_decode_b{bb}"),
             inp,
             vec![
-                f("y", &[bb, 1, d]),
-                f("kcache", &[bb, h, smax, hd]),
-                f("vcache", &[bb, h, smax, hd]),
+                fspec("y", &[bb, 1, d]),
+                fspec("kcache", &[bb, h, smax, hd]),
+                fspec("vcache", &[bb, h, smax, hd]),
             ],
         );
     }
     for &n in &cfg.token_buckets {
         add(
             &format!("moe_gate_n{n}"),
-            vec![f("x", &[n, d]), f("ln2", &[d]), f("router", &[e, d])],
-            vec![f("xn", &[n, d]), f("gates", &[n, e])],
+            vec![fspec("x", &[n, d]), fspec("ln2", &[d]), fspec("router", &[e, d])],
+            vec![fspec("xn", &[n, d]), fspec("gates", &[n, e])],
         );
         add(
             &format!("lm_head_n{n}"),
-            vec![f("x", &[n, d]), f("lnf", &[d]), f("embed", &[v, d])],
-            vec![f("logits", &[n, v])],
+            vec![fspec("x", &[n, d]), fspec("lnf", &[d]), fspec("embed", &[v, d])],
+            vec![fspec("logits", &[n, v])],
         );
         for &w in &cfg.width_buckets {
             add(
                 &format!("expert_n{n}_w{w}"),
                 vec![
-                    f("xs", &[n, d]),
-                    f("wg", &[w, d]),
-                    f("wu", &[w, d]),
-                    f("wd", &[d, w]),
+                    fspec("xs", &[n, d]),
+                    fspec("wg", &[w, d]),
+                    fspec("wu", &[w, d]),
+                    fspec("wd", &[d, w]),
                 ],
-                vec![f("ys", &[n, d])],
+                vec![fspec("ys", &[n, d])],
             );
         }
     }

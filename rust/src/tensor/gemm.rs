@@ -454,9 +454,11 @@ fn driver(
     // contract is untouched).
     let mut packb = match layout {
         Layout::TN => Vec::new(),
+        // lint:allow(hot-path-alloc) one pack panel per GEMM call, reused across every (pc, jc) tile; sized by cache blocking, not by the matrix
         _ => vec![0.0f32; KC.min(k) * NC.min(n)],
     };
     let mut packa = match layout {
+        // lint:allow(hot-path-alloc) one transposed A slab per GEMM call, repacked once per KC block and reused across its column tiles
         Layout::AT => vec![0.0f32; m * KC.min(k)],
         _ => Vec::new(),
     };

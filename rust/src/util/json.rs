@@ -119,8 +119,10 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.fract() == 0.0 && x.abs() < 1e15 {
+                    // lint:allow(swallowed-result) fmt::Write into a String is infallible
                     let _ = write!(out, "{}", *x as i64);
                 } else {
+                    // lint:allow(swallowed-result) fmt::Write into a String is infallible
                     let _ = write!(out, "{x}");
                 }
             }
@@ -161,6 +163,7 @@ fn write_escaped(s: &str, out: &mut String) {
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
             c if (c as u32) < 0x20 => {
+                // lint:allow(swallowed-result) fmt::Write into a String is infallible
                 let _ = write!(out, "\\u{:04x}", c as u32);
             }
             c => out.push(c),

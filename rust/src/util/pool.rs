@@ -150,6 +150,7 @@ impl ThreadPool {
         let ptr = SendPtr(&ctx as *const TaskCtx as *const ());
         for _ in 0..helpers {
             let p = ptr;
+            // lint:allow(hot-path-alloc) the job queue's unit IS `Box<dyn FnOnce>`: one box per helper lane per parallel region (<= threads-1), not per element
             self.queue.push(Box::new(move || {
                 // SAFETY: `p` came from `&ctx` above and the caller only
                 // returns after `remaining == 0`, which this job signals
@@ -237,6 +238,7 @@ impl Drop for ThreadPool {
         let me = thread::current().id();
         for h in self.workers.drain(..) {
             if h.thread().id() != me {
+                // lint:allow(swallowed-result) Drop cannot propagate; a worker's Err means it panicked, and the process is already tearing the pool down
                 let _ = h.join();
             }
         }
@@ -419,6 +421,7 @@ pub fn default_threads() -> usize {
 
 /// Handle to the process-wide pool.
 pub fn pool() -> Arc<ThreadPool> {
+    // lint:allow(hot-path-alloc) Arc handle clone: a refcount bump on the process-wide pool, no buffer is copied
     global().read().unwrap().clone()
 }
 
