@@ -79,10 +79,14 @@ artifacts:
 # blocked vs simd — the simd leg only where runtime CPU detection finds
 # avx2+fma) and refreshes the checked-in BENCH_kernels.json summary at
 # the repo root so the kernel-perf trajectory is tracked across PRs;
-# bench_serve adds the same axis to end-to-end decode throughput.
+# bench_serve adds the same axis to end-to-end decode throughput;
+# bench_load replays open-loop Poisson arrivals against a live loopback
+# HTTP server and refreshes BENCH_load.json (TTFT/completion
+# percentiles, shed rate, saturation knee).
 bench:
 	cargo bench --bench bench_runtime
 	cargo bench --bench bench_serve
+	cargo bench --bench bench_load
 
 # Same sweeps under -C target-cpu=native codegen. Opt-in and bench-only:
 # the produced binaries are NOT portable (SIGILL on any older CPU — the

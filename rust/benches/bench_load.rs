@@ -1,0 +1,223 @@
+//! Open-loop load harness against the live HTTP/1.1 wire layer.
+//!
+//! Per offered-QPS leg one loopback server is bound and a Poisson
+//! arrival schedule ([`PoissonSchedule`], a pure function of the seed)
+//! is replayed open-loop: every arrival gets its own connection and
+//! fires at its scheduled instant whether or not earlier requests have
+//! completed — the generator never waits on the system under test, so
+//! saturation shows up as latency growth and shedding instead of a
+//! silently throttled offered rate. Per leg the harness reports
+//! p50/p99/p999 TTFT (first SSE event on the socket) and completion
+//! latency, achieved tok/s, and the shed rate from the bounded
+//! admission queue; the sweep's saturation knee — the first offered
+//! rate whose achieved completion rate falls below 90% of offered —
+//! lands with the legs in `BENCH_load.json` at the repo root.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use heapr::coordinator::{HttpOpts, HttpServer, PoissonSchedule, Server};
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::model::store::ParamStore;
+use heapr::runtime::Engine;
+use heapr::util::json::Json;
+use heapr::util::pool;
+use heapr::util::stats::percentile;
+
+const SEED: u64 = 0x4c4f_4144;
+const QPS_AXIS: &[f64] = &[4.0, 8.0, 16.0, 32.0, 64.0];
+const ARRIVALS_PER_LEG: usize = 48;
+const BUDGET: usize = 16;
+const MAX_QUEUE: usize = 8;
+const KNEE_FRACTION: f64 = 0.9;
+
+/// One request's open-loop observation.
+struct Sample {
+    ttft_ms: f64,
+    completion_ms: f64,
+    tokens: usize,
+    shed: bool,
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Fire one request and watch the socket: TTFT is the instant the first
+/// SSE `data:` event shows up past the response head; completion is the
+/// terminal chunk (or, for non-200s, the framed error body).
+fn fire(addr: SocketAddr, request: &[u8]) -> Sample {
+    let mut conn = TcpStream::connect(addr).expect("connect load target");
+    conn.set_nodelay(true).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let t0 = Instant::now();
+    conn.write_all(request).expect("send load request");
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let mut ttft = None;
+    loop {
+        match conn.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => panic!("load read failed: {e}"),
+        }
+        let Some(head_end) = find(&buf, b"\r\n\r\n") else { continue };
+        let body = &buf[head_end + 4..];
+        if ttft.is_none() && find(body, b"data: ").is_some() {
+            ttft = Some(t0.elapsed());
+        }
+        let status = std::str::from_utf8(&buf[..head_end])
+            .ok()
+            .and_then(|h| h.split(' ').nth(1))
+            .and_then(|s| s.parse::<u16>().ok())
+            .unwrap_or(0);
+        if status != 200 {
+            // shed (429) or refused (5xx): framed error body, no stream
+            return Sample {
+                ttft_ms: f64::NAN,
+                completion_ms: t0.elapsed().as_secs_f64() * 1000.0,
+                tokens: 0,
+                shed: status == 429,
+            };
+        }
+        if body.ends_with(b"0\r\n\r\n") {
+            break;
+        }
+    }
+    let done = t0.elapsed();
+    let tokens = buf.windows(8).filter(|&w| w == b"\"token\":").count();
+    Sample {
+        ttft_ms: ttft.map(|d| d.as_secs_f64() * 1000.0).unwrap_or(f64::NAN),
+        completion_ms: done.as_secs_f64() * 1000.0,
+        tokens,
+        shed: false,
+    }
+}
+
+fn main() {
+    let engine = Engine::open("artifacts/tiny").expect("open tiny preset");
+    let seq_len = engine.config().seq_len;
+    let grammar = Grammar::standard();
+    let split = Split::from_docs(&grammar.corpus("wiki", 3, 100_000), seq_len);
+    let params = ParamStore::init(&engine.manifest, 11);
+    let prompt = split.chunks[0][..16].to_vec();
+
+    let toks: Vec<f64> = prompt.iter().map(|&t| t as f64).collect();
+    let body = Json::obj(vec![
+        ("prompt", Json::arr_f64(&toks)),
+        ("max_new_tokens", Json::n(BUDGET as f64)),
+    ])
+    .to_string();
+    let mut request = format!(
+        "POST /generate HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    request.extend_from_slice(body.as_bytes());
+    let request = std::sync::Arc::new(request);
+
+    let mut legs: Vec<Json> = Vec::new();
+    let mut knee: Option<f64> = None;
+    for &qps in QPS_AXIS {
+        let mut server = Server::new(&engine, &params, None).unwrap();
+        let http =
+            HttpServer::bind(HttpOpts { max_queue: MAX_QUEUE, ..HttpOpts::default() }).unwrap();
+        let addr = http.local_addr();
+        let shutdown = http.shutdown_handle();
+        // the generator runs off-thread: the scheduler owns this one
+        let req = request.clone();
+        let driver = pool::spawn_named("load-gen", move || {
+            let arrivals: Vec<f64> =
+                PoissonSchedule::new(SEED, qps).take(ARRIVALS_PER_LEG).collect();
+            let t0 = Instant::now();
+            let guns: Vec<_> = arrivals
+                .into_iter()
+                .map(|at| {
+                    let req = req.clone();
+                    pool::spawn_named("load-fire", move || {
+                        let due = Duration::from_secs_f64(at);
+                        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                            std::thread::sleep(wait);
+                        }
+                        fire(addr, &req)
+                    })
+                })
+                .collect();
+            let samples: Vec<Sample> =
+                guns.into_iter().map(|g| g.join().expect("load thread")).collect();
+            let wall = t0.elapsed().as_secs_f64();
+            shutdown.store(true, Ordering::Release);
+            (samples, wall)
+        });
+        http.serve(&mut server).unwrap();
+        let (samples, wall) = driver.join().expect("load driver");
+
+        let served: Vec<&Sample> = samples.iter().filter(|s| !s.shed).collect();
+        let shed = samples.len() - served.len();
+        let ttft: Vec<f64> = served.iter().map(|s| s.ttft_ms).filter(|t| t.is_finite()).collect();
+        let completion: Vec<f64> = served.iter().map(|s| s.completion_ms).collect();
+        let tokens: usize = served.iter().map(|s| s.tokens).sum();
+        let achieved = served.len() as f64 / wall;
+        let shed_rate = shed as f64 / samples.len() as f64;
+        let tok_s = tokens as f64 / wall;
+        if knee.is_none() && achieved < KNEE_FRACTION * qps {
+            knee = Some(qps);
+        }
+        println!(
+            "offered {qps:6.1} qps: achieved {achieved:6.1} qps, {tok_s:8.1} tok/s, \
+             ttft p50 {:7.1} p99 {:7.1} p999 {:7.1} ms, \
+             completion p50 {:7.1} p99 {:7.1} p999 {:7.1} ms, shed {:.1}%",
+            percentile(&ttft, 50.0),
+            percentile(&ttft, 99.0),
+            percentile(&ttft, 99.9),
+            percentile(&completion, 50.0),
+            percentile(&completion, 99.0),
+            percentile(&completion, 99.9),
+            100.0 * shed_rate,
+        );
+        legs.push(Json::obj(vec![
+            ("offered_qps", Json::n(qps)),
+            ("achieved_qps", Json::n(achieved)),
+            ("tok_s", Json::n(tok_s)),
+            ("ttft_p50_ms", Json::n(percentile(&ttft, 50.0))),
+            ("ttft_p99_ms", Json::n(percentile(&ttft, 99.0))),
+            ("ttft_p999_ms", Json::n(percentile(&ttft, 99.9))),
+            ("completion_p50_ms", Json::n(percentile(&completion, 50.0))),
+            ("completion_p99_ms", Json::n(percentile(&completion, 99.0))),
+            ("completion_p999_ms", Json::n(percentile(&completion, 99.9))),
+            ("shed_rate", Json::n(shed_rate)),
+            ("arrivals", Json::n(samples.len() as f64)),
+        ]));
+    }
+
+    match knee {
+        Some(q) => println!("saturation knee: offered {q:.1} qps"),
+        None => println!("saturation knee: not reached on this sweep"),
+    }
+    let summary = Json::obj(vec![
+        ("generated_by", Json::s("cargo bench --bench bench_load")),
+        (
+            "note",
+            Json::s(
+                "the bench replays an open-loop Poisson arrival schedule against a \
+                 live loopback HTTP server per offered-QPS leg and writes achieved \
+                 qps, tok/s, TTFT and completion latency p50/p99/p999, the shed \
+                 rate, and the saturation knee here",
+            ),
+        ),
+        ("qps_axis", Json::arr_f64(QPS_AXIS)),
+        ("seed", Json::n(SEED as f64)),
+        ("arrivals_per_leg", Json::n(ARRIVALS_PER_LEG as f64)),
+        ("max_new_tokens", Json::n(BUDGET as f64)),
+        ("max_queue", Json::n(MAX_QUEUE as f64)),
+        ("knee_fraction", Json::n(KNEE_FRACTION)),
+        ("saturation_knee_qps", knee.map(Json::n).unwrap_or(Json::Null)),
+        ("legs", Json::Arr(legs)),
+    ]);
+    std::fs::write("BENCH_load.json", summary.to_string()).unwrap();
+    println!("wrote BENCH_load.json");
+}

@@ -1,0 +1,1143 @@
+//! Dependency-free HTTP/1.1 serving front-end over the continuous
+//! scheduler: the repo's wire layer.
+//!
+//! Everything here is hand-rolled on `std::net` + [`crate::util::pool`]
+//! — no HTTP crate, same vendoring philosophy as the in-tree `anyhow`.
+//! The pieces:
+//!
+//! - [`RequestParser`] — an incremental HTTP/1.1 request parser
+//!   (request line, headers, `Content-Length` bodies). It accumulates
+//!   bytes across reads and only ever interprets a *complete* head, so
+//!   the parse is invariant under read segmentation by construction;
+//!   the `http_serve` property suite feeds it every split point,
+//!   pipelined requests and raw byte soup to prove it never panics and
+//!   never hangs. Malformed input maps to `400`, an oversized head to
+//!   `431`, an oversized body to `413`.
+//! - [`HttpServer`] — accept loop, per-connection handlers and an SSE
+//!   dispatcher around [`serve_continuous`]. `POST /generate` takes a
+//!   JSON body ([`crate::util::json`]), maps it onto a
+//!   [`Request`] and streams tokens back as Server-Sent
+//!   Events over chunked transfer encoding, one event per committed
+//!   token, driven straight off the scheduler's [`StreamEvent`] sink.
+//!   Admission is load-shed via a bounded in-flight queue (`429` +
+//!   `Retry-After`); per-request deadlines terminate a stream
+//!   mid-flight through the scheduler's [`CancelSet`] so the lane is
+//!   retired leak-free; raising the shutdown flag drains gracefully
+//!   (stop accepting, finish in-flight lanes, exit).
+//! - [`PoissonSchedule`] — the open-loop arrival clock used by
+//!   `bench_load`: a pure function of the [`Pcg64`] seed, so offered
+//!   load is reproducible across runs and thread counts.
+//!
+//! # Threads
+//!
+//! The scheduler runs on the *caller's* thread (it borrows the engine);
+//! the wire side fans out through [`pool::spawn_named`]: one accept
+//! thread owning the listener, one handler thread per connection, and
+//! one dispatcher routing [`StreamEvent`]s to the handler that admitted
+//! the request. Drain is free of deadlock by ownership: handlers hold
+//! the request-channel senders, so the scheduler's queue closes exactly
+//! when the last handler exits, and the event channel closes when the
+//! scheduler returns — which is what unblocks any handler still
+//! waiting on tokens.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::batcher::{Batcher, Request, RequestId};
+use crate::coordinator::scheduler::{serve_continuous, CancelSet, SchedulerOpts, StreamEvent};
+use crate::coordinator::serve::{Response, Server};
+use crate::data::tokenizer::{ByteTokenizer, VOCAB};
+use crate::debug;
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Pcg64;
+
+/// Hard cap on a request head (request line + headers + separators);
+/// beyond it the parser answers `431 Request Header Fields Too Large`.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Hard cap on a declared `Content-Length`; beyond it the parser
+/// answers `413 Content Too Large` without buffering the body.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Poll granularity for blocking waits that must observe the shutdown
+/// flag or a deadline (connection reads, stream receives).
+const TICK: Duration = Duration::from_millis(25);
+/// Once drain starts, a connection caught mid-request gets this long to
+/// finish sending before the socket is closed under it.
+const DRAIN_GRACE: Duration = Duration::from_secs(2);
+/// The scheduler-side deadline backstop trails the wire-side deadline
+/// by this slack, so the handler's final error event is the normal
+/// expiry path and the backstop only catches orphaned lanes.
+const DEADLINE_BACKSTOP_SLACK: Duration = Duration::from_millis(250);
+
+// ---------------------------------------------------------------------------
+// Incremental request parser
+// ---------------------------------------------------------------------------
+
+/// One fully-parsed HTTP/1.1 request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// Whether the connection may carry another request after this one
+    /// (HTTP/1.1 default, `Connection: close` and HTTP/1.0 semantics).
+    pub keep_alive: bool,
+}
+
+/// Outcome of one [`RequestParser::poll`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Parse {
+    /// Need more bytes.
+    Pending,
+    /// One complete request; consumed from the buffer (pipelined bytes
+    /// behind it are retained for the next poll).
+    Ready(HttpRequest),
+    /// Protocol error: respond with this status + reason and close.
+    /// Framing is unrecoverable, so the state is terminal — every later
+    /// poll repeats it.
+    Bad(u16, &'static str),
+}
+
+/// Incremental, segmentation-invariant HTTP/1.1 request parser. Feed it
+/// bytes as they arrive ([`RequestParser::feed`]) and poll for complete
+/// requests; it never interprets a partial head, so splitting the input
+/// at any byte boundary cannot change the parse. Never panics on
+/// arbitrary input, and its buffer is bounded by the head + body caps.
+#[derive(Debug, Default)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+    /// Bytes already scanned for the head terminator, so repeated polls
+    /// over a slowly-arriving head stay linear overall.
+    scanned: usize,
+    dead: Option<(u16, &'static str)>,
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        RequestParser::default()
+    }
+
+    /// Append newly-read bytes. After a fatal [`Parse::Bad`] the stream
+    /// has lost framing and further input is discarded.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.dead.is_none() {
+            self.buf.extend_from_slice(bytes);
+        }
+    }
+
+    /// True when no partial request is buffered — the safe moment to
+    /// close a keep-alive connection during drain.
+    pub fn is_idle(&self) -> bool {
+        self.buf.is_empty() && self.dead.is_none()
+    }
+
+    /// Try to produce the next complete request from the buffered bytes.
+    pub fn poll(&mut self) -> Parse {
+        if let Some((status, reason)) = self.dead {
+            return Parse::Bad(status, reason);
+        }
+        // the head terminator may straddle the previous scan boundary
+        let from = self.scanned.saturating_sub(3);
+        let head_end =
+            self.buf[from..].windows(4).position(|w| w == b"\r\n\r\n").map(|p| from + p);
+        let Some(head_end) = head_end else {
+            self.scanned = self.buf.len();
+            // up to 3 buffered bytes may be a partial terminator of a
+            // head that is exactly at the cap, so the eager overflow
+            // check carries that slack — otherwise a read cut inside
+            // `\r\n\r\n` would 431 a head the whole-buffer parse accepts
+            if self.buf.len() > MAX_HEAD_BYTES + 3 {
+                return self.die(431, "request head too large");
+            }
+            return Parse::Pending;
+        };
+        if head_end > MAX_HEAD_BYTES {
+            return self.die(431, "request head too large");
+        }
+        let head = match parse_head(&self.buf[..head_end]) {
+            Ok(head) => head,
+            Err((status, reason)) => return self.die(status, reason),
+        };
+        if head.content_length > MAX_BODY_BYTES {
+            return self.die(413, "request body too large");
+        }
+        let total = head_end + 4 + head.content_length;
+        if self.buf.len() < total {
+            // body still arriving: park the scan cursor ON the head
+            // terminator so the next poll re-finds it — advancing past
+            // it would lose the head and hang the request forever
+            self.scanned = head_end;
+            return Parse::Pending;
+        }
+        let body = self.buf[head_end + 4..total].to_vec();
+        self.buf.drain(..total);
+        self.scanned = 0;
+        Parse::Ready(HttpRequest {
+            method: head.method,
+            path: head.path,
+            body,
+            keep_alive: head.keep_alive,
+        })
+    }
+
+    fn die(&mut self, status: u16, reason: &'static str) -> Parse {
+        self.buf.clear();
+        self.scanned = 0;
+        self.dead = Some((status, reason));
+        Parse::Bad(status, reason)
+    }
+}
+
+struct Head {
+    method: String,
+    path: String,
+    content_length: usize,
+    keep_alive: bool,
+}
+
+/// Parse a complete request head (everything before the `\r\n\r\n`).
+/// Strict by design: CRLF line endings only, single-space request line,
+/// no whitespace before a header colon, `Transfer-Encoding` refused —
+/// every reject is a deterministic status, never a panic.
+fn parse_head(head: &[u8]) -> std::result::Result<Head, (u16, &'static str)> {
+    let text = std::str::from_utf8(head).map_err(|_| (400u16, "request head is not valid UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    if request_line.contains('\r') || request_line.contains('\n') {
+        return Err((400, "bare CR or LF in request line"));
+    }
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => return Err((400, "malformed request line")),
+    };
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err((400, "malformed method"));
+    }
+    if !path.starts_with('/') {
+        return Err((400, "request target must be origin-form"));
+    }
+    let mut keep_alive = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err((505, "only HTTP/1.0 and HTTP/1.1 are supported")),
+    };
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        if line.contains('\r') || line.contains('\n') {
+            return Err((400, "bare CR or LF in header"));
+        }
+        let Some(colon) = line.find(':') else {
+            return Err((400, "malformed header line"));
+        };
+        let (name, rest) = line.split_at(colon);
+        let value = rest[1..].trim();
+        if name.is_empty() || name.bytes().any(|b| b.is_ascii_whitespace()) {
+            return Err((400, "malformed header name"));
+        }
+        if name.eq_ignore_ascii_case("content-length") {
+            let n: usize = value.parse().map_err(|_| (400u16, "bad Content-Length"))?;
+            if content_length.is_some_and(|prev| prev != n) {
+                return Err((400, "conflicting Content-Length"));
+            }
+            content_length = Some(n);
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            return Err((400, "chunked request bodies are not supported"));
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        }
+    }
+    Ok(Head {
+        method: method.to_string(),
+        path: path.to_string(),
+        content_length: content_length.unwrap_or(0),
+        keep_alive,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Allocation-free SSE write path (hot-path-alloc entry points)
+// ---------------------------------------------------------------------------
+
+/// Render one [`StreamEvent`] as an SSE `data:` line into `out`
+/// (cleared first). Steady-state per-token work: no heap allocation —
+/// integers are formatted through stack digit buffers and the scratch
+/// is reused across events (`hot-path-alloc` gates this via the
+/// `write_event` lint entry point).
+pub fn write_event(out: &mut Vec<u8>, ev: &StreamEvent) {
+    out.clear();
+    out.extend_from_slice(b"data: {\"id\":");
+    push_u64(out, ev.id);
+    out.extend_from_slice(b",\"index\":");
+    push_u64(out, ev.index as u64);
+    out.extend_from_slice(b",\"token\":");
+    push_i64(out, ev.token as i64);
+    out.extend_from_slice(b",\"done\":");
+    out.extend_from_slice(if ev.done { b"true" } else { b"false" });
+    out.extend_from_slice(b"}\n\n");
+}
+
+/// Render the terminal SSE error event (deadline expiry, server abort)
+/// into `out`. `kind` must not contain JSON-significant characters.
+pub fn write_error_event(out: &mut Vec<u8>, id: RequestId, kind: &str) {
+    out.clear();
+    out.extend_from_slice(b"data: {\"id\":");
+    push_u64(out, id);
+    out.extend_from_slice(b",\"error\":\"");
+    out.extend_from_slice(kind.as_bytes());
+    out.extend_from_slice(b"\",\"done\":true}\n\n");
+}
+
+/// Write one chunked-transfer-encoding chunk (`<hex len>\r\n<payload>\r\n`).
+/// `head` is a reused scratch for the length line, so the per-token
+/// write path stays allocation-free (`hot-path-alloc` entry point).
+pub fn write_chunk<W: Write>(stream: &mut W, head: &mut Vec<u8>, payload: &[u8]) -> io::Result<()> {
+    head.clear();
+    push_hex(head, payload.len() as u64);
+    head.extend_from_slice(b"\r\n");
+    stream.write_all(head)?;
+    stream.write_all(payload)?;
+    stream.write_all(b"\r\n")
+}
+
+/// Terminal zero-length chunk closing a chunked response body.
+fn end_chunks<W: Write>(stream: &mut W) -> io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+fn push_u64(out: &mut Vec<u8>, mut v: u64) {
+    let mut digits = [0u8; 20];
+    let mut i = digits.len();
+    loop {
+        i -= 1;
+        digits[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    out.extend_from_slice(&digits[i..]);
+}
+
+fn push_i64(out: &mut Vec<u8>, v: i64) {
+    if v < 0 {
+        out.push(b'-');
+    }
+    push_u64(out, v.unsigned_abs());
+}
+
+fn push_hex(out: &mut Vec<u8>, mut v: u64) {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut digits = [0u8; 16];
+    let mut i = digits.len();
+    loop {
+        i -= 1;
+        digits[i] = HEX[(v & 0xf) as usize];
+        v >>= 4;
+        if v == 0 {
+            break;
+        }
+    }
+    out.extend_from_slice(&digits[i..]);
+}
+
+// ---------------------------------------------------------------------------
+// Simple (non-streaming) responses
+// ---------------------------------------------------------------------------
+
+/// Write a complete JSON response with `Content-Length` framing.
+fn write_simple<W: Write>(
+    stream: &mut W,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, &str)],
+    body: &[u8],
+) -> io::Result<()> {
+    let mut head: Vec<u8> = Vec::with_capacity(160);
+    head.extend_from_slice(b"HTTP/1.1 ");
+    push_u64(&mut head, status as u64);
+    head.push(b' ');
+    head.extend_from_slice(reason.as_bytes());
+    head.extend_from_slice(b"\r\nContent-Type: application/json\r\nContent-Length: ");
+    push_u64(&mut head, body.len() as u64);
+    head.extend_from_slice(b"\r\n");
+    for (name, value) in extra {
+        head.extend_from_slice(name.as_bytes());
+        head.extend_from_slice(b": ");
+        head.extend_from_slice(value.as_bytes());
+        head.extend_from_slice(b"\r\n");
+    }
+    head.extend_from_slice(b"\r\n");
+    stream.write_all(&head)?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// `{"error":"<reason>"}` — `reason` must not contain `"` or `\`.
+fn error_body(reason: &str) -> Vec<u8> {
+    let mut body = Vec::with_capacity(reason.len() + 13);
+    body.extend_from_slice(b"{\"error\":\"");
+    body.extend_from_slice(reason.as_bytes());
+    body.extend_from_slice(b"\"}");
+    body
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Content Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Wire-layer knobs. [`HttpOpts::from_env`] reads the `HEAPR_*`
+/// defaults; the `serve --http` flags override field-by-field.
+#[derive(Clone, Debug)]
+pub struct HttpOpts {
+    /// Port to bind on 127.0.0.1; `0` asks the OS for an ephemeral port
+    /// (read it back via [`HttpServer::local_addr`]).
+    pub port: u16,
+    /// Bounded admission queue: requests arriving while this many are
+    /// in flight are shed with `429` + `Retry-After`. `0` = unbounded.
+    pub max_queue: usize,
+    /// Default per-request deadline; a request's `deadline_ms` JSON
+    /// field overrides it. `None` = no deadline.
+    pub deadline: Option<Duration>,
+    /// Scheduler lane count (see [`SchedulerOpts::lanes`]).
+    pub lanes: Option<usize>,
+    /// Extent-grouped admission ([`Batcher::group_by_extent`]).
+    pub group_extent: bool,
+    /// Token budget for requests that do not send `max_new_tokens`.
+    pub default_max_new_tokens: usize,
+}
+
+impl Default for HttpOpts {
+    fn default() -> HttpOpts {
+        HttpOpts {
+            port: 0,
+            max_queue: 64,
+            deadline: None,
+            lanes: None,
+            group_extent: false,
+            default_max_new_tokens: 16,
+        }
+    }
+}
+
+impl HttpOpts {
+    /// Defaults from the environment: `HEAPR_HTTP_PORT` (default 8080),
+    /// `HEAPR_MAX_QUEUE` (default 64; 0 = unbounded) and
+    /// `HEAPR_DEADLINE_MS` (default unset = no deadline).
+    pub fn from_env() -> HttpOpts {
+        let port = std::env::var("HEAPR_HTTP_PORT")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(8080);
+        let max_queue = std::env::var("HEAPR_MAX_QUEUE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let deadline = std::env::var("HEAPR_DEADLINE_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&ms| ms > 0)
+            .map(Duration::from_millis);
+        HttpOpts { port, max_queue, deadline, ..HttpOpts::default() }
+    }
+}
+
+/// What a completed [`HttpServer::serve`] run handled.
+#[derive(Debug)]
+pub struct HttpServeReport {
+    /// One [`Response`] per retired request, in completion order —
+    /// the same values the in-process serving paths return.
+    pub responses: Vec<Response>,
+    /// Requests admitted to the scheduler over the wire.
+    pub admitted: usize,
+    /// Requests refused with `429` by the bounded admission queue.
+    pub shed: usize,
+}
+
+/// State shared between the accept loop, connection handlers and the
+/// SSE dispatcher. All locks here are leaf locks: nothing is acquired
+/// while one is held.
+struct Wire {
+    /// Per-request SSE routes: the dispatcher looks up the admitting
+    /// handler's sender by request id and removes it on the final event.
+    registry: Mutex<HashMap<RequestId, Sender<StreamEvent>>>,
+    /// Admitted-but-not-retired count — the bounded queue's occupancy.
+    in_flight: AtomicUsize,
+    next_id: AtomicU64,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+    cancel: Arc<CancelSet>,
+    shutdown: Arc<AtomicBool>,
+    max_queue: usize,
+    deadline: Option<Duration>,
+    /// Longest admissible prompt: one decode position must remain.
+    max_prompt: usize,
+    default_budget: usize,
+    max_budget: usize,
+}
+
+/// Poison-tolerant lock: a handler that panicked while holding the
+/// registry must not wedge the rest of the wire layer.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A bound HTTP/1.1 front-end. [`HttpServer::bind`] grabs the port;
+/// [`HttpServer::serve`] runs the accept loop + scheduler until the
+/// shutdown flag ([`HttpServer::shutdown_handle`]) is raised, then
+/// drains: new connections are refused, in-flight lanes run to
+/// completion, and every wire thread is joined before returning.
+pub struct HttpServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+    opts: HttpOpts,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind `127.0.0.1:{opts.port}` (port 0 = OS-assigned).
+    pub fn bind(opts: HttpOpts) -> Result<HttpServer> {
+        let listener = TcpListener::bind(("127.0.0.1", opts.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
+        let addr = listener.local_addr().context("listener local_addr")?;
+        Ok(HttpServer { listener, addr, opts, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Raising this flag (from any thread) starts the graceful drain.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Run the wire + scheduler until drained. The scheduler runs on
+    /// the calling thread (it borrows the engine through `server`);
+    /// accept/handler/dispatcher threads are joined before returning,
+    /// so no wire thread outlives this call.
+    pub fn serve(self, server: &mut Server<'_>) -> Result<HttpServeReport> {
+        let cfg = server.engine().config().clone();
+        let max_pos = cfg.seq_len.min(cfg.max_decode_len);
+        let wire = Arc::new(Wire {
+            registry: Mutex::new(HashMap::new()),
+            in_flight: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            cancel: Arc::new(CancelSet::new()),
+            shutdown: self.shutdown.clone(),
+            max_queue: self.opts.max_queue,
+            deadline: self.opts.deadline,
+            max_prompt: max_pos.saturating_sub(1).max(1),
+            default_budget: self.opts.default_max_new_tokens.max(1),
+            max_budget: cfg.max_decode_len.max(1),
+        });
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (ev_tx, ev_rx) = mpsc::channel::<StreamEvent>();
+
+        let accept = {
+            let wire = wire.clone();
+            let listener = self.listener;
+            pool::spawn_named("http-accept", move || accept_loop(listener, &wire, req_tx))
+        };
+        let dispatcher = {
+            let wire = wire.clone();
+            pool::spawn_named("http-dispatch", move || dispatch(ev_rx, &wire))
+        };
+
+        let mut batcher =
+            Batcher::new(req_rx, cfg.serve_batches.clone(), Duration::from_millis(2))
+                .group_by_extent(self.opts.group_extent);
+        let opts = SchedulerOpts {
+            lanes: self.opts.lanes,
+            stream: Some(ev_tx),
+            cancel: Some(wire.cancel.clone()),
+            deadline: self.opts.deadline.map(|d| d + DEADLINE_BACKSTOP_SLACK),
+            ..SchedulerOpts::default()
+        };
+        let outcome = serve_continuous(server, &mut batcher, opts);
+        // whatever ended the serve loop — a drain or an engine error —
+        // tear the wire down before reporting: raise the flag so accept
+        // exits even on the error path (handlers then observe the
+        // closed event channel and abort their streams)
+        self.shutdown.store(true, Ordering::Release);
+        accept.join().map_err(|_| anyhow!("http accept thread panicked"))?;
+        dispatcher.join().map_err(|_| anyhow!("http dispatch thread panicked"))?;
+        let responses = outcome?;
+        Ok(HttpServeReport {
+            responses,
+            admitted: wire.admitted.load(Ordering::Relaxed) as usize,
+            shed: wire.shed.load(Ordering::Relaxed) as usize,
+        })
+    }
+}
+
+/// Accept until shutdown; handlers are detached into their own threads
+/// and joined here before the request channel closes, so the scheduler
+/// only sees the queue end after every connection is done producing.
+fn accept_loop(listener: TcpListener, wire: &Arc<Wire>, req_tx: Sender<Request>) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if wire.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let wire = wire.clone();
+                let tx = req_tx.clone();
+                handlers.push(pool::spawn_named("http-conn", move || {
+                    // lint:allow(swallowed-result) a torn connection fails only itself; the accept loop must outlive any one socket
+                    let _ = handle_conn(stream, &wire, &tx);
+                }));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+        // cap the handle table: completed connections are reaped as we go
+        handlers.retain(|h| !h.is_finished());
+    }
+    // refuse new connections the moment drain starts…
+    drop(listener);
+    // …and only then wait out the in-flight ones; dropping `req_tx`
+    // after this join is what lets the scheduler's queue drain
+    for handle in handlers {
+        // lint:allow(swallowed-result) a panicked handler already failed its own connection; drain must still complete
+        let _ = handle.join();
+    }
+}
+
+/// Route [`StreamEvent`]s to the handler that admitted each request.
+/// On a final event the route is dropped and the in-flight count
+/// decremented — whether or not a handler is still listening, so
+/// abandoned streams (deadline, disconnect) cannot leak queue slots.
+fn dispatch(ev_rx: Receiver<StreamEvent>, wire: &Wire) {
+    for ev in ev_rx {
+        let route = {
+            let mut registry = lock(&wire.registry);
+            if ev.done {
+                registry.remove(&ev.id)
+            } else {
+                registry.get(&ev.id).cloned()
+            }
+        };
+        if ev.done {
+            wire.in_flight.fetch_sub(1, Ordering::AcqRel);
+        }
+        if let Some(tx) = route {
+            // lint:allow(swallowed-result) the handler may have abandoned its stream (deadline expiry, client gone); orphaned events are dropped by design
+            let _ = tx.send(ev);
+        }
+    }
+    // the event channel closed: the scheduler has returned. Any route
+    // still registered belongs to a stream that will never finish (the
+    // engine-error path) — drop the senders so those handlers' receivers
+    // disconnect and their connections abort instead of waiting forever.
+    lock(&wire.registry).clear();
+}
+
+/// One connection: read → parse → respond, keep-alive until the peer
+/// closes, a parse becomes fatal, or drain catches the socket idle.
+fn handle_conn(mut stream: TcpStream, wire: &Wire, req_tx: &Sender<Request>) -> io::Result<()> {
+    stream.set_read_timeout(Some(TICK))?;
+    stream.set_nodelay(true)?;
+    let mut parser = RequestParser::new();
+    let mut rbuf = [0u8; 4096];
+    // per-connection scratch reused across every streamed token
+    let mut event_scratch: Vec<u8> = Vec::with_capacity(128);
+    let mut chunk_scratch: Vec<u8> = Vec::with_capacity(32);
+    let mut drain_seen: Option<Instant> = None;
+    loop {
+        // drain everything already buffered before reading again, so
+        // pipelined requests are answered in order without more input
+        loop {
+            match parser.poll() {
+                Parse::Pending => break,
+                Parse::Bad(status, reason) => {
+                    let body = error_body(reason);
+                    write_simple(&mut stream, status, reason_phrase(status), &[], &body)?;
+                    return Ok(());
+                }
+                Parse::Ready(req) => {
+                    let keep = handle_request(
+                        &mut stream,
+                        wire,
+                        req_tx,
+                        &req,
+                        &mut event_scratch,
+                        &mut chunk_scratch,
+                    )?;
+                    if !keep {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        match stream.read(&mut rbuf) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(n) => parser.feed(&rbuf[..n]),
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut
+                    || e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+        if wire.shutdown.load(Ordering::Acquire) {
+            // drain: close idle keep-alive connections immediately; a
+            // connection caught mid-request gets a bounded grace to
+            // finish sending, then is closed under it
+            let since = *drain_seen.get_or_insert_with(Instant::now);
+            if parser.is_idle() || since.elapsed() >= DRAIN_GRACE {
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Dispatch one parsed request to its route.
+fn handle_request(
+    stream: &mut TcpStream,
+    wire: &Wire,
+    req_tx: &Sender<Request>,
+    req: &HttpRequest,
+    event_scratch: &mut Vec<u8>,
+    chunk_scratch: &mut Vec<u8>,
+) -> io::Result<bool> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/generate") => {
+            handle_generate(stream, wire, req_tx, req, event_scratch, chunk_scratch)
+        }
+        ("GET", "/healthz") => {
+            let mut body = Vec::with_capacity(48);
+            body.extend_from_slice(b"{\"status\":\"ok\",\"in_flight\":");
+            push_u64(&mut body, wire.in_flight.load(Ordering::Acquire) as u64);
+            body.extend_from_slice(b"}");
+            write_simple(stream, 200, "OK", &[], &body)?;
+            Ok(req.keep_alive)
+        }
+        (_, "/generate") => {
+            write_simple(
+                stream,
+                405,
+                reason_phrase(405),
+                &[("Allow", "POST")],
+                &error_body("use POST"),
+            )?;
+            Ok(req.keep_alive)
+        }
+        (_, "/healthz") => {
+            write_simple(
+                stream,
+                405,
+                reason_phrase(405),
+                &[("Allow", "GET")],
+                &error_body("use GET"),
+            )?;
+            Ok(req.keep_alive)
+        }
+        _ => {
+            write_simple(stream, 404, reason_phrase(404), &[], &error_body("unknown path"))?;
+            Ok(req.keep_alive)
+        }
+    }
+}
+
+/// A validated `/generate` body.
+struct Generate {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    deadline: Option<Duration>,
+}
+
+/// Decode + validate a `/generate` JSON body. Every reject is a `400`
+/// message; nothing here can panic on arbitrary JSON.
+fn parse_generate(body: &[u8], wire: &Wire) -> std::result::Result<Generate, String> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| "request body is not valid UTF-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("invalid JSON body: {e}"))?;
+    let prompt: Vec<i32> = if let Some(tokens) = json.opt("prompt") {
+        let items = tokens.as_arr().map_err(|_| "prompt must be an array".to_string())?;
+        let mut prompt = Vec::with_capacity(items.len());
+        for item in items {
+            let v = item.as_f64().map_err(|_| "prompt tokens must be numbers".to_string())?;
+            if v.fract() != 0.0 || v < 0.0 || v >= VOCAB as f64 {
+                return Err(format!("prompt tokens must be integers in 0..{VOCAB}"));
+            }
+            prompt.push(v as i32);
+        }
+        prompt
+    } else if let Some(text) = json.opt("text") {
+        let s = text.as_str().map_err(|_| "text must be a string".to_string())?;
+        ByteTokenizer.encode(s)
+    } else {
+        return Err("body needs a prompt (token array) or text (string)".to_string());
+    };
+    if prompt.is_empty() {
+        return Err("prompt must be non-empty".to_string());
+    }
+    if prompt.len() > wire.max_prompt {
+        return Err(format!("prompt too long: {} tokens (max {})", prompt.len(), wire.max_prompt));
+    }
+    let max_new_tokens = match json.opt("max_new_tokens") {
+        Some(n) => n
+            .as_usize()
+            .map_err(|_| "max_new_tokens must be a non-negative integer".to_string())?,
+        None => wire.default_budget,
+    };
+    let max_new_tokens = max_new_tokens.clamp(1, wire.max_budget);
+    let deadline = match json.opt("deadline_ms") {
+        Some(n) => {
+            let ms =
+                n.as_usize().map_err(|_| "deadline_ms must be a non-negative integer".to_string())?;
+            (ms > 0).then(|| Duration::from_millis(ms as u64))
+        }
+        None => wire.deadline,
+    };
+    Ok(Generate { prompt, max_new_tokens, deadline })
+}
+
+const SSE_HEAD: &[u8] = b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nTransfer-Encoding: chunked\r\n\r\n";
+
+/// `POST /generate`: shed or admit, then stream tokens as SSE events
+/// over chunked transfer encoding until the final token, deadline
+/// expiry, or a dead client.
+fn handle_generate(
+    stream: &mut TcpStream,
+    wire: &Wire,
+    req_tx: &Sender<Request>,
+    req: &HttpRequest,
+    event_scratch: &mut Vec<u8>,
+    chunk_scratch: &mut Vec<u8>,
+) -> io::Result<bool> {
+    if wire.shutdown.load(Ordering::Acquire) {
+        write_simple(stream, 503, reason_phrase(503), &[], &error_body("draining"))?;
+        return Ok(false);
+    }
+    // load shedding before any parsing work: refusal must stay cheap
+    if wire.max_queue > 0 && wire.in_flight.load(Ordering::Acquire) >= wire.max_queue {
+        wire.shed.fetch_add(1, Ordering::Relaxed);
+        write_simple(
+            stream,
+            429,
+            reason_phrase(429),
+            &[("Retry-After", "1")],
+            &error_body("admission queue full"),
+        )?;
+        return Ok(req.keep_alive);
+    }
+    let spec = match parse_generate(&req.body, wire) {
+        Ok(spec) => spec,
+        Err(msg) => {
+            write_simple(stream, 400, reason_phrase(400), &[], &error_body(&msg))?;
+            return Ok(req.keep_alive);
+        }
+    };
+    let id = wire.next_id.fetch_add(1, Ordering::Relaxed);
+    let (tx, rx) = mpsc::channel::<StreamEvent>();
+    // route first, then submit: the dispatcher must be able to deliver
+    // the very first event
+    lock(&wire.registry).insert(id, tx);
+    wire.in_flight.fetch_add(1, Ordering::AcqRel);
+    let submitted = Instant::now();
+    if req_tx.send(Request::new(id, spec.prompt, spec.max_new_tokens)).is_err() {
+        // the scheduler is gone (drain raced this admission): undo
+        lock(&wire.registry).remove(&id);
+        wire.in_flight.fetch_sub(1, Ordering::AcqRel);
+        write_simple(stream, 503, reason_phrase(503), &[], &error_body("draining"))?;
+        return Ok(false);
+    }
+    wire.admitted.fetch_add(1, Ordering::Relaxed);
+    debug!("http: admitted request {id} ({} in flight)", wire.in_flight.load(Ordering::Acquire));
+    stream.write_all(SSE_HEAD)?;
+    stream_tokens(stream, &rx, wire, id, submitted, spec.deadline, event_scratch, chunk_scratch)?;
+    Ok(req.keep_alive)
+}
+
+/// Pump one request's [`StreamEvent`]s to the client as SSE chunks.
+/// Ends on the final token, on deadline expiry (final error event +
+/// scheduler-side cancellation, so the lane retires leak-free), or on
+/// a write failure (client gone — also cancels the lane).
+#[allow(clippy::too_many_arguments)]
+fn stream_tokens(
+    stream: &mut TcpStream,
+    rx: &Receiver<StreamEvent>,
+    wire: &Wire,
+    id: RequestId,
+    submitted: Instant,
+    deadline: Option<Duration>,
+    event_scratch: &mut Vec<u8>,
+    chunk_scratch: &mut Vec<u8>,
+) -> io::Result<()> {
+    loop {
+        if deadline.is_some_and(|d| submitted.elapsed() >= d) {
+            // terminate the stream mid-flight; the scheduler consumes
+            // the cancellation at the lane's next commit and retires it
+            wire.cancel.request(id);
+            write_error_event(event_scratch, id, "deadline");
+            write_chunk(stream, chunk_scratch, event_scratch)?;
+            return end_chunks(stream);
+        }
+        let wait = match deadline {
+            Some(d) => d.saturating_sub(submitted.elapsed()).min(TICK),
+            None => TICK,
+        };
+        match rx.recv_timeout(wait) {
+            Ok(ev) => {
+                write_event(event_scratch, &ev);
+                if let Err(e) = write_chunk(stream, chunk_scratch, event_scratch) {
+                    // client went away mid-stream: stop decoding for it
+                    wire.cancel.request(id);
+                    return Err(e);
+                }
+                if ev.done {
+                    return end_chunks(stream);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // the scheduler ended without finishing this stream
+                // (engine error path): tell the client, close cleanly
+                write_error_event(event_scratch, id, "aborted");
+                write_chunk(stream, chunk_scratch, event_scratch)?;
+                return end_chunks(stream);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop load schedule
+// ---------------------------------------------------------------------------
+
+/// Deterministic open-loop Poisson arrival clock: yields cumulative
+/// arrival offsets (seconds from t=0) with exponential inter-arrival
+/// gaps at `qps`. A pure function of the seed — identical across runs,
+/// machines and thread counts — so `bench_load`'s offered-load legs
+/// are reproducible ([`Pcg64`] is the repo's only entropy source).
+#[derive(Clone, Debug)]
+pub struct PoissonSchedule {
+    rng: Pcg64,
+    mean_gap_s: f64,
+    t_s: f64,
+}
+
+impl PoissonSchedule {
+    /// `qps` is the offered arrival rate; clamped away from zero.
+    pub fn new(seed: u64, qps: f64) -> PoissonSchedule {
+        PoissonSchedule {
+            // own stream constant: arrival times must not correlate
+            // with any other consumer of the same seed
+            rng: Pcg64::with_stream(seed, 0x4c4f_4144),
+            mean_gap_s: 1.0 / qps.max(1e-9),
+            t_s: 0.0,
+        }
+    }
+}
+
+impl Iterator for PoissonSchedule {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        // inverse-CDF exponential gap; f64() < 1.0 so the log is finite
+        let u = self.rng.f64();
+        // lint:allow(float-accum-order) the arrival clock is a sequential running sum by definition — the order *is* the semantics, not a reduction choice
+        self.t_s += -(1.0 - u).ln() * self.mean_gap_s;
+        Some(self.t_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(bytes: &[u8]) -> Vec<Parse> {
+        let mut p = RequestParser::new();
+        p.feed(bytes);
+        let mut out = Vec::new();
+        loop {
+            match p.poll() {
+                Parse::Pending => break,
+                done @ Parse::Bad(..) => {
+                    out.push(done);
+                    break;
+                }
+                ready => out.push(ready),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parses_simple_post() {
+        let raw = b"POST /generate HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let got = parse_all(raw);
+        assert_eq!(got.len(), 1);
+        let Parse::Ready(req) = &got[0] else { panic!("expected Ready, got {got:?}") };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/generate");
+        assert_eq!(req.body, b"hi");
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_order() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\nPOST /generate HTTP/1.1\r\nContent-Length: 3\r\n\r\nabcGET /healthz HTTP/1.0\r\n\r\n";
+        let got = parse_all(raw);
+        assert_eq!(got.len(), 3, "{got:?}");
+        let Parse::Ready(r1) = &got[1] else { panic!() };
+        assert_eq!(r1.body, b"abc");
+        let Parse::Ready(r2) = &got[2] else { panic!() };
+        assert!(!r2.keep_alive, "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn segmentation_invariance_on_a_small_request() {
+        let raw = b"POST /generate HTTP/1.1\r\nContent-Length: 5\r\nConnection: close\r\n\r\n[1,2]";
+        let whole = parse_all(raw);
+        for cut in 1..raw.len() {
+            let mut p = RequestParser::new();
+            p.feed(&raw[..cut]);
+            let mut got = Vec::new();
+            loop {
+                match p.poll() {
+                    Parse::Pending => break,
+                    other => got.push(other),
+                }
+            }
+            p.feed(&raw[cut..]);
+            loop {
+                match p.poll() {
+                    Parse::Pending => break,
+                    other => {
+                        got.push(other);
+                        break;
+                    }
+                }
+            }
+            assert_eq!(got, whole, "split at {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage_with_400_family() {
+        for raw in [
+            &b"\x00\xff\xfe\r\n\r\n"[..],
+            &b"GET\r\n\r\n"[..],
+            &b"GET / HTTP/2.0\r\n\r\n"[..],
+            &b"GET / HTTP/1.1\r\nBad Header: x\r\n\r\n"[..],
+            &b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..],
+            &b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"[..],
+        ] {
+            let got = parse_all(raw);
+            assert!(
+                matches!(got.last(), Some(Parse::Bad(400..=505, _))),
+                "{:?} -> {got:?}",
+                String::from_utf8_lossy(raw)
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_head_is_431_even_without_terminator() {
+        let mut p = RequestParser::new();
+        // 3 trailing bytes could still be a partial terminator of a
+        // cap-sized head, so this is (barely) pending…
+        p.feed(&[b'A'; MAX_HEAD_BYTES + 3]);
+        assert!(matches!(p.poll(), Parse::Pending));
+        // …and one more byte proves the head cannot fit the cap
+        p.feed(b"A");
+        assert!(matches!(p.poll(), Parse::Bad(431, _)));
+        // terminal: stays bad, discards further input
+        p.feed(b"GET / HTTP/1.1\r\n\r\n");
+        assert!(matches!(p.poll(), Parse::Bad(431, _)));
+    }
+
+    #[test]
+    fn cap_sized_head_parses_even_when_cut_mid_terminator() {
+        // head_end == MAX_HEAD_BYTES exactly: the largest legal head,
+        // with the read boundary landing inside `\r\n\r\n`
+        let mut raw = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+        raw.resize(MAX_HEAD_BYTES, b'a');
+        raw.extend_from_slice(b"\r\n\r\n");
+        for cut in [MAX_HEAD_BYTES + 1, MAX_HEAD_BYTES + 2, MAX_HEAD_BYTES + 3] {
+            let mut p = RequestParser::new();
+            p.feed(&raw[..cut]);
+            assert!(matches!(p.poll(), Parse::Pending), "cut at {cut}");
+            p.feed(&raw[cut..]);
+            assert!(matches!(p.poll(), Parse::Ready(_)), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413() {
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let got = parse_all(raw.as_bytes());
+        assert!(matches!(got.last(), Some(Parse::Bad(413, _))), "{got:?}");
+    }
+
+    #[test]
+    fn sse_event_bytes_are_exact() {
+        let mut out = Vec::new();
+        write_event(&mut out, &StreamEvent { id: 7, index: 0, token: -3, done: false });
+        assert_eq!(out, b"data: {\"id\":7,\"index\":0,\"token\":-3,\"done\":false}\n\n");
+        write_event(&mut out, &StreamEvent { id: 12, index: 41, token: 258, done: true });
+        assert_eq!(out, b"data: {\"id\":12,\"index\":41,\"token\":258,\"done\":true}\n\n");
+    }
+
+    #[test]
+    fn chunk_framing_is_exact() {
+        let mut sink: Vec<u8> = Vec::new();
+        let mut head = Vec::new();
+        write_chunk(&mut sink, &mut head, b"0123456789abcdef").unwrap();
+        assert_eq!(sink, b"10\r\n0123456789abcdef\r\n");
+        end_chunks(&mut sink).unwrap();
+        assert!(sink.ends_with(b"0\r\n\r\n"));
+    }
+
+    #[test]
+    fn poisson_schedule_is_a_pure_function_of_the_seed() {
+        let a: Vec<f64> = PoissonSchedule::new(9, 25.0).take(64).collect();
+        let b: Vec<f64> = PoissonSchedule::new(9, 25.0).take(64).collect();
+        assert_eq!(a, b);
+        let c: Vec<f64> = PoissonSchedule::new(10, 25.0).take(64).collect();
+        assert_ne!(a, c);
+        assert!(a.windows(2).all(|w| w[1] >= w[0]), "arrival times are monotone");
+        // mean gap converges on 1/qps (loose bound, 64 samples)
+        let mean = a.last().unwrap() / a.len() as f64;
+        assert!((0.2..5.0).contains(&(mean * 25.0)), "mean gap {mean} at 25 qps");
+    }
+}

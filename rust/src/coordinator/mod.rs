@@ -1,17 +1,21 @@
 //! Serving coordinator: request queue + admission policy ([`batcher`]),
 //! rust-side routing ([`router`]), the per-layer serving composition and
 //! the batch-synchronous reference loop ([`serve`]), the shared-prefix
-//! admission index ([`prefix`]), and the continuous-batching scheduler
-//! with in-flight admission and prefix-hit seating ([`scheduler`]).
+//! admission index ([`prefix`]), the continuous-batching scheduler
+//! with in-flight admission and prefix-hit seating ([`scheduler`]),
+//! and the dependency-free HTTP/1.1 wire layer with SSE token
+//! streaming, load shedding and graceful drain ([`http`]).
 
 pub mod batcher;
+pub mod http;
 pub mod prefix;
 pub mod router;
 pub mod scheduler;
 pub mod serve;
 
 pub use batcher::{AdmissionPolicy, Batcher, Request, RequestId};
+pub use http::{HttpOpts, HttpServeReport, HttpServer, PoissonSchedule, RequestParser};
 pub use prefix::PrefixIndex;
 pub use router::Router;
-pub use scheduler::{serve_continuous, Scheduler, SchedulerOpts, StreamEvent};
+pub use scheduler::{serve_continuous, CancelSet, Scheduler, SchedulerOpts, StreamEvent};
 pub use serve::{DecodeState, Residency, Response, ServeMetrics, Server};

@@ -48,8 +48,10 @@
 //! there — bitwise unchanged (lane values are lane-position and
 //! bucket independent), just cheaper per step.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -71,6 +73,56 @@ pub struct StreamEvent {
     pub done: bool,
 }
 
+/// Cross-thread cancellation requests keyed by [`RequestId`]. The wire
+/// layer ([`crate::coordinator::http`]) files a cancellation when a
+/// client deadline expires or a connection dies mid-stream; the
+/// scheduler consumes it at the lane's next token commit and retires
+/// the lane through the normal path (KV zeroed, response recorded,
+/// metrics updated), so a cancelled request can never leak lane state.
+/// The steady state is empty: `commit` pays one atomic load per token
+/// and touches the mutex only while a cancellation is actually pending.
+#[derive(Debug, Default)]
+pub struct CancelSet {
+    pending: AtomicUsize,
+    ids: Mutex<Vec<RequestId>>,
+}
+
+impl CancelSet {
+    pub fn new() -> CancelSet {
+        CancelSet::default()
+    }
+
+    /// File a cancellation for `id`. Filing twice is harmless: every
+    /// copy is consumed by the retire-side sweep.
+    pub fn request(&self, id: RequestId) {
+        let mut ids = self.ids.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        ids.push(id);
+        self.pending.store(ids.len(), Ordering::Release);
+    }
+
+    /// Consume any pending cancellation for `id`, returning whether one
+    /// was filed. Fast path: a single atomic load while the set is
+    /// empty, so an uncancelled serve loop never contends on the lock.
+    fn take(&self, id: RequestId) -> bool {
+        if self.pending.load(Ordering::Acquire) == 0 {
+            return false;
+        }
+        let mut ids = self.ids.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut hit = false;
+        let mut i = 0;
+        while i < ids.len() {
+            if ids[i] == id {
+                ids.swap_remove(i);
+                hit = true;
+            } else {
+                i += 1;
+            }
+        }
+        self.pending.store(ids.len(), Ordering::Release);
+        hit
+    }
+}
+
 /// Continuous scheduler knobs. `Default` serves with the preset's widest
 /// serve-batch bucket, no streaming sink, compaction on.
 pub struct SchedulerOpts {
@@ -88,6 +140,17 @@ pub struct SchedulerOpts {
     /// [`crate::coordinator::Residency::Paged`] with a b=1 decode
     /// artifact; bitwise-identical token streams either way.
     pub prefix_cache: bool,
+    /// Cross-thread cancellation set, consumed at token commit: a
+    /// request filed here retires at its next committed token, with
+    /// `done` raised on that final stream event. `None` = no external
+    /// cancellation (the in-process serving paths).
+    pub cancel: Option<Arc<CancelSet>>,
+    /// Scheduler-side deadline backstop: a lane whose request has been
+    /// in flight (submission to now) at least this long is cancelled at
+    /// its next commit. The HTTP layer enforces its own, strictly
+    /// earlier, per-request deadline through `cancel`; this backstop
+    /// catches requests whose wire handler is already gone.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for SchedulerOpts {
@@ -97,6 +160,8 @@ impl Default for SchedulerOpts {
             stream: None,
             compact: true,
             prefix_cache: prefix_cache_enabled(),
+            cancel: None,
+            deadline: None,
         }
     }
 }
@@ -309,9 +374,21 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         let Some(lane) = &mut lanes[slot] else { return Ok(()) };
         lane.generated.push(lane.next);
         // exact mirror of serve_batch's completion conditions
-        let done = lane.next == EOS
+        let natural = lane.next == EOS
             || lane.generated.len() >= lane.req.max_new_tokens
             || lane.pos + 1 >= max_pos;
+        // cancellation (wire-filed or deadline backstop) only ever adds
+        // a stop on a token that was not final anyway — a naturally
+        // final token is never re-labelled — so uncancelled streams
+        // stay bitwise identical to serve_batch's
+        let cancelled = !natural
+            && (self.opts.cancel.as_deref().is_some_and(|c| c.take(lane.req.id))
+                || self.opts.deadline.is_some_and(|d| lane.req.submitted.elapsed() >= d));
+        let done = natural || cancelled;
+        if cancelled {
+            self.server.metrics.cancelled_requests += 1;
+            debug!("cancelled request {} after {} tokens", lane.req.id, lane.generated.len());
+        }
         if let Some(tx) = &self.opts.stream {
             // lint:allow(swallowed-result) streaming is observability, not control flow: a dropped receiver must not fail the serve loop
             let _ = tx.send(StreamEvent {
@@ -429,6 +506,11 @@ impl<'s, 'e> Scheduler<'s, 'e> {
         responses: &mut Vec<Response>,
     ) -> Result<()> {
         let lane = lanes[slot].take().context("retire called on an empty lane")?;
+        if let Some(c) = self.opts.cancel.as_deref() {
+            // purge a cancellation that raced natural completion, so the
+            // set's commit-side fast path returns to its empty state
+            c.take(lane.req.id);
+        }
         if let Some(idx) = pidx {
             // the lane can no longer donate its prefix; pages it shared
             // stay alive through their refcounts, not through the index

@@ -73,6 +73,12 @@ pub struct ServeMetrics {
     /// Prompt rows whose prefill compute was skipped because a resident
     /// prefix already held their K/V pages.
     pub prefill_rows_skipped: u64,
+    /// Requests retired early by a [`crate::coordinator::CancelSet`]
+    /// filing or the scheduler's deadline backstop — each one still
+    /// passes through the normal retire path (counted in `requests`,
+    /// KV zeroed), so `requests - cancelled_requests` is the number
+    /// that ran to natural completion.
+    pub cancelled_requests: usize,
 }
 
 impl ServeMetrics {

@@ -54,6 +54,9 @@ pub const ENTRY_POINTS: &[(&str, &str)] = &[
     ("coordinator/scheduler.rs", "commit"),
     ("coordinator/scheduler.rs", "admit"),
     ("coordinator/scheduler.rs", "try_admit_prefix"),
+    // wire layer: the per-token SSE serialization + chunk write
+    ("coordinator/http.rs", "write_event"),
+    ("coordinator/http.rs", "write_chunk"),
     // serve layer: the per-step forward pass
     ("coordinator/serve.rs", "decode_step"),
     ("coordinator/serve.rs", "decode_lane_step"),

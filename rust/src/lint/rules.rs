@@ -550,6 +550,7 @@ fn in_panic_free_scope(path: &str) -> bool {
         || path.ends_with("runtime/kv.rs")
         || path.ends_with("coordinator/scheduler.rs")
         || path.ends_with("coordinator/serve.rs")
+        || path.ends_with("coordinator/http.rs")
         || path.contains("tensor/gemm")
 }
 

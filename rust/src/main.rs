@@ -9,7 +9,8 @@
 //!               (--continuous for the in-flight-admission lane
 //!               scheduler, --stream to print tokens as they land,
 //!               --lanes N to cap the lane count, --group-extent for
-//!               extent-grouped admission)
+//!               extent-grouped admission; --http for the HTTP/1.1
+//!               front-end with --port, --max-queue and --deadline-ms)
 //!   experiment  regenerate a paper table/figure: table1|table2|table3|
 //!               table5|fig2|fig3|fig4|fig56|all
 //!   corpus      print corpus statistics (substrate sanity)
@@ -22,7 +23,9 @@
 use anyhow::{bail, Result};
 
 use heapr::config::RunConfig;
-use heapr::coordinator::{serve_continuous, Batcher, Request, SchedulerOpts, Server, StreamEvent};
+use heapr::coordinator::{
+    serve_continuous, Batcher, HttpOpts, HttpServer, Request, SchedulerOpts, Server, StreamEvent,
+};
 use heapr::data::corpus::Grammar;
 use heapr::data::sampler::Split;
 use heapr::data::tokenizer::ByteTokenizer;
@@ -113,7 +116,31 @@ fn run() -> Result<()> {
             let continuous = args.flag("continuous");
             let stream = args.flag("stream");
             let lanes = args.usize("lanes", 0)?; // 0 = widest bucket
+            let http = args.flag("http");
+            // wire knobs: flags override the HEAPR_* env defaults
+            let port = args.opt_str("port");
+            let max_queue = args.opt_str("max-queue");
+            let deadline_ms = args.opt_str("deadline-ms");
             args.finish()?;
+            if http {
+                let mut hopts = HttpOpts::from_env();
+                if let Some(p) = port {
+                    hopts.port = p.parse().map_err(|_| anyhow::anyhow!("--port {p:?}"))?;
+                }
+                if let Some(q) = max_queue {
+                    hopts.max_queue =
+                        q.parse().map_err(|_| anyhow::anyhow!("--max-queue {q:?}"))?;
+                }
+                if let Some(ms) = deadline_ms {
+                    let ms: u64 =
+                        ms.parse().map_err(|_| anyhow::anyhow!("--deadline-ms {ms:?}"))?;
+                    hopts.deadline = (ms > 0).then(|| std::time::Duration::from_millis(ms));
+                }
+                hopts.lanes = (lanes > 0).then_some(lanes);
+                hopts.group_extent = group_extent;
+                hopts.default_max_new_tokens = new_tokens;
+                return cmd_serve_http(&artifact_dir, run, &out, ratio, hopts);
+            }
             cmd_serve(
                 &artifact_dir,
                 run,
@@ -372,6 +399,62 @@ fn cmd_serve(
     for r in responses.iter().take(2) {
         info!("  req {} -> {:?}", r.id, ByteTokenizer.decode(&r.tokens));
     }
+    Ok(())
+}
+
+/// `serve --http`: expose the continuous scheduler over the wire
+/// (`coordinator::http`) and serve until stdin reaches EOF — Ctrl-D
+/// interactively, or the supervisor closing the pipe — which starts the
+/// graceful drain (stop accepting, finish in-flight lanes, exit).
+fn cmd_serve_http(
+    artifact_dir: &str,
+    run: RunConfig,
+    out: &str,
+    ratio: f64,
+    opts: HttpOpts,
+) -> Result<()> {
+    use std::io::Read;
+
+    let ctx = Ctx::prepare(artifact_dir, run, out)?;
+    let cfg = ctx.engine.config().clone();
+    let plan = if ratio > 0.0 {
+        let calib = ctx.calib_wiki(ctx.run.calib_samples, 0);
+        let (scores, _) = heapr_scores(&ctx.engine, &ctx.params, &calib)?;
+        Some(PrunePlan::from_scores(&scores, ratio, Scope::Global).bucket_aligned(&scores, cfg.blk_i))
+    } else {
+        None
+    };
+    let mut server = Server::new(&ctx.engine, &ctx.params, plan.as_ref())?;
+
+    let http = HttpServer::bind(opts)?;
+    let addr = http.local_addr();
+    let shutdown = http.shutdown_handle();
+    info!("serving on http://{addr} — POST /generate, GET /healthz; stdin EOF drains and exits");
+    // detached on purpose: if the drain is triggered some other way the
+    // watcher must not hold up process exit, so it is never joined
+    let _stdin_watcher = pool::spawn_named("stdin-eof", move || {
+        let mut sink = [0u8; 256];
+        let mut stdin = std::io::stdin();
+        loop {
+            match stdin.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+        shutdown.store(true, std::sync::atomic::Ordering::Release);
+    });
+    let report = http.serve(&mut server)?;
+
+    let m = &server.metrics;
+    info!(
+        "drained: {} served over the wire ({} shed by the bounded queue, {} cancelled), \
+         {} generated tok, {:.1} tok/s",
+        report.admitted,
+        report.shed,
+        m.cancelled_requests,
+        m.generated_tokens,
+        m.throughput_tps(),
+    );
     Ok(())
 }
 

@@ -1,0 +1,671 @@
+//! Wire-layer tier: loopback integration + parser property tests for
+//! `coordinator::http`.
+//!
+//! The serving invariant extends across the wire — SSE-reassembled
+//! token streams must be **bitwise identical** to `serve_batch` output
+//! for the same (prompt, budget), across admission policies and lane
+//! counts — and every externally-reachable behavior is pinned here:
+//! parsing (segmentation invariance, pipelining, garbage), shedding
+//! (429 + `Retry-After`, connection reusable), deadlines (final error
+//! event, lane retired leak-free) and graceful drain (in-flight
+//! completes, new connections refused). The client side is raw
+//! `std::net` — no HTTP library on either end of the socket.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use heapr::coordinator::http::{Parse, RequestParser, MAX_HEAD_BYTES};
+use heapr::coordinator::{
+    HttpOpts, HttpServeReport, HttpServer, PoissonSchedule, Request, ServeMetrics, Server,
+};
+use heapr::data::corpus::Grammar;
+use heapr::data::sampler::Split;
+use heapr::model::store::ParamStore;
+use heapr::runtime::Engine;
+use heapr::util::json::Json;
+use heapr::util::pool;
+use heapr::util::prop;
+
+const DIR: &str = "artifacts/tiny";
+
+struct Shared {
+    engine: Engine,
+    params: ParamStore,
+}
+
+// SAFETY: access is serialized through the Mutex (see integration.rs).
+unsafe impl Send for Shared {}
+
+fn shared() -> &'static Mutex<Shared> {
+    static CTX: OnceLock<Mutex<Shared>> = OnceLock::new();
+    CTX.get_or_init(|| {
+        let engine = Engine::open(DIR).expect("open tiny preset");
+        let params = ParamStore::init(&engine.manifest, 11);
+        Mutex::new(Shared { engine, params })
+    })
+}
+
+fn base_prompt() -> Vec<i32> {
+    let g = Grammar::standard();
+    let docs = g.corpus("wiki", 3, 4000);
+    Split::from_docs(&docs, 64).chunks[0].clone()
+}
+
+/// `serve_batch` reference tokens for one (prompt, budget).
+fn reference_tokens(ctx: &Shared, prompt: &[i32], budget: usize) -> Vec<i32> {
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let resp = server.serve_batch(&[Request::new(0, prompt.to_vec(), budget)]).unwrap();
+    resp.into_iter().next().unwrap().tokens
+}
+
+/// Pick a prompt whose natural generation under `budget` runs long
+/// enough (several decode steps) to hold a lane busy while other
+/// requests arrive — chosen deterministically from the reference path,
+/// so the robustness tests never race a surprise instant-EOS.
+fn long_running_spec(ctx: &Shared, budget: usize) -> (Vec<i32>, Vec<i32>) {
+    let base = base_prompt();
+    let mut best: (Vec<i32>, Vec<i32>) = (Vec::new(), Vec::new());
+    for plen in [8usize, 12, 16, 20, 24, 32] {
+        let prompt = base[..plen].to_vec();
+        let tokens = reference_tokens(ctx, &prompt, budget);
+        if tokens.len() > best.1.len() {
+            best = (prompt, tokens);
+        }
+        if best.1.len() >= 16 {
+            break;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Raw std::net HTTP client
+// ---------------------------------------------------------------------------
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect(addr).expect("connect to loopback server");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn read_until(stream: &mut TcpStream, buf: &mut Vec<u8>, pat: &[u8]) -> usize {
+    let mut tmp = [0u8; 2048];
+    loop {
+        if let Some(p) = find(buf, pat) {
+            return p;
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => panic!(
+                "connection closed while waiting for {:?}; got {:?}",
+                String::from_utf8_lossy(pat),
+                String::from_utf8_lossy(buf)
+            ),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => panic!("client read failed: {e}"),
+        }
+    }
+}
+
+fn read_at_least(stream: &mut TcpStream, buf: &mut Vec<u8>, need: usize) {
+    let mut tmp = [0u8; 2048];
+    while buf.len() < need {
+        match stream.read(&mut tmp) {
+            Ok(0) => panic!("connection closed {} bytes short", need - buf.len()),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => panic!("client read failed: {e}"),
+        }
+    }
+}
+
+type Headers = Vec<(String, String)>;
+
+/// Read one response head; returns (status, headers, leftover bytes
+/// already read past the head).
+fn read_head(stream: &mut TcpStream) -> (u16, Headers, Vec<u8>) {
+    let mut buf = Vec::new();
+    let head_end = read_until(stream, &mut buf, b"\r\n\r\n");
+    let head = String::from_utf8(buf[..head_end].to_vec()).expect("response head is UTF-8");
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap();
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {status_line:?}"));
+    let headers: Headers = lines
+        .map(|l| {
+            let (k, v) = l.split_once(':').unwrap_or_else(|| panic!("bad header {l:?}"));
+            (k.trim().to_ascii_lowercase(), v.trim().to_string())
+        })
+        .collect();
+    (status, headers, buf[head_end + 4..].to_vec())
+}
+
+fn header<'h>(headers: &'h Headers, name: &str) -> Option<&'h str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+/// Read one response body (chunked or Content-Length framed), starting
+/// from `rest` (bytes already read past the head).
+fn read_body(stream: &mut TcpStream, headers: &Headers, mut rest: Vec<u8>) -> Vec<u8> {
+    if header(headers, "transfer-encoding") == Some("chunked") {
+        let mut body = Vec::new();
+        loop {
+            let line_end = read_until_buf(stream, &mut rest, b"\r\n");
+            let size_hex = std::str::from_utf8(&rest[..line_end]).expect("chunk size is UTF-8");
+            let size = usize::from_str_radix(size_hex, 16).expect("chunk size is hex");
+            let need = line_end + 2 + size + 2;
+            read_at_least(stream, &mut rest, need);
+            body.extend_from_slice(&rest[line_end + 2..line_end + 2 + size]);
+            rest.drain(..need);
+            if size == 0 {
+                return body;
+            }
+        }
+    }
+    let len: usize = header(headers, "content-length").map(|v| v.parse().unwrap()).unwrap_or(0);
+    read_at_least(stream, &mut rest, len);
+    rest.truncate(len);
+    rest
+}
+
+// like read_until but over an existing buffer that may already match
+fn read_until_buf(stream: &mut TcpStream, buf: &mut Vec<u8>, pat: &[u8]) -> usize {
+    if let Some(p) = find(buf, pat) {
+        return p;
+    }
+    read_until(stream, buf, pat)
+}
+
+/// Write a request, read one full response.
+fn exchange(stream: &mut TcpStream, request: &[u8]) -> (u16, Headers, Vec<u8>) {
+    stream.write_all(request).expect("client write");
+    let (status, headers, rest) = read_head(stream);
+    let body = read_body(stream, &headers, rest);
+    (status, headers, body)
+}
+
+fn generate_req(prompt: &[i32], budget: usize, deadline_ms: Option<u64>) -> Vec<u8> {
+    let toks: Vec<f64> = prompt.iter().map(|&t| t as f64).collect();
+    let mut fields = vec![
+        ("prompt", Json::arr_f64(&toks)),
+        ("max_new_tokens", Json::n(budget as f64)),
+    ];
+    if let Some(ms) = deadline_ms {
+        fields.push(("deadline_ms", Json::n(ms as f64)));
+    }
+    let body = Json::obj(fields).to_string();
+    let mut req = format!(
+        "POST /generate HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(body.as_bytes());
+    req
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Event {
+    id: u64,
+    index: usize,
+    token: i32,
+    done: bool,
+    error: Option<String>,
+}
+
+fn parse_events(body: &[u8]) -> Vec<Event> {
+    let text = std::str::from_utf8(body).expect("SSE body is UTF-8");
+    text.split("\n\n")
+        .filter(|chunk| !chunk.is_empty())
+        .map(|chunk| {
+            let payload = chunk.strip_prefix("data: ").expect("SSE data line");
+            let j = Json::parse(payload).expect("SSE event is JSON");
+            Event {
+                id: j.get("id").unwrap().as_usize().unwrap() as u64,
+                index: j.opt("index").map(|x| x.as_usize().unwrap()).unwrap_or(0),
+                token: j.opt("token").map(|x| x.as_f64().unwrap() as i32).unwrap_or(0),
+                done: matches!(j.opt("done"), Some(Json::Bool(true))),
+                error: j.opt("error").map(|e| e.as_str().unwrap().to_string()),
+            }
+        })
+        .collect()
+}
+
+fn stream_tokens_of(events: &[Event]) -> Vec<i32> {
+    events.iter().filter(|e| e.error.is_none()).map(|e| e.token).collect()
+}
+
+/// One request's stream must be internally coherent: a single id,
+/// indexes 0..n in order, `done` exactly on the last event, no errors.
+fn check_stream_shape(events: &[Event]) {
+    assert!(!events.is_empty(), "stream carries at least one event");
+    let id = events[0].id;
+    for (i, ev) in events.iter().enumerate() {
+        assert_eq!(ev.id, id, "one stream, one id");
+        assert_eq!(ev.index, i, "index order");
+        assert_eq!(ev.done, i + 1 == events.len(), "done on the last event only");
+        assert!(ev.error.is_none(), "unexpected error event: {ev:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server harness
+// ---------------------------------------------------------------------------
+
+/// Run a live loopback server on the test thread (the scheduler borrows
+/// the engine) while `client` drives it from a worker thread. The
+/// shutdown flag is always raised when the client returns or panics, so
+/// a failing assertion can never hang the drain.
+fn with_server<T: Send + 'static>(
+    ctx: &Shared,
+    opts: HttpOpts,
+    client: impl FnOnce(SocketAddr, Arc<AtomicBool>) -> T + Send + 'static,
+) -> (HttpServeReport, ServeMetrics, T) {
+    let mut server = Server::new(&ctx.engine, &ctx.params, None).unwrap();
+    let http = HttpServer::bind(opts).unwrap();
+    let addr = http.local_addr();
+    let shutdown = http.shutdown_handle();
+    let worker = pool::spawn_named("test-client", move || {
+        let out = catch_unwind(AssertUnwindSafe(|| client(addr, shutdown.clone())));
+        shutdown.store(true, Ordering::Release);
+        out
+    });
+    let report = http.serve(&mut server).unwrap();
+    let out = match worker.join() {
+        Ok(Ok(out)) => out,
+        Ok(Err(panic)) => resume_unwind(panic),
+        Err(panic) => resume_unwind(panic),
+    };
+    (report, server.metrics.clone(), out)
+}
+
+// ---------------------------------------------------------------------------
+// Wire-level equivalence (the PR 5 invariant, extended across the wire)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_streams_match_serve_batch_across_policies_and_lanes() {
+    let ctx = shared().lock().unwrap();
+    let base = base_prompt();
+    // staggered prompt lengths and budgets, as in the scheduler tier
+    let specs: Vec<(Vec<i32>, usize)> =
+        (0..6).map(|i| (base[..8 + 8 * (i % 3)].to_vec(), 2 + (i % 4) * 2)).collect();
+    let want: Vec<Vec<i32>> = specs.iter().map(|(p, b)| reference_tokens(&ctx, p, *b)).collect();
+
+    for group_extent in [false, true] {
+        for lanes in [Some(1), None] {
+            let opts = HttpOpts { max_queue: 0, lanes, group_extent, ..HttpOpts::default() };
+            let specs_c = specs.clone();
+            let (report, metrics, got) = with_server(&ctx, opts, move |addr, _sd| {
+                // two concurrent connections, three keep-alive requests
+                // each, so admission interleaves mid-decode on the wire
+                let handles: Vec<_> = (0..2)
+                    .map(|c| {
+                        let mine: Vec<(Vec<i32>, usize)> =
+                            specs_c.iter().skip(c).step_by(2).cloned().collect();
+                        pool::spawn_named("wire-client", move || {
+                            let mut conn = connect(addr);
+                            mine.into_iter()
+                                .map(|(prompt, budget)| {
+                                    let (status, headers, body) =
+                                        exchange(&mut conn, &generate_req(&prompt, budget, None));
+                                    assert_eq!(status, 200);
+                                    assert_eq!(
+                                        header(&headers, "content-type"),
+                                        Some("text/event-stream")
+                                    );
+                                    let events = parse_events(&body);
+                                    check_stream_shape(&events);
+                                    stream_tokens_of(&events)
+                                })
+                                .collect::<Vec<Vec<i32>>>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+            });
+            for (c, streams) in got.iter().enumerate() {
+                for (k, tokens) in streams.iter().enumerate() {
+                    let idx = c + 2 * k;
+                    assert_eq!(
+                        tokens, &want[idx],
+                        "wire stream diverged from serve_batch \
+                         (spec {idx}, group_extent {group_extent}, lanes {lanes:?})"
+                    );
+                }
+            }
+            assert_eq!(report.admitted, specs.len());
+            assert_eq!(report.shed, 0);
+            assert_eq!(report.responses.len(), specs.len());
+            assert_eq!(metrics.requests, specs.len());
+            assert_eq!(metrics.cancelled_requests, 0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser property suite
+// ---------------------------------------------------------------------------
+
+fn gen_valid_request(g: &mut prop::Gen) -> Vec<u8> {
+    let body_len = g.usize_in(0, 48);
+    let body: Vec<u8> = (0..body_len).map(|_| g.usize_in(0, 255) as u8).collect();
+    let path = ["/generate", "/healthz", "/a/b", "/"][g.usize_in(0, 3)];
+    let method = ["GET", "POST", "PUT"][g.usize_in(0, 2)];
+    let mut out =
+        format!("{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {body_len}\r\n\r\n")
+            .into_bytes();
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Wire-byte generator mixing well-formed requests, pipelined trains,
+/// mutations, truncations and CRLF-rich byte soup.
+fn gen_wire_bytes(g: &mut prop::Gen) -> Vec<u8> {
+    match g.usize_in(0, 5) {
+        kind @ 0..=2 => {
+            let mut out = Vec::new();
+            for _ in 0..=kind {
+                out.extend_from_slice(&gen_valid_request(g));
+            }
+            out
+        }
+        3 => {
+            let mut raw = gen_valid_request(g);
+            let i = g.usize_in(0, raw.len() - 1);
+            raw[i] = g.usize_in(0, 255) as u8;
+            raw
+        }
+        4 => {
+            let mut raw = gen_valid_request(g);
+            let keep = g.usize_in(0, raw.len());
+            raw.truncate(keep);
+            raw
+        }
+        _ => {
+            let n = g.usize_in(0, 160);
+            const ALPHABET: &[u8] = b"GET POST/ HTTP1.:\r\n\x00\xffabc0987654321-";
+            (0..n).map(|_| ALPHABET[g.usize_in(0, ALPHABET.len() - 1)]).collect()
+        }
+    }
+}
+
+/// Feed `raw` split at `cuts` and collect every parse result; a fatal
+/// `Bad` ends the run (the connection would close there).
+fn run_parser(raw: &[u8], cuts: &[usize]) -> Vec<Parse> {
+    let mut sorted: Vec<usize> = cuts.iter().map(|&c| c.min(raw.len())).collect();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut parser = RequestParser::new();
+    let mut out = Vec::new();
+    let mut prev = 0;
+    let mut segments: Vec<&[u8]> = Vec::new();
+    for &c in &sorted {
+        segments.push(&raw[prev..c]);
+        prev = c;
+    }
+    segments.push(&raw[prev..]);
+    for seg in segments {
+        parser.feed(seg);
+        loop {
+            match parser.poll() {
+                Parse::Pending => break,
+                bad @ Parse::Bad(..) => {
+                    out.push(bad);
+                    return out;
+                }
+                ready => out.push(ready),
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn parser_parse_is_invariant_under_read_segmentation() {
+    prop::check(
+        "http-parse-segmentation",
+        250,
+        |g| {
+            let raw = gen_wire_bytes(g);
+            let n_cuts = g.usize_in(0, 6);
+            let cuts: Vec<usize> = (0..n_cuts).map(|_| g.usize_in(0, raw.len().max(1))).collect();
+            (raw, cuts)
+        },
+        |(raw, cuts)| run_parser(raw, cuts) == run_parser(raw, &[]),
+    );
+}
+
+#[test]
+fn parser_never_panics_or_hangs_on_byte_soup() {
+    prop::check("http-byte-soup", 300, gen_wire_bytes, |raw| {
+        let mut parser = RequestParser::new();
+        parser.feed(raw);
+        // quiescence within a bounded number of polls: each poll either
+        // consumes a request, turns terminal, or asks for more input —
+        // anything else would be a busy-loop on the connection thread
+        for _ in 0..=raw.len() {
+            match parser.poll() {
+                Parse::Pending | Parse::Bad(..) => return true,
+                Parse::Ready(_) => {}
+            }
+        }
+        false
+    });
+}
+
+#[test]
+fn parser_handles_torn_utf8_and_rejects_invalid_heads() {
+    // valid multi-byte UTF-8 in the path, split mid-codepoint across
+    // reads: the parser decodes only complete heads, so the parse holds
+    let raw = "GET /g\u{00e9}n\u{00e9}ration HTTP/1.1\r\n\r\n".as_bytes().to_vec();
+    let whole = run_parser(&raw, &[]);
+    assert!(matches!(whole[0], Parse::Ready(_)), "{whole:?}");
+    for cut in 1..raw.len() {
+        assert_eq!(run_parser(&raw, &[cut]), whole, "torn at byte {cut}");
+    }
+
+    // invalid UTF-8 *in the head* is a clean 400, never a panic
+    let bad = b"GET /\xff\xfe HTTP/1.1\r\n\r\n";
+    assert!(
+        matches!(run_parser(bad, &[]).last(), Some(Parse::Bad(400, _))),
+        "invalid head bytes must 400"
+    );
+
+    // arbitrary bytes *in the body* are passed through untouched
+    let mut req = b"POST /x HTTP/1.1\r\nContent-Length: 4\r\n\r\n".to_vec();
+    req.extend_from_slice(&[0xff, 0x00, 0xc3, 0x28]);
+    let got = run_parser(&req, &[]);
+    let Some(Parse::Ready(parsed)) = got.first() else {
+        panic!("body bytes broke the parse: {got:?}")
+    };
+    assert_eq!(parsed.body, [0xff, 0x00, 0xc3, 0x28]);
+}
+
+// ---------------------------------------------------------------------------
+// Robustness: shedding, deadlines, drain, routing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bounded_queue_sheds_with_retry_after_and_connection_survives() {
+    let ctx = shared().lock().unwrap();
+    let (prompt, natural) = long_running_spec(&ctx, 64);
+    assert!(natural.len() >= 4, "need a prompt that decodes for a while");
+    let budget = natural.len();
+    let opts = HttpOpts { max_queue: 2, lanes: Some(1), ..HttpOpts::default() };
+    let (p2, nat) = (prompt.clone(), natural.clone());
+    let (report, metrics, ()) = with_server(&ctx, opts, move |addr, _sd| {
+        let mut a1 = connect(addr);
+        let mut a2 = connect(addr);
+        let mut b = connect(addr);
+        // occupy the lane and the queue: the SSE response head is
+        // written only after admission, so reading it removes all
+        // timing races from the 429 assertion
+        a1.write_all(&generate_req(&p2, budget, None)).unwrap();
+        let (s1, h1, rest1) = read_head(&mut a1);
+        assert_eq!(s1, 200);
+        a2.write_all(&generate_req(&p2, budget, None)).unwrap();
+        let (s2, h2, rest2) = read_head(&mut a2);
+        assert_eq!(s2, 200);
+        // two in flight >= max_queue: b is shed, politely
+        let (status, headers, _body) = exchange(&mut b, &generate_req(&p2, budget, None));
+        assert_eq!(status, 429);
+        assert_eq!(header(&headers, "retry-after"), Some("1"));
+        // the shed connection is still usable immediately…
+        let (status, _, _) = exchange(&mut b, b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        // …and admissible again once the queue drains
+        let t1 = stream_tokens_of(&parse_events(&read_body(&mut a1, &h1, rest1)));
+        let t2 = stream_tokens_of(&parse_events(&read_body(&mut a2, &h2, rest2)));
+        assert_eq!(t1, nat, "shedding must not perturb admitted streams");
+        assert_eq!(t2, nat);
+        let (status, _, body) = exchange(&mut b, &generate_req(&p2, budget, None));
+        assert_eq!(status, 200);
+        assert_eq!(stream_tokens_of(&parse_events(&body)), nat);
+    });
+    assert_eq!(report.shed, 1, "exactly one request was refused");
+    assert_eq!(report.admitted, 3);
+    assert_eq!(metrics.requests, 3);
+    assert_eq!(metrics.cancelled_requests, 0);
+}
+
+#[test]
+fn deadline_terminates_stream_and_retires_lane_leak_free() {
+    let ctx = shared().lock().unwrap();
+    let (prompt, natural) = long_running_spec(&ctx, 96);
+    assert!(natural.len() >= 8, "need a long natural stream to cut short");
+    let opts = HttpOpts { max_queue: 0, lanes: Some(1), ..HttpOpts::default() };
+    let p2 = prompt.clone();
+    let (report, metrics, events) = with_server(&ctx, opts, move |addr, _sd| {
+        let mut conn = connect(addr);
+        // a deadline far below the stream's natural duration
+        let (status, _h, body) = exchange(&mut conn, &generate_req(&p2, 96, Some(1)));
+        assert_eq!(status, 200);
+        parse_events(&body)
+    });
+    let last = events.last().expect("stream carries at least the error event");
+    assert_eq!(last.error.as_deref(), Some("deadline"), "stream ends in the error event");
+    assert!(last.done, "the error event is terminal");
+    assert!(
+        stream_tokens_of(&events).len() < natural.len(),
+        "deadline must cut the stream short of its natural length"
+    );
+    // the lane was retired through the normal path — counted as served
+    // *and* as cancelled, its response recorded: nothing leaked
+    assert_eq!(metrics.cancelled_requests, 1);
+    assert_eq!(metrics.requests, 1);
+    assert_eq!(report.admitted, 1);
+    assert_eq!(report.responses.len(), 1);
+    assert!(report.responses[0].tokens.len() < natural.len());
+}
+
+#[test]
+fn graceful_drain_completes_in_flight_and_refuses_new_connections() {
+    let ctx = shared().lock().unwrap();
+    let (prompt, natural) = long_running_spec(&ctx, 48);
+    assert!(natural.len() >= 4);
+    let budget = natural.len();
+    let opts = HttpOpts { max_queue: 0, lanes: Some(1), ..HttpOpts::default() };
+    let (p2, nat) = (prompt.clone(), natural.clone());
+    let (report, metrics, ()) = with_server(&ctx, opts, move |addr, shutdown| {
+        let mut conn = connect(addr);
+        conn.write_all(&generate_req(&p2, budget, None)).unwrap();
+        let (status, headers, rest) = read_head(&mut conn);
+        assert_eq!(status, 200);
+        // drain starts while the stream is mid-flight
+        shutdown.store(true, Ordering::Release);
+        // new connections are refused once the listener closes (the
+        // in-flight stream below is still open at this point)
+        let give_up = Instant::now() + Duration::from_secs(10);
+        loop {
+            match TcpStream::connect(addr) {
+                Err(_) => break, // refused — drain closed the listener
+                Ok(extra) => drop(extra), // pre-drain backlog at worst
+            }
+            assert!(Instant::now() < give_up, "listener never closed during drain");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // the in-flight stream still completes, bit-exact
+        let events = parse_events(&read_body(&mut conn, &headers, rest));
+        check_stream_shape(&events);
+        assert_eq!(stream_tokens_of(&events), nat, "drain must not perturb the stream");
+    });
+    assert_eq!(report.admitted, 1);
+    assert_eq!(metrics.requests, 1);
+    assert_eq!(metrics.cancelled_requests, 0, "drain finishes lanes, it does not cancel them");
+}
+
+#[test]
+fn routing_and_protocol_errors_over_the_wire() {
+    let ctx = shared().lock().unwrap();
+    let opts = HttpOpts { max_queue: 0, ..HttpOpts::default() };
+    let (_report, _metrics, ()) = with_server(&ctx, opts, move |addr, _sd| {
+        let mut conn = connect(addr);
+        let (s, _, body) = exchange(&mut conn, b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(s, 200);
+        assert!(body.starts_with(b"{\"status\":\"ok\""), "{:?}", String::from_utf8_lossy(&body));
+        // wrong method: 405 names the allowed one
+        let (s, h, _) = exchange(&mut conn, b"PUT /generate HTTP/1.1\r\n\r\n");
+        assert_eq!(s, 405);
+        assert_eq!(header(&h, "allow"), Some("POST"));
+        let (s, _, _) = exchange(&mut conn, b"GET /nope HTTP/1.1\r\n\r\n");
+        assert_eq!(s, 404);
+        // a bad JSON body is a 400 and the connection stays usable
+        let (s, _, _) =
+            exchange(&mut conn, b"POST /generate HTTP/1.1\r\nContent-Length: 3\r\n\r\n{{{");
+        assert_eq!(s, 400);
+        let (s, _, _) = exchange(&mut conn, b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(s, 200);
+        // a malformed request line is fatal: 400, then the socket closes
+        let mut broken = connect(addr);
+        let (s, _, _) = exchange(&mut broken, b"BROKEN\r\n\r\n");
+        assert_eq!(s, 400);
+        match broken.read(&mut [0u8; 16]) {
+            Ok(0) => {}
+            other => panic!("fatal parse must close the connection, got {other:?}"),
+        }
+        // an oversized head answers 431 without waiting for a terminator
+        let mut oversized = connect(addr);
+        let mut big = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+        big.resize(MAX_HEAD_BYTES + 64, b'a');
+        oversized.write_all(&big).unwrap();
+        let (s, _, _) = read_head(&mut oversized);
+        assert_eq!(s, 431);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Load-generator determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn poisson_schedule_is_pure_function_of_seed_across_thread_counts() {
+    // serialized with the engine tests (set_threads swaps the global
+    // pool; the shared lock is this file's serialization point)
+    let _ctx = shared().lock().unwrap();
+    let take = |seed: u64| -> Vec<f64> { PoissonSchedule::new(seed, 40.0).take(256).collect() };
+    let a = take(7);
+    let b = take(7);
+    assert_eq!(a, b, "same seed, same run: identical schedule");
+    pool::set_threads(1);
+    let c = take(7);
+    pool::set_threads(4);
+    let d = take(7);
+    pool::set_threads(pool::default_threads());
+    assert_eq!(a, c, "thread count must not leak into the schedule");
+    assert_eq!(a, d);
+    assert_ne!(a, take(8), "different seed, different schedule");
+    assert!(a.windows(2).all(|w| w[1] >= w[0]), "arrival times are monotone");
+    assert!(a.iter().all(|t| t.is_finite() && *t >= 0.0));
+}
